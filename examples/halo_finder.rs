@@ -1,0 +1,126 @@
+//! Halo finding — the cosmology workload from the paper's introduction
+//! (Sewell et al. 2015: "halo finding algorithm calculates clusters based
+//! on the computed data").
+//!
+//! Friends-of-friends (FOF) clustering: two particles are "friends" when
+//! closer than a linking length `b`; halos are the connected components
+//! of the friendship graph. The BVH's batched spatial search provides the
+//! neighbor lists; a union-find merges them into halos.
+//!
+//! The particle distribution is a synthetic "cosmology-like" mix: a
+//! uniform background plus Gaussian blobs (proto-halos).
+//!
+//! Run with: `cargo run --release --example halo_finder`
+
+use arbor::bvh::QueryPredicate;
+use arbor::data::rng::Rng;
+use arbor::geometry::Point;
+use arbor::prelude::*;
+
+/// Path-compressing union-find.
+struct UnionFind {
+    parent: Vec<u32>,
+}
+
+impl UnionFind {
+    fn new(n: usize) -> Self {
+        UnionFind { parent: (0..n as u32).collect() }
+    }
+    fn find(&mut self, mut x: u32) -> u32 {
+        while self.parent[x as usize] != x {
+            let up = self.parent[self.parent[x as usize] as usize];
+            self.parent[x as usize] = up;
+            x = up;
+        }
+        x
+    }
+    fn union(&mut self, a: u32, b: u32) {
+        let (ra, rb) = (self.find(a), self.find(b));
+        if ra != rb {
+            self.parent[ra as usize] = rb;
+        }
+    }
+}
+
+fn main() {
+    let space = ExecSpace::default_parallel();
+    let mut rng = Rng::new(1337);
+
+    // Synthetic universe: 60% background + 40% in 50 Gaussian blobs.
+    let n = 100_000usize;
+    let box_size = 100.0f32;
+    let n_blobs = 50;
+    let blob_centers: Vec<Point> = (0..n_blobs)
+        .map(|_| {
+            Point::new(
+                rng.uniform(0.0, box_size),
+                rng.uniform(0.0, box_size),
+                rng.uniform(0.0, box_size),
+            )
+        })
+        .collect();
+    let mut particles = Vec::with_capacity(n);
+    for i in 0..n {
+        if i % 5 < 3 {
+            particles.push(Point::new(
+                rng.uniform(0.0, box_size),
+                rng.uniform(0.0, box_size),
+                rng.uniform(0.0, box_size),
+            ));
+        } else {
+            // Gaussian-ish blob member (sum of uniforms ~ normal).
+            let c = blob_centers[rng.below(n_blobs)];
+            let g = |rng: &mut Rng| {
+                (rng.uniform(-1.0, 1.0) + rng.uniform(-1.0, 1.0) + rng.uniform(-1.0, 1.0)) * 0.4
+            };
+            particles.push(Point::new(c[0] + g(&mut rng), c[1] + g(&mut rng), c[2] + g(&mut rng)));
+        }
+    }
+
+    // Linking length: a fraction of the mean inter-particle spacing.
+    let spacing = box_size / (n as f32).powf(1.0 / 3.0);
+    let b = 0.28 * spacing;
+    println!("FOF over {n} particles, linking length b = {b:.3}");
+
+    // Neighbor lists via one batched spatial query (the hot phase).
+    let t0 = std::time::Instant::now();
+    let boxes: Vec<Aabb> = particles.iter().map(|p| Aabb::from_point(*p)).collect();
+    let bvh = Bvh::build(&space, &boxes);
+    let queries: Vec<QueryPredicate> =
+        particles.iter().map(|p| QueryPredicate::intersects_sphere(*p, b)).collect();
+    let out = bvh.query(&space, &queries, &QueryOptions { buffer_size: Some(32), sort_queries: true });
+    let t_search = t0.elapsed();
+
+    // Union-find over the friendship edges.
+    let t1 = std::time::Instant::now();
+    let mut uf = UnionFind::new(n);
+    for i in 0..n {
+        for &j in out.results_for(i) {
+            uf.union(i as u32, j);
+        }
+    }
+    // Halo census (halos = components with >= 20 members).
+    let mut sizes = std::collections::HashMap::new();
+    for i in 0..n as u32 {
+        *sizes.entry(uf.find(i)).or_insert(0usize) += 1;
+    }
+    let t_cluster = t1.elapsed();
+    let mut halo_sizes: Vec<usize> = sizes.values().copied().filter(|&s| s >= 20).collect();
+    halo_sizes.sort_unstable_by(|a, b| b.cmp(a));
+
+    println!(
+        "neighbor search {:.1} ms ({} friend links), clustering {:.1} ms",
+        t_search.as_secs_f64() * 1e3,
+        (out.total() - n) / 2,
+        t_cluster.as_secs_f64() * 1e3
+    );
+    println!(
+        "found {} halos (>= 20 particles); largest: {:?}",
+        halo_sizes.len(),
+        &halo_sizes[..halo_sizes.len().min(10)]
+    );
+    assert!(
+        halo_sizes.len() >= n_blobs / 2,
+        "the seeded blobs should be recovered as halos"
+    );
+}

@@ -1,0 +1,62 @@
+//! Quickstart: build a BVH, run spatial and nearest queries, inspect CSR
+//! output — the 60-second tour of the public API.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use arbor::bvh::QueryPredicate;
+use arbor::prelude::*;
+
+fn main() {
+    // 1. Pick an execution space — the Kokkos-style seam. Everything
+    //    below runs identically with ExecSpace::serial().
+    let space = ExecSpace::default_parallel();
+    println!("execution space: {space:?}");
+
+    // 2. Generate a point cloud (the paper's filled-cube data set) and
+    //    wrap each point in a (degenerate) bounding box.
+    let cloud = PointCloud::generate(Shape::FilledCube, 100_000, 42);
+    let boxes = cloud.boxes();
+
+    // 3. Build the linear BVH (Karras 2012 construction).
+    let t0 = std::time::Instant::now();
+    let bvh = Bvh::build(&space, &boxes);
+    println!("built BVH over {} boxes in {:.1} ms", bvh.len(), t0.elapsed().as_secs_f64() * 1e3);
+
+    // 4. Spatial queries: all points within radius 2.7 of each probe.
+    let probes = PointCloud::generate(Shape::FilledSphere, 1_000, 7);
+    let spatial: Vec<QueryPredicate> = probes
+        .points
+        .iter()
+        .map(|p| QueryPredicate::intersects_sphere(*p, 2.7))
+        .collect();
+    let out = bvh.query(&space, &spatial, &QueryOptions::default());
+    println!(
+        "spatial: {} queries -> {} results (avg {:.1} per query)",
+        spatial.len(),
+        out.total(),
+        out.total() as f64 / spatial.len() as f64
+    );
+    // CSR access: results of query 0.
+    println!("query 0 matched objects {:?}", out.results_for(0));
+
+    // 5. Nearest queries: the 5 closest points to each probe, with
+    //    distances.
+    let nearest: Vec<QueryPredicate> =
+        probes.points.iter().map(|p| QueryPredicate::nearest(*p, 5)).collect();
+    let out = bvh.query(&space, &nearest, &QueryOptions::default());
+    println!(
+        "nearest: query 0 -> indices {:?} dist2 {:?}",
+        out.results_for(0),
+        out.distances_for(0)
+    );
+
+    // 6. The 1P buffered strategy: provide a per-query buffer estimate to
+    //    skip the counting pass (falls back automatically on overflow).
+    let opts = QueryOptions { buffer_size: Some(32), sort_queries: true };
+    let out = bvh.query(&space, &spatial, &opts);
+    println!(
+        "1P run: {} results, {} queries overflowed the buffer",
+        out.total(),
+        out.overflow_queries
+    );
+}

@@ -1,0 +1,113 @@
+//! End-to-end system driver — all three layers composing on a real
+//! workload (the run recorded in EXPERIMENTS.md §End-to-end).
+//!
+//! 1. **Data**: the paper's filled-case workload (§3.1) at m = 10^6
+//!    sources.
+//! 2. **Coordinator (L3)**: the BVH is built in parallel, wrapped in the
+//!    batched SearchService; 8 concurrent clients submit 20k mixed
+//!    spatial/nearest queries; latency and throughput are reported.
+//! 3. **Accelerator (L1/L2 via PJRT)**: the same k-NN batch is executed
+//!    through the AOT JAX/Pallas artifacts and cross-checked against the
+//!    service's answers (skipped with a message if `make artifacts` has
+//!    not run).
+//!
+//! Run with: `cargo run --release --example serve_e2e`
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use arbor::bvh::QueryPredicate;
+use arbor::coordinator::service::{SearchService, ServiceConfig};
+use arbor::data::workloads::{Case, Workload, K};
+use arbor::prelude::*;
+use arbor::runtime::AccelEngine;
+
+fn main() {
+    let threads = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(2);
+    let space = ExecSpace::with_threads(threads);
+    println!("== arbor-rs end-to-end driver (threads = {threads}) ==");
+
+    // ---- Layer 0: workload ------------------------------------------
+    let m = 1_000_000;
+    let n_requests = 20_000;
+    let t0 = Instant::now();
+    let w = Workload::generate(Case::Filled, m, n_requests, 42);
+    println!("workload: filled case, m = {m}, {n_requests} requests ({:.1} ms)", ms(t0));
+
+    // ---- Layer 3: build + serve --------------------------------------
+    let t0 = Instant::now();
+    let bvh = Arc::new(Bvh::build(&space, &w.sources.boxes()));
+    println!("BVH build: {:.1} ms ({:.2} Mobj/s)", ms(t0), m as f64 / t0.elapsed().as_secs_f64() / 1e6);
+
+    let svc = Arc::new(SearchService::start(Arc::clone(&bvh), ServiceConfig { threads, ..Default::default() }));
+
+    // Mixed client load: half nearest, half spatial.
+    let clients = 8;
+    let per_client = n_requests / clients;
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let svc = Arc::clone(&svc);
+        let spatial = w.spatial[c * per_client / 2..(c + 1) * per_client / 2].to_vec();
+        let nearest = w.nearest[c * per_client / 2..(c + 1) * per_client / 2].to_vec();
+        handles.push(std::thread::spawn(move || {
+            let mut results = 0usize;
+            for (s, nst) in spatial.iter().zip(&nearest) {
+                results += svc.query(*s).indices.len();
+                results += svc.query(*nst).indices.len();
+            }
+            results
+        }));
+    }
+    let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    let wall = t0.elapsed();
+    println!(
+        "service: {} requests from {clients} clients in {:.1} ms -> {:.0} req/s, {total} results",
+        per_client * clients,
+        wall.as_secs_f64() * 1e3,
+        (per_client * clients) as f64 / wall.as_secs_f64()
+    );
+    println!("service metrics: {}", svc.metrics().summary());
+
+    // ---- Layer 1/2: accelerator cross-check --------------------------
+    match AccelEngine::from_default_dir() {
+        Err(e) => println!("accelerator skipped ({e}); run `make artifacts` first"),
+        Ok(engine) => {
+            println!("accelerator: PJRT platform = {}", engine.platform());
+            let nq = 1024;
+            let t0 = Instant::now();
+            let accel = engine
+                .batch_knn(&w.target_points()[..nq], &w.sources.points[..16384], K)
+                .expect("accel knn");
+            println!(
+                "accel k-NN: {nq} queries x 16384 points in {:.1} ms",
+                ms(t0)
+            );
+            // Cross-check against the service on the same reduced set.
+            let reduced_boxes: Vec<Aabb> =
+                w.sources.points[..16384].iter().map(|p| Aabb::from_point(*p)).collect();
+            let reduced = Bvh::build(&space, &reduced_boxes);
+            let preds: Vec<QueryPredicate> = w.target_points()[..nq]
+                .iter()
+                .map(|p| QueryPredicate::nearest(*p, K))
+                .collect();
+            let out = reduced.query(&space, &preds, &QueryOptions::default());
+            let mut mismatches = 0;
+            for q in 0..nq {
+                let bd = out.distances_for(q);
+                for (j, nb) in accel[q].iter().enumerate() {
+                    if (nb.distance_squared - bd[j]).abs() > 1e-2 * bd[j].max(1.0) {
+                        mismatches += 1;
+                    }
+                }
+            }
+            println!("accel vs BVH distances: {mismatches} mismatches / {}", nq * K);
+            assert_eq!(mismatches, 0, "layers disagree");
+        }
+    }
+    println!("== end-to-end driver complete ==");
+}
+
+fn ms(t0: Instant) -> f64 {
+    t0.elapsed().as_secs_f64() * 1e3
+}

@@ -1,0 +1,100 @@
+"""AOT compilation: lower the Layer-2 graphs to HLO text artifacts.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(behind the rust ``xla`` crate) rejects; the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Run as ``python -m compile.aot --out-dir ../artifacts`` (what
+``make artifacts`` does). Python runs ONCE at build time; the rust binary
+is self-contained afterwards.
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Production tile shapes loaded by the rust runtime (see
+# rust/src/runtime/accel.rs). Keep in sync with the manifest.
+TILE_Q = 512
+TILE_P = 4096
+TILE_K = 10
+MORTON_N = 4096
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def artifact_specs():
+    """(name, jitted fn, example args, metadata) for every artifact."""
+    f3 = jnp.float32
+    q_spec = jax.ShapeDtypeStruct((TILE_Q, 3), f3)
+    p_spec = jax.ShapeDtypeStruct((TILE_P, 3), f3)
+    r2_spec = jax.ShapeDtypeStruct((), f3)
+    m_spec = jax.ShapeDtypeStruct((MORTON_N, 3), f3)
+
+    knn = functools.partial(model.knn_tile, k=TILE_K)
+    return [
+        (
+            f"dist_tile_q{TILE_Q}_p{TILE_P}",
+            model.dist_tile,
+            (q_spec, p_spec),
+            {"q": TILE_Q, "p": TILE_P, "outputs": "dist2[q,p]"},
+        ),
+        (
+            f"knn_tile_q{TILE_Q}_p{TILE_P}_k{TILE_K}",
+            knn,
+            (q_spec, p_spec),
+            {"q": TILE_Q, "p": TILE_P, "k": TILE_K, "outputs": "dist2[q,k];idx[q,k]"},
+        ),
+        (
+            f"radius_count_q{TILE_Q}_p{TILE_P}",
+            model.radius_count_tile,
+            (q_spec, p_spec, r2_spec),
+            {"q": TILE_Q, "p": TILE_P, "outputs": "count[q]"},
+        ),
+        (
+            f"morton_n{MORTON_N}",
+            model.morton_pipeline,
+            (m_spec,),
+            {"n": MORTON_N, "outputs": "codes[n];lo[3];hi[3]"},
+        ),
+    ]
+
+
+def main():
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest_lines = []
+    for name, fn, specs, meta in artifact_specs():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        kv = " ".join(f"{k}={v}" for k, v in meta.items())
+        manifest_lines.append(f"{name} file={name}.hlo.txt {kv}")
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.txt')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Layer-1 Pallas kernels (build-time only; never imported at runtime).
+
+The paper's accelerator hot-spot -- per-thread stack traversal on a GPU --
+is re-expressed for matmul-centric hardware as dense tile algebra (see
+DESIGN.md #Hardware-Adaptation):
+
+* ``distance`` -- the tiled squared-distance kernel using the
+  ``|q - p|^2 = |q|^2 + |p|^2 - 2 q.p`` MXU formulation.
+* ``morton`` -- Morton (Z-order) bit interleaving, the same computation
+  as ``rust/src/geometry/morton.rs`` bit for bit.
+* ``ref`` -- pure-jnp oracles for both, used by pytest/hypothesis.
+"""

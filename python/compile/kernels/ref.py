@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness anchors).
+
+Everything here is deliberately written in the most obvious way possible
+-- no tiling, no algebraic tricks -- so that a mismatch between kernel and
+oracle always indicts the kernel.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def pairwise_dist2_ref(queries, points):
+    """Squared distances (Q, P) by direct subtraction and reduction."""
+    diff = queries[:, None, :] - points[None, :, :]  # (Q, P, 3)
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def knn_ref(queries, points, k):
+    """(distances, indices) of the k nearest points per query, ascending."""
+    d = pairwise_dist2_ref(queries, points)
+    idx = jnp.argsort(d, axis=1)[:, :k]
+    dist = jnp.take_along_axis(d, idx, axis=1)
+    return dist, idx
+
+
+def radius_count_ref(queries, points, r2):
+    """Number of points with squared distance <= r2, per query."""
+    d = pairwise_dist2_ref(queries, points)
+    return jnp.sum(d <= r2, axis=1).astype(jnp.int32)
+
+
+def morton_ref(points, scene_lo, scene_hi):
+    """Naive per-point, per-bit Morton codes (numpy, uint64 arithmetic)."""
+    pts = np.asarray(points, dtype=np.float64)
+    lo = np.asarray(scene_lo, dtype=np.float64)
+    hi = np.asarray(scene_hi, dtype=np.float64)
+    ext = hi - lo
+    out = np.zeros(pts.shape[0], dtype=np.uint32)
+    for n in range(pts.shape[0]):
+        code = 0
+        for d in range(3):
+            if ext[d] > 0.0:
+                x = (pts[n, d] - lo[d]) / ext[d]
+            else:
+                x = 0.5
+            # f32 rounding parity with the kernel/rust: normalize in f32.
+            x = np.float32(x)
+            g = int(np.clip(np.float32(x * np.float32(1024.0)), 0.0, 1023.0))
+            shift = 2 - d  # x<<2, y<<1, z<<0
+            for b in range(10):
+                if g & (1 << b):
+                    code |= 1 << (3 * b + shift)
+        out[n] = code
+    return out

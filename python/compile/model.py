@@ -1,0 +1,60 @@
+"""Layer-2 JAX compute graphs — the accelerator backend of the paper.
+
+These functions compose the Layer-1 Pallas kernels into the executables
+the rust coordinator runs through PJRT:
+
+* :func:`dist_tile` — one raw (Q, P) squared-distance tile; the rust side
+  merges top-k / radius results across tiles (the flexible primitive).
+* :func:`knn_tile` — distances + a full top-k selection on-device.
+* :func:`radius_count_tile` — per-query result counts for a radius, the
+  accelerator twin of the 2P counting pass.
+* :func:`morton_pipeline` — Morton codes with the scene reduction fused
+  in (construction step 2+3 of §2.1 offloaded to the accelerator).
+
+All shapes are static (AOT), so the rust coordinator tiles big problems
+over fixed-shape executables and pads the tail tile with far-away sentinel
+points (1e15: squared distances ~1e30 stay finite in f32 and lose every
+comparison).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import distance, morton
+
+
+def dist_tile(queries, points):
+    """Raw squared-distance tile (tuple for AOT interchange)."""
+    return (distance.pairwise_dist2(queries, points),)
+
+
+def knn_tile(queries, points, k):
+    """Top-``k`` (distances, indices), ascending, per query.
+
+    Selection is a full row sort — ``jnp.sort`` lowers to a plain
+    ``stablehlo.sort`` that the PJRT CPU client executes natively (unlike
+    ``lax.top_k``'s chlo custom call, which the HLO-text interchange path
+    cannot round-trip).
+    """
+    d = distance.pairwise_dist2(queries, points)
+    idx = jnp.argsort(d, axis=1)[:, :k].astype(jnp.int32)
+    dist = jnp.take_along_axis(d, idx, axis=1)
+    return dist, idx
+
+
+def radius_count_tile(queries, points, r2):
+    """Per-query counts of points within squared radius ``r2`` (scalar)."""
+    d = distance.pairwise_dist2(queries, points)
+    return (jnp.sum(d <= r2, axis=1).astype(jnp.int32),)
+
+
+def morton_pipeline(points):
+    """Scene-box reduction + Morton codes, fused on-device.
+
+    Mirrors construction steps 2–3 of §2.1: reduce the scene box, then
+    encode every point. Returns (codes, scene_lo, scene_hi).
+    """
+    lo = jnp.min(points, axis=0)
+    hi = jnp.max(points, axis=0)
+    codes = morton.morton_codes(points, lo, hi)
+    return codes, lo, hi

@@ -1,0 +1,31 @@
+"""AOT lowering smoke tests: every artifact lowers to parseable HLO text."""
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot, model
+
+
+def test_all_artifact_specs_lower_to_hlo_text():
+    for name, fn, specs, meta in aot.artifact_specs():
+        lowered = jax.jit(fn).lower(*specs)
+        text = aot.to_hlo_text(lowered)
+        assert text.startswith("HloModule"), name
+        assert "ROOT" in text, name
+
+
+def test_hlo_text_has_no_custom_calls():
+    """The PJRT CPU client cannot execute Mosaic/chlo custom calls; the
+    interpret-mode lowering must produce plain HLO ops only."""
+    for name, fn, specs, meta in aot.artifact_specs():
+        text = aot.to_hlo_text(jax.jit(fn).lower(*specs))
+        assert "custom-call" not in text, f"{name} contains a custom call"
+
+
+def test_knn_artifact_shapes():
+    q = jax.ShapeDtypeStruct((aot.TILE_Q, 3), jnp.float32)
+    p = jax.ShapeDtypeStruct((aot.TILE_P, 3), jnp.float32)
+    dist, idx = jax.eval_shape(lambda a, b: model.knn_tile(a, b, aot.TILE_K), q, p)
+    assert dist.shape == (aot.TILE_Q, aot.TILE_K)
+    assert idx.shape == (aot.TILE_Q, aot.TILE_K)
+    assert idx.dtype == jnp.int32

@@ -1,0 +1,27 @@
+"""The artifact names aot.py emits must match what the rust runtime loads
+(rust/src/runtime/accel.rs pins the same strings)."""
+
+import pathlib
+import re
+
+from compile import aot
+
+RUST_ACCEL = pathlib.Path(__file__).resolve().parents[2] / "rust" / "src" / "runtime" / "accel.rs"
+
+
+def test_rust_accel_constants_match_aot_names():
+    names = {name for name, _, _, _ in aot.artifact_specs()}
+    src = RUST_ACCEL.read_text()
+    pinned = set(re.findall(r'const \w+_TILE: &str = "([^"]+)"', src))
+    assert pinned, "no pinned artifact names found in accel.rs"
+    missing = pinned - names
+    assert not missing, f"rust pins artifacts aot.py does not emit: {missing}"
+
+
+def test_tile_shapes_match_rust_fallbacks():
+    src = RUST_ACCEL.read_text()
+    # The unwrap_or defaults in accel.rs must equal the aot constants.
+    assert f".unwrap_or({aot.TILE_Q})" in src
+    assert f".unwrap_or({aot.TILE_P})" in src
+    assert f".unwrap_or({aot.TILE_K})" in src
+    assert f".unwrap_or({aot.MORTON_N})" in src

@@ -1,0 +1,61 @@
+"""Layer-2 graph tests: knn/radius/morton pipelines vs the oracles."""
+
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def _cloud(rng, n, scale=10.0):
+    return (rng.standard_normal((n, 3)) * scale).astype(np.float32)
+
+
+@pytest.mark.parametrize("q,p,k", [(16, 64, 5), (128, 512, 10)])
+def test_knn_tile_matches_reference(q, p, k):
+    rng = np.random.default_rng(11)
+    queries, points = _cloud(rng, q), _cloud(rng, p)
+    dist, idx = model.knn_tile(queries, points, k)
+    rdist, ridx = ref.knn_ref(queries, points, k)
+    np.testing.assert_allclose(np.asarray(dist), np.asarray(rdist), rtol=1e-4, atol=1e-3)
+    # Indices may differ on exact ties; distances are the contract.
+    assert idx.shape == (q, k)
+    assert idx.dtype == np.int32
+
+
+def test_knn_distances_sorted_ascending():
+    rng = np.random.default_rng(12)
+    dist, _ = model.knn_tile(_cloud(rng, 32), _cloud(rng, 256), 10)
+    d = np.asarray(dist)
+    assert (np.diff(d, axis=1) >= -1e-6).all()
+
+
+@pytest.mark.parametrize("r", [0.0, 1.0, 5.0, 100.0])
+def test_radius_count_matches_reference(r):
+    rng = np.random.default_rng(13)
+    queries, points = _cloud(rng, 64, 2.0), _cloud(rng, 256, 2.0)
+    (count,) = model.radius_count_tile(queries, points, np.float32(r * r))
+    want = ref.radius_count_ref(queries, points, r * r)
+    np.testing.assert_array_equal(np.asarray(count), np.asarray(want))
+
+
+def test_radius_count_monotone_in_radius():
+    rng = np.random.default_rng(14)
+    queries, points = _cloud(rng, 32, 2.0), _cloud(rng, 128, 2.0)
+    counts = [
+        np.asarray(model.radius_count_tile(queries, points, np.float32(r2))[0])
+        for r2 in [0.1, 1.0, 10.0, 1e9]
+    ]
+    for a, b in zip(counts, counts[1:]):
+        assert (a <= b).all()
+    assert (counts[-1] == 128).all()  # huge radius captures everything
+
+
+def test_morton_pipeline_reduces_scene_and_encodes():
+    rng = np.random.default_rng(15)
+    pts = _cloud(rng, 1024, 3.0)
+    codes, lo, hi = model.morton_pipeline(pts)
+    np.testing.assert_allclose(np.asarray(lo), pts.min(axis=0), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(hi), pts.max(axis=0), rtol=1e-6)
+    want = ref.morton_ref(pts, pts.min(axis=0), pts.max(axis=0))
+    np.testing.assert_array_equal(np.asarray(codes), want)

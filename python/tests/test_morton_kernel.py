@@ -1,0 +1,76 @@
+"""Pallas Morton kernel vs the naive per-bit oracle."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import morton, ref
+
+
+@pytest.mark.parametrize("n", [4, 64, 1024])
+def test_matches_reference_uniform_cloud(n):
+    rng = np.random.default_rng(7)
+    pts = rng.uniform(-5.0, 5.0, (n, 3)).astype(np.float32)
+    lo, hi = pts.min(axis=0), pts.max(axis=0)
+    got = np.asarray(morton.morton_codes(pts, lo, hi, block=min(n, 1024)))
+    want = ref.morton_ref(pts, lo, hi)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_known_values_match_rust_convention():
+    """Hand-checked codes in the unit cube (same values as the rust tests)."""
+    pts = np.array(
+        [[0.0, 0.0, 0.0], [1.0, 1.0, 1.0], [0.5, 0.25, 0.75]], dtype=np.float32
+    )
+    lo = np.zeros(3, np.float32)
+    hi = np.ones(3, np.float32)
+    got = np.asarray(morton.morton_codes(pts, lo, hi, block=3))
+
+    def interleave(x, y, z):
+        code = 0
+        for b in range(10):
+            code |= ((x >> b) & 1) << (3 * b + 2)
+            code |= ((y >> b) & 1) << (3 * b + 1)
+            code |= ((z >> b) & 1) << (3 * b)
+        return code
+
+    assert got[0] == 0
+    assert got[1] == interleave(1023, 1023, 1023)
+    assert got[2] == interleave(512, 256, 768)
+
+
+def test_degenerate_extent_maps_to_half():
+    """A flat cloud (zero z-extent) must encode z as 0.5 like rust."""
+    pts = np.array([[0.25, 0.75, 3.0], [0.5, 0.5, 3.0]], dtype=np.float32)
+    lo, hi = pts.min(axis=0), pts.max(axis=0)
+    got = np.asarray(morton.morton_codes(pts, lo, hi, block=2))
+    want = ref.morton_ref(pts, lo, hi)
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n_blocks=st.integers(1, 3),
+    block=st.sampled_from([4, 16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+    lo=st.floats(-1e3, 0.0),
+    span=st.floats(1e-3, 1e3),
+)
+def test_matches_reference_swept(n_blocks, block, seed, lo, span):
+    rng = np.random.default_rng(seed)
+    n = n_blocks * block
+    pts = rng.uniform(lo, lo + span, (n, 3)).astype(np.float32)
+    slo, shi = pts.min(axis=0), pts.max(axis=0)
+    got = np.asarray(morton.morton_codes(pts, slo, shi, block=block))
+    want = ref.morton_ref(pts, slo, shi)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_locality_on_diagonal():
+    """Codes along the main diagonal must be non-decreasing."""
+    t = np.linspace(0.0, 1.0, 64, dtype=np.float32)
+    pts = np.stack([t, t, t], axis=1)
+    got = np.asarray(
+        morton.morton_codes(pts, np.zeros(3, np.float32), np.ones(3, np.float32), block=64)
+    )
+    assert (np.diff(got.astype(np.int64)) >= 0).all()

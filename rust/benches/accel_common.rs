@@ -1,0 +1,86 @@
+//! Shared driver for the accelerator comparison (Figures 10/11 — §3.4).
+//!
+//! The paper compares a full POWER9 node (smt1/2/4 OpenMP) against one
+//! V100 through Kokkos' CUDA backend; here the "accelerator" is the PJRT
+//! client executing the AOT JAX/Pallas tile artifacts, against the rust
+//! thread pool at 1 thread and all cores (DESIGN.md §Hardware-Adaptation
+//! explains the substitution). Rates are queries/second for nearest
+//! (k = 10) and spatial (radius counts).
+//!
+//! Shape to reproduce: the accelerator path is hopeless at tiny batches
+//! (dispatch overhead dominates — the paper sees the same below ~10^5)
+//! and its relative position improves with batch size. Because our
+//! substrate emulates the accelerator on the same CPUs (no real MXU),
+//! absolute crossover is not expected — see EXPERIMENTS.md.
+
+use arbor::bench_util::{f, rate, reps, time_median, Table};
+use arbor::bvh::{Bvh, QueryOptions};
+use arbor::data::workloads::{Case, Workload, K};
+use arbor::exec::ExecSpace;
+use arbor::runtime::AccelEngine;
+
+/// Problem sizes for the accel sweep (brute-force tiles are O(m·n); the
+/// paper's 10^7 is out of reach for an emulated accelerator).
+fn accel_sizes() -> Vec<usize> {
+    if std::env::var("ARBOR_BENCH_FULL").as_deref() == Ok("1") {
+        vec![1 << 12, 1 << 14, 1 << 16]
+    } else {
+        vec![1 << 12, 1 << 14]
+    }
+}
+
+/// Runs the §3.4 comparison for one case.
+pub fn run_accel(case: Case, fig: &str) {
+    let engine = match AccelEngine::from_default_dir() {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("SKIP {fig}: accelerator unavailable ({e}); run `make artifacts`");
+            return;
+        }
+    };
+    let cores = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
+    let r = reps();
+
+    let mut tab = Table::new(
+        &format!("{fig}_rates_qps"),
+        &["m", "kind", "cpu_1t", &format!("cpu_{cores}t"), "accel_pjrt"],
+    );
+    for m in accel_sizes() {
+        let w = Workload::generate(case, m, m, 42);
+        let boxes = w.sources.boxes();
+        let serial = ExecSpace::serial();
+        let full = ExecSpace::with_threads(cores);
+
+        for kind in ["nearest", "spatial"] {
+            let queries = if kind == "nearest" { &w.nearest } else { &w.spatial };
+            let bvh_serial = Bvh::build(&serial, &boxes);
+            let t_1t = time_median(r, || {
+                std::hint::black_box(bvh_serial.query(&serial, queries, &QueryOptions::default()));
+            });
+            let t_full = time_median(r, || {
+                std::hint::black_box(bvh_serial.query(&full, queries, &QueryOptions::default()));
+            });
+            let t_accel = time_median(r.min(2), || {
+                if kind == "nearest" {
+                    std::hint::black_box(
+                        engine.batch_knn(w.target_points(), &w.sources.points, K).unwrap(),
+                    );
+                } else {
+                    std::hint::black_box(
+                        engine
+                            .batch_radius_count(w.target_points(), &w.sources.points, w.radius)
+                            .unwrap(),
+                    );
+                }
+            });
+            tab.row(&[
+                m.to_string(),
+                kind.to_string(),
+                f(rate(m, t_1t)),
+                f(rate(m, t_full)),
+                f(rate(m, t_accel)),
+            ]);
+        }
+    }
+    tab.write_csv();
+}

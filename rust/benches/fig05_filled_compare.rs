@@ -1,0 +1,12 @@
+//! Figure 5: library comparison, filled case (filled-sphere queries in a
+//! filled-cube cloud). Serial execution, speedups relative to the
+//! nanoflann-style k-d tree — §3.2.
+
+#[path = "compare_common.rs"]
+mod compare_common;
+
+use arbor::data::workloads::Case;
+
+fn main() {
+    compare_common::run_comparison(Case::Filled, "fig05");
+}

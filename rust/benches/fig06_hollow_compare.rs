@@ -1,0 +1,12 @@
+//! Figure 6: library comparison, hollow case (hollow-sphere queries in a
+//! hollow-cube cloud — severely imbalanced per-query work). Serial
+//! execution, speedups relative to the nanoflann-style k-d tree — §3.2.
+
+#[path = "compare_common.rs"]
+mod compare_common;
+
+use arbor::data::workloads::Case;
+
+fn main() {
+    compare_common::run_comparison(Case::Hollow, "fig06");
+}

@@ -1,0 +1,71 @@
+//! Figure 7: absolute spatial-search *rates* (queries/second) for every
+//! library, filled (7a) and hollow (7b) cases — §3.2.
+//!
+//! The paper's observations to reproduce: hollow rates are much higher
+//! than filled (most hollow queries return nothing), and 1P ≈ 2P for
+//! hollow at large m (buffer compaction overhead cancels the saved pass).
+//!
+//! Unlike Figures 5/6 this target times only the spatial phase, so it
+//! stays cheap enough to sweep both cases in one run.
+
+use arbor::baselines::{kdtree::KdTree, rtree::RTree};
+use arbor::bench_util::{f, problem_sizes, rate, reps, time_median, Table};
+use arbor::bvh::{Bvh, QueryOptions, QueryPredicate};
+use arbor::data::workloads::{Case, Workload};
+use arbor::exec::ExecSpace;
+use arbor::geometry::predicates::Spatial;
+
+fn main() {
+    let serial = ExecSpace::serial();
+    let r = reps();
+    for (case, fig) in [(Case::Filled, "fig07a_filled"), (Case::Hollow, "fig07b_hollow")] {
+        let mut tab = Table::new(
+            &format!("{fig}_spatial_rates_qps"),
+            &["m", "arborx_1p", "arborx_2p", "boost_rtree", "nanoflann_kdtree"],
+        );
+        for m in problem_sizes() {
+            let w = Workload::generate(case, m, m, 42);
+            let boxes = w.sources.boxes();
+            let bvh = Bvh::build(&serial, &boxes);
+            let kd = KdTree::build(&w.sources.points);
+            let rt = RTree::build(&boxes);
+            let preds: Vec<Spatial> = w
+                .spatial
+                .iter()
+                .map(|q| match q {
+                    QueryPredicate::Spatial(s) => *s,
+                    _ => unreachable!(),
+                })
+                .collect();
+
+            let t_1p = time_median(r, || {
+                std::hint::black_box(bvh.query(
+                    &serial,
+                    &w.spatial,
+                    &QueryOptions { buffer_size: Some(32), sort_queries: true },
+                ));
+            });
+            let t_2p = time_median(r, || {
+                std::hint::black_box(bvh.query(&serial, &w.spatial, &QueryOptions::default()));
+            });
+            let t_rt = time_median(r, || {
+                for s in &preds {
+                    std::hint::black_box(rt.spatial(s));
+                }
+            });
+            let t_kd = time_median(r, || {
+                for s in &preds {
+                    std::hint::black_box(kd.spatial(s));
+                }
+            });
+            tab.row(&[
+                m.to_string(),
+                f(rate(m, t_1p)),
+                f(rate(m, t_2p)),
+                f(rate(m, t_rt)),
+                f(rate(m, t_kd)),
+            ]);
+        }
+        tab.write_csv();
+    }
+}

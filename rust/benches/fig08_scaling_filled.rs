@@ -1,0 +1,10 @@
+//! Figure 8 / Table 1: multi-threaded strong scaling, filled case — §3.3.
+
+#[path = "scaling_common.rs"]
+mod scaling_common;
+
+use arbor::data::workloads::Case;
+
+fn main() {
+    scaling_common::run_scaling(Case::Filled, "fig08_table1_filled");
+}

@@ -1,0 +1,12 @@
+//! Figure 9 / Table 2: multi-threaded strong scaling, hollow case — §3.3.
+//! The hollow case's per-query imbalance stresses the dynamic chunk
+//! scheduler (the paper sees visibly worse spatial scaling here).
+
+#[path = "scaling_common.rs"]
+mod scaling_common;
+
+use arbor::data::workloads::Case;
+
+fn main() {
+    scaling_common::run_scaling(Case::Hollow, "fig09_table2_hollow");
+}

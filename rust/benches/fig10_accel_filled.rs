@@ -1,0 +1,11 @@
+//! Figure 10: CPU (threaded rust BVH) vs accelerator (PJRT tile engine),
+//! filled case — §3.4 adapted per DESIGN.md §Hardware-Adaptation.
+
+#[path = "accel_common.rs"]
+mod accel_common;
+
+use arbor::data::workloads::Case;
+
+fn main() {
+    accel_common::run_accel(Case::Filled, "fig10_filled");
+}

@@ -1,0 +1,14 @@
+//! Figure 11: CPU (threaded rust BVH) vs accelerator (PJRT tile engine),
+//! hollow case — §3.4 adapted per DESIGN.md §Hardware-Adaptation. The
+//! dense tile engine is insensitive to the hollow imbalance (every tile
+//! costs the same), unlike the traversal engines — the qualitative
+//! divergence-robustness the paper attributes to batched GPU execution.
+
+#[path = "accel_common.rs"]
+mod accel_common;
+
+use arbor::data::workloads::Case;
+
+fn main() {
+    accel_common::run_accel(Case::Hollow, "fig11_hollow");
+}

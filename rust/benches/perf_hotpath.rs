@@ -1,0 +1,92 @@
+//! Perf harness: phase-level profile of the hot paths, driving the
+//! optimization loop recorded in EXPERIMENTS.md §Perf.
+//!
+//! * construction phase breakdown (scene/morton/sort/permute/emit/refit)
+//!   at 1 and all threads — checks whether we reproduce the paper's
+//!   "sorting is the limiting factor" finding (§3.3);
+//! * builder comparison (Karras vs Apetrei single-pass);
+//! * query-engine knobs: 2P vs 1P buffer sizes, sorted vs unsorted.
+
+use arbor::bench_util::{f, reps, time_median, Table};
+use arbor::bvh::build::build_karras_profiled;
+use arbor::bvh::{Bvh, QueryOptions};
+use arbor::data::workloads::{Case, Workload};
+use arbor::exec::ExecSpace;
+
+fn main() {
+    let cores = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
+    let m = 1_000_000;
+    let w = Workload::generate(Case::Filled, m, m, 42);
+    let boxes = w.sources.boxes();
+    let r = reps();
+
+    // --- construction phase breakdown --------------------------------
+    let mut tab = Table::new(
+        "perf_build_phases",
+        &["threads", "scene", "morton", "sort", "permute", "emit", "refit", "total"],
+    );
+    for t in [1usize, cores] {
+        let space = ExecSpace::with_threads(t);
+        // Median-of-reps per phase, taken from the run with median total.
+        let mut profs: Vec<_> = (0..r)
+            .map(|_| {
+                let (_bvh, p) = build_karras_profiled(&space, &boxes);
+                p
+            })
+            .collect();
+        profs.sort_by(|a, b| {
+            let ta = a.scene + a.morton + a.sort + a.permute + a.emit + a.refit;
+            let tb = b.scene + b.morton + b.sort + b.permute + b.emit + b.refit;
+            ta.partial_cmp(&tb).unwrap()
+        });
+        let p = profs[profs.len() / 2];
+        let total = p.scene + p.morton + p.sort + p.permute + p.emit + p.refit;
+        tab.row(&[
+            t.to_string(),
+            f(p.scene),
+            f(p.morton),
+            f(p.sort),
+            f(p.permute),
+            f(p.emit),
+            f(p.refit),
+            f(total),
+        ]);
+    }
+    tab.write_csv();
+
+    // --- builder comparison -------------------------------------------
+    let mut tab = Table::new("perf_builders", &["threads", "karras_s", "apetrei_s"]);
+    for t in [1usize, cores] {
+        let space = ExecSpace::with_threads(t);
+        let karras = time_median(r, || {
+            std::hint::black_box(Bvh::build(&space, &boxes));
+        });
+        let apetrei = time_median(r, || {
+            std::hint::black_box(Bvh::build_apetrei(&space, &boxes));
+        });
+        tab.row(&[t.to_string(), f(karras), f(apetrei)]);
+    }
+    tab.write_csv();
+
+    // --- query knobs ---------------------------------------------------
+    let space = ExecSpace::with_threads(cores);
+    let bvh = Bvh::build(&space, &boxes);
+    let mut tab = Table::new("perf_query_knobs", &["config", "spatial_s", "nearest_s"]);
+    for (name, buffer, sort) in [
+        ("2p_sorted", None, true),
+        ("2p_unsorted", None, false),
+        ("1p8_sorted", Some(8), true),
+        ("1p32_sorted", Some(32), true),
+        ("1p128_sorted", Some(128), true),
+    ] {
+        let opts = QueryOptions { buffer_size: buffer, sort_queries: sort };
+        let spatial = time_median(r, || {
+            std::hint::black_box(bvh.query(&space, &w.spatial, &opts));
+        });
+        let nearest = time_median(r, || {
+            std::hint::black_box(bvh.query(&space, &w.nearest, &opts));
+        });
+        tab.row(&[name.to_string(), f(spatial), f(nearest)]);
+    }
+    tab.write_csv();
+}

@@ -1,0 +1,57 @@
+//! Shared driver for the strong-scaling experiments (Figures 8/9,
+//! Tables 1/2 — §3.3): threads 1..16, m fixed per sweep, speedup vs one
+//! thread for construction / spatial / nearest.
+//!
+//! NOTE: the paper's CADES node has 36 cores; this container is smaller
+//! (`thread_counts()` sweeps to 2× the available cores and the CSV
+//! records the hardware limit), so compare *scaling efficiency per
+//! core*, not the 16-thread figure itself.
+
+use arbor::bench_util::{f, problem_sizes, reps, thread_counts, time_median, Table};
+use arbor::bvh::{Bvh, QueryOptions};
+use arbor::data::workloads::{Case, Workload};
+use arbor::exec::ExecSpace;
+
+/// Runs the §3.3 strong-scaling sweep for one case.
+pub fn run_scaling(case: Case, fig: &str) {
+    let r = reps();
+    let sizes = problem_sizes();
+    // The paper's tables report n = 10^4 and the largest size.
+    let table_sizes = [sizes[0], *sizes.last().unwrap()];
+
+    let mut tab = Table::new(
+        &format!("{fig}_scaling_speedup"),
+        &["m", "threads", "construction", "spatial", "nearest"],
+    );
+    for &m in &table_sizes {
+        let w = Workload::generate(case, m, m, 42);
+        let boxes = w.sources.boxes();
+        let mut base: Option<(f64, f64, f64)> = None;
+        for &t in &thread_counts() {
+            let space = ExecSpace::with_threads(t);
+            let build = time_median(r, || {
+                std::hint::black_box(Bvh::build(&space, &boxes));
+            });
+            let bvh = Bvh::build(&space, &boxes);
+            let spatial = time_median(r, || {
+                std::hint::black_box(bvh.query(&space, &w.spatial, &QueryOptions::default()));
+            });
+            let nearest = time_median(r, || {
+                std::hint::black_box(bvh.query(&space, &w.nearest, &QueryOptions::default()));
+            });
+            let (b0, s0, n0) = *base.get_or_insert((build, spatial, nearest));
+            tab.row(&[
+                m.to_string(),
+                t.to_string(),
+                f(b0 / build),
+                f(s0 / spatial),
+                f(n0 / nearest),
+            ]);
+        }
+    }
+    tab.write_csv();
+    println!(
+        "(hardware: {} cores available; paper used 36-core CADES nodes)",
+        std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)
+    );
+}

@@ -1,0 +1,106 @@
+//! Brute-force search — the O(n·m) oracle.
+//!
+//! "Brute force computations are prohibitively expensive for all but the
+//! simplest applications" (paper §1) — which is precisely why it makes the
+//! perfect ground truth for testing the trees, and the CPU-side twin of
+//! the accelerator's tiled distance engine in [`crate::runtime`].
+
+use crate::bvh::nearest::{KnnHeap, Neighbor};
+use crate::exec::ExecSpace;
+use crate::geometry::predicates::Spatial;
+use crate::geometry::{Aabb, Point};
+
+/// A brute-force "index": just the boxes.
+pub struct BruteForce {
+    boxes: Vec<Aabb>,
+}
+
+impl BruteForce {
+    /// Stores the boxes (no construction work at all).
+    pub fn new(boxes: &[Aabb]) -> Self {
+        BruteForce { boxes: boxes.to_vec() }
+    }
+
+    /// Number of indexed objects.
+    pub fn len(&self) -> usize {
+        self.boxes.len()
+    }
+
+    /// `true` if no objects are indexed.
+    pub fn is_empty(&self) -> bool {
+        self.boxes.is_empty()
+    }
+
+    /// All objects satisfying the spatial predicate, ascending index.
+    pub fn spatial(&self, pred: &Spatial) -> Vec<u32> {
+        self.boxes
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| pred.test(b))
+            .map(|(i, _)| i as u32)
+            .collect()
+    }
+
+    /// The k nearest objects to `point`, sorted ascending by distance
+    /// (ties broken by index, matching the tree traversals).
+    pub fn nearest(&self, point: &Point, k: usize) -> Vec<Neighbor> {
+        let mut heap = KnnHeap::new(k);
+        for (i, b) in self.boxes.iter().enumerate() {
+            heap.offer(b.distance_squared(point), i as u32);
+        }
+        let mut out = Vec::new();
+        heap.drain_sorted_into(&mut out);
+        out
+    }
+
+    /// Parallel batched spatial counts (used by the accelerator-comparison
+    /// benches as the "dense" CPU reference).
+    pub fn batch_spatial_counts(&self, space: &ExecSpace, preds: &[Spatial]) -> Vec<u32> {
+        let mut counts = vec![0u32; preds.len()];
+        let cp = crate::exec::scan::SendPtr(counts.as_mut_ptr());
+        space.parallel_for(preds.len(), |q| {
+            let c = self.boxes.iter().filter(|b| preds[q].test(b)).count() as u32;
+            // SAFETY: one writer per query.
+            unsafe { cp.write(q, c) };
+        });
+        counts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::Sphere;
+
+    #[test]
+    fn spatial_and_nearest_agree_with_hand_results() {
+        let boxes: Vec<Aabb> = (0..10)
+            .map(|i| Aabb::from_point(Point::new(i as f32, 0.0, 0.0)))
+            .collect();
+        let bf = BruteForce::new(&boxes);
+        let hits = bf.spatial(&Spatial::IntersectsSphere(Sphere::new(
+            Point::new(4.2, 0.0, 0.0),
+            1.0,
+        )));
+        assert_eq!(hits, vec![4, 5]);
+        let nn = bf.nearest(&Point::new(4.2, 0.0, 0.0), 3);
+        assert_eq!(nn[0].index, 4);
+        assert_eq!(nn[1].index, 5);
+        assert_eq!(nn[2].index, 3);
+    }
+
+    #[test]
+    fn batch_counts_match_single_queries() {
+        let boxes: Vec<Aabb> = (0..50)
+            .map(|i| Aabb::from_point(Point::new(i as f32, 0.0, 0.0)))
+            .collect();
+        let bf = BruteForce::new(&boxes);
+        let preds: Vec<Spatial> = (0..50)
+            .map(|i| Spatial::IntersectsSphere(Sphere::new(Point::new(i as f32, 0.0, 0.0), 2.0)))
+            .collect();
+        let counts = bf.batch_spatial_counts(&ExecSpace::with_threads(4), &preds);
+        for (q, pred) in preds.iter().enumerate() {
+            assert_eq!(counts[q] as usize, bf.spatial(pred).len());
+        }
+    }
+}

@@ -1,0 +1,271 @@
+//! A nanoflann-style k-d tree (the paper's first comparison library).
+//!
+//! nanoflann builds a bucketed k-d tree over *points*: recursive splits on
+//! the widest dimension until a node holds at most `leaf_max_size` points
+//! (nanoflann's default is 10), with points stored in a permuted index
+//! array so leaves are contiguous ranges. Build and query are serial —
+//! "as Boost.Geometry.Index and nanoflann are implemented only in serial,
+//! the comparisons ... were done using one thread" (§3.2).
+
+use crate::bvh::nearest::{KnnHeap, Neighbor};
+use crate::geometry::predicates::Spatial;
+use crate::geometry::{Aabb, Point};
+
+/// nanoflann's default bucket size.
+const LEAF_MAX_SIZE: usize = 10;
+
+/// Tree node: an internal split or a leaf range.
+enum Node {
+    /// Split at `value` along `dim`; children follow.
+    Split { dim: u8, value: f32, left: u32, right: u32 },
+    /// Leaf holding `indices[begin..end]`.
+    Leaf { begin: u32, end: u32 },
+}
+
+/// A serial bucketed k-d tree over 3D points.
+pub struct KdTree {
+    points: Vec<Point>,
+    /// Permuted point indices; leaves own contiguous ranges.
+    indices: Vec<u32>,
+    nodes: Vec<Node>,
+    root: u32,
+    bounds: Aabb,
+}
+
+impl KdTree {
+    /// Builds the tree (serial, like nanoflann).
+    pub fn build(points: &[Point]) -> KdTree {
+        let mut indices: Vec<u32> = (0..points.len() as u32).collect();
+        let mut bounds = Aabb::empty();
+        for p in points {
+            bounds.expand_point(p);
+        }
+        let mut tree = KdTree {
+            points: points.to_vec(),
+            indices: Vec::new(),
+            nodes: Vec::new(),
+            root: 0,
+            bounds,
+        };
+        if !points.is_empty() {
+            let n = indices.len();
+            tree.root = tree.build_recursive(&mut indices, 0, n, &bounds.clone());
+        }
+        tree.indices = indices;
+        tree
+    }
+
+    /// Recursively splits `indices[begin..end)`; returns the node id.
+    fn build_recursive(&mut self, indices: &mut [u32], begin: usize, end: usize, bounds: &Aabb) -> u32 {
+        let count = end - begin;
+        if count <= LEAF_MAX_SIZE {
+            self.nodes.push(Node::Leaf { begin: begin as u32, end: end as u32 });
+            return (self.nodes.len() - 1) as u32;
+        }
+        // nanoflann splits on the dimension of maximum spread, at the
+        // midpoint of the spread clamped to an actual median-ish position;
+        // we use the median along the widest dimension (same asymptotics,
+        // deterministic).
+        let dim = bounds.widest_dimension();
+        let mid = begin + count / 2;
+        let points = &self.points;
+        indices[begin..end].select_nth_unstable_by(mid - begin, |&a, &b| {
+            points[a as usize][dim]
+                .partial_cmp(&points[b as usize][dim])
+                .unwrap()
+        });
+        let split_value = self.points[indices[mid] as usize][dim];
+
+        // Child bounds (exact recompute keeps pruning tight).
+        let mut left_bounds = Aabb::empty();
+        for &i in &indices[begin..mid] {
+            left_bounds.expand_point(&self.points[i as usize]);
+        }
+        let mut right_bounds = Aabb::empty();
+        for &i in &indices[mid..end] {
+            right_bounds.expand_point(&self.points[i as usize]);
+        }
+
+        let node_id = self.nodes.len() as u32;
+        self.nodes.push(Node::Split { dim: dim as u8, value: split_value, left: 0, right: 0 });
+        let left = self.build_recursive(indices, begin, mid, &left_bounds);
+        let right = self.build_recursive(indices, mid, end, &right_bounds);
+        if let Node::Split { left: l, right: r, .. } = &mut self.nodes[node_id as usize] {
+            *l = left;
+            *r = right;
+        }
+        node_id
+    }
+
+    /// Number of indexed points.
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    /// `true` if the tree is empty.
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// The k nearest points, ascending by distance (ties by index).
+    pub fn nearest(&self, q: &Point, k: usize) -> Vec<Neighbor> {
+        let mut out = Vec::new();
+        if self.points.is_empty() || k == 0 {
+            return out;
+        }
+        let mut heap = KnnHeap::new(k);
+        // Per-dimension squared distances from the query to the current
+        // cell (nanoflann's `dists` array): the cell lower bound is their
+        // sum, and descending a split replaces one dimension's term.
+        let mut side = [0.0f32; 3];
+        self.nearest_recursive(self.root, q, &mut heap, 0.0, &mut side);
+        heap.drain_sorted_into(&mut out);
+        out
+    }
+
+    /// Recursive k-NN with incremental cell distance (nanoflann's
+    /// algorithm: descend the near side first, prune the far side by the
+    /// running worst distance).
+    fn nearest_recursive(
+        &self,
+        node: u32,
+        q: &Point,
+        heap: &mut KnnHeap,
+        min_dist2: f32,
+        side: &mut [f32; 3],
+    ) {
+        match &self.nodes[node as usize] {
+            Node::Leaf { begin, end } => {
+                for &i in &self.indices[*begin as usize..*end as usize] {
+                    heap.offer(q.distance_squared(&self.points[i as usize]), i);
+                }
+            }
+            Node::Split { dim, value, left, right } => {
+                let d = *dim as usize;
+                let diff = q[d] - *value;
+                let (near, far) = if diff < 0.0 { (*left, *right) } else { (*right, *left) };
+                self.nearest_recursive(near, q, heap, min_dist2, side);
+                // Lower bound for the far cell: swap this dimension's
+                // contribution for the distance to the splitting plane.
+                let plane = diff * diff;
+                if plane >= side[d] {
+                    let far_dist2 = min_dist2 - side[d] + plane;
+                    if far_dist2 <= heap.bound() {
+                        let saved = side[d];
+                        side[d] = plane;
+                        self.nearest_recursive(far, q, heap, far_dist2, side);
+                        side[d] = saved;
+                    }
+                } else {
+                    // The far cell is not farther in this dimension than
+                    // the current bound already accounts for.
+                    if min_dist2 <= heap.bound() {
+                        self.nearest_recursive(far, q, heap, min_dist2, side);
+                    }
+                }
+            }
+        }
+    }
+
+    /// All points satisfying the spatial predicate.
+    pub fn spatial(&self, pred: &Spatial) -> Vec<u32> {
+        let mut out = Vec::new();
+        if self.points.is_empty() {
+            return out;
+        }
+        self.spatial_recursive(self.root, pred, &self.bounds.clone(), &mut out);
+        out
+    }
+
+    /// Recursive range search with box pruning.
+    fn spatial_recursive(&self, node: u32, pred: &Spatial, bounds: &Aabb, out: &mut Vec<u32>) {
+        if !pred.test(bounds) {
+            return;
+        }
+        match &self.nodes[node as usize] {
+            Node::Leaf { begin, end } => {
+                for &i in &self.indices[*begin as usize..*end as usize] {
+                    if pred.test(&Aabb::from_point(self.points[i as usize])) {
+                        out.push(i);
+                    }
+                }
+            }
+            Node::Split { dim, value, left, right } => {
+                let d = *dim as usize;
+                let mut lb = *bounds;
+                lb.max[d] = *value;
+                let mut rb = *bounds;
+                rb.min[d] = *value;
+                self.spatial_recursive(*left, pred, &lb, out);
+                self.spatial_recursive(*right, pred, &rb, out);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::brute::BruteForce;
+    use crate::data::rng::Rng;
+    use crate::geometry::Sphere;
+
+    fn cloud(n: usize, seed: u64) -> Vec<Point> {
+        let mut r = Rng::new(seed);
+        (0..n)
+            .map(|_| Point::new(r.uniform(-5.0, 5.0), r.uniform(-5.0, 5.0), r.uniform(-5.0, 5.0)))
+            .collect()
+    }
+
+    #[test]
+    fn knn_matches_brute_force() {
+        let pts = cloud(700, 5);
+        let boxes: Vec<Aabb> = pts.iter().map(|p| Aabb::from_point(*p)).collect();
+        let tree = KdTree::build(&pts);
+        let brute = BruteForce::new(&boxes);
+        for q in cloud(40, 99) {
+            for k in [1usize, 3, 10] {
+                let a = tree.nearest(&q, k);
+                let b = brute.nearest(&q, k);
+                let da: Vec<f32> = a.iter().map(|n| n.distance_squared).collect();
+                let db: Vec<f32> = b.iter().map(|n| n.distance_squared).collect();
+                assert_eq!(da, db, "k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn spatial_matches_brute_force() {
+        let pts = cloud(700, 6);
+        let boxes: Vec<Aabb> = pts.iter().map(|p| Aabb::from_point(*p)).collect();
+        let tree = KdTree::build(&pts);
+        let brute = BruteForce::new(&boxes);
+        for q in cloud(40, 123) {
+            let pred = Spatial::IntersectsSphere(Sphere::new(q, 1.5));
+            let mut a = tree.spatial(&pred);
+            a.sort();
+            assert_eq!(a, brute.spatial(&pred));
+        }
+    }
+
+    #[test]
+    fn small_and_empty_trees() {
+        let tree = KdTree::build(&[]);
+        assert!(tree.is_empty());
+        assert!(tree.nearest(&Point::origin(), 5).is_empty());
+        let tree = KdTree::build(&[Point::splat(1.0)]);
+        let nn = tree.nearest(&Point::origin(), 5);
+        assert_eq!(nn.len(), 1);
+        assert_eq!(nn[0].distance_squared, 3.0);
+    }
+
+    #[test]
+    fn duplicate_points_are_returned() {
+        let pts = vec![Point::splat(2.0); 25];
+        let tree = KdTree::build(&pts);
+        let nn = tree.nearest(&Point::origin(), 10);
+        assert_eq!(nn.len(), 10);
+        let pred = Spatial::IntersectsSphere(Sphere::new(Point::splat(2.0), 0.1));
+        assert_eq!(tree.spatial(&pred).len(), 25);
+    }
+}

@@ -1,0 +1,13 @@
+//! The comparison libraries of the paper's evaluation (§3.2),
+//! re-implemented from scratch:
+//!
+//! * [`kdtree`] — a nanoflann-style bucketed k-d tree (serial build and
+//!   query, like the original library).
+//! * [`rtree`] — a Boost.Geometry.Index-style R-tree bulk-loaded with the
+//!   STR packing algorithm (Leutenegger et al. 1997), "the most performant
+//!   algorithm contained in Boost.Geometry.Index".
+//! * [`brute`] — the brute-force oracle used by tests as ground truth.
+
+pub mod brute;
+pub mod kdtree;
+pub mod rtree;

@@ -1,0 +1,252 @@
+//! An STR bulk-loaded R-tree (the paper's second comparison library).
+//!
+//! Boost.Geometry.Index's fastest configuration is its *packing* (bulk
+//! load) algorithm based on Sort-Tile-Recursive (Leutenegger, Lopez,
+//! Edgington 1997; the paper also cites García et al. 1998): sort by x,
+//! cut into vertical slabs, sort each slab by y, cut into columns, sort
+//! by z, emit full leaves; repeat on the leaf centers to build the upper
+//! levels. "The performance comes at the cost of flexibility since the
+//! tree has to be built statically" (§3.2) — same here.
+
+use crate::bvh::nearest::{KnnHeap, Neighbor};
+use crate::geometry::predicates::Spatial;
+use crate::geometry::{Aabb, Point};
+
+/// Boost's default maximum node fanout is 16.
+const FANOUT: usize = 16;
+
+/// One R-tree node: a box and either child nodes or leaf entries.
+struct RNode {
+    bbox: Aabb,
+    /// Children node ids (internal) — empty for leaves.
+    children: Vec<u32>,
+    /// Object indices (leaves) — empty for internal nodes.
+    entries: Vec<u32>,
+}
+
+/// An STR-packed R-tree over bounding boxes.
+pub struct RTree {
+    boxes: Vec<Aabb>,
+    nodes: Vec<RNode>,
+    root: u32,
+}
+
+impl RTree {
+    /// Bulk-loads the tree with STR packing (serial, like Boost).
+    pub fn build(boxes: &[Aabb]) -> RTree {
+        let mut tree = RTree { boxes: boxes.to_vec(), nodes: Vec::new(), root: 0 };
+        if boxes.is_empty() {
+            return tree;
+        }
+
+        // Level 0: pack objects into leaves by STR on their centroids.
+        let ids: Vec<u32> = (0..boxes.len() as u32).collect();
+        let centers: Vec<Point> = boxes.iter().map(|b| b.centroid()).collect();
+        let groups = str_pack(&ids, &centers, FANOUT);
+        let mut level: Vec<u32> = Vec::with_capacity(groups.len());
+        for g in groups {
+            let mut bbox = Aabb::empty();
+            for &i in &g {
+                bbox.expand(&boxes[i as usize]);
+            }
+            tree.nodes.push(RNode { bbox, children: Vec::new(), entries: g });
+            level.push((tree.nodes.len() - 1) as u32);
+        }
+
+        // Upper levels: pack node centers until one root remains.
+        while level.len() > 1 {
+            let centers: Vec<Point> =
+                level.iter().map(|&n| tree.nodes[n as usize].bbox.centroid()).collect();
+            let groups = str_pack(&level, &centers, FANOUT);
+            let mut next: Vec<u32> = Vec::with_capacity(groups.len());
+            for g in groups {
+                let mut bbox = Aabb::empty();
+                for &n in &g {
+                    bbox.expand(&tree.nodes[n as usize].bbox);
+                }
+                tree.nodes.push(RNode { bbox, children: g, entries: Vec::new() });
+                next.push((tree.nodes.len() - 1) as u32);
+            }
+            level = next;
+        }
+        tree.root = level[0];
+        tree
+    }
+
+    /// Number of indexed objects.
+    pub fn len(&self) -> usize {
+        self.boxes.len()
+    }
+
+    /// `true` if no objects are indexed.
+    pub fn is_empty(&self) -> bool {
+        self.boxes.is_empty()
+    }
+
+    /// All objects satisfying the spatial predicate.
+    pub fn spatial(&self, pred: &Spatial) -> Vec<u32> {
+        let mut out = Vec::new();
+        if self.boxes.is_empty() {
+            return out;
+        }
+        let mut stack = vec![self.root];
+        while let Some(n) = stack.pop() {
+            let node = &self.nodes[n as usize];
+            if !pred.test(&node.bbox) {
+                continue;
+            }
+            for &i in &node.entries {
+                if pred.test(&self.boxes[i as usize]) {
+                    out.push(i);
+                }
+            }
+            stack.extend_from_slice(&node.children);
+        }
+        out
+    }
+
+    /// The k nearest objects, ascending by distance (ties by index).
+    pub fn nearest(&self, q: &Point, k: usize) -> Vec<Neighbor> {
+        let mut out = Vec::new();
+        if self.boxes.is_empty() || k == 0 {
+            return out;
+        }
+        let mut heap = KnnHeap::new(k);
+        // Depth-first with box-distance pruning (stack of (node, dist2)).
+        let mut stack: Vec<(u32, f32)> = vec![(self.root, 0.0)];
+        while let Some((n, d)) = stack.pop() {
+            if d > heap.bound() {
+                continue;
+            }
+            let node = &self.nodes[n as usize];
+            for &i in &node.entries {
+                heap.offer(self.boxes[i as usize].distance_squared(q), i);
+            }
+            if !node.children.is_empty() {
+                // Order children by distance, push farthest first.
+                let mut kids: Vec<(u32, f32)> = node
+                    .children
+                    .iter()
+                    .map(|&c| (c, self.nodes[c as usize].bbox.distance_squared(q)))
+                    .collect();
+                kids.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+                for (c, cd) in kids {
+                    if cd <= heap.bound() {
+                        stack.push((c, cd));
+                    }
+                }
+            }
+        }
+        heap.drain_sorted_into(&mut out);
+        out
+    }
+}
+
+/// Sort-Tile-Recursive grouping: partitions `ids` into groups of at most
+/// `cap`, tiling x then y then z, using the associated `centers`.
+fn str_pack(ids: &[u32], centers: &[Point], cap: usize) -> Vec<Vec<u32>> {
+    let n = ids.len();
+    let n_groups = n.div_ceil(cap);
+    // Number of x-slabs: P = ceil((n/cap)^(1/3)); each slab then splits
+    // into ceil((slab_groups)^(1/2)) y-columns (Leutenegger §3 for 3D).
+    let p = (n_groups as f64).powf(1.0 / 3.0).ceil() as usize;
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| centers[a][0].partial_cmp(&centers[b][0]).unwrap());
+
+    let slab_size = n.div_ceil(p);
+    let mut groups = Vec::with_capacity(n_groups);
+    for slab in order.chunks(slab_size) {
+        let mut slab: Vec<usize> = slab.to_vec();
+        slab.sort_by(|&a, &b| centers[a][1].partial_cmp(&centers[b][1]).unwrap());
+        let q = ((slab.len().div_ceil(cap)) as f64).sqrt().ceil() as usize;
+        let col_size = slab.len().div_ceil(q.max(1));
+        for col in slab.chunks(col_size) {
+            let mut col: Vec<usize> = col.to_vec();
+            col.sort_by(|&a, &b| centers[a][2].partial_cmp(&centers[b][2]).unwrap());
+            for run in col.chunks(cap) {
+                groups.push(run.iter().map(|&i| ids[i]).collect());
+            }
+        }
+    }
+    groups
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::brute::BruteForce;
+    use crate::data::rng::Rng;
+    use crate::geometry::Sphere;
+
+    fn cloud(n: usize, seed: u64) -> Vec<Aabb> {
+        let mut r = Rng::new(seed);
+        (0..n)
+            .map(|_| {
+                Aabb::from_point(Point::new(
+                    r.uniform(-5.0, 5.0),
+                    r.uniform(-5.0, 5.0),
+                    r.uniform(-5.0, 5.0),
+                ))
+            })
+            .collect()
+    }
+
+    #[test]
+    fn str_groups_have_bounded_size_and_cover_all() {
+        let boxes = cloud(1000, 8);
+        let centers: Vec<Point> = boxes.iter().map(|b| b.centroid()).collect();
+        let ids: Vec<u32> = (0..1000).collect();
+        let groups = str_pack(&ids, &centers, FANOUT);
+        let mut seen = vec![false; 1000];
+        for g in &groups {
+            assert!(!g.is_empty() && g.len() <= FANOUT);
+            for &i in g {
+                assert!(!seen[i as usize], "duplicate {i}");
+                seen[i as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn spatial_matches_brute_force() {
+        let boxes = cloud(900, 17);
+        let tree = RTree::build(&boxes);
+        let brute = BruteForce::new(&boxes);
+        let mut r = Rng::new(55);
+        for _ in 0..40 {
+            let q = Point::new(r.uniform(-5.0, 5.0), r.uniform(-5.0, 5.0), r.uniform(-5.0, 5.0));
+            let pred = Spatial::IntersectsSphere(Sphere::new(q, 1.2));
+            let mut a = tree.spatial(&pred);
+            a.sort();
+            assert_eq!(a, brute.spatial(&pred));
+        }
+    }
+
+    #[test]
+    fn knn_matches_brute_force() {
+        let boxes = cloud(900, 23);
+        let tree = RTree::build(&boxes);
+        let brute = BruteForce::new(&boxes);
+        let mut r = Rng::new(77);
+        for _ in 0..30 {
+            let q = Point::new(r.uniform(-5.0, 5.0), r.uniform(-5.0, 5.0), r.uniform(-5.0, 5.0));
+            for k in [1usize, 10] {
+                let a = tree.nearest(&q, k);
+                let b = brute.nearest(&q, k);
+                let da: Vec<f32> = a.iter().map(|n| n.distance_squared).collect();
+                let db: Vec<f32> = b.iter().map(|n| n.distance_squared).collect();
+                assert_eq!(da, db, "k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_and_tiny_trees() {
+        let tree = RTree::build(&[]);
+        assert!(tree.is_empty());
+        assert!(tree.nearest(&Point::origin(), 3).is_empty());
+        let tree = RTree::build(&cloud(5, 2));
+        assert_eq!(tree.nearest(&Point::origin(), 10).len(), 5);
+    }
+}

@@ -1,0 +1,145 @@
+//! Benchmark harness utilities (the Google-Benchmark stand-in).
+//!
+//! The paper "used the Google Benchmark tool ... using the median of the
+//! runs for the results we have reported" (§3). Criterion is not in the
+//! offline crate set, so the bench binaries (`rust/benches/*.rs`,
+//! `harness = false`) use this module: repeated timed runs, median
+//! reporting, and CSV output under `bench_out/` for every figure/table.
+//!
+//! Environment knobs:
+//!
+//! * `ARBOR_BENCH_FULL=1` — run the paper's full problem sizes
+//!   (10^4..10^7); default stops at 10^6 to keep `cargo bench` short.
+//! * `ARBOR_BENCH_REPS=n` — timed repetitions per measurement (default 1 so
+//!   a full `cargo bench` fits small CI machines; raise to 3–5 for
+//!   noise-sensitive studies — the tables report the median).
+
+use std::time::Instant;
+
+/// Times one invocation of `f` in seconds.
+pub fn time_once<F: FnOnce()>(f: F) -> f64 {
+    let t0 = Instant::now();
+    f();
+    t0.elapsed().as_secs_f64()
+}
+
+/// Runs `f` `reps` times and returns the median wall time in seconds.
+pub fn time_median<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    let reps = reps.max(1);
+    let mut times: Vec<f64> = (0..reps).map(|_| time_once(&mut f)).collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times[times.len() / 2]
+}
+
+/// Timed repetitions per measurement (`ARBOR_BENCH_REPS`, default 1).
+pub fn reps() -> usize {
+    std::env::var("ARBOR_BENCH_REPS").ok().and_then(|v| v.parse().ok()).unwrap_or(1)
+}
+
+/// The paper's problem-size sweep m = 10^4..10^7 (§3.2), truncated to
+/// 10^6 unless `ARBOR_BENCH_FULL=1`.
+pub fn problem_sizes() -> Vec<usize> {
+    if std::env::var("ARBOR_BENCH_FULL").as_deref() == Ok("1") {
+        vec![10_000, 100_000, 1_000_000, 10_000_000]
+    } else {
+        vec![10_000, 100_000, 1_000_000]
+    }
+}
+
+/// Thread counts for the strong-scaling experiments (§3.3 uses 1..16; we
+/// sweep to 2x the machine's cores and report the hardware limit).
+pub fn thread_counts() -> Vec<usize> {
+    let cores = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
+    let mut counts = vec![1usize];
+    let mut t = 2;
+    while t <= cores * 2 && t <= 16 {
+        counts.push(t);
+        t *= 2;
+    }
+    counts
+}
+
+/// A collected result table that prints aligned rows and writes CSV.
+pub struct Table {
+    name: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// Creates a table; `name` becomes `bench_out/<name>.csv`.
+    pub fn new(name: &str, header: &[&str]) -> Table {
+        println!("== {name} ==");
+        println!("{}", header.join("\t"));
+        Table {
+            name: name.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Appends and echoes one row.
+    pub fn row(&mut self, cells: &[String]) {
+        println!("{}", cells.join("\t"));
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Writes `bench_out/<name>.csv`.
+    pub fn write_csv(&self) {
+        let _ = std::fs::create_dir_all("bench_out");
+        let mut text = self.header.join(",");
+        text.push('\n');
+        for row in &self.rows {
+            text.push_str(&row.join(","));
+            text.push('\n');
+        }
+        let path = format!("bench_out/{}.csv", self.name);
+        if let Err(e) = std::fs::write(&path, text) {
+            eprintln!("warning: could not write {path}: {e}");
+        } else {
+            println!("-> {path}");
+        }
+    }
+}
+
+/// Formats seconds as a rate (items/second).
+pub fn rate(items: usize, seconds: f64) -> f64 {
+    items as f64 / seconds
+}
+
+/// Formats a float with three significant decimals for CSV cells.
+pub fn f(v: f64) -> String {
+    format!("{v:.4}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_is_order_insensitive() {
+        let mut calls = 0;
+        let t = time_median(5, || {
+            calls += 1;
+            std::hint::black_box(())
+        });
+        assert_eq!(calls, 5);
+        assert!(t >= 0.0);
+    }
+
+    #[test]
+    fn sizes_and_threads_are_sane() {
+        let sizes = problem_sizes();
+        assert!(sizes.windows(2).all(|w| w[1] == w[0] * 10));
+        let threads = thread_counts();
+        assert_eq!(threads[0], 1);
+        assert!(threads.windows(2).all(|w| w[1] > w[0]));
+    }
+
+    #[test]
+    fn table_collects_rows() {
+        let mut t = Table::new("unit_test_table", &["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        assert_eq!(t.rows.len(), 1);
+    }
+}

@@ -1,0 +1,256 @@
+//! Apetrei 2014 construction: "Fast and Simple Agglomerative LBVH
+//! Construction".
+//!
+//! The paper (§2.1) implements Karras 2012 "with an intent to incorporate
+//! Apetrei (2014) in the near future" — we implement that future here.
+//! Apetrei's observation: the hierarchy emission and the bottom-up
+//! bounding-box pass can be merged into a *single* bottom-up sweep. Each
+//! thread starts at a leaf and repeatedly attaches its current range
+//! `[first, last]` to a parent chosen by comparing the Morton "split
+//! levels" of the range boundaries; atomic flags let exactly one of the
+//! two children continue upward, carrying the merged bounding box with it.
+//!
+//! The resulting tree uses the same node layout as the Karras builder (and
+//! identical leaf ordering); only the internal-node numbering and root id
+//! differ, which [`super::Bvh::root`] absorbs.
+
+use std::sync::atomic::{AtomicI64, AtomicU32, Ordering};
+
+use super::build::compute_scene_box;
+use super::{internal_ref, leaf_ref, Bvh, InternalNode, NodeRef};
+use crate::exec::scan::SendPtr;
+use crate::exec::{sort, ExecSpace};
+use crate::geometry::{morton, Aabb};
+
+/// Split level between adjacent sorted codes `i` and `i+1`: higher means
+/// the pair differs in a lower (less significant) bit, i.e. belongs
+/// deeper in the tree. Equal codes fall back to index bits, mirroring the
+/// Karras index augmentation.
+#[inline]
+fn split_level(codes: &[u32], i: usize) -> i32 {
+    let x = codes[i] ^ codes[i + 1];
+    if x == 0 {
+        32 + ((i as u32) ^ (i as u32 + 1)).leading_zeros() as i32
+    } else {
+        x.leading_zeros() as i32
+    }
+}
+
+/// Builds a [`Bvh`] with the Apetrei 2014 single-pass algorithm.
+pub fn build_apetrei(space: &ExecSpace, boxes: &[Aabb]) -> Bvh {
+    let n = boxes.len();
+    if n == 0 {
+        return Bvh {
+            n_leaves: 0,
+            nodes: Vec::new(),
+            leaf_boxes: Vec::new(),
+            leaf_perm: Vec::new(),
+            scene: Aabb::empty(),
+            root: 0,
+        };
+    }
+    let scene = compute_scene_box(space, boxes);
+    let mut codes = vec![0u32; n];
+    let mut perm: Vec<u32> = (0..n as u32).collect();
+    {
+        let cp = SendPtr(codes.as_mut_ptr());
+        space.parallel_for(n, |i| unsafe {
+            // SAFETY: one writer per index.
+            cp.write(i, morton::morton32_scene(&boxes[i], &scene));
+        });
+    }
+    sort::sort_pairs(space, &mut codes, &mut perm);
+
+    let mut leaf_boxes = vec![Aabb::empty(); n];
+    {
+        let lb = SendPtr(leaf_boxes.as_mut_ptr());
+        let perm_ref = &perm;
+        space.parallel_for(n, |i| unsafe { lb.write(i, boxes[perm_ref[i] as usize]) });
+    }
+
+    if n == 1 {
+        return Bvh {
+            n_leaves: 1,
+            nodes: Vec::new(),
+            leaf_boxes,
+            leaf_perm: perm,
+            scene,
+            root: leaf_ref(0),
+        };
+    }
+
+    let n_internal = n - 1;
+    let mut nodes = vec![InternalNode::default(); n_internal];
+    // ranges[i] holds the *other* boundary delivered by the first child to
+    // arrive at internal node i (-1 = nobody arrived yet).
+    let ranges: Vec<AtomicI64> = (0..n_internal).map(|_| AtomicI64::new(-1)).collect();
+    let root_slot = AtomicU32::new(0);
+
+    {
+        let np = SendPtr(nodes.as_mut_ptr());
+        let codes_ref = &codes;
+        let leaf_ref_boxes = &leaf_boxes;
+        let ranges_ref = &ranges;
+        let root_ref = &root_slot;
+
+        space.parallel_for(n, |leaf| {
+            // Current subtree: [first, last] with node reference `node`
+            // and bounding box `bb`.
+            let mut first = leaf;
+            let mut last = leaf;
+            let mut node: NodeRef = leaf_ref(leaf as u32);
+            let mut bb = leaf_ref_boxes[leaf];
+
+            loop {
+                if first == 0 && last == n - 1 {
+                    root_ref.store(node, Ordering::Release);
+                    break;
+                }
+                // Choose the parent: merge with the neighbor across the
+                // boundary with the higher split level (deeper split keeps
+                // subtrees compact). Parent internal node index = the
+                // boundary position.
+                let go_right = first == 0
+                    || (last != n - 1 && split_level(codes_ref, last) > split_level(codes_ref, first - 1));
+                let parent = if go_right { last } else { first - 1 };
+
+                // Publish our child slot *before* the swap so the sibling
+                // (which acquires the swap) sees it. SAFETY: each field is
+                // written by exactly one thread (left by the left child,
+                // right by the right child, bbox by the second arriver).
+                unsafe {
+                    let slot = np.0.add(parent);
+                    if go_right {
+                        (*slot).left = node; // we are the left child
+                    } else {
+                        (*slot).right = node;
+                    }
+                }
+                // Deliver our boundary; the exchanged value tells whether
+                // we are first (-1) or second (the sibling's boundary).
+                let my_boundary = if go_right { first as i64 } else { last as i64 };
+                let prev = ranges_ref[parent].swap(my_boundary, Ordering::AcqRel);
+                if prev < 0 {
+                    break; // first to arrive: the sibling continues upward
+                }
+                // Second to arrive: merge ranges and boxes, continue.
+                if go_right {
+                    first = first.min(prev as usize);
+                    last = last.max(prev as usize);
+                } else {
+                    first = first.min(prev as usize);
+                    last = last.max(prev as usize);
+                }
+                // The sibling's box: it was computed before its swap
+                // (Release) and we read after ours (Acquire).
+                let sibling = unsafe {
+                    if go_right {
+                        (*np.0.add(parent)).right // we wrote left
+                    } else {
+                        (*np.0.add(parent)).left
+                    }
+                };
+                let sb = node_box_raw(sibling, leaf_ref_boxes, np);
+                bb = bb.union(&sb);
+                unsafe { (*np.0.add(parent)).bbox = bb };
+                node = internal_ref(parent as u32);
+            }
+        });
+    }
+
+    let bvh = Bvh {
+        n_leaves: n,
+        nodes,
+        leaf_boxes,
+        leaf_perm: perm,
+        scene,
+        root: root_slot.load(Ordering::Acquire),
+    };
+    debug_assert_eq!(bvh.validate(), Ok(()));
+    bvh
+}
+
+/// Reads a node's box from either the leaf array or the (partially
+/// constructed) internal array. Safe because the sibling subtree is fully
+/// built before the second child proceeds.
+#[inline]
+fn node_box_raw(r: NodeRef, leaf_boxes: &[Aabb], np: SendPtr<InternalNode>) -> Aabb {
+    if super::is_leaf(r) {
+        leaf_boxes[super::ref_index(r)]
+    } else {
+        unsafe { np.read(super::ref_index(r)).bbox }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bvh::batched::{QueryOptions, QueryPredicate};
+    use crate::geometry::Point;
+
+    fn cloud(n: usize, seed: u64) -> Vec<Aabb> {
+        let mut s = seed | 1;
+        let mut next = move || {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            (s >> 11) as f32 / (1u64 << 53) as f32 * 10.0
+        };
+        (0..n)
+            .map(|_| Aabb::from_point(Point::new(next(), next(), next())))
+            .collect()
+    }
+
+    #[test]
+    fn apetrei_tree_is_structurally_valid() {
+        for space in [ExecSpace::serial(), ExecSpace::with_threads(4)] {
+            for n in [1usize, 2, 3, 17, 100, 1000] {
+                let boxes = cloud(n, 5);
+                let t = Bvh::build_apetrei(&space, &boxes);
+                assert_eq!(t.validate(), Ok(()), "n={n}");
+                assert_eq!(*t.node_box(t.root), t.scene_box());
+            }
+        }
+    }
+
+    #[test]
+    fn apetrei_and_karras_answer_queries_identically() {
+        let space = ExecSpace::with_threads(4);
+        let boxes = cloud(2000, 11);
+        let karras = Bvh::build(&space, &boxes);
+        let apetrei = Bvh::build_apetrei(&space, &boxes);
+        let queries: Vec<QueryPredicate> = boxes
+            .iter()
+            .step_by(17)
+            .map(|b| QueryPredicate::intersects_sphere(b.centroid(), 1.0))
+            .collect();
+        let a = karras.query(&space, &queries, &QueryOptions::default());
+        let b = apetrei.query(&space, &queries, &QueryOptions::default());
+        assert_eq!(a.offsets, b.offsets);
+        for qi in 0..queries.len() {
+            let mut ra = a.results_for(qi).to_vec();
+            let mut rb = b.results_for(qi).to_vec();
+            ra.sort();
+            rb.sort();
+            assert_eq!(ra, rb, "query {qi}");
+        }
+        // Nearest queries agree too.
+        let knn: Vec<QueryPredicate> = boxes
+            .iter()
+            .step_by(29)
+            .map(|b| QueryPredicate::nearest(b.centroid(), 8))
+            .collect();
+        let a = karras.query(&space, &knn, &QueryOptions::default());
+        let b = apetrei.query(&space, &knn, &QueryOptions::default());
+        for qi in 0..knn.len() {
+            assert_eq!(a.distances_for(qi), b.distances_for(qi), "knn {qi}");
+        }
+    }
+
+    #[test]
+    fn duplicate_codes_handled() {
+        let boxes = vec![Aabb::from_point(Point::splat(1.0)); 64];
+        let t = Bvh::build_apetrei(&ExecSpace::with_threads(4), &boxes);
+        assert_eq!(t.validate(), Ok(()));
+    }
+}

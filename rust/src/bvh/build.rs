@@ -1,0 +1,449 @@
+//! Fully parallel LBVH construction (Karras 2012) — paper §2.1.
+//!
+//! The six construction steps of the paper map to the phases below:
+//!
+//! 1. *Construct AABBs* — the caller provides boxes (points yield
+//!    degenerate boxes, which is allowed).
+//! 2. *Calculate the scene bounding box* — a parallel union reduction.
+//! 3. *Assign Morton codes* — 63-bit codes of the scaled centroids.
+//! 4. *Sort the bounding boxes* — parallel radix sort of (code, index).
+//! 5. *Generate the hierarchy* — every internal node computed
+//!    independently from the sorted codes (Karras' range/split search).
+//! 6. *Calculate internal bounding boxes* — bottom-up refit where the
+//!    second child's thread proceeds, synchronized with atomic flags.
+//!    Parent pointers live in an auxiliary array that is "dismissed after
+//!    construction" (§2.1) — they are never stored in nodes.
+
+use std::sync::atomic::{AtomicU32, Ordering};
+
+use super::{internal_ref, is_leaf, leaf_ref, ref_index, Bvh, InternalNode, NodeRef};
+use crate::exec::scan::SendPtr;
+use crate::exec::{sort, ExecSpace};
+use crate::geometry::{morton, Aabb};
+
+/// Sentinel for "no parent" (the root).
+const NO_PARENT: u32 = u32::MAX;
+
+/// Wall-time breakdown of one construction, in seconds — used by the
+/// perf harness (`rust/benches/perf_hotpath.rs`) to find the phase to
+/// optimize (the paper found "the sorting routine ... to be the limiting
+/// factor", §3.3; this lets us check whether we reproduce that too).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BuildProfile {
+    /// Scene-box reduction.
+    pub scene: f64,
+    /// Morton-code assignment.
+    pub morton: f64,
+    /// Radix sort of (code, index) pairs.
+    pub sort: f64,
+    /// Leaf-box permutation.
+    pub permute: f64,
+    /// Hierarchy emission (Karras internal-node search).
+    pub emit: f64,
+    /// Bottom-up bounding-box refit.
+    pub refit: f64,
+}
+
+/// [`build_karras`] with per-phase timing.
+pub fn build_karras_profiled(space: &ExecSpace, boxes: &[Aabb]) -> (Bvh, BuildProfile) {
+    use std::time::Instant;
+    let mut prof = BuildProfile::default();
+    let n = boxes.len();
+    if n == 0 {
+        return (build_karras(space, boxes), prof);
+    }
+    let t = Instant::now();
+    let scene = compute_scene_box(space, boxes);
+    prof.scene = t.elapsed().as_secs_f64();
+
+    let t = Instant::now();
+    let (mut codes, mut perm) = assign_morton_codes(space, boxes, &scene);
+    prof.morton = t.elapsed().as_secs_f64();
+
+    let t = Instant::now();
+    sort::sort_pairs(space, &mut codes, &mut perm);
+    prof.sort = t.elapsed().as_secs_f64();
+
+    let t = Instant::now();
+    let mut leaf_boxes = vec![Aabb::empty(); n];
+    {
+        let dst = SendPtr(leaf_boxes.as_mut_ptr());
+        let perm_ref = &perm;
+        space.parallel_for(n, |i| unsafe { dst.write(i, boxes[perm_ref[i] as usize]) });
+    }
+    prof.permute = t.elapsed().as_secs_f64();
+
+    if n == 1 {
+        let bvh = Bvh {
+            n_leaves: 1,
+            nodes: Vec::new(),
+            leaf_boxes,
+            leaf_perm: perm,
+            scene,
+            root: leaf_ref(0),
+        };
+        return (bvh, prof);
+    }
+
+    let t = Instant::now();
+    let (mut nodes, leaf_parent, internal_parent) = emit_hierarchy(space, &codes);
+    prof.emit = t.elapsed().as_secs_f64();
+
+    let t = Instant::now();
+    refit(space, n, &mut nodes, &leaf_parent, &internal_parent, &leaf_boxes);
+    prof.refit = t.elapsed().as_secs_f64();
+
+    let bvh = Bvh {
+        n_leaves: n,
+        nodes,
+        leaf_boxes,
+        leaf_perm: perm,
+        scene,
+        root: internal_ref(0),
+    };
+    (bvh, prof)
+}
+
+/// Builds a [`Bvh`] with the Karras 2012 construction.
+pub fn build_karras(space: &ExecSpace, boxes: &[Aabb]) -> Bvh {
+    let n = boxes.len();
+    if n == 0 {
+        return Bvh {
+            n_leaves: 0,
+            nodes: Vec::new(),
+            leaf_boxes: Vec::new(),
+            leaf_perm: Vec::new(),
+            scene: Aabb::empty(),
+            root: 0,
+        };
+    }
+
+    // Step 2: scene bounding box (parallel union reduction).
+    let scene = compute_scene_box(space, boxes);
+
+    // Step 3: Morton codes of scaled centroids.
+    let (mut codes, mut perm) = assign_morton_codes(space, boxes, &scene);
+
+    // Step 4: sort (code, original index) pairs.
+    sort::sort_pairs(space, &mut codes, &mut perm);
+
+    // Permute leaf boxes into sorted order.
+    let mut leaf_boxes = vec![Aabb::empty(); n];
+    {
+        let dst = SendPtr(leaf_boxes.as_mut_ptr());
+        let perm_ref = &perm;
+        space.parallel_for(n, |i| {
+            // SAFETY: one writer per index i.
+            unsafe { dst.write(i, boxes[perm_ref[i] as usize]) };
+        });
+    }
+
+    if n == 1 {
+        return Bvh {
+            n_leaves: 1,
+            nodes: Vec::new(),
+            leaf_boxes,
+            leaf_perm: perm,
+            scene,
+            root: leaf_ref(0),
+        };
+    }
+
+    // Step 5: emit the hierarchy — all internal nodes in parallel.
+    let (mut nodes, leaf_parent, internal_parent) = emit_hierarchy(space, &codes);
+
+    // Step 6: bottom-up refit.
+    refit(space, n, &mut nodes, &leaf_parent, &internal_parent, &leaf_boxes);
+
+    let bvh = Bvh {
+        n_leaves: n,
+        nodes,
+        leaf_boxes,
+        leaf_perm: perm,
+        scene,
+        root: internal_ref(0),
+    };
+    debug_assert_eq!(bvh.validate(), Ok(()));
+    bvh
+}
+
+/// Step 2 of §2.1: union-reduce all box corners.
+pub fn compute_scene_box(space: &ExecSpace, boxes: &[Aabb]) -> Aabb {
+    space.parallel_reduce(
+        boxes.len(),
+        Aabb::empty(),
+        |b, e| {
+            let mut acc = Aabb::empty();
+            for bb in &boxes[b..e] {
+                acc.expand(bb);
+            }
+            acc
+        },
+        |a, b| a.union(&b),
+    )
+}
+
+/// Step 3 of §2.1: 30-bit Morton codes of scaled centroids plus the
+/// identity permutation. The paper uses 30-bit codes (Karras 2012) with
+/// index augmentation for duplicates; 30-bit keys also halve the radix
+/// sort passes vs 63-bit (§Perf change 2).
+fn assign_morton_codes(space: &ExecSpace, boxes: &[Aabb], scene: &Aabb) -> (Vec<u32>, Vec<u32>) {
+    let n = boxes.len();
+    let mut codes = vec![0u32; n];
+    let mut perm = vec![0u32; n];
+    let cp = SendPtr(codes.as_mut_ptr());
+    let pp = SendPtr(perm.as_mut_ptr());
+    space.parallel_for(n, |i| unsafe {
+        // SAFETY: one writer per index.
+        cp.write(i, morton::morton32_scene(&boxes[i], scene));
+        pp.write(i, i as u32);
+    });
+    (codes, perm)
+}
+
+/// Karras' δ(i, j): the length of the longest common prefix of codes `i`
+/// and `j`, with the paper's index augmentation for equal codes ("if
+/// multiple objects share the same Morton code, they are augmented with an
+/// index to differentiate them", §2.1). Out-of-range `j` yields -1.
+#[inline]
+fn delta(codes: &[u32], i: usize, j: isize) -> i32 {
+    if j < 0 || j as usize >= codes.len() {
+        return -1;
+    }
+    let j = j as usize;
+    let x = codes[i] ^ codes[j];
+    if x == 0 {
+        // Equal codes: fall back to leading zeros of the index XOR,
+        // shifted past the 32 code bits.
+        32 + (i as u32 ^ j as u32).leading_zeros() as i32
+    } else {
+        x.leading_zeros() as i32
+    }
+}
+
+/// Step 5 of §2.1: determine each internal node's range, split, and
+/// children independently (Karras 2012, Algorithm in §4 of that paper).
+/// Returns `(nodes, leaf_parent, internal_parent)`; node boxes are still
+/// empty (filled by [`refit`]).
+fn emit_hierarchy(
+    space: &ExecSpace,
+    codes: &[u32],
+) -> (Vec<InternalNode>, Vec<u32>, Vec<u32>) {
+    let n = codes.len();
+    let n_internal = n - 1;
+    let mut nodes = vec![InternalNode::default(); n_internal];
+    let mut leaf_parent = vec![NO_PARENT; n];
+    let mut internal_parent = vec![NO_PARENT; n_internal];
+
+    let np = SendPtr(nodes.as_mut_ptr());
+    let lpar = SendPtr(leaf_parent.as_mut_ptr());
+    let ipar = SendPtr(internal_parent.as_mut_ptr());
+
+    space.parallel_for(n_internal, |i| {
+        let ii = i as isize;
+        // Direction of the node's range: towards the neighbor with the
+        // longer common prefix.
+        let d: isize = if delta(codes, i, ii + 1) > delta(codes, i, ii - 1) { 1 } else { -1 };
+        let delta_min = delta(codes, i, ii - d);
+
+        // Exponential search for an upper bound on the range length.
+        let mut l_max: isize = 2;
+        while delta(codes, i, ii + l_max * d) > delta_min {
+            l_max *= 2;
+        }
+        // Binary search for the exact range length l.
+        let mut l: isize = 0;
+        let mut t = l_max / 2;
+        while t >= 1 {
+            if delta(codes, i, ii + (l + t) * d) > delta_min {
+                l += t;
+            }
+            t /= 2;
+        }
+        let j = ii + l * d;
+
+        // Binary search for the split position: the highest differing bit
+        // within [min(i,j), max(i,j)].
+        let delta_node = delta(codes, i, j);
+        let mut s: isize = 0;
+        let mut t = l;
+        loop {
+            t = (t + 1) / 2;
+            if delta(codes, i, ii + (s + t) * d) > delta_node {
+                s += t;
+            }
+            if t <= 1 {
+                break;
+            }
+        }
+        let gamma = ii + s * d + d.min(0);
+        let (lo, hi) = (ii.min(j), ii.max(j));
+
+        let left_child: NodeRef = if lo == gamma {
+            leaf_ref(gamma as u32)
+        } else {
+            internal_ref(gamma as u32)
+        };
+        let right_child: NodeRef = if hi == gamma + 1 {
+            leaf_ref((gamma + 1) as u32)
+        } else {
+            internal_ref((gamma + 1) as u32)
+        };
+
+        // SAFETY: node i exclusively owns nodes[i]; each child is claimed
+        // by exactly one parent, so the parent slots are also uniquely
+        // written.
+        unsafe {
+            np.write(
+                i,
+                InternalNode { bbox: Aabb::empty(), left: left_child, right: right_child },
+            );
+            rpar_write(ipar, lpar, left_child, i as u32);
+            rpar_write(ipar, lpar, right_child, i as u32);
+        }
+    });
+
+    (nodes, leaf_parent, internal_parent)
+}
+
+/// Helper keeping the unsafe parent write in one place.
+#[inline]
+unsafe fn rpar_write(ipar: SendPtr<u32>, lpar: SendPtr<u32>, child: NodeRef, parent: u32) {
+    unsafe {
+        if is_leaf(child) {
+            lpar.write(ref_index(child), parent);
+        } else {
+            ipar.write(ref_index(child), parent);
+        }
+    }
+}
+
+/// Step 6 of §2.1: compute internal boxes bottom-up. Each thread starts at
+/// a leaf and walks towards the root; at every internal node "only one of
+/// the children's threads is allowed to proceed further" — the second one
+/// to arrive, which is guaranteed to see both children's boxes.
+fn refit(
+    space: &ExecSpace,
+    n: usize,
+    nodes: &mut [InternalNode],
+    leaf_parent: &[u32],
+    internal_parent: &[u32],
+    leaf_boxes: &[Aabb],
+) {
+    let n_internal = n - 1;
+    let flags: Vec<AtomicU32> = (0..n_internal).map(|_| AtomicU32::new(0)).collect();
+    let np = SendPtr(nodes.as_mut_ptr());
+
+    space.parallel_for(n, |leaf| {
+        let mut node = leaf_parent[leaf];
+        loop {
+            // The first thread to arrive stops; the second proceeds.
+            // AcqRel makes the first child's box write visible to the
+            // second thread.
+            if flags[node as usize].fetch_add(1, Ordering::AcqRel) == 0 {
+                break;
+            }
+            // SAFETY: left/right were finalized before this dispatch; the
+            // only concurrent writes go to disjoint bbox fields.
+            let (l, r) = unsafe {
+                let nd = np.read(node as usize);
+                (nd.left, nd.right)
+            };
+            let lb = if is_leaf(l) {
+                leaf_boxes[ref_index(l)]
+            } else {
+                // SAFETY: fully refit by the thread that lost the race.
+                unsafe { np.read(ref_index(l)).bbox }
+            };
+            let rb = if is_leaf(r) {
+                leaf_boxes[ref_index(r)]
+            } else {
+                unsafe { np.read(ref_index(r)).bbox }
+            };
+            // SAFETY: exactly one thread (the second arriver) writes the
+            // bbox field of this node; left/right were finalized before
+            // the dispatch started.
+            unsafe { (*np.0.add(node as usize)).bbox = lb.union(&rb) };
+            if node == 0 {
+                break; // root reached
+            }
+            node = internal_parent[node as usize];
+            debug_assert_ne!(node, NO_PARENT);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::Point;
+
+    fn grid_boxes(nx: usize, ny: usize, nz: usize) -> Vec<Aabb> {
+        let mut boxes = Vec::new();
+        for x in 0..nx {
+            for y in 0..ny {
+                for z in 0..nz {
+                    boxes.push(Aabb::from_point(Point::new(x as f32, y as f32, z as f32)));
+                }
+            }
+        }
+        boxes
+    }
+
+    #[test]
+    fn empty_and_singleton_trees() {
+        let space = ExecSpace::serial();
+        let t = Bvh::build(&space, &[]);
+        assert!(t.is_empty());
+        assert_eq!(t.validate(), Ok(()));
+        let t = Bvh::build(&space, &[Aabb::from_point(Point::splat(1.0))]);
+        assert_eq!(t.len(), 1);
+        assert!(is_leaf(t.root));
+        assert_eq!(t.validate(), Ok(()));
+    }
+
+    #[test]
+    fn structure_is_valid_for_grids() {
+        for (space_name, space) in [("serial", ExecSpace::serial()), ("par", ExecSpace::with_threads(4))] {
+            for (nx, ny, nz) in [(2, 1, 1), (3, 3, 1), (7, 5, 3), (16, 16, 4)] {
+                let boxes = grid_boxes(nx, ny, nz);
+                let t = Bvh::build(&space, &boxes);
+                assert_eq!(t.validate(), Ok(()), "{space_name} {nx}x{ny}x{nz}");
+                assert_eq!(t.len(), boxes.len());
+                // Root box must equal the scene box.
+                assert_eq!(*t.node_box(t.root), t.scene_box());
+            }
+        }
+    }
+
+    #[test]
+    fn duplicate_coordinates_are_handled() {
+        // All points identical: Morton codes all equal; the index
+        // augmentation must still produce a valid binary tree.
+        let boxes = vec![Aabb::from_point(Point::splat(3.0)); 100];
+        for space in [ExecSpace::serial(), ExecSpace::with_threads(4)] {
+            let t = Bvh::build(&space, &boxes);
+            assert_eq!(t.validate(), Ok(()));
+        }
+    }
+
+    #[test]
+    fn serial_and_parallel_builds_agree() {
+        let boxes = grid_boxes(11, 7, 5);
+        let a = Bvh::build(&ExecSpace::serial(), &boxes);
+        let b = Bvh::build(&ExecSpace::with_threads(4), &boxes);
+        assert_eq!(a.nodes, b.nodes);
+        assert_eq!(a.leaf_perm, b.leaf_perm);
+    }
+
+    #[test]
+    fn scene_box_reduction_matches_serial_fold() {
+        let boxes = grid_boxes(13, 4, 9);
+        let mut expect = Aabb::empty();
+        for b in &boxes {
+            expect.expand(b);
+        }
+        let got = compute_scene_box(&ExecSpace::with_threads(3), &boxes);
+        assert_eq!(got, expect);
+    }
+}

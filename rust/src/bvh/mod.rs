@@ -1,0 +1,229 @@
+//! The linear bounding volume hierarchy — the paper's core contribution.
+//!
+//! * [`build`] — fully parallel construction (Karras 2012), §2.1.
+//! * [`apetrei`] — the single-bottom-up-pass variant (Apetrei 2014) the
+//!   paper lists as near-future work; implemented here and exposed via
+//!   [`Bvh::build_apetrei`].
+//! * [`traversal`] — stack-based spatial traversal, §2.2.1.
+//! * [`nearest`] — stack-based nearest traversal (Patwary et al. 2016
+//!   style) plus a priority-queue reference variant, §2.2.2.
+//! * [`batched`] — the batched query engines: two-pass count-and-fill
+//!   (2P), buffered single-pass (1P) with fallback and compaction, CSR
+//!   output, and Morton query ordering (§2.2.1–2.2.3).
+//! * [`stats`] — hierarchy quality metrics (SAH) and the node-access
+//!   matrix used to reproduce Figure 2.
+
+pub mod apetrei;
+pub mod batched;
+pub mod build;
+pub mod nearest;
+pub mod stats;
+pub mod traversal;
+
+pub use batched::{QueryOptions, QueryOutput, QueryPredicate};
+
+use crate::exec::ExecSpace;
+use crate::geometry::Aabb;
+
+/// A tagged reference to a BVH node: leaves have the high bit set.
+///
+/// Using 32-bit tagged indices instead of pointers halves node bandwidth,
+/// which matters because "search algorithms are memory bound by nature"
+/// (paper §2).
+pub type NodeRef = u32;
+
+/// Tag bit distinguishing leaf from internal references.
+pub const LEAF_TAG: u32 = 0x8000_0000;
+
+/// Builds a leaf reference from a (sorted) leaf index.
+#[inline]
+pub const fn leaf_ref(i: u32) -> NodeRef {
+    i | LEAF_TAG
+}
+
+/// Builds an internal-node reference.
+#[inline]
+pub const fn internal_ref(i: u32) -> NodeRef {
+    i
+}
+
+/// Is this reference a leaf?
+#[inline]
+pub const fn is_leaf(r: NodeRef) -> bool {
+    r & LEAF_TAG != 0
+}
+
+/// Strips the tag, yielding the node index.
+#[inline]
+pub const fn ref_index(r: NodeRef) -> usize {
+    (r & !LEAF_TAG) as usize
+}
+
+/// One internal node, packed to 32 bytes so a node visit (bounding box +
+/// both child references) touches a single cache line — §Perf change 3;
+/// "search algorithms are memory bound by nature" (§2).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+#[repr(C)]
+pub(crate) struct InternalNode {
+    /// Node bounding box (24 bytes).
+    pub bbox: Aabb,
+    /// Tagged left-child reference.
+    pub left: NodeRef,
+    /// Tagged right-child reference.
+    pub right: NodeRef,
+}
+
+/// The bounding volume hierarchy.
+///
+/// Storage: one packed [`InternalNode`] per internal node; per leaf its
+/// box (in Morton-sorted order) and the permutation back to the user's
+/// original object index. A binary BVH over `n` leaves has exactly
+/// `n - 1` internal nodes, so all allocations are static once the input
+/// size is known (paper §2).
+#[derive(Clone, Debug)]
+pub struct Bvh {
+    /// Number of leaves (objects).
+    pub(crate) n_leaves: usize,
+    /// Packed internal nodes.
+    pub(crate) nodes: Vec<InternalNode>,
+    /// Leaf bounding boxes in Morton-sorted order.
+    pub(crate) leaf_boxes: Vec<Aabb>,
+    /// `leaf_perm[sorted] = original` object index ("storing the leaf node
+    /// permutation index in a leaf", §2.1).
+    pub(crate) leaf_perm: Vec<u32>,
+    /// Scene bounding box (root volume).
+    pub(crate) scene: Aabb,
+    /// Tagged reference to the root node.
+    pub(crate) root: NodeRef,
+}
+
+impl Bvh {
+    /// Builds the hierarchy with the Karras 2012 algorithm — the paper's
+    /// default construction.
+    pub fn build(space: &ExecSpace, boxes: &[Aabb]) -> Bvh {
+        build::build_karras(space, boxes)
+    }
+
+    /// Builds the hierarchy with the Apetrei 2014 single-pass algorithm
+    /// (identical query results, different construction schedule).
+    pub fn build_apetrei(space: &ExecSpace, boxes: &[Aabb]) -> Bvh {
+        apetrei::build_apetrei(space, boxes)
+    }
+
+    /// Number of objects indexed by the tree.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.n_leaves
+    }
+
+    /// `true` if the tree indexes no objects.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.n_leaves == 0
+    }
+
+    /// The scene bounding box (bounding volume of the root).
+    #[inline]
+    pub fn scene_box(&self) -> Aabb {
+        self.scene
+    }
+
+    /// Bounding box of a node reference.
+    #[inline]
+    pub(crate) fn node_box(&self, r: NodeRef) -> &Aabb {
+        if is_leaf(r) {
+            &self.leaf_boxes[ref_index(r)]
+        } else {
+            &self.nodes[ref_index(r)].bbox
+        }
+    }
+
+    /// Executes a homogeneous batch of queries, returning CSR results.
+    /// This is the library's primary entry point, mirroring
+    /// `ArborX::BVH::query(queries, indices, offsets)`.
+    pub fn query(
+        &self,
+        space: &ExecSpace,
+        queries: &[QueryPredicate],
+        options: &QueryOptions,
+    ) -> QueryOutput {
+        batched::run_queries(self, space, queries, options)
+    }
+
+    /// Structural sanity check used by tests and debug assertions: every
+    /// internal node has two children, every leaf is reachable exactly
+    /// once, and every parent box contains its children's boxes.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.n_leaves == 0 {
+            return Ok(());
+        }
+        if self.n_leaves == 1 {
+            if !is_leaf(self.root) {
+                return Err("single-leaf tree must have a leaf root".into());
+            }
+            return Ok(());
+        }
+        if self.nodes.len() != self.n_leaves - 1 {
+            return Err(format!(
+                "internal node count {} != n-1 = {}",
+                self.nodes.len(),
+                self.n_leaves - 1
+            ));
+        }
+        let mut leaf_seen = vec![false; self.n_leaves];
+        let mut internal_seen = vec![false; self.n_leaves - 1];
+        let mut stack = vec![self.root];
+        while let Some(r) = stack.pop() {
+            if is_leaf(r) {
+                let i = ref_index(r);
+                if leaf_seen[i] {
+                    return Err(format!("leaf {i} reached twice"));
+                }
+                leaf_seen[i] = true;
+            } else {
+                let i = ref_index(r);
+                if internal_seen[i] {
+                    return Err(format!("internal node {i} reached twice"));
+                }
+                internal_seen[i] = true;
+                let bb = &self.nodes[i].bbox;
+                for child in [self.nodes[i].left, self.nodes[i].right] {
+                    let cb = self.node_box(child);
+                    if !bb.contains_box(cb) {
+                        return Err(format!("node {i} does not contain child {child:#x}"));
+                    }
+                    stack.push(child);
+                }
+            }
+        }
+        if !leaf_seen.iter().all(|&s| s) {
+            return Err("not all leaves reachable".into());
+        }
+        if !internal_seen.iter().all(|&s| s) {
+            return Err("not all internal nodes reachable".into());
+        }
+        // The permutation must be a bijection.
+        let mut perm_seen = vec![false; self.n_leaves];
+        for &p in &self.leaf_perm {
+            if perm_seen[p as usize] {
+                return Err(format!("permutation repeats {p}"));
+            }
+            perm_seen[p as usize] = true;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn node_ref_tagging_round_trips() {
+        assert!(is_leaf(leaf_ref(5)));
+        assert!(!is_leaf(internal_ref(5)));
+        assert_eq!(ref_index(leaf_ref(123)), 123);
+        assert_eq!(ref_index(internal_ref(123)), 123);
+        assert_eq!(ref_index(leaf_ref(0)), 0);
+    }
+}

@@ -1,0 +1,359 @@
+//! Nearest-neighbor (k-NN) traversal — paper §2.2.2.
+//!
+//! Two implementations:
+//!
+//! * [`nearest_stack`] — the paper's preferred algorithm: a plain stack
+//!   where the closer child is pushed *second* so it is popped first,
+//!   approximating a priority queue without its maintenance cost (the
+//!   approach "first derived for k-d trees in Patwary et al. (2016)").
+//! * [`nearest_pq`] — the classical best-first traversal with a binary
+//!   min-heap, kept as the reference the paper compares against and used
+//!   in tests to cross-check results.
+//!
+//! Both maintain the current k best candidates in a bounded max-heap so
+//! the pruning bound is the distance of the *worst* candidate.
+
+use super::{is_leaf, ref_index, Bvh, NodeRef};
+use crate::geometry::Point;
+
+/// A candidate neighbor: squared distance and original object index.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Neighbor {
+    /// Squared distance from the query point.
+    pub distance_squared: f32,
+    /// Original (user) object index.
+    pub index: u32,
+}
+
+/// Bounded max-heap of the k best candidates seen so far.
+///
+/// `heap[0]` is the worst retained candidate, so the traversal prune
+/// bound is `O(1)` to read and candidates are replaced in `O(log k)`.
+pub struct KnnHeap {
+    k: usize,
+    heap: Vec<Neighbor>,
+}
+
+impl KnnHeap {
+    /// Creates an empty heap with capacity `k`.
+    pub fn new(k: usize) -> Self {
+        KnnHeap { k, heap: Vec::with_capacity(k) }
+    }
+
+    /// Clears the heap for reuse (keeps capacity and `k`).
+    pub fn reset(&mut self, k: usize) {
+        self.k = k;
+        self.heap.clear();
+        if self.heap.capacity() < k {
+            self.heap.reserve(k - self.heap.capacity());
+        }
+    }
+
+    /// Current pruning bound: squared distance of the worst candidate, or
+    /// +inf while fewer than `k` candidates are held.
+    #[inline]
+    pub fn bound(&self) -> f32 {
+        if self.heap.len() < self.k {
+            f32::INFINITY
+        } else {
+            self.heap[0].distance_squared
+        }
+    }
+
+    /// Offers a candidate; keeps it only if it improves the k-best set.
+    #[inline]
+    pub fn offer(&mut self, distance_squared: f32, index: u32) {
+        if self.k == 0 {
+            return;
+        }
+        if self.heap.len() < self.k {
+            self.heap.push(Neighbor { distance_squared, index });
+            // Sift up.
+            let mut i = self.heap.len() - 1;
+            while i > 0 {
+                let parent = (i - 1) / 2;
+                if self.heap[parent].distance_squared < self.heap[i].distance_squared {
+                    self.heap.swap(parent, i);
+                    i = parent;
+                } else {
+                    break;
+                }
+            }
+        } else if distance_squared < self.heap[0].distance_squared {
+            self.heap[0] = Neighbor { distance_squared, index };
+            // Sift down.
+            let n = self.heap.len();
+            let mut i = 0;
+            loop {
+                let (l, r) = (2 * i + 1, 2 * i + 2);
+                let mut largest = i;
+                if l < n && self.heap[l].distance_squared > self.heap[largest].distance_squared {
+                    largest = l;
+                }
+                if r < n && self.heap[r].distance_squared > self.heap[largest].distance_squared {
+                    largest = r;
+                }
+                if largest == i {
+                    break;
+                }
+                self.heap.swap(i, largest);
+                i = largest;
+            }
+        }
+    }
+
+    /// Number of candidates currently held.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// `true` when no candidates are held.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Drains the heap into `out`, sorted by ascending distance. This is
+    /// the "final (optional) step ... to clean the results" of §2.2.2.
+    pub fn drain_sorted_into(&mut self, out: &mut Vec<Neighbor>) {
+        out.clear();
+        out.extend_from_slice(&self.heap);
+        self.heap.clear();
+        out.sort_by(|a, b| {
+            a.distance_squared
+                .partial_cmp(&b.distance_squared)
+                .unwrap()
+                .then(a.index.cmp(&b.index))
+        });
+    }
+}
+
+/// Scratch buffers for one traversal thread, reused across queries.
+pub struct NearestScratch {
+    /// DFS stack of (node, squared distance to its box).
+    pub stack: Vec<(NodeRef, f32)>,
+    /// Bounded k-best heap.
+    pub heap: KnnHeap,
+}
+
+impl NearestScratch {
+    /// Creates scratch sized for `k`-NN queries.
+    pub fn new(k: usize) -> Self {
+        NearestScratch { stack: Vec::with_capacity(64), heap: KnnHeap::new(k) }
+    }
+}
+
+/// Stack-based k-NN traversal (the paper's choice). Results are written
+/// into `out` sorted by ascending distance; fewer than `k` results are
+/// returned iff the tree holds fewer than `k` objects.
+#[inline]
+pub fn nearest_stack(bvh: &Bvh, point: &Point, k: usize, scratch: &mut NearestScratch, out: &mut Vec<Neighbor>) {
+    nearest_stack_monitored(bvh, point, k, scratch, out, |_| {});
+}
+
+/// [`nearest_stack`] with a `monitor` callback on every internal node
+/// whose box distance is evaluated (for the Figure-2 matrix).
+pub fn nearest_stack_monitored<M: FnMut(u32)>(
+    bvh: &Bvh,
+    point: &Point,
+    k: usize,
+    scratch: &mut NearestScratch,
+    out: &mut Vec<Neighbor>,
+    mut monitor: M,
+) {
+    out.clear();
+    if bvh.n_leaves == 0 || k == 0 {
+        return;
+    }
+    scratch.heap.reset(k);
+    if is_leaf(bvh.root) {
+        scratch.heap.offer(bvh.leaf_boxes[0].distance_squared(point), bvh.leaf_perm[0]);
+        scratch.heap.drain_sorted_into(out);
+        return;
+    }
+    let stack = &mut scratch.stack;
+    let heap = &mut scratch.heap;
+    stack.clear();
+    stack.push((bvh.root, 0.0));
+    while let Some((node, dist)) = stack.pop() {
+        // Prune: the node (and its whole subtree) cannot beat the current
+        // k-th best.
+        if dist > heap.bound() {
+            continue;
+        }
+        let nd = &bvh.nodes[ref_index(node)];
+        // Leaves become candidates immediately; internal children are
+        // collected with their box distances.
+        let mut pending: [(NodeRef, f32); 2] = [(0, f32::INFINITY); 2];
+        let mut n_pending = 0usize;
+        for child in [nd.left, nd.right] {
+            let ci = ref_index(child);
+            if is_leaf(child) {
+                heap.offer(bvh.leaf_boxes[ci].distance_squared(point), bvh.leaf_perm[ci]);
+            } else {
+                monitor(ci as u32);
+                pending[n_pending] = (child, bvh.nodes[ci].bbox.distance_squared(point));
+                n_pending += 1;
+            }
+        }
+        // Push the farther child first so the closer one is popped first —
+        // the LIFO trick that emulates a priority queue (§2.2.2).
+        if n_pending == 2 && pending[0].1 < pending[1].1 {
+            pending.swap(0, 1);
+        }
+        let bound = heap.bound();
+        for &(child, d) in pending.iter().take(n_pending) {
+            if d <= bound {
+                stack.push((child, d));
+            }
+        }
+    }
+    heap.drain_sorted_into(out);
+}
+
+/// Best-first k-NN traversal with a true priority queue (reference
+/// implementation; §2.2.2 calls this the "typical implementation").
+pub fn nearest_pq(bvh: &Bvh, point: &Point, k: usize, out: &mut Vec<Neighbor>) {
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+
+    /// f32 ordered wrapper (distances are never NaN).
+    #[derive(PartialEq)]
+    struct D(f32);
+    impl Eq for D {}
+    impl PartialOrd for D {
+        fn partial_cmp(&self, o: &D) -> Option<std::cmp::Ordering> {
+            Some(self.cmp(o))
+        }
+    }
+    impl Ord for D {
+        fn cmp(&self, o: &D) -> std::cmp::Ordering {
+            self.0.partial_cmp(&o.0).unwrap()
+        }
+    }
+
+    out.clear();
+    if bvh.n_leaves == 0 || k == 0 {
+        return;
+    }
+    let mut best = KnnHeap::new(k);
+    if is_leaf(bvh.root) {
+        best.offer(bvh.leaf_boxes[0].distance_squared(point), bvh.leaf_perm[0]);
+        best.drain_sorted_into(out);
+        return;
+    }
+    let mut pq: BinaryHeap<(Reverse<D>, NodeRef)> = BinaryHeap::new();
+    pq.push((Reverse(D(0.0)), bvh.root));
+    while let Some((Reverse(D(dist)), node)) = pq.pop() {
+        if dist > best.bound() {
+            break; // everything remaining is at least this far
+        }
+        let nd = &bvh.nodes[ref_index(node)];
+        for child in [nd.left, nd.right] {
+            let ci = ref_index(child);
+            if is_leaf(child) {
+                best.offer(bvh.leaf_boxes[ci].distance_squared(point), bvh.leaf_perm[ci]);
+            } else {
+                let d = bvh.nodes[ci].bbox.distance_squared(point);
+                if d <= best.bound() {
+                    pq.push((Reverse(D(d)), child));
+                }
+            }
+        }
+    }
+    best.drain_sorted_into(out);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::ExecSpace;
+    use crate::geometry::Aabb;
+
+    fn cloud(n: usize, seed: u64) -> Vec<Point> {
+        let mut s = seed.max(1);
+        let mut next = move || {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            (s >> 11) as f32 / (1u64 << 53) as f32 * 20.0 - 10.0
+        };
+        (0..n).map(|_| Point::new(next(), next(), next())).collect()
+    }
+
+    fn brute_knn(points: &[Point], q: &Point, k: usize) -> Vec<Neighbor> {
+        let mut all: Vec<Neighbor> = points
+            .iter()
+            .enumerate()
+            .map(|(i, p)| Neighbor { distance_squared: q.distance_squared(p), index: i as u32 })
+            .collect();
+        all.sort_by(|a, b| {
+            a.distance_squared
+                .partial_cmp(&b.distance_squared)
+                .unwrap()
+                .then(a.index.cmp(&b.index))
+        });
+        all.truncate(k);
+        all
+    }
+
+    #[test]
+    fn knn_heap_keeps_k_smallest() {
+        let mut h = KnnHeap::new(3);
+        for (d, i) in [(5.0, 0), (1.0, 1), (4.0, 2), (2.0, 3), (3.0, 4)] {
+            h.offer(d, i);
+        }
+        let mut out = Vec::new();
+        h.drain_sorted_into(&mut out);
+        let dists: Vec<f32> = out.iter().map(|n| n.distance_squared).collect();
+        assert_eq!(dists, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn stack_and_pq_match_brute_force() {
+        let points = cloud(500, 42);
+        let boxes: Vec<Aabb> = points.iter().map(|p| Aabb::from_point(*p)).collect();
+        let bvh = Bvh::build(&ExecSpace::serial(), &boxes);
+        let mut scratch = NearestScratch::new(10);
+        let mut out_stack = Vec::new();
+        let mut out_pq = Vec::new();
+        for q in cloud(50, 7) {
+            for k in [1usize, 5, 10] {
+                let expect = brute_knn(&points, &q, k);
+                nearest_stack(&bvh, &q, k, &mut scratch, &mut out_stack);
+                nearest_pq(&bvh, &q, k, &mut out_pq);
+                let ds: Vec<f32> = out_stack.iter().map(|n| n.distance_squared).collect();
+                let de: Vec<f32> = expect.iter().map(|n| n.distance_squared).collect();
+                assert_eq!(ds, de, "stack k={k}");
+                let dp: Vec<f32> = out_pq.iter().map(|n| n.distance_squared).collect();
+                assert_eq!(dp, de, "pq k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn k_larger_than_tree_returns_all() {
+        let points = cloud(7, 3);
+        let boxes: Vec<Aabb> = points.iter().map(|p| Aabb::from_point(*p)).collect();
+        let bvh = Bvh::build(&ExecSpace::serial(), &boxes);
+        let mut scratch = NearestScratch::new(20);
+        let mut out = Vec::new();
+        nearest_stack(&bvh, &Point::origin(), 20, &mut scratch, &mut out);
+        assert_eq!(out.len(), 7);
+        assert!(out.windows(2).all(|w| w[0].distance_squared <= w[1].distance_squared));
+    }
+
+    #[test]
+    fn k_zero_and_empty_tree() {
+        let bvh = Bvh::build(&ExecSpace::serial(), &[]);
+        let mut scratch = NearestScratch::new(4);
+        let mut out = vec![Neighbor { distance_squared: 0.0, index: 0 }];
+        nearest_stack(&bvh, &Point::origin(), 4, &mut scratch, &mut out);
+        assert!(out.is_empty());
+        let boxes = [Aabb::from_point(Point::splat(1.0))];
+        let bvh = Bvh::build(&ExecSpace::serial(), &boxes);
+        nearest_stack(&bvh, &Point::origin(), 0, &mut scratch, &mut out);
+        assert!(out.is_empty());
+    }
+}

@@ -1,0 +1,238 @@
+//! Hierarchy quality and traversal-divergence statistics.
+//!
+//! Two purposes:
+//!
+//! * the surface-area-heuristic (SAH) cost of a built tree — the quality
+//!   metric the paper defers to future work (§2) but which we expose so
+//!   the Karras and Apetrei builders can be compared quantitatively;
+//! * the *node-access matrix* of Figure 2: one row per query (in
+//!   execution order), one column per internal node, a set bit when the
+//!   query's traversal examined that node's bounding volume. The paper
+//!   uses it to visualize how Morton query ordering makes nearby threads
+//!   "share many nodes of the tree in their traversal" (§2.2.3).
+
+use super::batched::{query_order, QueryPredicate};
+use super::nearest::{nearest_stack_monitored, NearestScratch};
+use super::traversal::for_each_spatial_monitored;
+use super::{is_leaf, ref_index, Bvh};
+use crate::exec::ExecSpace;
+
+/// SAH-style cost of the hierarchy: `sum over internal nodes of
+/// SA(node)/SA(root)` (lower is better). A standard proxy for expected
+/// traversal cost.
+pub fn sah_cost(bvh: &Bvh) -> f64 {
+    if bvh.len() < 2 {
+        return 0.0;
+    }
+    let root_sa = bvh.node_box(bvh.root).surface_area() as f64;
+    if root_sa == 0.0 {
+        return 0.0;
+    }
+    bvh.nodes
+        .iter()
+        .map(|nd| nd.bbox.surface_area() as f64 / root_sa)
+        .sum()
+}
+
+/// Depth statistics of the tree (min/max/mean leaf depth).
+pub fn depth_stats(bvh: &Bvh) -> (usize, usize, f64) {
+    if bvh.is_empty() {
+        return (0, 0, 0.0);
+    }
+    if is_leaf(bvh.root) {
+        return (0, 0, 0.0);
+    }
+    let mut min_d = usize::MAX;
+    let mut max_d = 0usize;
+    let mut sum_d = 0usize;
+    let mut count = 0usize;
+    let mut stack = vec![(bvh.root, 0usize)];
+    while let Some((node, d)) = stack.pop() {
+        if is_leaf(node) {
+            min_d = min_d.min(d);
+            max_d = max_d.max(d);
+            sum_d += d;
+            count += 1;
+        } else {
+            let nd = &bvh.nodes[ref_index(node)];
+            stack.push((nd.left, d + 1));
+            stack.push((nd.right, d + 1));
+        }
+    }
+    (min_d, max_d, sum_d as f64 / count as f64)
+}
+
+/// The Figure-2 node-access matrix: `rows[r]` lists the internal nodes
+/// accessed by the query executed `r`-th (ascending node id).
+pub struct AccessMatrix {
+    /// Accessed internal-node ids per executed query, in execution order.
+    pub rows: Vec<Vec<u32>>,
+    /// Number of internal nodes (matrix columns).
+    pub n_nodes: usize,
+}
+
+impl AccessMatrix {
+    /// Total number of set entries.
+    pub fn total_accesses(&self) -> usize {
+        self.rows.iter().map(|r| r.len()).sum()
+    }
+
+    /// Mean Jaccard similarity of *adjacent* rows — the quantitative form
+    /// of Figure 2's visual: sorted queries make neighboring threads visit
+    /// nearly the same nodes (similarity → 1), unsorted queries do not.
+    pub fn adjacent_similarity(&self) -> f64 {
+        if self.rows.len() < 2 {
+            return 1.0;
+        }
+        let mut total = 0.0;
+        for w in self.rows.windows(2) {
+            total += jaccard(&w[0], &w[1]);
+        }
+        total / (self.rows.len() - 1) as f64
+    }
+
+    /// Writes the matrix in PGM (P2) image form for visual comparison with
+    /// the paper's Figure 2 (black = accessed).
+    pub fn to_pgm(&self) -> String {
+        let h = self.rows.len();
+        let w = self.n_nodes;
+        let mut out = format!("P2\n{w} {h}\n1\n");
+        for row in &self.rows {
+            let mut line = vec![1u8; w];
+            for &c in row {
+                line[c as usize] = 0;
+            }
+            for (i, v) in line.iter().enumerate() {
+                if i > 0 {
+                    out.push(' ');
+                }
+                out.push_str(if *v == 0 { "0" } else { "1" });
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Jaccard similarity of two ascending-sorted id lists.
+fn jaccard(a: &[u32], b: &[u32]) -> f64 {
+    if a.is_empty() && b.is_empty() {
+        return 1.0;
+    }
+    let (mut i, mut j, mut inter) = (0usize, 0usize, 0usize);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                inter += 1;
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    let union = a.len() + b.len() - inter;
+    inter as f64 / union as f64
+}
+
+/// Runs the batch serially in the given execution order (sorted or not)
+/// and records the node-access matrix — the Figure-2 experiment.
+pub fn access_matrix(bvh: &Bvh, queries: &[QueryPredicate], sort_queries: bool) -> AccessMatrix {
+    let space = ExecSpace::serial();
+    let order = query_order(&space, bvh, queries, sort_queries);
+    let mut rows = Vec::with_capacity(queries.len());
+    let mut stack = Vec::with_capacity(64);
+    let mut scratch = NearestScratch::new(16);
+    let mut knn = Vec::new();
+    for &qi in &order {
+        let mut row: Vec<u32> = Vec::new();
+        match &queries[qi as usize] {
+            QueryPredicate::Spatial(s) => {
+                for_each_spatial_monitored(bvh, s, &mut stack, |_| {}, |node| row.push(node));
+            }
+            QueryPredicate::Nearest(n) => {
+                nearest_stack_monitored(bvh, &n.point, n.k, &mut scratch, &mut knn, |node| {
+                    row.push(node)
+                });
+            }
+        }
+        row.sort();
+        row.dedup();
+        rows.push(row);
+    }
+    AccessMatrix { rows, n_nodes: bvh.len().saturating_sub(1) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::{Aabb, Point};
+
+    fn random_cloud(n: usize, seed: u64) -> Vec<Point> {
+        let mut s = seed | 1;
+        let mut next = move || {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            (s >> 11) as f32 / (1u64 << 53) as f32
+        };
+        (0..n).map(|_| Point::new(next(), next(), next())).collect()
+    }
+
+    fn build(points: &[Point]) -> Bvh {
+        let boxes: Vec<Aabb> = points.iter().map(|p| Aabb::from_point(*p)).collect();
+        Bvh::build(&ExecSpace::serial(), &boxes)
+    }
+
+    #[test]
+    fn sah_cost_is_positive_and_finite() {
+        let bvh = build(&random_cloud(500, 3));
+        let c = sah_cost(&bvh);
+        assert!(c > 0.0 && c.is_finite());
+        // Root contributes 1.0; internal nodes shrink below it.
+        assert!(c >= 1.0);
+    }
+
+    #[test]
+    fn depth_stats_are_consistent() {
+        let bvh = build(&random_cloud(256, 9));
+        let (min_d, max_d, mean_d) = depth_stats(&bvh);
+        assert!(min_d >= 1);
+        assert!(max_d >= min_d);
+        assert!(mean_d >= min_d as f64 && mean_d <= max_d as f64);
+        // A Morton-ordered tree over 256 well-spread points stays shallow.
+        assert!(max_d < 64);
+    }
+
+    #[test]
+    fn sorted_queries_increase_adjacent_similarity() {
+        // The Figure-2 effect: Morton-sorting queries raises adjacent-row
+        // similarity of the access matrix.
+        let points = random_cloud(418, 7);
+        let bvh = build(&points);
+        let queries: Vec<QueryPredicate> = random_cloud(418, 1234)
+            .into_iter()
+            .map(|p| QueryPredicate::nearest(p, 10))
+            .collect();
+        let unsorted = access_matrix(&bvh, &queries, false);
+        let sorted = access_matrix(&bvh, &queries, true);
+        assert_eq!(unsorted.total_accesses(), sorted.total_accesses());
+        assert!(
+            sorted.adjacent_similarity() > unsorted.adjacent_similarity() + 0.1,
+            "sorted {} must beat unsorted {}",
+            sorted.adjacent_similarity(),
+            unsorted.adjacent_similarity()
+        );
+    }
+
+    #[test]
+    fn pgm_dump_has_correct_header() {
+        let points = random_cloud(32, 21);
+        let bvh = build(&points);
+        let queries: Vec<QueryPredicate> =
+            points.iter().map(|p| QueryPredicate::nearest(*p, 3)).collect();
+        let m = access_matrix(&bvh, &queries, true);
+        let pgm = m.to_pgm();
+        assert!(pgm.starts_with(&format!("P2\n{} {}\n1\n", 31, 32)));
+    }
+}

@@ -1,0 +1,137 @@
+//! Stack-based spatial traversal (paper §2.2.1).
+//!
+//! "A naive recursive implementation may lead to a high execution
+//! divergence ... Instead, an iterative traversal is preferred, using a
+//! stack to keep track of nodes to visit." The stack buffer is owned by
+//! the caller so batched engines can reuse one allocation per thread
+//! across many queries (no allocation in the hot loop).
+
+use super::{is_leaf, ref_index, Bvh, NodeRef};
+use crate::geometry::predicates::Spatial;
+
+/// Visits every object whose leaf box satisfies `pred`, invoking
+/// `visit(original_object_index)`. `stack` is cleared and reused.
+#[inline]
+pub fn for_each_spatial<F: FnMut(u32)>(bvh: &Bvh, pred: &Spatial, stack: &mut Vec<NodeRef>, visit: F) {
+    for_each_spatial_monitored(bvh, pred, stack, visit, |_| {});
+}
+
+/// [`for_each_spatial`] with an extra `monitor` callback invoked with each
+/// *internal* node whose box is tested; used by [`super::stats`] to build
+/// the Figure-2 node-access matrix.
+pub fn for_each_spatial_monitored<F: FnMut(u32), M: FnMut(u32)>(
+    bvh: &Bvh,
+    pred: &Spatial,
+    stack: &mut Vec<NodeRef>,
+    mut visit: F,
+    mut monitor: M,
+) {
+    if bvh.n_leaves == 0 {
+        return;
+    }
+    // Single-leaf tree: the root is a leaf.
+    if is_leaf(bvh.root) {
+        if pred.test(&bvh.leaf_boxes[0]) {
+            visit(bvh.leaf_perm[0]);
+        }
+        return;
+    }
+    // Root box test, then the paper's pop/test-children/push loop.
+    monitor(0);
+    if !pred.test(&bvh.nodes[ref_index(bvh.root)].bbox) {
+        return;
+    }
+    stack.clear();
+    stack.push(bvh.root);
+    while let Some(node) = stack.pop() {
+        let nd = &bvh.nodes[ref_index(node)];
+        for child in [nd.left, nd.right] {
+            let ci = ref_index(child);
+            if is_leaf(child) {
+                if pred.test(&bvh.leaf_boxes[ci]) {
+                    visit(bvh.leaf_perm[ci]);
+                }
+            } else {
+                monitor(ci as u32);
+                if pred.test(&bvh.nodes[ci].bbox) {
+                    stack.push(child);
+                }
+            }
+        }
+    }
+}
+
+/// Counts the number of satisfying objects without storing them — the
+/// first pass of the 2P strategy.
+#[inline]
+pub fn count_spatial(bvh: &Bvh, pred: &Spatial, stack: &mut Vec<NodeRef>) -> u32 {
+    let mut count = 0u32;
+    for_each_spatial(bvh, pred, stack, |_| count += 1);
+    count
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::ExecSpace;
+    use crate::geometry::{Aabb, Point, Sphere};
+
+    fn line_boxes(n: usize) -> Vec<Aabb> {
+        (0..n)
+            .map(|i| Aabb::from_point(Point::new(i as f32, 0.0, 0.0)))
+            .collect()
+    }
+
+    #[test]
+    fn sphere_query_on_a_line_of_points() {
+        let space = ExecSpace::serial();
+        let boxes = line_boxes(100);
+        let bvh = Bvh::build(&space, &boxes);
+        let pred = Spatial::IntersectsSphere(Sphere::new(Point::new(10.0, 0.0, 0.0), 2.5));
+        let mut stack = Vec::new();
+        let mut found = Vec::new();
+        for_each_spatial(&bvh, &pred, &mut stack, |i| found.push(i));
+        found.sort();
+        assert_eq!(found, vec![8, 9, 10, 11, 12]);
+        assert_eq!(count_spatial(&bvh, &pred, &mut stack), 5);
+    }
+
+    #[test]
+    fn box_query_matches_brute_force() {
+        let space = ExecSpace::with_threads(2);
+        let boxes = line_boxes(257);
+        let bvh = Bvh::build(&space, &boxes);
+        let region = Aabb::new(Point::new(40.5, -1.0, -1.0), Point::new(60.0, 1.0, 1.0));
+        let pred = Spatial::IntersectsBox(region);
+        let mut stack = Vec::new();
+        let mut found = Vec::new();
+        for_each_spatial(&bvh, &pred, &mut stack, |i| found.push(i));
+        found.sort();
+        let expect: Vec<u32> = (0..257)
+            .filter(|&i| region.intersects(&boxes[i as usize]))
+            .collect();
+        assert_eq!(found, expect);
+    }
+
+    #[test]
+    fn no_results_outside_scene() {
+        let space = ExecSpace::serial();
+        let bvh = Bvh::build(&space, &line_boxes(64));
+        let pred = Spatial::IntersectsSphere(Sphere::new(Point::new(0.0, 100.0, 0.0), 1.0));
+        let mut stack = Vec::new();
+        assert_eq!(count_spatial(&bvh, &pred, &mut stack), 0);
+    }
+
+    #[test]
+    fn empty_and_single_leaf_trees() {
+        let space = ExecSpace::serial();
+        let mut stack = Vec::new();
+        let empty = Bvh::build(&space, &[]);
+        let pred = Spatial::IntersectsSphere(Sphere::new(Point::origin(), 10.0));
+        assert_eq!(count_spatial(&empty, &pred, &mut stack), 0);
+        let one = Bvh::build(&space, &[Aabb::from_point(Point::splat(1.0))]);
+        assert_eq!(count_spatial(&one, &pred, &mut stack), 1);
+        let far = Spatial::IntersectsSphere(Sphere::new(Point::splat(100.0), 1.0));
+        assert_eq!(count_spatial(&one, &far, &mut stack), 0);
+    }
+}

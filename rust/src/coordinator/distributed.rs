@@ -1,0 +1,281 @@
+//! Simulated distributed search — the paper's §4 outlook, implemented.
+//!
+//! "The second [direction] is implementing the distributed search
+//! algorithms using MPI ... it is likely that the data that one searches
+//! for may not belong to the same node." We simulate the MPI layer
+//! in-process: the object set is partitioned into `R` rank shards, each
+//! rank builds its own BVH, and a *top tree* is built over the rank scene
+//! boxes (this is exactly the design ArborX later shipped as
+//! `DistributedTree`). Queries run in two phases:
+//!
+//! 1. **forward** — traverse the top tree to find candidate ranks whose
+//!    scene box satisfies the predicate (or can beat the current k-NN
+//!    bound);
+//! 2. **merge** — execute on each candidate rank's local tree and merge
+//!    local results back to global indices.
+
+use crate::bvh::nearest::{KnnHeap, Neighbor, NearestScratch};
+use crate::bvh::traversal::for_each_spatial;
+use crate::bvh::{nearest, Bvh};
+use crate::exec::ExecSpace;
+use crate::geometry::predicates::Spatial;
+use crate::geometry::{Aabb, Point};
+
+/// One rank's shard: a local tree plus the map back to global indices.
+struct RankShard {
+    bvh: Bvh,
+    /// `global[local] = global object index`.
+    global: Vec<u32>,
+}
+
+/// A distributed tree over `R` simulated ranks.
+pub struct DistributedTree {
+    ranks: Vec<RankShard>,
+    /// Top-level tree whose "objects" are the rank scene boxes.
+    top: Bvh,
+}
+
+/// How objects are assigned to ranks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Partition {
+    /// Contiguous blocks of the input order (what an application with
+    /// pre-distributed data looks like).
+    Block,
+    /// Morton-sorted blocks (a locality-preserving partition — each rank
+    /// owns a compact region, the favorable case).
+    MortonBlock,
+}
+
+impl DistributedTree {
+    /// Partitions `boxes` over `n_ranks` ranks and builds all trees.
+    pub fn build(space: &ExecSpace, boxes: &[Aabb], n_ranks: usize, partition: Partition) -> DistributedTree {
+        assert!(n_ranks >= 1);
+        let n = boxes.len();
+        // Assign a rank to each object.
+        let order: Vec<u32> = match partition {
+            Partition::Block => (0..n as u32).collect(),
+            Partition::MortonBlock => {
+                let scene = crate::bvh::build::compute_scene_box(space, boxes);
+                let mut codes: Vec<u64> = boxes
+                    .iter()
+                    .map(|b| crate::geometry::morton::morton64_scene(b, &scene))
+                    .collect();
+                let mut perm: Vec<u32> = (0..n as u32).collect();
+                crate::exec::sort::sort_pairs(space, &mut codes, &mut perm);
+                perm
+            }
+        };
+        let shard_size = n.div_ceil(n_ranks.max(1)).max(1);
+        let mut ranks = Vec::new();
+        for chunk in order.chunks(shard_size) {
+            let local_boxes: Vec<Aabb> = chunk.iter().map(|&g| boxes[g as usize]).collect();
+            let bvh = Bvh::build(space, &local_boxes);
+            ranks.push(RankShard { bvh, global: chunk.to_vec() });
+        }
+        // Top tree over rank scene boxes.
+        let rank_boxes: Vec<Aabb> = ranks.iter().map(|r| r.bvh.scene_box()).collect();
+        let top = Bvh::build(space, &rank_boxes);
+        DistributedTree { ranks, top }
+    }
+
+    /// Number of ranks.
+    pub fn n_ranks(&self) -> usize {
+        self.ranks.len()
+    }
+
+    /// Total number of indexed objects.
+    pub fn len(&self) -> usize {
+        self.ranks.iter().map(|r| r.global.len()).sum()
+    }
+
+    /// `true` when no objects are indexed.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Phase-1 forward: the ranks whose scene box satisfies the spatial
+    /// predicate.
+    pub fn candidate_ranks(&self, pred: &Spatial) -> Vec<u32> {
+        let mut out = Vec::new();
+        let mut stack = Vec::new();
+        for_each_spatial(&self.top, pred, &mut stack, |r| out.push(r));
+        out.sort();
+        out
+    }
+
+    /// Distributed spatial query: global indices of all matches
+    /// (ascending). Communication cost stats are returned alongside.
+    pub fn spatial(&self, pred: &Spatial) -> (Vec<u32>, DistStats) {
+        let ranks = self.candidate_ranks(pred);
+        let mut out = Vec::new();
+        let mut stack = Vec::new();
+        for &r in &ranks {
+            let shard = &self.ranks[r as usize];
+            for_each_spatial(&shard.bvh, pred, &mut stack, |local| {
+                out.push(shard.global[local as usize]);
+            });
+        }
+        out.sort();
+        let stats = DistStats { ranks_contacted: ranks.len(), results: out.len() };
+        (out, stats)
+    }
+
+    /// Distributed k-NN: phase 1 queries the *closest* rank to seed the
+    /// bound, phase 2 refines on every rank that could still beat it.
+    pub fn nearest(&self, point: &Point, k: usize) -> (Vec<Neighbor>, DistStats) {
+        let mut out = Vec::new();
+        if self.is_empty() || k == 0 {
+            return (out, DistStats::default());
+        }
+        // Rank order by scene-box distance (the "closest rank first"
+        // forwarding heuristic).
+        let mut rank_dist: Vec<(usize, f32)> = self
+            .ranks
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| !s.bvh.is_empty())
+            .map(|(i, s)| (i, s.bvh.scene_box().distance_squared(point)))
+            .collect();
+        rank_dist.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+
+        let mut heap = KnnHeap::new(k);
+        let mut scratch = NearestScratch::new(k);
+        let mut local = Vec::new();
+        let mut contacted = 0usize;
+        for (ri, d) in rank_dist {
+            if d > heap.bound() {
+                break; // no remaining rank can improve the k-best set
+            }
+            contacted += 1;
+            let shard = &self.ranks[ri];
+            nearest::nearest_stack(&shard.bvh, point, k, &mut scratch, &mut local);
+            for nb in &local {
+                heap.offer(nb.distance_squared, shard.global[nb.index as usize]);
+            }
+        }
+        heap.drain_sorted_into(&mut out);
+        let stats = DistStats { ranks_contacted: contacted, results: out.len() };
+        (out, stats)
+    }
+}
+
+/// Communication statistics of one distributed query.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DistStats {
+    /// Ranks whose local tree was queried.
+    pub ranks_contacted: usize,
+    /// Total results returned.
+    pub results: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::brute::BruteForce;
+    use crate::data::rng::Rng;
+    use crate::geometry::Sphere;
+
+    fn cloud(n: usize, seed: u64) -> Vec<Aabb> {
+        let mut r = Rng::new(seed);
+        (0..n)
+            .map(|_| {
+                Aabb::from_point(Point::new(
+                    r.uniform(-8.0, 8.0),
+                    r.uniform(-8.0, 8.0),
+                    r.uniform(-8.0, 8.0),
+                ))
+            })
+            .collect()
+    }
+
+    #[test]
+    fn distributed_spatial_matches_single_tree() {
+        let space = ExecSpace::with_threads(2);
+        let boxes = cloud(3000, 31);
+        let brute = BruteForce::new(&boxes);
+        for partition in [Partition::Block, Partition::MortonBlock] {
+            let dt = DistributedTree::build(&space, &boxes, 7, partition);
+            assert_eq!(dt.n_ranks(), 7);
+            assert_eq!(dt.len(), 3000);
+            let mut rng = Rng::new(1);
+            for _ in 0..25 {
+                let q = Point::new(
+                    rng.uniform(-8.0, 8.0),
+                    rng.uniform(-8.0, 8.0),
+                    rng.uniform(-8.0, 8.0),
+                );
+                let pred = Spatial::IntersectsSphere(Sphere::new(q, 2.0));
+                let (got, stats) = dt.spatial(&pred);
+                assert_eq!(got, brute.spatial(&pred), "{partition:?}");
+                assert!(stats.ranks_contacted <= 7);
+            }
+        }
+    }
+
+    #[test]
+    fn distributed_nearest_matches_single_tree() {
+        let space = ExecSpace::serial();
+        let boxes = cloud(2000, 77);
+        let brute = BruteForce::new(&boxes);
+        let dt = DistributedTree::build(&space, &boxes, 5, Partition::MortonBlock);
+        let mut rng = Rng::new(9);
+        for _ in 0..25 {
+            let q = Point::new(
+                rng.uniform(-10.0, 10.0),
+                rng.uniform(-10.0, 10.0),
+                rng.uniform(-10.0, 10.0),
+            );
+            for k in [1usize, 10] {
+                let (got, stats) = dt.nearest(&q, k);
+                let want = brute.nearest(&q, k);
+                let gd: Vec<f32> = got.iter().map(|n| n.distance_squared).collect();
+                let wd: Vec<f32> = want.iter().map(|n| n.distance_squared).collect();
+                assert_eq!(gd, wd, "k={k}");
+                assert!(stats.ranks_contacted >= 1);
+            }
+        }
+    }
+
+    #[test]
+    fn morton_partition_contacts_fewer_ranks_for_local_queries() {
+        // Locality-preserving partitions should localize spatial queries:
+        // on average fewer ranks contacted than with block partitioning
+        // of randomly ordered input.
+        let space = ExecSpace::serial();
+        let boxes = cloud(4000, 5);
+        let block = DistributedTree::build(&space, &boxes, 8, Partition::Block);
+        let morton = DistributedTree::build(&space, &boxes, 8, Partition::MortonBlock);
+        let mut rng = Rng::new(17);
+        let (mut cb, mut cm) = (0usize, 0usize);
+        for _ in 0..50 {
+            let q = Point::new(
+                rng.uniform(-8.0, 8.0),
+                rng.uniform(-8.0, 8.0),
+                rng.uniform(-8.0, 8.0),
+            );
+            let pred = Spatial::IntersectsSphere(Sphere::new(q, 1.0));
+            cb += block.spatial(&pred).1.ranks_contacted;
+            cm += morton.spatial(&pred).1.ranks_contacted;
+        }
+        assert!(cm < cb, "morton {cm} should contact fewer ranks than block {cb}");
+    }
+
+    #[test]
+    fn single_rank_degenerates_to_plain_tree() {
+        let space = ExecSpace::serial();
+        let boxes = cloud(500, 3);
+        let dt = DistributedTree::build(&space, &boxes, 1, Partition::Block);
+        let pred = Spatial::IntersectsSphere(Sphere::new(Point::origin(), 3.0));
+        let (got, stats) = dt.spatial(&pred);
+        assert_eq!(got, BruteForce::new(&boxes).spatial(&pred));
+        assert_eq!(stats.ranks_contacted, 1);
+    }
+
+    #[test]
+    fn empty_tree() {
+        let dt = DistributedTree::build(&ExecSpace::serial(), &[], 4, Partition::Block);
+        assert!(dt.is_empty());
+        let (nn, _) = dt.nearest(&Point::origin(), 5);
+        assert!(nn.is_empty());
+    }
+}

@@ -1,0 +1,123 @@
+//! Service metrics: request counts, latency quantiles, throughput.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Rolling metrics for a search service.
+#[derive(Debug)]
+pub struct Metrics {
+    started: Instant,
+    requests: AtomicU64,
+    batches: AtomicU64,
+    results: AtomicU64,
+    /// Per-request latencies in microseconds (bounded reservoir).
+    latencies_us: Mutex<Vec<u64>>,
+}
+
+/// Maximum retained latency samples (reservoir truncates beyond this).
+const MAX_SAMPLES: usize = 1 << 20;
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics {
+            started: Instant::now(),
+            requests: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            results: AtomicU64::new(0),
+            latencies_us: Mutex::new(Vec::new()),
+        }
+    }
+}
+
+impl Metrics {
+    /// Records one executed batch of `n` requests yielding `results`
+    /// total matches, with the given per-request latencies.
+    pub fn record_batch(&self, latencies: &[Duration], results: u64) {
+        self.requests.fetch_add(latencies.len() as u64, Ordering::Relaxed);
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.results.fetch_add(results, Ordering::Relaxed);
+        let mut samples = self.latencies_us.lock().unwrap();
+        for l in latencies {
+            if samples.len() < MAX_SAMPLES {
+                samples.push(l.as_micros() as u64);
+            }
+        }
+    }
+
+    /// Total requests served.
+    pub fn requests(&self) -> u64 {
+        self.requests.load(Ordering::Relaxed)
+    }
+
+    /// Total batches executed.
+    pub fn batches(&self) -> u64 {
+        self.batches.load(Ordering::Relaxed)
+    }
+
+    /// Total result indices returned.
+    pub fn results(&self) -> u64 {
+        self.results.load(Ordering::Relaxed)
+    }
+
+    /// Requests per second since service start.
+    pub fn throughput(&self) -> f64 {
+        let secs = self.started.elapsed().as_secs_f64();
+        if secs == 0.0 {
+            0.0
+        } else {
+            self.requests() as f64 / secs
+        }
+    }
+
+    /// Latency quantiles (p50, p95, p99) in microseconds.
+    pub fn latency_quantiles(&self) -> (u64, u64, u64) {
+        let mut samples = self.latencies_us.lock().unwrap().clone();
+        if samples.is_empty() {
+            return (0, 0, 0);
+        }
+        samples.sort_unstable();
+        let q = |f: f64| samples[((samples.len() - 1) as f64 * f).round() as usize];
+        (q(0.50), q(0.95), q(0.99))
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        let (p50, p95, p99) = self.latency_quantiles();
+        format!(
+            "requests={} batches={} results={} throughput={:.0}/s p50={}us p95={}us p99={}us",
+            self.requests(),
+            self.batches(),
+            self.results(),
+            self.throughput(),
+            p50,
+            p95,
+            p99
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_recording_accumulates() {
+        let m = Metrics::default();
+        m.record_batch(&[Duration::from_micros(100), Duration::from_micros(200)], 7);
+        m.record_batch(&[Duration::from_micros(300)], 3);
+        assert_eq!(m.requests(), 3);
+        assert_eq!(m.batches(), 2);
+        assert_eq!(m.results(), 10);
+        let (p50, _p95, p99) = m.latency_quantiles();
+        assert_eq!(p50, 200);
+        assert_eq!(p99, 300);
+    }
+
+    #[test]
+    fn empty_metrics_are_zero() {
+        let m = Metrics::default();
+        assert_eq!(m.latency_quantiles(), (0, 0, 0));
+        assert_eq!(m.requests(), 0);
+    }
+}

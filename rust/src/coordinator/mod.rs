@@ -1,0 +1,21 @@
+//! Layer-3 coordination: the search service and distributed search.
+//!
+//! ArborX is a library, not a server — but its *usage pattern* in HPC
+//! applications is batched: many threads/ranks submit queries that are
+//! executed together (§2.2). This module packages that pattern the way a
+//! modern serving system would:
+//!
+//! * [`service`] — a request router + dynamic batcher over a built index:
+//!   clients submit single queries; the service coalesces them into
+//!   batches (bounded by size and timeout), executes them with the
+//!   batched engines of [`crate::bvh::batched`], and returns per-query
+//!   results with latency accounting.
+//! * [`metrics`] — latency/throughput counters (p50/p95/p99).
+//! * [`distributed`] — the paper's §4 outlook ("implementing the
+//!   distributed search algorithms using MPI"): a simulated multi-rank
+//!   distributed tree — per-rank BVHs plus a top-level tree over rank
+//!   scene boxes, with two-phase forward/merge query execution.
+
+pub mod distributed;
+pub mod metrics;
+pub mod service;

@@ -1,0 +1,261 @@
+//! The search service: request router + dynamic batcher.
+//!
+//! Clients submit individual [`QueryPredicate`]s; a coordinator thread
+//! coalesces them into batches bounded by `max_batch` and
+//! `batch_timeout`, executes the batch with the BVH's batched engines
+//! (reaping the query-ordering and traversal-locality wins of §2.2), and
+//! delivers per-query results back through channels. This is the
+//! vLLM-router-shaped packaging of the paper's batched execution model.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::metrics::Metrics;
+use crate::bvh::{Bvh, QueryOptions, QueryPredicate};
+use crate::exec::ExecSpace;
+
+/// Service tuning knobs.
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    /// Maximum queries per executed batch.
+    pub max_batch: usize,
+    /// Maximum time the first queued query waits for company.
+    pub batch_timeout: Duration,
+    /// Batched-execution options (1P/2P, query ordering).
+    pub options: QueryOptions,
+    /// Worker threads used to execute each batch.
+    pub threads: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            max_batch: 1024,
+            batch_timeout: Duration::from_millis(2),
+            options: QueryOptions::default(),
+            threads: std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1),
+        }
+    }
+}
+
+/// Result of one query, delivered to the submitting client.
+#[derive(Clone, Debug)]
+pub struct QueryResult {
+    /// Matching object indices.
+    pub indices: Vec<u32>,
+    /// Squared distances (nearest queries only).
+    pub distances: Vec<f32>,
+    /// Submission-to-completion latency.
+    pub latency: Duration,
+}
+
+/// One in-flight request.
+struct Request {
+    pred: QueryPredicate,
+    resp: Sender<QueryResult>,
+    enqueued: Instant,
+}
+
+/// A handle on a pending query result.
+pub struct Pending(Receiver<QueryResult>);
+
+impl Pending {
+    /// Blocks until the result arrives.
+    pub fn wait(self) -> QueryResult {
+        self.0.recv().expect("service dropped the response channel")
+    }
+}
+
+/// The running search service (see module docs).
+pub struct SearchService {
+    tx: Mutex<Option<Sender<Request>>>,
+    worker: Mutex<Option<JoinHandle<()>>>,
+    metrics: Arc<Metrics>,
+    stopping: Arc<AtomicBool>,
+}
+
+impl SearchService {
+    /// Starts a service over a built tree. The tree is shared (`Arc`) so
+    /// the caller can keep issuing direct batched queries too.
+    pub fn start(bvh: Arc<Bvh>, config: ServiceConfig) -> SearchService {
+        let (tx, rx) = channel::<Request>();
+        let metrics = Arc::new(Metrics::default());
+        let stopping = Arc::new(AtomicBool::new(false));
+        let m = Arc::clone(&metrics);
+        let stop_flag = Arc::clone(&stopping);
+        let worker = std::thread::spawn(move || {
+            let space = ExecSpace::with_threads(config.threads);
+            coordinator_loop(&bvh, &space, &config, rx, &m, &stop_flag);
+        });
+        SearchService {
+            tx: Mutex::new(Some(tx)),
+            worker: Mutex::new(Some(worker)),
+            metrics,
+            stopping,
+        }
+    }
+
+    /// Submits a query; returns a handle to await the result.
+    pub fn submit(&self, pred: QueryPredicate) -> Pending {
+        let (resp_tx, resp_rx) = channel();
+        let guard = self.tx.lock().unwrap();
+        let tx = guard.as_ref().expect("service stopped");
+        tx.send(Request { pred, resp: resp_tx, enqueued: Instant::now() })
+            .expect("coordinator thread died");
+        Pending(resp_rx)
+    }
+
+    /// Convenience: submit and wait.
+    pub fn query(&self, pred: QueryPredicate) -> QueryResult {
+        self.submit(pred).wait()
+    }
+
+    /// Service metrics.
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// Stops the coordinator (drains pending requests first).
+    pub fn shutdown(&self) {
+        self.stopping.store(true, Ordering::Release);
+        *self.tx.lock().unwrap() = None; // close the channel
+        if let Some(h) = self.worker.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for SearchService {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// The batching loop: wait for the first request, then gather until
+/// `max_batch` or `batch_timeout`, execute, respond.
+fn coordinator_loop(
+    bvh: &Bvh,
+    space: &ExecSpace,
+    config: &ServiceConfig,
+    rx: Receiver<Request>,
+    metrics: &Metrics,
+    _stopping: &AtomicBool,
+) {
+    loop {
+        // Block for the batch's first request (or exit when closed).
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => return,
+        };
+        let deadline = Instant::now() + config.batch_timeout;
+        let mut batch = vec![first];
+        while batch.len() < config.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => batch.push(r),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+
+        // Execute the coalesced batch with the paper's batched engine.
+        let preds: Vec<QueryPredicate> = batch.iter().map(|r| r.pred).collect();
+        let out = bvh.query(space, &preds, &config.options);
+
+        // Respond and account.
+        let done = Instant::now();
+        let mut latencies = Vec::with_capacity(batch.len());
+        for (i, req) in batch.into_iter().enumerate() {
+            let indices = out.results_for(i).to_vec();
+            let distances = if out.distances.is_empty() {
+                Vec::new()
+            } else {
+                out.distances_for(i).to_vec()
+            };
+            let latency = done.duration_since(req.enqueued);
+            latencies.push(latency);
+            let _ = req.resp.send(QueryResult { indices, distances, latency });
+        }
+        metrics.record_batch(&latencies, out.total() as u64);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::{Aabb, Point};
+
+    fn service(n: usize, max_batch: usize) -> (SearchService, Vec<Point>) {
+        let points: Vec<Point> =
+            (0..n).map(|i| Point::new(i as f32, 0.0, 0.0)).collect();
+        let boxes: Vec<Aabb> = points.iter().map(|p| Aabb::from_point(*p)).collect();
+        let bvh = Arc::new(Bvh::build(&ExecSpace::serial(), &boxes));
+        let config = ServiceConfig {
+            max_batch,
+            batch_timeout: Duration::from_millis(1),
+            threads: 2,
+            ..Default::default()
+        };
+        (SearchService::start(bvh, config), points)
+    }
+
+    #[test]
+    fn single_query_round_trip() {
+        let (svc, _) = service(100, 16);
+        let r = svc.query(QueryPredicate::intersects_sphere(Point::new(5.0, 0.0, 0.0), 1.5));
+        let mut got = r.indices.clone();
+        got.sort();
+        assert_eq!(got, vec![4, 5, 6]);
+        assert_eq!(svc.metrics().requests(), 1);
+    }
+
+    #[test]
+    fn concurrent_clients_get_their_own_results() {
+        let (svc, _) = service(1000, 64);
+        let svc = Arc::new(svc);
+        let mut handles = Vec::new();
+        for t in 0..8 {
+            let svc = Arc::clone(&svc);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..20 {
+                    let center = Point::new((t * 20 + i) as f32, 0.0, 0.0);
+                    let r = svc.query(QueryPredicate::nearest(center, 1));
+                    assert_eq!(r.indices, vec![t * 20 + i]);
+                    assert_eq!(r.distances, vec![0.0]);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(svc.metrics().requests(), 160);
+        // Batching must have coalesced at least some requests.
+        assert!(svc.metrics().batches() <= 160);
+    }
+
+    #[test]
+    fn batching_respects_max_batch() {
+        let (svc, _) = service(100, 4);
+        let pendings: Vec<Pending> = (0..16)
+            .map(|i| svc.submit(QueryPredicate::nearest(Point::new(i as f32, 0.0, 0.0), 1)))
+            .collect();
+        for (i, p) in pendings.into_iter().enumerate() {
+            assert_eq!(p.wait().indices, vec![i as u32]);
+        }
+        assert!(svc.metrics().batches() >= 4, "max_batch=4 over 16 requests");
+    }
+
+    #[test]
+    fn shutdown_is_idempotent() {
+        let (svc, _) = service(10, 4);
+        svc.query(QueryPredicate::nearest(Point::origin(), 1));
+        svc.shutdown();
+        svc.shutdown();
+    }
+}

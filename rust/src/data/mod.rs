@@ -1,0 +1,5 @@
+//! Experimental data sets and workload construction (paper §3.1).
+
+pub mod rng;
+pub mod shapes;
+pub mod workloads;

@@ -1,0 +1,196 @@
+//! The Elseberg et al. (2012) artificial point clouds — paper §3.1.
+//!
+//! "We consider two shape forms, cube and sphere. For a given shape, a set
+//! of points is then chosen either from within the selected shape (filled
+//! variant), or from its boundary (hollow variant). To generate p points,
+//! set a = p^{1/3}, Ω = [-a, a]^3":
+//!
+//! * **filled cube** — uniform in Ω;
+//! * **hollow cube** — on the faces of Ω, cycling faces, uniform per face;
+//! * **filled sphere** — uniform in Ω, rejected outside the radius-a ball;
+//! * **hollow sphere** — uniform in [-1,1]^3, projected to the radius-a
+//!   sphere.
+
+use super::rng::Rng;
+use crate::geometry::{Aabb, Point};
+
+/// The four experimental cloud shapes of §3.1.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Shape {
+    /// Uniform inside the cube `[-a, a]^3`.
+    FilledCube,
+    /// On the faces of the cube, cycled face by face.
+    HollowCube,
+    /// Uniform inside the radius-`a` ball.
+    FilledSphere,
+    /// Projected onto the radius-`a` sphere.
+    HollowSphere,
+}
+
+impl Shape {
+    /// Parses the CLI spelling (`filled-cube`, `hollow-sphere`, ...).
+    pub fn parse(s: &str) -> Option<Shape> {
+        match s {
+            "filled-cube" => Some(Shape::FilledCube),
+            "hollow-cube" => Some(Shape::HollowCube),
+            "filled-sphere" => Some(Shape::FilledSphere),
+            "hollow-sphere" => Some(Shape::HollowSphere),
+            _ => None,
+        }
+    }
+}
+
+/// A generated cloud plus its generation parameters.
+#[derive(Clone, Debug)]
+pub struct PointCloud {
+    /// The points.
+    pub points: Vec<Point>,
+    /// The half-extent `a = p^{1/3}` used for generation.
+    pub a: f32,
+    /// The shape that was generated.
+    pub shape: Shape,
+}
+
+impl PointCloud {
+    /// Generates `p` points of the given shape with the paper's scaling
+    /// `a = p^{1/3}` (the scaling keeps *density* constant across sizes,
+    /// which is why the spatial-search radius can stay fixed, §3.1).
+    pub fn generate(shape: Shape, p: usize, seed: u64) -> PointCloud {
+        let a = (p as f64).powf(1.0 / 3.0) as f32;
+        let mut rng = Rng::new(seed);
+        let mut points = Vec::with_capacity(p);
+        match shape {
+            Shape::FilledCube => {
+                for _ in 0..p {
+                    points.push(Point::new(
+                        rng.uniform(-a, a),
+                        rng.uniform(-a, a),
+                        rng.uniform(-a, a),
+                    ));
+                }
+            }
+            Shape::HollowCube => {
+                // Cycle through the six faces; position on the face uniform.
+                for i in 0..p {
+                    let face = i % 6;
+                    let u = rng.uniform(-a, a);
+                    let v = rng.uniform(-a, a);
+                    let w = if face % 2 == 0 { a } else { -a };
+                    points.push(match face / 2 {
+                        0 => Point::new(w, u, v),
+                        1 => Point::new(u, w, v),
+                        _ => Point::new(u, v, w),
+                    });
+                }
+            }
+            Shape::FilledSphere => {
+                // Rejection sampling from Ω.
+                while points.len() < p {
+                    let x = rng.uniform(-a, a);
+                    let y = rng.uniform(-a, a);
+                    let z = rng.uniform(-a, a);
+                    if x * x + y * y + z * z <= a * a {
+                        points.push(Point::new(x, y, z));
+                    }
+                }
+            }
+            Shape::HollowSphere => {
+                for _ in 0..p {
+                    // Generate in [-1,1]^3 and project to the radius-a
+                    // sphere (degenerate near-zero samples are re-drawn).
+                    loop {
+                        let x = rng.uniform(-1.0, 1.0);
+                        let y = rng.uniform(-1.0, 1.0);
+                        let z = rng.uniform(-1.0, 1.0);
+                        let n = (x * x + y * y + z * z).sqrt();
+                        if n > 1e-6 {
+                            let s = a / n;
+                            points.push(Point::new(x * s, y * s, z * s));
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+        PointCloud { points, a, shape }
+    }
+
+    /// Degenerate per-point bounding boxes, ready for tree construction.
+    pub fn boxes(&self) -> Vec<Aabb> {
+        self.points.iter().map(|p| Aabb::from_point(*p)).collect()
+    }
+
+    /// Number of points.
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    /// `true` when the cloud has no points.
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_and_scaling() {
+        for shape in [Shape::FilledCube, Shape::HollowCube, Shape::FilledSphere, Shape::HollowSphere] {
+            let c = PointCloud::generate(shape, 1000, 42);
+            assert_eq!(c.len(), 1000);
+            assert!((c.a - 10.0).abs() < 1e-3, "a = p^(1/3) = 10");
+        }
+    }
+
+    #[test]
+    fn filled_cube_points_inside_cube() {
+        let c = PointCloud::generate(Shape::FilledCube, 5000, 1);
+        assert!(c.points.iter().all(|p| (0..3).all(|d| p[d].abs() <= c.a)));
+    }
+
+    #[test]
+    fn hollow_cube_points_on_faces() {
+        let c = PointCloud::generate(Shape::HollowCube, 6000, 2);
+        for p in &c.points {
+            let on_face = (0..3).any(|d| (p[d].abs() - c.a).abs() < 1e-4);
+            assert!(on_face, "{p:?} not on a face of +-{}", c.a);
+        }
+        // All six faces are populated.
+        for face in 0..6 {
+            let d = face / 2;
+            let sign = if face % 2 == 0 { 1.0 } else { -1.0 };
+            let count = c
+                .points
+                .iter()
+                .filter(|p| (p[d] - sign * c.a).abs() < 1e-4)
+                .count();
+            assert!(count >= 900, "face {face} underpopulated: {count}");
+        }
+    }
+
+    #[test]
+    fn filled_sphere_points_inside_ball() {
+        let c = PointCloud::generate(Shape::FilledSphere, 3000, 3);
+        assert!(c.points.iter().all(|p| p.norm() <= c.a * 1.0001));
+        // Rejection sampling really does fill the interior.
+        let inner = c.points.iter().filter(|p| p.norm() < 0.5 * c.a).count();
+        assert!(inner > 0);
+    }
+
+    #[test]
+    fn hollow_sphere_points_on_sphere() {
+        let c = PointCloud::generate(Shape::HollowSphere, 2000, 4);
+        assert!(c.points.iter().all(|p| (p.norm() - c.a).abs() < 1e-2));
+    }
+
+    #[test]
+    fn reproducible_by_seed() {
+        let a = PointCloud::generate(Shape::FilledCube, 100, 9);
+        let b = PointCloud::generate(Shape::FilledCube, 100, 9);
+        assert_eq!(a.points, b.points);
+        let c = PointCloud::generate(Shape::FilledCube, 100, 10);
+        assert_ne!(a.points, c.points);
+    }
+}

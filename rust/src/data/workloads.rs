@@ -1,0 +1,151 @@
+//! Workload construction for the paper's experiments (§3.1).
+//!
+//! "In our experiments, we consider two cases: searching for a filled
+//! sphere cloud of query points in the filled cube cloud (filled case),
+//! and searching for a hollow sphere cloud in the hollow cube cloud
+//! (hollow case). ... The number of neighbors k for the nearest search is
+//! fixed to 10 in all experiments. The radius r for spatial search is
+//! chosen in such a way that on average there are k neighbors within
+//! radius r in a filled cube shape."
+
+use super::shapes::{PointCloud, Shape};
+use crate::bvh::QueryPredicate;
+use crate::geometry::Point;
+
+/// The fixed neighbor count of every experiment in the paper.
+pub const K: usize = 10;
+
+/// The two experiment cases of §3.1.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Case {
+    /// Filled-sphere queries against filled-cube sources: balanced work.
+    Filled,
+    /// Hollow-sphere queries against hollow-cube sources: severely
+    /// imbalanced per-query work (most queries return nothing).
+    Hollow,
+}
+
+impl Case {
+    /// Source cloud shape for this case.
+    pub fn source_shape(self) -> Shape {
+        match self {
+            Case::Filled => Shape::FilledCube,
+            Case::Hollow => Shape::HollowCube,
+        }
+    }
+
+    /// Target (query) cloud shape for this case.
+    pub fn target_shape(self) -> Shape {
+        match self {
+            Case::Filled => Shape::FilledSphere,
+            Case::Hollow => Shape::HollowSphere,
+        }
+    }
+
+    /// CLI spelling.
+    pub fn parse(s: &str) -> Option<Case> {
+        match s {
+            "filled" => Some(Case::Filled),
+            "hollow" => Some(Case::Hollow),
+            _ => None,
+        }
+    }
+}
+
+/// The spatial-search radius: in a filled cube of `m` points the density
+/// is `m / (2a)^3 = 1/8` (because `a = m^{1/3}`), so requiring an expected
+/// `K` neighbors in a ball gives `(4/3)πr³ · (1/8) = K`, i.e.
+/// `r = (6K/π)^{1/3}` — independent of `m`, exactly why the paper can fix
+/// one radius across all sizes.
+pub fn spatial_radius(k: usize) -> f32 {
+    ((6.0 * k as f64) / std::f64::consts::PI).powf(1.0 / 3.0) as f32
+}
+
+/// A fully constructed experiment workload.
+pub struct Workload {
+    /// Source cloud (`m` points, indexed by the tree).
+    pub sources: PointCloud,
+    /// Target cloud (`n` query origins).
+    pub targets: PointCloud,
+    /// Spatial queries (radius search with [`spatial_radius`]).
+    pub spatial: Vec<QueryPredicate>,
+    /// Nearest queries (k = [`K`]).
+    pub nearest: Vec<QueryPredicate>,
+    /// The search radius used.
+    pub radius: f32,
+}
+
+impl Workload {
+    /// Builds the paper's workload for `case` with `m` sources and `n`
+    /// targets (the paper always uses `n = m`, §3.2).
+    pub fn generate(case: Case, m: usize, n: usize, seed: u64) -> Workload {
+        let sources = PointCloud::generate(case.source_shape(), m, seed);
+        let targets = PointCloud::generate(case.target_shape(), n, seed.wrapping_add(0x9E37));
+        let radius = spatial_radius(K);
+        let spatial = targets
+            .points
+            .iter()
+            .map(|p| QueryPredicate::intersects_sphere(*p, radius))
+            .collect();
+        let nearest = targets.points.iter().map(|p| QueryPredicate::nearest(*p, K)).collect();
+        Workload { sources, targets, spatial, nearest, radius }
+    }
+
+    /// Query origins as raw points (for the accelerator backend).
+    pub fn target_points(&self) -> &[Point] {
+        &self.targets.points
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bvh::{Bvh, QueryOptions};
+    use crate::exec::ExecSpace;
+
+    #[test]
+    fn radius_formula_matches_closed_form() {
+        // r = (60/pi)^(1/3) ≈ 2.6730
+        assert!((spatial_radius(10) - 2.673).abs() < 1e-3);
+    }
+
+    #[test]
+    fn filled_case_yields_about_k_neighbors_on_average() {
+        // The calibration claim of §3.1: average ~10 results per spatial
+        // query in the filled case (paper: min 0, max 32, avg 10).
+        let space = ExecSpace::with_threads(4);
+        let w = Workload::generate(Case::Filled, 20_000, 2_000, 42);
+        let bvh = Bvh::build(&space, &w.sources.boxes());
+        let out = bvh.query(&space, &w.spatial, &QueryOptions::default());
+        let avg = out.total() as f64 / w.spatial.len() as f64;
+        assert!((6.0..14.0).contains(&avg), "avg neighbors {avg} not ~10");
+    }
+
+    #[test]
+    fn hollow_case_is_imbalanced_and_sparse() {
+        // §3.2: "for the hollow variant the number of neighbors is much
+        // more imbalanced ... with the average being 2" (and most queries
+        // empty because sphere touches cube only near face centers).
+        // NOTE: the geometry only works with n = m (matching a = p^{1/3}
+        // scaling), which is what the paper always uses.
+        let space = ExecSpace::with_threads(4);
+        let w = Workload::generate(Case::Hollow, 20_000, 20_000, 7);
+        let bvh = Bvh::build(&space, &w.sources.boxes());
+        let out = bvh.query(&space, &w.spatial, &QueryOptions::default());
+        let avg = out.total() as f64 / w.spatial.len() as f64;
+        let empty = (0..w.spatial.len()).filter(|&q| out.results_for(q).is_empty()).count();
+        assert!(avg < 6.0, "hollow avg {avg} should be small");
+        assert!(empty as f64 > 0.5 * w.spatial.len() as f64, "most queries empty");
+        let max = (0..w.spatial.len()).map(|q| out.results_for(q).len()).max().unwrap();
+        assert!(max as f64 > 5.0 * avg.max(0.5), "imbalance expected, max={max} avg={avg}");
+    }
+
+    #[test]
+    fn workload_sizes() {
+        let w = Workload::generate(Case::Filled, 1000, 500, 3);
+        assert_eq!(w.sources.len(), 1000);
+        assert_eq!(w.targets.len(), 500);
+        assert_eq!(w.spatial.len(), 500);
+        assert_eq!(w.nearest.len(), 500);
+    }
+}

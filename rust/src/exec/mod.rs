@@ -1,0 +1,188 @@
+//! Execution spaces — a miniature Kokkos.
+//!
+//! ArborX achieves performance portability by writing every algorithm once
+//! against Kokkos' `parallel_for` / `parallel_reduce` / `parallel_scan`
+//! primitives and letting the backend (Serial, OpenMP, CUDA) map them to
+//! hardware (paper §2.3). The offline crate set available to this
+//! reproduction has no rayon, so this module re-creates that seam from
+//! scratch:
+//!
+//! * [`ExecSpace::serial`] — everything inline on the calling thread.
+//! * [`ExecSpace::with_threads`] — a persistent pool of worker threads with
+//!   chunked work claiming (the OpenMP analogue).
+//!
+//! The accelerator backend of the paper (CUDA) is played by the PJRT
+//! runtime in [`crate::runtime`], which executes the AOT-compiled
+//! JAX/Pallas artifacts; see DESIGN.md §Hardware-Adaptation.
+//!
+//! All higher-level algorithms (BVH construction, traversal, sorting) are
+//! written against this API only, so switching an experiment from 1 to N
+//! threads is a constructor argument — exactly the paper's interface
+//! story.
+
+mod pool;
+pub mod scan;
+pub mod sort;
+
+pub use pool::ThreadPool;
+
+use std::sync::Arc;
+
+/// An execution space: where (and how parallel) an algorithm runs.
+///
+/// Cloning is cheap (the pool is shared through an [`Arc`]).
+#[derive(Clone)]
+pub struct ExecSpace {
+    pool: Option<Arc<ThreadPool>>,
+}
+
+impl std::fmt::Debug for ExecSpace {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "ExecSpace(threads={})", self.concurrency())
+    }
+}
+
+impl ExecSpace {
+    /// A serial execution space: every primitive runs on the caller.
+    pub fn serial() -> Self {
+        ExecSpace { pool: None }
+    }
+
+    /// A parallel execution space backed by `threads` persistent workers.
+    /// `threads <= 1` degenerates to the serial space.
+    pub fn with_threads(threads: usize) -> Self {
+        if threads <= 1 {
+            ExecSpace { pool: None }
+        } else {
+            ExecSpace {
+                pool: Some(Arc::new(ThreadPool::new(threads))),
+            }
+        }
+    }
+
+    /// A parallel space sized to the machine (`available_parallelism`).
+    pub fn default_parallel() -> Self {
+        let t = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
+        Self::with_threads(t)
+    }
+
+    /// Number of hardware lanes this space uses (1 for serial).
+    pub fn concurrency(&self) -> usize {
+        self.pool.as_ref().map(|p| p.threads()).unwrap_or(1)
+    }
+
+    /// Runs `f(begin, end)` over a partition of `0..n` into contiguous
+    /// chunks. Chunks are claimed dynamically by workers (load balancing
+    /// for the "hollow" workloads of the paper where per-query work is
+    /// wildly imbalanced, §3.1).
+    pub fn parallel_for_chunks<F>(&self, n: usize, f: F)
+    where
+        F: Fn(usize, usize) + Sync,
+    {
+        if n == 0 {
+            return;
+        }
+        match &self.pool {
+            None => f(0, n),
+            Some(pool) => pool.run_chunked(n, &f),
+        }
+    }
+
+    /// Runs `f(i)` for each `i` in `0..n`, in parallel.
+    pub fn parallel_for<F>(&self, n: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        self.parallel_for_chunks(n, |b, e| {
+            for i in b..e {
+                f(i);
+            }
+        });
+    }
+
+    /// Parallel reduction: `map_chunk` folds a contiguous range into a
+    /// partial value; partials are combined with `join` (which must be
+    /// associative and commutative, e.g. box union, sum, min, max).
+    pub fn parallel_reduce<T, M, J>(&self, n: usize, identity: T, map_chunk: M, join: J) -> T
+    where
+        T: Send,
+        M: Fn(usize, usize) -> T + Sync,
+        J: Fn(T, T) -> T + Send + Sync,
+    {
+        if n == 0 {
+            return identity;
+        }
+        match &self.pool {
+            None => join(identity, map_chunk(0, n)),
+            Some(pool) => {
+                let acc = std::sync::Mutex::new(Some(identity));
+                pool.run_chunked(n, &|b, e| {
+                    let local = map_chunk(b, e);
+                    let mut guard = acc.lock().unwrap();
+                    let prev = guard.take().expect("reduce accumulator");
+                    *guard = Some(join(prev, local));
+                });
+                acc.into_inner().unwrap().unwrap()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn parallel_for_visits_every_index_once() {
+        for space in [ExecSpace::serial(), ExecSpace::with_threads(4)] {
+            let n = 10_007;
+            let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+            space.parallel_for(n, |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        }
+    }
+
+    #[test]
+    fn parallel_reduce_sums_correctly() {
+        for space in [ExecSpace::serial(), ExecSpace::with_threads(3)] {
+            let n = 100_000usize;
+            let total = space.parallel_reduce(
+                n,
+                0u64,
+                |b, e| (b..e).map(|i| i as u64).sum::<u64>(),
+                |a, b| a + b,
+            );
+            assert_eq!(total, (n as u64 - 1) * n as u64 / 2);
+        }
+    }
+
+    #[test]
+    fn zero_length_ranges_are_noops() {
+        let space = ExecSpace::with_threads(2);
+        space.parallel_for(0, |_| panic!("must not run"));
+        let r = space.parallel_reduce(0, 42i32, |_, _| panic!("must not run"), |a, _b| a);
+        assert_eq!(r, 42);
+    }
+
+    #[test]
+    fn single_thread_request_degenerates_to_serial() {
+        assert_eq!(ExecSpace::with_threads(1).concurrency(), 1);
+        assert_eq!(ExecSpace::with_threads(0).concurrency(), 1);
+        assert_eq!(ExecSpace::with_threads(5).concurrency(), 5);
+    }
+
+    #[test]
+    fn pool_is_reusable_across_many_dispatches() {
+        let space = ExecSpace::with_threads(4);
+        for round in 0..100 {
+            let count = AtomicUsize::new(0);
+            space.parallel_for(round + 1, |_| {
+                count.fetch_add(1, Ordering::Relaxed);
+            });
+            assert_eq!(count.load(Ordering::Relaxed), round + 1);
+        }
+    }
+}

@@ -1,0 +1,142 @@
+//! Parallel prefix sums (exclusive scan).
+//!
+//! Used to turn per-query result counts into CSR offsets in the 2P batched
+//! query engine (paper §2.2.1) and inside the radix sort.
+
+use super::ExecSpace;
+
+/// Exclusive scan of `counts`, returning an offsets array of length
+/// `counts.len() + 1` whose last element is the total.
+///
+/// The parallel version is the classic two-pass scheme: per-chunk sums,
+/// serial scan over the (few) chunk sums, then per-chunk local scans with
+/// the chunk prefix added.
+pub fn exclusive_scan(space: &ExecSpace, counts: &[u32]) -> Vec<u64> {
+    let n = counts.len();
+    let mut offsets = vec![0u64; n + 1];
+    if n == 0 {
+        return offsets;
+    }
+    if space.concurrency() == 1 || n < 1 << 14 {
+        let mut acc = 0u64;
+        for i in 0..n {
+            offsets[i] = acc;
+            acc += counts[i] as u64;
+        }
+        offsets[n] = acc;
+        return offsets;
+    }
+
+    let chunks = space.concurrency() * 4;
+    let grain = n.div_ceil(chunks);
+    let chunks = n.div_ceil(grain);
+
+    // Pass 1: chunk sums.
+    let mut sums = vec![0u64; chunks];
+    {
+        let sums_ptr = SendPtr(sums.as_mut_ptr());
+        space.parallel_for(chunks, |c| {
+            let b = c * grain;
+            let e = ((c + 1) * grain).min(n);
+            let s: u64 = counts[b..e].iter().map(|&v| v as u64).sum();
+            // SAFETY: each chunk index writes a distinct slot.
+            unsafe { sums_ptr.write(c, s) };
+        });
+    }
+
+    // Serial scan of chunk sums.
+    let mut chunk_prefix = vec![0u64; chunks + 1];
+    for c in 0..chunks {
+        chunk_prefix[c + 1] = chunk_prefix[c] + sums[c];
+    }
+    offsets[n] = chunk_prefix[chunks];
+
+    // Pass 2: local scans.
+    {
+        let off_ptr = SendPtr(offsets.as_mut_ptr());
+        let chunk_prefix = &chunk_prefix;
+        space.parallel_for(chunks, |c| {
+            let b = c * grain;
+            let e = ((c + 1) * grain).min(n);
+            let mut acc = chunk_prefix[c];
+            for i in b..e {
+                // SAFETY: chunks write disjoint ranges [b, e).
+                unsafe { off_ptr.write(i, acc) };
+                acc += counts[i] as u64;
+            }
+        });
+    }
+    offsets
+}
+
+/// A raw pointer wrapper asserting that concurrent writers touch disjoint
+/// indices. Used throughout the crate for scatter-style parallel writes
+/// (the idiom Kokkos expresses with plain `View` writes).
+pub struct SendPtr<T>(pub *mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        SendPtr(self.0)
+    }
+}
+impl<T> Copy for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    /// Writes `value` at `index`. Caller must guarantee exclusive access
+    /// to that index for the duration of the dispatch.
+    #[inline]
+    pub unsafe fn write(&self, index: usize, value: T) {
+        unsafe { *self.0.add(index) = value };
+    }
+
+    /// Reads the value at `index`. Caller must guarantee no concurrent
+    /// writer to that index (or a happens-before edge to the writer).
+    #[inline]
+    pub unsafe fn read(&self, index: usize) -> T
+    where
+        T: Copy,
+    {
+        unsafe { *self.0.add(index) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reference_scan(counts: &[u32]) -> Vec<u64> {
+        let mut out = vec![0u64; counts.len() + 1];
+        for i in 0..counts.len() {
+            out[i + 1] = out[i] + counts[i] as u64;
+        }
+        out
+    }
+
+    #[test]
+    fn matches_reference_on_serial_and_parallel() {
+        let mut x = 1234567u64;
+        let mut rng = move || {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            (x % 37) as u32
+        };
+        for n in [0usize, 1, 100, 1 << 14, 100_003] {
+            let counts: Vec<u32> = (0..n).map(|_| rng()).collect();
+            let expect = reference_scan(&counts);
+            for space in [ExecSpace::serial(), ExecSpace::with_threads(4)] {
+                assert_eq!(exclusive_scan(&space, &counts), expect, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn totals_exceeding_u32_do_not_overflow() {
+        let counts = vec![u32::MAX; 3];
+        let space = ExecSpace::serial();
+        let offsets = exclusive_scan(&space, &counts);
+        assert_eq!(offsets[3], 3 * (u32::MAX as u64));
+    }
+}

@@ -1,0 +1,227 @@
+//! Axis-aligned bounding boxes.
+
+use super::Point;
+
+/// An axis-aligned bounding box (AABB), stored as two opposite corners.
+///
+/// This is the bounding volume of the paper's BVH (§2): six floats, cheap
+/// intersection tests, cheap point-to-box distance. A default-constructed
+/// box is *empty* (min = +inf, max = -inf) so that it is the identity of
+/// [`Aabb::union`], which is how the scene bounding box is reduced.
+#[derive(Clone, Copy, Debug, PartialEq)]
+#[repr(C)]
+pub struct Aabb {
+    /// Corner with the smallest coordinates.
+    pub min: Point,
+    /// Corner with the largest coordinates.
+    pub max: Point,
+}
+
+impl Default for Aabb {
+    #[inline]
+    fn default() -> Self {
+        Aabb::empty()
+    }
+}
+
+impl Aabb {
+    /// The empty box: the identity element of [`Aabb::union`].
+    #[inline]
+    pub const fn empty() -> Self {
+        Aabb {
+            min: Point::splat(f32::INFINITY),
+            max: Point::splat(f32::NEG_INFINITY),
+        }
+    }
+
+    /// Creates a box from its two corners.
+    #[inline]
+    pub const fn new(min: Point, max: Point) -> Self {
+        Aabb { min, max }
+    }
+
+    /// A degenerate box around a single point (zero extent in every
+    /// dimension). The paper explicitly allows degenerate boxes for point
+    /// data (§2.1, "Construct AABBs").
+    #[inline]
+    pub const fn from_point(p: Point) -> Self {
+        Aabb { min: p, max: p }
+    }
+
+    /// Returns `true` if the box contains no point.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.min[0] > self.max[0] || self.min[1] > self.max[1] || self.min[2] > self.max[2]
+    }
+
+    /// The smallest box containing both operands.
+    #[inline]
+    pub fn union(&self, other: &Aabb) -> Aabb {
+        Aabb {
+            min: self.min.min(&other.min),
+            max: self.max.max(&other.max),
+        }
+    }
+
+    /// Grows `self` in place to also cover `other`.
+    #[inline]
+    pub fn expand(&mut self, other: &Aabb) {
+        self.min = self.min.min(&other.min);
+        self.max = self.max.max(&other.max);
+    }
+
+    /// Grows `self` in place to also cover the point `p`.
+    #[inline]
+    pub fn expand_point(&mut self, p: &Point) {
+        self.min = self.min.min(p);
+        self.max = self.max.max(p);
+    }
+
+    /// The centroid of the box. Used to compute Morton codes (§2.1).
+    #[inline]
+    pub fn centroid(&self) -> Point {
+        Point::new(
+            0.5 * (self.min[0] + self.max[0]),
+            0.5 * (self.min[1] + self.max[1]),
+            0.5 * (self.min[2] + self.max[2]),
+        )
+    }
+
+    /// Returns `true` if the boxes overlap (closed intervals: touching
+    /// boxes intersect).
+    #[inline]
+    pub fn intersects(&self, other: &Aabb) -> bool {
+        self.min[0] <= other.max[0]
+            && self.max[0] >= other.min[0]
+            && self.min[1] <= other.max[1]
+            && self.max[1] >= other.min[1]
+            && self.min[2] <= other.max[2]
+            && self.max[2] >= other.min[2]
+    }
+
+    /// Returns `true` if `p` lies inside the closed box.
+    #[inline]
+    pub fn contains_point(&self, p: &Point) -> bool {
+        (0..3).all(|d| self.min[d] <= p[d] && p[d] <= self.max[d])
+    }
+
+    /// Returns `true` if `other` lies fully inside `self`.
+    #[inline]
+    pub fn contains_box(&self, other: &Aabb) -> bool {
+        self.contains_point(&other.min) && self.contains_point(&other.max)
+    }
+
+    /// Squared distance from a point to the box (0 if inside). This is the
+    /// "inexpensive" point-to-AABB distance the paper relies on (§2).
+    #[inline]
+    pub fn distance_squared(&self, p: &Point) -> f32 {
+        let mut d2 = 0.0f32;
+        for i in 0..3 {
+            let v = p[i];
+            let lo = self.min[i];
+            let hi = self.max[i];
+            let d = if v < lo {
+                lo - v
+            } else if v > hi {
+                v - hi
+            } else {
+                0.0
+            };
+            d2 += d * d;
+        }
+        d2
+    }
+
+    /// Euclidean distance from a point to the box (0 if inside).
+    #[inline]
+    pub fn distance(&self, p: &Point) -> f32 {
+        self.distance_squared(p).sqrt()
+    }
+
+    /// Surface area of the box; used by the SAH quality metric in
+    /// [`crate::bvh::stats`].
+    #[inline]
+    pub fn surface_area(&self) -> f32 {
+        if self.is_empty() {
+            return 0.0;
+        }
+        let dx = self.max[0] - self.min[0];
+        let dy = self.max[1] - self.min[1];
+        let dz = self.max[2] - self.min[2];
+        2.0 * (dx * dy + dy * dz + dz * dx)
+    }
+
+    /// Extent along dimension `d`.
+    #[inline]
+    pub fn extent(&self, d: usize) -> f32 {
+        self.max[d] - self.min[d]
+    }
+
+    /// The dimension with the largest extent.
+    #[inline]
+    pub fn widest_dimension(&self) -> usize {
+        let mut best = 0;
+        for d in 1..3 {
+            if self.extent(d) > self.extent(best) {
+                best = d;
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_box_is_union_identity() {
+        let e = Aabb::empty();
+        let b = Aabb::new(Point::new(-1.0, 0.0, 1.0), Point::new(2.0, 3.0, 4.0));
+        assert!(e.is_empty());
+        assert!(!b.is_empty());
+        assert_eq!(e.union(&b), b);
+        assert_eq!(b.union(&e), b);
+    }
+
+    #[test]
+    fn union_covers_both() {
+        let a = Aabb::new(Point::new(0.0, 0.0, 0.0), Point::new(1.0, 1.0, 1.0));
+        let b = Aabb::new(Point::new(2.0, -1.0, 0.5), Point::new(3.0, 0.5, 2.0));
+        let u = a.union(&b);
+        assert!(u.contains_box(&a));
+        assert!(u.contains_box(&b));
+        assert_eq!(u.min, Point::new(0.0, -1.0, 0.0));
+        assert_eq!(u.max, Point::new(3.0, 1.0, 2.0));
+    }
+
+    #[test]
+    fn intersections_including_touching() {
+        let a = Aabb::new(Point::new(0.0, 0.0, 0.0), Point::new(1.0, 1.0, 1.0));
+        let touching = Aabb::new(Point::new(1.0, 0.0, 0.0), Point::new(2.0, 1.0, 1.0));
+        let disjoint = Aabb::new(Point::new(1.1, 0.0, 0.0), Point::new(2.0, 1.0, 1.0));
+        assert!(a.intersects(&touching));
+        assert!(!a.intersects(&disjoint));
+        assert!(a.intersects(&a));
+    }
+
+    #[test]
+    fn point_distance_zero_inside_and_l2_outside() {
+        let b = Aabb::new(Point::new(0.0, 0.0, 0.0), Point::new(1.0, 1.0, 1.0));
+        assert_eq!(b.distance_squared(&Point::new(0.5, 0.5, 0.5)), 0.0);
+        // Outside along two axes: offsets (1, 2, 0) from the max corner.
+        assert_eq!(b.distance_squared(&Point::new(2.0, 3.0, 0.5)), 1.0 + 4.0);
+        // Degenerate (point) box behaves like a point.
+        let p = Aabb::from_point(Point::new(1.0, 1.0, 1.0));
+        assert_eq!(p.distance_squared(&Point::origin()), 3.0);
+    }
+
+    #[test]
+    fn centroid_and_surface_area() {
+        let b = Aabb::new(Point::new(0.0, 0.0, 0.0), Point::new(2.0, 4.0, 6.0));
+        assert_eq!(b.centroid(), Point::new(1.0, 2.0, 3.0));
+        assert_eq!(b.surface_area(), 2.0 * (8.0 + 24.0 + 12.0));
+        assert_eq!(b.widest_dimension(), 2);
+        assert_eq!(Aabb::empty().surface_area(), 0.0);
+    }
+}

@@ -1,0 +1,20 @@
+//! Geometric primitives and predicates.
+//!
+//! The paper (§2) builds its BVH from axis-aligned bounding boxes: "they
+//! require minimal space to store (two opposite corner points, or six
+//! floating point numbers in 3D) and are fast to test for intersections".
+//! This module provides those primitives plus the distance/intersection
+//! predicates used by traversal, and the Morton (Z-order) codes used both
+//! for construction (§2.1) and query ordering (§2.2.3).
+
+mod aabb;
+mod point;
+mod sphere;
+mod triangle;
+pub mod morton;
+pub mod predicates;
+
+pub use aabb::Aabb;
+pub use point::Point;
+pub use sphere::Sphere;
+pub use triangle::Triangle;

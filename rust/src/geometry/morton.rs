@@ -1,0 +1,177 @@
+//! Morton (Z-order) codes.
+//!
+//! §2.1 of the paper: "Morton codes, or Z-order codes, are used to map
+//! multidimensional data to a single dimension, while preserving the
+//! spatial locality of the data. Given a point, a Morton code can be
+//! efficiently computed by interleaving bits of the point coordinates."
+//!
+//! We provide both the classic 30-bit (10 bits per dimension, `u32`) code
+//! used by Karras 2012 and a 63-bit (21 bits per dimension, `u64`)
+//! variant for very large point counts where 10 bits per axis would
+//! produce too many duplicate codes. The bit-for-bit identical computation
+//! is implemented as the Layer-1 Pallas kernel in
+//! `python/compile/kernels/morton.py`; `python/tests` cross-checks the two
+//! against shared golden vectors (see `rust/tests/morton_golden.rs`).
+
+use super::{Aabb, Point};
+
+/// Expands the low 10 bits of `v` so that two zero bits separate each
+/// original bit: `abcdefghij -> a00b00c00...`.
+#[inline]
+pub fn expand_bits_10(v: u32) -> u32 {
+    let mut v = v & 0x3ff;
+    v = (v | (v << 16)) & 0x030000FF;
+    v = (v | (v << 8)) & 0x0300F00F;
+    v = (v | (v << 4)) & 0x030C30C3;
+    v = (v | (v << 2)) & 0x09249249;
+    v
+}
+
+/// Expands the low 21 bits of `v` with two zero bits between each bit.
+#[inline]
+pub fn expand_bits_21(v: u64) -> u64 {
+    let mut v = v & 0x1f_ffff;
+    v = (v | (v << 32)) & 0x1f00000000ffff;
+    v = (v | (v << 16)) & 0x1f0000ff0000ff;
+    v = (v | (v << 8)) & 0x100f00f00f00f00f;
+    v = (v | (v << 4)) & 0x10c30c30c30c30c3;
+    v = (v | (v << 2)) & 0x1249249249249249;
+    v
+}
+
+/// 30-bit Morton code of a point already normalized to the unit cube
+/// `[0, 1]^3`. Coordinates are clamped, scaled to 1024 buckets per axis,
+/// and their bits interleaved (x lowest).
+#[inline]
+pub fn morton32_unit(p: &Point) -> u32 {
+    let scale = |v: f32| -> u32 {
+        let v = (v * 1024.0).clamp(0.0, 1023.0);
+        v as u32
+    };
+    let x = expand_bits_10(scale(p[0]));
+    let y = expand_bits_10(scale(p[1]));
+    let z = expand_bits_10(scale(p[2]));
+    (x << 2) | (y << 1) | z
+}
+
+/// 63-bit Morton code of a point already normalized to the unit cube.
+#[inline]
+pub fn morton64_unit(p: &Point) -> u64 {
+    let scale = |v: f32| -> u64 {
+        let v = (v as f64 * 2097152.0).clamp(0.0, 2097151.0);
+        v as u64
+    };
+    let x = expand_bits_21(scale(p[0]));
+    let y = expand_bits_21(scale(p[1]));
+    let z = expand_bits_21(scale(p[2]));
+    (x << 2) | (y << 1) | z
+}
+
+/// Normalizes `p` into the unit cube of `scene` (degenerate scene extents
+/// map to 0.5, so a one-point scene still yields a valid code).
+#[inline]
+pub fn normalize_to_scene(p: &Point, scene: &Aabb) -> Point {
+    let mut out = Point::origin();
+    for d in 0..3 {
+        let ext = scene.max[d] - scene.min[d];
+        out[d] = if ext > 0.0 {
+            (p[d] - scene.min[d]) / ext
+        } else {
+            0.5
+        };
+    }
+    out
+}
+
+/// 30-bit Morton code of the centroid of `b`, scaled by the scene box —
+/// exactly the paper's "Morton code of a bounding box is computed as the
+/// Morton code of its centroid scaled using the scene bounding box".
+#[inline]
+pub fn morton32_scene(b: &Aabb, scene: &Aabb) -> u32 {
+    morton32_unit(&normalize_to_scene(&b.centroid(), scene))
+}
+
+/// 63-bit variant of [`morton32_scene`].
+#[inline]
+pub fn morton64_scene(b: &Aabb, scene: &Aabb) -> u64 {
+    morton64_unit(&normalize_to_scene(&b.centroid(), scene))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Reference bit-interleave: set bit 3i+shift for each set bit i.
+    fn interleave_ref(x: u32, y: u32, z: u32, bits: u32) -> u64 {
+        let mut out = 0u64;
+        for i in 0..bits {
+            out |= (((x >> i) & 1) as u64) << (3 * i + 2);
+            out |= (((y >> i) & 1) as u64) << (3 * i + 1);
+            out |= (((z >> i) & 1) as u64) << (3 * i);
+        }
+        out
+    }
+
+    #[test]
+    fn expand_bits_matches_naive() {
+        for v in [0u32, 1, 2, 3, 5, 127, 512, 1023] {
+            let mut expect = 0u32;
+            for i in 0..10 {
+                expect |= ((v >> i) & 1) << (3 * i);
+            }
+            assert_eq!(expand_bits_10(v), expect, "v={v}");
+        }
+        for v in [0u64, 1, 73, 4095, (1 << 21) - 1] {
+            let mut expect = 0u64;
+            for i in 0..21 {
+                expect |= ((v >> i) & 1) << (3 * i);
+            }
+            assert_eq!(expand_bits_21(v), expect, "v={v}");
+        }
+    }
+
+    #[test]
+    fn morton32_matches_reference_interleave() {
+        let cases = [
+            Point::new(0.0, 0.0, 0.0),
+            Point::new(1.0, 1.0, 1.0),
+            Point::new(0.5, 0.25, 0.75),
+            Point::new(0.999, 0.001, 0.5),
+        ];
+        for p in cases {
+            let q = |v: f32| ((v * 1024.0).clamp(0.0, 1023.0)) as u32;
+            let expect = interleave_ref(q(p[0]), q(p[1]), q(p[2]), 10);
+            assert_eq!(morton32_unit(&p) as u64, expect);
+        }
+    }
+
+    #[test]
+    fn morton_preserves_locality_ordering() {
+        // Points along the diagonal must be monotonically ordered.
+        let mut last = 0u32;
+        for i in 0..100 {
+            let t = i as f32 / 100.0;
+            let code = morton32_unit(&Point::new(t, t, t));
+            assert!(code >= last);
+            last = code;
+        }
+    }
+
+    #[test]
+    fn scene_scaling_handles_degenerate_scene() {
+        let scene = Aabb::from_point(Point::new(3.0, 4.0, 5.0));
+        let b = Aabb::from_point(Point::new(3.0, 4.0, 5.0));
+        // All coordinates degenerate -> (0.5, 0.5, 0.5).
+        assert_eq!(morton32_scene(&b, &scene), morton32_unit(&Point::splat(0.5)));
+    }
+
+    #[test]
+    fn morton64_is_finer_than_morton32() {
+        let scene = Aabb::new(Point::origin(), Point::splat(1.0));
+        let a = Aabb::from_point(Point::new(0.50001, 0.5, 0.5));
+        let b = Aabb::from_point(Point::new(0.50002, 0.5, 0.5));
+        // Too close for 10 bits/axis, distinguishable with 21 bits/axis.
+        assert_eq!(morton32_scene(&a, &scene), morton32_scene(&b, &scene));
+        assert_ne!(morton64_scene(&a, &scene), morton64_scene(&b, &scene));
+    }
+}

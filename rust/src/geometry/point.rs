@@ -1,0 +1,146 @@
+//! 3D points.
+
+use std::ops::{Add, Index, IndexMut, Mul, Sub};
+
+/// A point in 3D space, stored as three `f32` coordinates.
+///
+/// ArborX focuses on "low order dimensional space" (paper §1); like the
+/// original library we fix the dimension to 3 and the scalar to single
+/// precision, which is what every experiment in the paper uses.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+#[repr(C)]
+pub struct Point {
+    /// Coordinates `[x, y, z]`.
+    pub coords: [f32; 3],
+}
+
+impl Point {
+    /// Creates a point from its three coordinates.
+    #[inline]
+    pub const fn new(x: f32, y: f32, z: f32) -> Self {
+        Point { coords: [x, y, z] }
+    }
+
+    /// The origin `(0, 0, 0)`.
+    #[inline]
+    pub const fn origin() -> Self {
+        Point::new(0.0, 0.0, 0.0)
+    }
+
+    /// Creates a point with all coordinates equal to `v`.
+    #[inline]
+    pub const fn splat(v: f32) -> Self {
+        Point::new(v, v, v)
+    }
+
+    /// Squared Euclidean distance to another point.
+    #[inline]
+    pub fn distance_squared(&self, other: &Point) -> f32 {
+        let dx = self.coords[0] - other.coords[0];
+        let dy = self.coords[1] - other.coords[1];
+        let dz = self.coords[2] - other.coords[2];
+        dx * dx + dy * dy + dz * dz
+    }
+
+    /// Euclidean distance to another point.
+    #[inline]
+    pub fn distance(&self, other: &Point) -> f32 {
+        self.distance_squared(other).sqrt()
+    }
+
+    /// Component-wise minimum.
+    #[inline]
+    pub fn min(&self, other: &Point) -> Point {
+        Point::new(
+            self.coords[0].min(other.coords[0]),
+            self.coords[1].min(other.coords[1]),
+            self.coords[2].min(other.coords[2]),
+        )
+    }
+
+    /// Component-wise maximum.
+    #[inline]
+    pub fn max(&self, other: &Point) -> Point {
+        Point::new(
+            self.coords[0].max(other.coords[0]),
+            self.coords[1].max(other.coords[1]),
+            self.coords[2].max(other.coords[2]),
+        )
+    }
+
+    /// Euclidean norm.
+    #[inline]
+    pub fn norm(&self) -> f32 {
+        self.distance(&Point::origin())
+    }
+}
+
+impl Index<usize> for Point {
+    type Output = f32;
+    #[inline]
+    fn index(&self, i: usize) -> &f32 {
+        &self.coords[i]
+    }
+}
+
+impl IndexMut<usize> for Point {
+    #[inline]
+    fn index_mut(&mut self, i: usize) -> &mut f32 {
+        &mut self.coords[i]
+    }
+}
+
+impl Add for Point {
+    type Output = Point;
+    #[inline]
+    fn add(self, o: Point) -> Point {
+        Point::new(self[0] + o[0], self[1] + o[1], self[2] + o[2])
+    }
+}
+
+impl Sub for Point {
+    type Output = Point;
+    #[inline]
+    fn sub(self, o: Point) -> Point {
+        Point::new(self[0] - o[0], self[1] - o[1], self[2] - o[2])
+    }
+}
+
+impl Mul<f32> for Point {
+    type Output = Point;
+    #[inline]
+    fn mul(self, s: f32) -> Point {
+        Point::new(self[0] * s, self[1] * s, self[2] * s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn distance_matches_hand_computation() {
+        let a = Point::new(1.0, 2.0, 3.0);
+        let b = Point::new(4.0, 6.0, 3.0);
+        assert_eq!(a.distance_squared(&b), 25.0);
+        assert_eq!(a.distance(&b), 5.0);
+        assert_eq!(a.distance(&a), 0.0);
+    }
+
+    #[test]
+    fn min_max_are_componentwise() {
+        let a = Point::new(1.0, 5.0, -2.0);
+        let b = Point::new(2.0, 3.0, -4.0);
+        assert_eq!(a.min(&b), Point::new(1.0, 3.0, -4.0));
+        assert_eq!(a.max(&b), Point::new(2.0, 5.0, -2.0));
+    }
+
+    #[test]
+    fn arithmetic_ops() {
+        let a = Point::new(1.0, 2.0, 3.0);
+        let b = Point::new(0.5, 0.5, 0.5);
+        assert_eq!(a + b, Point::new(1.5, 2.5, 3.5));
+        assert_eq!(a - b, Point::new(0.5, 1.5, 2.5));
+        assert_eq!(a * 2.0, Point::new(2.0, 4.0, 6.0));
+    }
+}

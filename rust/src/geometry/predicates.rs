@@ -1,0 +1,70 @@
+//! Search predicates shared by the BVH and the baseline trees.
+//!
+//! The paper distinguishes two query kinds (§2.2): *spatial* queries
+//! ("all objects within a certain distance") and *nearest* queries
+//! ("a certain number of closest objects regardless of distance").
+
+use super::{Aabb, Point, Sphere};
+
+/// A spatial predicate: does a node/leaf box satisfy the search region?
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Spatial {
+    /// All objects whose box intersects the sphere (radius search).
+    IntersectsSphere(Sphere),
+    /// All objects whose box overlaps the box.
+    IntersectsBox(Aabb),
+}
+
+impl Spatial {
+    /// Tests the predicate against a bounding box.
+    #[inline]
+    pub fn test(&self, b: &Aabb) -> bool {
+        match self {
+            Spatial::IntersectsSphere(s) => s.intersects_box(b),
+            Spatial::IntersectsBox(q) => q.intersects(b),
+        }
+    }
+
+    /// A representative point of the search region, used for Morton-code
+    /// query ordering (§2.2.3).
+    #[inline]
+    pub fn origin(&self) -> Point {
+        match self {
+            Spatial::IntersectsSphere(s) => s.center,
+            Spatial::IntersectsBox(b) => b.centroid(),
+        }
+    }
+}
+
+/// A nearest predicate: the `k` closest objects to `point`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Nearest {
+    /// Query location.
+    pub point: Point,
+    /// Number of neighbors requested.
+    pub k: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spatial_predicate_dispatch() {
+        let unit = Aabb::new(Point::origin(), Point::splat(1.0));
+        let s = Spatial::IntersectsSphere(Sphere::new(Point::splat(2.0), 1.8));
+        assert!(s.test(&unit)); // dist(corner..(2,2,2)) = sqrt(3) ≈ 1.73 < 1.8
+        let s = Spatial::IntersectsSphere(Sphere::new(Point::splat(2.0), 1.7));
+        assert!(!s.test(&unit));
+        let b = Spatial::IntersectsBox(Aabb::new(Point::splat(0.9), Point::splat(2.0)));
+        assert!(b.test(&unit));
+    }
+
+    #[test]
+    fn predicate_origin() {
+        let s = Spatial::IntersectsSphere(Sphere::new(Point::new(1.0, 2.0, 3.0), 0.5));
+        assert_eq!(s.origin(), Point::new(1.0, 2.0, 3.0));
+        let b = Spatial::IntersectsBox(Aabb::new(Point::origin(), Point::splat(2.0)));
+        assert_eq!(b.origin(), Point::splat(1.0));
+    }
+}

@@ -1,0 +1,72 @@
+//! Spheres, used as spatial-query regions ("all objects within radius r").
+
+use super::{Aabb, Point};
+
+/// A sphere given by center and radius.
+#[derive(Clone, Copy, Debug, PartialEq)]
+#[repr(C)]
+pub struct Sphere {
+    /// Sphere center.
+    pub center: Point,
+    /// Sphere radius (non-negative).
+    pub radius: f32,
+}
+
+impl Sphere {
+    /// Creates a sphere from center and radius.
+    #[inline]
+    pub const fn new(center: Point, radius: f32) -> Self {
+        Sphere { center, radius }
+    }
+
+    /// Returns `true` if the sphere intersects the box — the predicate of
+    /// the paper's spatial traversal (§2.2.1): "a distance from an AABB to
+    /// a bounding box is less than a given radius".
+    #[inline]
+    pub fn intersects_box(&self, b: &Aabb) -> bool {
+        b.distance_squared(&self.center) <= self.radius * self.radius
+    }
+
+    /// Returns `true` if `p` lies inside the closed ball.
+    #[inline]
+    pub fn contains_point(&self, p: &Point) -> bool {
+        self.center.distance_squared(p) <= self.radius * self.radius
+    }
+
+    /// The tightest AABB around the sphere.
+    #[inline]
+    pub fn bounding_box(&self) -> Aabb {
+        let r = Point::splat(self.radius);
+        Aabb::new(self.center - r, self.center + r)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sphere_box_intersection() {
+        let b = Aabb::new(Point::new(0.0, 0.0, 0.0), Point::new(1.0, 1.0, 1.0));
+        // Center offset by 2 along x: gap of 1.
+        assert!(!Sphere::new(Point::new(3.0, 0.5, 0.5), 1.9).intersects_box(&b));
+        assert!(Sphere::new(Point::new(3.0, 0.5, 0.5), 2.0).intersects_box(&b));
+        // Center inside the box always intersects.
+        assert!(Sphere::new(Point::new(0.5, 0.5, 0.5), 0.0).intersects_box(&b));
+    }
+
+    #[test]
+    fn contains_point_is_closed() {
+        let s = Sphere::new(Point::origin(), 1.0);
+        assert!(s.contains_point(&Point::new(1.0, 0.0, 0.0)));
+        assert!(!s.contains_point(&Point::new(1.0001, 0.0, 0.0)));
+    }
+
+    #[test]
+    fn bounding_box_is_tight() {
+        let s = Sphere::new(Point::new(1.0, 2.0, 3.0), 0.5);
+        let b = s.bounding_box();
+        assert_eq!(b.min, Point::new(0.5, 1.5, 2.5));
+        assert_eq!(b.max, Point::new(1.5, 2.5, 3.5));
+    }
+}

@@ -1,0 +1,235 @@
+//! Triangles — a non-degenerate boundable object type.
+//!
+//! §2.1: "The only requirement on the objects is that they are
+//! boundable." Points exercise the degenerate-box path; triangles
+//! exercise the general one (mesh-based applications: contact detection,
+//! data transfer in multiphysics — the paper's intro workloads). The
+//! coarse phase uses [`Triangle::bounding_box`]; the fine phase uses the
+//! exact point–triangle distance below.
+
+use super::{Aabb, Point};
+
+/// A triangle given by its three vertices.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Triangle {
+    /// Vertices.
+    pub a: Point,
+    /// Second vertex.
+    pub b: Point,
+    /// Third vertex.
+    pub c: Point,
+}
+
+/// Dot product of two difference vectors.
+#[inline]
+fn dot(u: Point, v: Point) -> f32 {
+    u[0] * v[0] + u[1] * v[1] + u[2] * v[2]
+}
+
+impl Triangle {
+    /// Creates a triangle from its vertices.
+    pub const fn new(a: Point, b: Point, c: Point) -> Self {
+        Triangle { a, b, c }
+    }
+
+    /// The tightest AABB around the triangle (the coarse-phase volume).
+    pub fn bounding_box(&self) -> Aabb {
+        let mut bb = Aabb::from_point(self.a);
+        bb.expand_point(&self.b);
+        bb.expand_point(&self.c);
+        bb
+    }
+
+    /// Triangle centroid.
+    pub fn centroid(&self) -> Point {
+        (self.a + self.b + self.c) * (1.0 / 3.0)
+    }
+
+    /// Exact squared distance from `p` to the (solid) triangle — the
+    /// classic region-based projection (Ericson, *Real-Time Collision
+    /// Detection* §5.1.5): project onto the plane, then clamp to the
+    /// nearest vertex/edge/face feature.
+    pub fn distance_squared(&self, p: &Point) -> f32 {
+        let ab = self.b - self.a;
+        let ac = self.c - self.a;
+        let ap = *p - self.a;
+
+        let d1 = dot(ab, ap);
+        let d2 = dot(ac, ap);
+        if d1 <= 0.0 && d2 <= 0.0 {
+            return ap[0] * ap[0] + ap[1] * ap[1] + ap[2] * ap[2]; // vertex a
+        }
+
+        let bp = *p - self.b;
+        let d3 = dot(ab, bp);
+        let d4 = dot(ac, bp);
+        if d3 >= 0.0 && d4 <= d3 {
+            return p.distance_squared(&self.b); // vertex b
+        }
+
+        let vc = d1 * d4 - d3 * d2;
+        if vc <= 0.0 && d1 >= 0.0 && d3 <= 0.0 {
+            let v = d1 / (d1 - d3);
+            return p.distance_squared(&(self.a + ab * v)); // edge ab
+        }
+
+        let cp = *p - self.c;
+        let d5 = dot(ab, cp);
+        let d6 = dot(ac, cp);
+        if d6 >= 0.0 && d5 <= d6 {
+            return p.distance_squared(&self.c); // vertex c
+        }
+
+        let vb = d5 * d2 - d1 * d6;
+        if vb <= 0.0 && d2 >= 0.0 && d6 <= 0.0 {
+            let w = d2 / (d2 - d6);
+            return p.distance_squared(&(self.a + ac * w)); // edge ac
+        }
+
+        let va = d3 * d6 - d5 * d4;
+        if va <= 0.0 && (d4 - d3) >= 0.0 && (d5 - d6) >= 0.0 {
+            let w = (d4 - d3) / ((d4 - d3) + (d5 - d6));
+            let bc = self.c - self.b;
+            return p.distance_squared(&(self.b + bc * w)); // edge bc
+        }
+
+        // Interior: distance to the plane.
+        let denom = 1.0 / (va + vb + vc);
+        let v = vb * denom;
+        let w = vc * denom;
+        let closest = self.a + ab * v + ac * w;
+        p.distance_squared(&closest)
+    }
+
+    /// Does a sphere of radius `r` around `p` touch the triangle? (The
+    /// fine-phase test after the coarse AABB pass.)
+    pub fn intersects_sphere(&self, p: &Point, r: f32) -> bool {
+        self.distance_squared(p) <= r * r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+
+    fn unit_tri() -> Triangle {
+        Triangle::new(
+            Point::new(0.0, 0.0, 0.0),
+            Point::new(1.0, 0.0, 0.0),
+            Point::new(0.0, 1.0, 0.0),
+        )
+    }
+
+    #[test]
+    fn bounding_box_covers_vertices() {
+        let t = unit_tri();
+        let bb = t.bounding_box();
+        assert!(bb.contains_point(&t.a) && bb.contains_point(&t.b) && bb.contains_point(&t.c));
+        assert_eq!(bb.min, Point::new(0.0, 0.0, 0.0));
+        assert_eq!(bb.max, Point::new(1.0, 1.0, 0.0));
+    }
+
+    #[test]
+    fn distance_to_all_feature_regions() {
+        let t = unit_tri();
+        // Interior projection: point above the centroid.
+        assert!((t.distance_squared(&Point::new(0.25, 0.25, 2.0)) - 4.0).abs() < 1e-6);
+        // Vertex regions.
+        assert!((t.distance_squared(&Point::new(-1.0, -1.0, 0.0)) - 2.0).abs() < 1e-6);
+        assert!((t.distance_squared(&Point::new(2.0, -0.0, 0.0)) - 1.0).abs() < 1e-6);
+        assert!((t.distance_squared(&Point::new(0.0, 3.0, 0.0)) - 4.0).abs() < 1e-6);
+        // Edge ab region (below the edge y = 0).
+        assert!((t.distance_squared(&Point::new(0.5, -2.0, 0.0)) - 4.0).abs() < 1e-6);
+        // Hypotenuse region: point beyond x + y = 1.
+        let d = t.distance_squared(&Point::new(1.0, 1.0, 0.0));
+        assert!((d - 0.5).abs() < 1e-6, "dist to hypotenuse midpoint, got {d}");
+        // On the triangle: zero (up to interior-projection rounding).
+        assert!(t.distance_squared(&Point::new(0.2, 0.2, 0.0)) < 1e-10);
+    }
+
+    #[test]
+    fn distance_matches_dense_sampling() {
+        // Property-style check: exact distance == min over a dense sample
+        // of the triangle's surface (within sampling tolerance).
+        let t = Triangle::new(
+            Point::new(0.3, -0.2, 0.1),
+            Point::new(1.1, 0.4, -0.5),
+            Point::new(-0.4, 0.9, 0.8),
+        );
+        let mut rng = Rng::new(42);
+        for _ in 0..50 {
+            let p = Point::new(
+                rng.uniform(-2.0, 2.0),
+                rng.uniform(-2.0, 2.0),
+                rng.uniform(-2.0, 2.0),
+            );
+            let exact = t.distance_squared(&p).sqrt();
+            let mut sampled = f32::INFINITY;
+            let n = 60;
+            for i in 0..=n {
+                for j in 0..=(n - i) {
+                    let u = i as f32 / n as f32;
+                    let v = j as f32 / n as f32;
+                    let q = t.a + (t.b - t.a) * u + (t.c - t.a) * v;
+                    sampled = sampled.min(p.distance(&q));
+                }
+            }
+            assert!(
+                exact <= sampled + 1e-4 && sampled <= exact + 0.05,
+                "exact {exact} vs sampled {sampled} at {p:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn bvh_over_triangles_finds_touching_ones() {
+        // End-to-end: coarse BVH pass over triangle AABBs + exact fine
+        // filter — the §2.2 coarse/fine pattern on non-point objects.
+        use crate::bvh::{Bvh, QueryOptions, QueryPredicate};
+        use crate::exec::ExecSpace;
+
+        let mut rng = Rng::new(7);
+        let tris: Vec<Triangle> = (0..500)
+            .map(|_| {
+                let base = Point::new(
+                    rng.uniform(-10.0, 10.0),
+                    rng.uniform(-10.0, 10.0),
+                    rng.uniform(-10.0, 10.0),
+                );
+                let j = |rng: &mut Rng| {
+                    Point::new(rng.uniform(-0.5, 0.5), rng.uniform(-0.5, 0.5), rng.uniform(-0.5, 0.5))
+                };
+                Triangle::new(base, base + j(&mut rng), base + j(&mut rng))
+            })
+            .collect();
+        let boxes: Vec<Aabb> = tris.iter().map(|t| t.bounding_box()).collect();
+        let space = ExecSpace::serial();
+        let bvh = Bvh::build(&space, &boxes);
+
+        let center = Point::new(0.0, 0.0, 0.0);
+        let r = 4.0;
+        let out = bvh.query(
+            &space,
+            &[QueryPredicate::intersects_sphere(center, r)],
+            &QueryOptions::default(),
+        );
+        // Fine phase: exact triangle distances on the candidates.
+        let fine: Vec<u32> = out
+            .results_for(0)
+            .iter()
+            .copied()
+            .filter(|&i| tris[i as usize].intersects_sphere(&center, r))
+            .collect();
+        // Ground truth by brute force over exact distances.
+        let expect: Vec<u32> = (0..tris.len() as u32)
+            .filter(|&i| tris[i as usize].intersects_sphere(&center, r))
+            .collect();
+        let mut fine_sorted = fine.clone();
+        fine_sorted.sort();
+        assert_eq!(fine_sorted, expect);
+        // The coarse pass must be a superset of the fine result.
+        assert!(out.results_for(0).len() >= expect.len());
+        assert!(!expect.is_empty());
+    }
+}

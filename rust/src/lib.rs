@@ -1,0 +1,67 @@
+//! # arbor-rs
+//!
+//! A Rust + JAX + Pallas reproduction of **ArborX: A Performance Portable
+//! Geometric Search Library** (Lebrun-Grandié, Prokopenko, Turcksin,
+//! Slattery, 2019; DOI 10.1145/3412558).
+//!
+//! The crate provides:
+//!
+//! * [`geometry`] — points, axis-aligned bounding boxes, spheres, distance
+//!   and intersection predicates, and Morton (Z-order) codes.
+//! * [`exec`] — a Kokkos-like execution-space abstraction: the same
+//!   algorithm runs serially or on a persistent thread pool
+//!   (`parallel_for` / `parallel_reduce` / `exclusive_scan` / radix sort).
+//! * [`bvh`] — the paper's core contribution: a linear bounding volume
+//!   hierarchy with fully parallel construction (Karras 2012, plus the
+//!   Apetrei 2014 single-pass variant), stack-based spatial and nearest
+//!   traversals, the 1P/2P batched query engines with CSR output, and
+//!   Morton-ordered query sorting.
+//! * [`baselines`] — the comparison libraries of the paper's evaluation,
+//!   re-implemented: a nanoflann-style k-d tree, a Boost-style STR-packed
+//!   R-tree, and a brute-force oracle.
+//! * [`data`] — the Elseberg et al. experimental point clouds
+//!   (filled/hollow cube/sphere) and workload helpers.
+//! * [`runtime`] — a PJRT client (via the `xla` crate) that loads the
+//!   AOT-compiled JAX/Pallas artifacts and exposes them as an accelerator
+//!   backend for batched distance tiles.
+//! * [`coordinator`] — the batched query service (router + dynamic
+//!   batcher + metrics) and a simulated multi-rank distributed tree.
+//!
+//! ## Quick start
+//!
+//! ```
+//! use arbor::prelude::*;
+//!
+//! let space = ExecSpace::serial();
+//! let points = vec![
+//!     Point::new(0.0, 0.0, 0.0),
+//!     Point::new(1.0, 0.0, 0.0),
+//!     Point::new(0.0, 2.0, 0.0),
+//! ];
+//! let boxes: Vec<Aabb> = points.iter().map(|p| Aabb::from_point(*p)).collect();
+//! let bvh = Bvh::build(&space, &boxes);
+//!
+//! // All boxes within distance 1.5 of the origin:
+//! let queries = vec![QueryPredicate::intersects_sphere(Point::new(0.0, 0.0, 0.0), 1.5)];
+//! let out = bvh.query(&space, &queries, &QueryOptions::default());
+//! assert_eq!(out.results_for(0).len(), 2);
+//! ```
+
+pub mod baselines;
+pub mod bench_util;
+pub mod bvh;
+pub mod coordinator;
+pub mod data;
+pub mod exec;
+pub mod geometry;
+pub mod runtime;
+
+/// Convenience re-exports of the most common types.
+pub mod prelude {
+    pub use crate::baselines::{brute::BruteForce, kdtree::KdTree, rtree::RTree};
+    pub use crate::bvh::{Bvh, QueryOptions, QueryOutput, QueryPredicate};
+    pub use crate::coordinator::service::{SearchService, ServiceConfig};
+    pub use crate::data::shapes::{PointCloud, Shape};
+    pub use crate::exec::ExecSpace;
+    pub use crate::geometry::{Aabb, Point, Sphere, Triangle};
+}

@@ -1,0 +1,252 @@
+//! `arbor` — the command-line launcher for the arbor-rs search library.
+//!
+//! Subcommands:
+//!
+//! * `info` — PJRT platform + artifact registry.
+//! * `generate` — emit one of the Elseberg §3.1 point clouds as xyz text.
+//! * `build` — time tree construction (karras/apetrei) and print stats.
+//! * `query` — run a batched workload (spatial/nearest; 1P/2P; sorted or
+//!   not) and print Google-Benchmark-style rates.
+//! * `serve` — start the search service, replay a client workload, and
+//!   print latency/throughput metrics.
+//! * `accel` — run the same batch on the PJRT accelerator engine and
+//!   cross-check against the BVH.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use arbor::bvh::{stats, Bvh, QueryOptions, QueryPredicate};
+use arbor::coordinator::service::{SearchService, ServiceConfig};
+use arbor::data::shapes::{PointCloud, Shape};
+use arbor::data::workloads::{Case, Workload, K};
+use arbor::exec::ExecSpace;
+use arbor::runtime::AccelEngine;
+
+/// Tiny flag parser: `--key value` pairs after the subcommand.
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                flags.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    flags
+}
+
+fn flag<T: std::str::FromStr>(flags: &HashMap<String, String>, key: &str, default: T) -> T {
+    flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: arbor <info|generate|build|query|serve|accel> [--flags]\n\
+         \n\
+         arbor generate --shape filled-cube --n 1000 --seed 42\n\
+         arbor build    --case filled --m 1000000 --threads 8 --builder karras\n\
+         arbor query    --case filled --m 100000 --kind spatial --threads 8 [--buffer 32] [--no-sort]\n\
+         arbor serve    --case filled --m 100000 --requests 10000 --clients 8\n\
+         arbor accel    --case filled --m 8192 --n 2048"
+    );
+    std::process::exit(2);
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else { usage() };
+    let flags = parse_flags(&args[1..]);
+    match cmd.as_str() {
+        "info" => cmd_info(),
+        "generate" => cmd_generate(&flags),
+        "build" => cmd_build(&flags),
+        "query" => cmd_query(&flags),
+        "serve" => cmd_serve(&flags),
+        "accel" => cmd_accel(&flags),
+        _ => usage(),
+    }
+}
+
+fn cmd_info() -> anyhow::Result<()> {
+    match AccelEngine::from_default_dir() {
+        Ok(engine) => {
+            println!("pjrt platform: {}", engine.platform());
+            println!(
+                "tiles: q={} p={} k={} morton_n={}",
+                engine.tile_q, engine.tile_p, engine.tile_k, engine.morton_n
+            );
+        }
+        Err(e) => println!("accelerator unavailable ({e}); pure-rust paths still work"),
+    }
+    println!("threads available: {}", std::thread::available_parallelism()?.get());
+    Ok(())
+}
+
+fn cmd_generate(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let shape = Shape::parse(&flag::<String>(flags, "shape", "filled-cube".into()))
+        .unwrap_or(Shape::FilledCube);
+    let n: usize = flag(flags, "n", 1000);
+    let seed: u64 = flag(flags, "seed", 42);
+    let cloud = PointCloud::generate(shape, n, seed);
+    let mut out = String::new();
+    for p in &cloud.points {
+        out.push_str(&format!("{} {} {}\n", p[0], p[1], p[2]));
+    }
+    match flags.get("out") {
+        Some(path) => std::fs::write(path, out)?,
+        None => print!("{out}"),
+    }
+    Ok(())
+}
+
+fn cmd_build(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let case = Case::parse(&flag::<String>(flags, "case", "filled".into())).unwrap_or(Case::Filled);
+    let m: usize = flag(flags, "m", 1_000_000);
+    let threads: usize = flag(flags, "threads", 1);
+    let builder: String = flag(flags, "builder", "karras".into());
+    let space = ExecSpace::with_threads(threads);
+    let cloud = PointCloud::generate(case.source_shape(), m, flag(flags, "seed", 42));
+    let boxes = cloud.boxes();
+
+    let t0 = Instant::now();
+    let bvh = match builder.as_str() {
+        "apetrei" => Bvh::build_apetrei(&space, &boxes),
+        _ => Bvh::build(&space, &boxes),
+    };
+    let dt = t0.elapsed();
+    let (dmin, dmax, dmean) = stats::depth_stats(&bvh);
+    println!(
+        "build {builder} m={m} threads={threads}: {:.1} ms ({:.2} Mobj/s)",
+        dt.as_secs_f64() * 1e3,
+        m as f64 / dt.as_secs_f64() / 1e6
+    );
+    println!(
+        "tree: depth min/mean/max = {dmin}/{dmean:.1}/{dmax}, sah = {:.1}",
+        stats::sah_cost(&bvh)
+    );
+    Ok(())
+}
+
+fn cmd_query(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let case = Case::parse(&flag::<String>(flags, "case", "filled".into())).unwrap_or(Case::Filled);
+    let m: usize = flag(flags, "m", 100_000);
+    let n: usize = flag(flags, "n", m);
+    let threads: usize = flag(flags, "threads", 1);
+    let kind: String = flag(flags, "kind", "spatial".into());
+    let space = ExecSpace::with_threads(threads);
+    let w = Workload::generate(case, m, n, flag(flags, "seed", 42));
+    let bvh = Bvh::build(&space, &w.sources.boxes());
+
+    let options = QueryOptions {
+        buffer_size: flags.get("buffer").and_then(|v| v.parse().ok()),
+        sort_queries: !flags.contains_key("no-sort"),
+    };
+    let queries: &[QueryPredicate] = if kind == "nearest" { &w.nearest } else { &w.spatial };
+    let t0 = Instant::now();
+    let out = bvh.query(&space, queries, &options);
+    let dt = t0.elapsed();
+    println!(
+        "query {kind} case={case:?} m={m} n={n} threads={threads} \
+         sort={} buffer={:?}: {:.1} ms ({:.2} Mq/s), {} results ({} overflows)",
+        options.sort_queries,
+        options.buffer_size,
+        dt.as_secs_f64() * 1e3,
+        n as f64 / dt.as_secs_f64() / 1e6,
+        out.total(),
+        out.overflow_queries,
+    );
+    Ok(())
+}
+
+fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let case = Case::parse(&flag::<String>(flags, "case", "filled".into())).unwrap_or(Case::Filled);
+    let m: usize = flag(flags, "m", 100_000);
+    let requests: usize = flag(flags, "requests", 10_000);
+    let clients: usize = flag(flags, "clients", 8);
+    let threads: usize = flag(flags, "threads", std::thread::available_parallelism()?.get());
+
+    let space = ExecSpace::with_threads(threads);
+    let w = Workload::generate(case, m, requests, flag(flags, "seed", 42));
+    let bvh = Arc::new(Bvh::build(&space, &w.sources.boxes()));
+    let svc = Arc::new(SearchService::start(
+        Arc::clone(&bvh),
+        ServiceConfig { threads, ..Default::default() },
+    ));
+
+    let t0 = Instant::now();
+    let per_client = requests / clients;
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let svc = Arc::clone(&svc);
+        let preds: Vec<QueryPredicate> =
+            w.nearest[c * per_client..(c + 1) * per_client].to_vec();
+        handles.push(std::thread::spawn(move || {
+            let mut total = 0usize;
+            for pred in preds {
+                total += svc.query(pred).indices.len();
+            }
+            total
+        }));
+    }
+    let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    let dt = t0.elapsed();
+    println!(
+        "serve case={case:?} m={m} requests={} clients={clients}: {:.1} ms wall, {} results",
+        per_client * clients,
+        dt.as_secs_f64() * 1e3,
+        total
+    );
+    println!("metrics: {}", svc.metrics().summary());
+    Ok(())
+}
+
+fn cmd_accel(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let case = Case::parse(&flag::<String>(flags, "case", "filled".into())).unwrap_or(Case::Filled);
+    let m: usize = flag(flags, "m", 8192);
+    let n: usize = flag(flags, "n", 2048);
+    let engine = AccelEngine::from_default_dir()?;
+    println!("pjrt platform: {}", engine.platform());
+
+    let space = ExecSpace::default_parallel();
+    let w = Workload::generate(case, m, n, flag(flags, "seed", 42));
+    let bvh = Bvh::build(&space, &w.sources.boxes());
+
+    // Accelerator k-NN.
+    let t0 = Instant::now();
+    let accel = engine.batch_knn(w.target_points(), &w.sources.points, K)?;
+    let dt_accel = t0.elapsed();
+
+    // BVH k-NN.
+    let t0 = Instant::now();
+    let out = bvh.query(&space, &w.nearest, &QueryOptions::default());
+    let dt_bvh = t0.elapsed();
+
+    // Cross-check distances.
+    let mut mismatches = 0usize;
+    for q in 0..n {
+        let bd = out.distances_for(q);
+        for (j, nb) in accel[q].iter().enumerate() {
+            if (nb.distance_squared - bd[j]).abs() > 1e-2 * bd[j].max(1.0) {
+                mismatches += 1;
+            }
+        }
+    }
+    println!(
+        "knn m={m} n={n} k={K}: accel {:.1} ms ({:.3} Mq/s), bvh {:.1} ms ({:.3} Mq/s), {} mismatched distances",
+        dt_accel.as_secs_f64() * 1e3,
+        n as f64 / dt_accel.as_secs_f64() / 1e6,
+        dt_bvh.as_secs_f64() * 1e3,
+        n as f64 / dt_bvh.as_secs_f64() / 1e6,
+        mismatches
+    );
+    anyhow::ensure!(mismatches == 0, "accelerator and BVH disagree");
+    Ok(())
+}

@@ -1,0 +1,211 @@
+//! The tiled accelerator search engine (DESIGN.md §Hardware-Adaptation).
+//!
+//! Plays the role of the paper's CUDA backend in the Figure 10/11
+//! experiments. The AOT executables have *fixed* tile shapes (Q×P), so
+//! the engine:
+//!
+//! 1. pads the query batch to a multiple of Q with copies of the first
+//!    query (discarded on output),
+//! 2. pads the final point tile with far-away sentinels (coordinate 1e15:
+//!    squared distance ~1e30 stays finite in f32 and loses every
+//!    comparison, never enters a top-k or radius count),
+//! 3. streams point tiles through the device executable,
+//! 4. merges partial per-tile results on the rust side (k-NN heaps /
+//!    count sums) — the coordinator-side merge that replaces the GPU's
+//!    per-thread traversal state.
+
+use anyhow::{anyhow, Result};
+use std::path::Path;
+
+use super::engine::PjrtEngine;
+use crate::bvh::nearest::{KnnHeap, Neighbor};
+use crate::geometry::Point;
+
+/// Sentinel coordinate for padding points.
+const SENTINEL: f32 = 1.0e15;
+
+/// Names of the production artifacts (kept in sync with aot.py).
+const KNN_TILE: &str = "knn_tile_q512_p4096_k10";
+const RADIUS_TILE: &str = "radius_count_q512_p4096";
+const DIST_TILE: &str = "dist_tile_q512_p4096";
+const MORTON_TILE: &str = "morton_n4096";
+
+/// The tiled batched-search engine.
+pub struct AccelEngine {
+    engine: PjrtEngine,
+    /// Query-tile rows.
+    pub tile_q: usize,
+    /// Point-tile rows.
+    pub tile_p: usize,
+    /// On-device top-k width.
+    pub tile_k: usize,
+    /// Morton artifact size.
+    pub morton_n: usize,
+}
+
+impl AccelEngine {
+    /// Loads all production artifacts from `artifact_dir`.
+    pub fn new(artifact_dir: &Path) -> Result<AccelEngine> {
+        let mut engine = PjrtEngine::new(artifact_dir)?;
+        for name in [KNN_TILE, RADIUS_TILE, DIST_TILE, MORTON_TILE] {
+            engine.load(name)?;
+        }
+        let reg = engine.registry();
+        let tile_q = reg.get(KNN_TILE).and_then(|i| i.meta_usize("q")).unwrap_or(512);
+        let tile_p = reg.get(KNN_TILE).and_then(|i| i.meta_usize("p")).unwrap_or(4096);
+        let tile_k = reg.get(KNN_TILE).and_then(|i| i.meta_usize("k")).unwrap_or(10);
+        let morton_n = reg.get(MORTON_TILE).and_then(|i| i.meta_usize("n")).unwrap_or(4096);
+        Ok(AccelEngine { engine, tile_q, tile_p, tile_k, morton_n })
+    }
+
+    /// Loads from the default artifact directory (`$ARBOR_ARTIFACTS` or
+    /// `./artifacts`).
+    pub fn from_default_dir() -> Result<AccelEngine> {
+        Self::new(&super::registry::Registry::default_dir())
+    }
+
+    /// Packs points row-major, padding to `rows` with `pad`.
+    fn pack(points: &[Point], rows: usize, pad: f32) -> Vec<f32> {
+        let mut data = Vec::with_capacity(rows * 3);
+        for p in points {
+            data.extend_from_slice(&p.coords);
+        }
+        data.resize(rows * 3, pad);
+        data
+    }
+
+    /// Batched k-NN: for each query, the `k` nearest of `points`
+    /// (ascending by distance). `k` must be ≤ the artifact's top-k width.
+    ///
+    /// Point tiles are selected on-device (top-k of each tile), and the
+    /// per-tile winners are merged on the host — valid because the global
+    /// top-k is a subset of the union of per-tile top-ks for k ≤ tile_k.
+    pub fn batch_knn(&self, queries: &[Point], points: &[Point], k: usize) -> Result<Vec<Vec<Neighbor>>> {
+        if k > self.tile_k {
+            return Err(anyhow!("k={k} exceeds artifact top-k width {}", self.tile_k));
+        }
+        let nq = queries.len();
+        let mut heaps: Vec<KnnHeap> = (0..nq).map(|_| KnnHeap::new(k)).collect();
+
+        for q_base in (0..nq).step_by(self.tile_q) {
+            let q_end = (q_base + self.tile_q).min(nq);
+            let mut q_tile: Vec<Point> = queries[q_base..q_end].to_vec();
+            q_tile.resize(self.tile_q, queries[q_base]); // pad with a real point
+            let q_lit =
+                PjrtEngine::literal_f32_matrix(&Self::pack(&q_tile, self.tile_q, 0.0), self.tile_q, 3)?;
+
+            for p_base in (0..points.len()).step_by(self.tile_p) {
+                let p_end = (p_base + self.tile_p).min(points.len());
+                let p_lit = PjrtEngine::literal_f32_matrix(
+                    &Self::pack(&points[p_base..p_end], self.tile_p, SENTINEL),
+                    self.tile_p,
+                    3,
+                )?;
+                let out = self.engine.execute(KNN_TILE, &[q_lit.clone(), p_lit])?;
+                let dist: Vec<f32> = out[0]
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow!("knn dist fetch: {e:?}"))?;
+                let idx: Vec<i32> =
+                    out[1].to_vec::<i32>().map_err(|e| anyhow!("knn idx fetch: {e:?}"))?;
+                let valid = p_end - p_base;
+                for qi in 0..(q_end - q_base) {
+                    let heap = &mut heaps[q_base + qi];
+                    for j in 0..self.tile_k {
+                        let d = dist[qi * self.tile_k + j];
+                        let i = idx[qi * self.tile_k + j] as usize;
+                        if i < valid {
+                            heap.offer(d, (p_base + i) as u32);
+                        }
+                    }
+                }
+            }
+        }
+        let mut results = Vec::with_capacity(nq);
+        for mut heap in heaps {
+            let mut out = Vec::new();
+            heap.drain_sorted_into(&mut out);
+            results.push(out);
+        }
+        Ok(results)
+    }
+
+    /// Batched radius counts: for each query, how many points lie within
+    /// `radius` (the accelerator twin of the 2P counting pass).
+    pub fn batch_radius_count(&self, queries: &[Point], points: &[Point], radius: f32) -> Result<Vec<u32>> {
+        let nq = queries.len();
+        let r2 = PjrtEngine::literal_f32_scalar(radius * radius);
+        let mut counts = vec![0u32; nq];
+
+        for q_base in (0..nq).step_by(self.tile_q) {
+            let q_end = (q_base + self.tile_q).min(nq);
+            let mut q_tile: Vec<Point> = queries[q_base..q_end].to_vec();
+            q_tile.resize(self.tile_q, queries[q_base]);
+            let q_lit =
+                PjrtEngine::literal_f32_matrix(&Self::pack(&q_tile, self.tile_q, 0.0), self.tile_q, 3)?;
+
+            for p_base in (0..points.len()).step_by(self.tile_p) {
+                let p_end = (p_base + self.tile_p).min(points.len());
+                let p_lit = PjrtEngine::literal_f32_matrix(
+                    &Self::pack(&points[p_base..p_end], self.tile_p, SENTINEL),
+                    self.tile_p,
+                    3,
+                )?;
+                let out = self.engine.execute(RADIUS_TILE, &[q_lit.clone(), p_lit, r2.clone()])?;
+                let tile_counts: Vec<i32> =
+                    out[0].to_vec::<i32>().map_err(|e| anyhow!("count fetch: {e:?}"))?;
+                for qi in 0..(q_end - q_base) {
+                    counts[q_base + qi] += tile_counts[qi] as u32;
+                }
+            }
+        }
+        Ok(counts)
+    }
+
+    /// Raw squared-distance tile (for callers wanting custom merges).
+    /// `queries`/`points` must not exceed one tile; shorter inputs are
+    /// padded. Returns the (tile_q × tile_p) row-major tile.
+    pub fn dist_tile(&self, queries: &[Point], points: &[Point]) -> Result<Vec<f32>> {
+        assert!(queries.len() <= self.tile_q && points.len() <= self.tile_p);
+        let q_lit = PjrtEngine::literal_f32_matrix(
+            &Self::pack(queries, self.tile_q, 0.0),
+            self.tile_q,
+            3,
+        )?;
+        let p_lit = PjrtEngine::literal_f32_matrix(
+            &Self::pack(points, self.tile_p, SENTINEL),
+            self.tile_p,
+            3,
+        )?;
+        let out = self.engine.execute(DIST_TILE, &[q_lit, p_lit])?;
+        out[0].to_vec::<f32>().map_err(|e| anyhow!("dist fetch: {e:?}"))
+    }
+
+    /// Morton codes for exactly `morton_n` points: the on-device
+    /// scene-reduce + encode pipeline (construction steps 2–3 of §2.1).
+    /// Shorter inputs are padded with copies of the first point (which
+    /// does not change the scene box). Returns codes for the real points.
+    pub fn morton_codes(&self, points: &[Point]) -> Result<Vec<u32>> {
+        if points.is_empty() {
+            return Ok(Vec::new());
+        }
+        if points.len() > self.morton_n {
+            return Err(anyhow!("morton artifact holds {} points max", self.morton_n));
+        }
+        let mut padded = points.to_vec();
+        padded.resize(self.morton_n, points[0]);
+        let lit = PjrtEngine::literal_f32_matrix(
+            &Self::pack(&padded, self.morton_n, 0.0),
+            self.morton_n,
+            3,
+        )?;
+        let out = self.engine.execute(MORTON_TILE, &[lit])?;
+        let codes: Vec<u32> =
+            out[0].to_vec::<u32>().map_err(|e| anyhow!("morton fetch: {e:?}"))?;
+        Ok(codes[..points.len()].to_vec())
+    }
+
+    /// PJRT platform string.
+    pub fn platform(&self) -> String {
+        self.engine.platform()
+    }
+}

@@ -1,0 +1,94 @@
+//! PJRT client wrapper: load HLO text, compile once, execute many times.
+//!
+//! Follows the pattern proven by /opt/xla-example/src/bin/load_hlo.rs:
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile` → `execute`. Artifacts
+//! are lowered with `return_tuple=True`, so every result is a tuple.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::registry::Registry;
+
+/// A PJRT client plus the executables compiled from the artifact set.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    registry: Registry,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtEngine {
+    /// Creates a CPU PJRT client over the artifact directory.
+    pub fn new(artifact_dir: &Path) -> Result<PjrtEngine> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        let registry = Registry::load(artifact_dir).context("loading artifact manifest")?;
+        Ok(PjrtEngine { client, registry, executables: HashMap::new() })
+    }
+
+    /// Creates the engine over [`Registry::default_dir`].
+    pub fn from_default_dir() -> Result<PjrtEngine> {
+        Self::new(&Registry::default_dir())
+    }
+
+    /// PJRT platform name (e.g. `cpu`).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// The artifact registry.
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// Loads and compiles `name` (idempotent; compiled executables are
+    /// cached — compile once, execute on the hot path).
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        let info = self
+            .registry
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))?;
+        let proto = xla::HloModuleProto::from_text_file(&info.path)
+            .map_err(|e| anyhow!("parsing {}: {e:?}", info.path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Executes a loaded artifact with the given input literals, returning
+    /// the elements of the result tuple.
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .executables
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not loaded"))?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let literal = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {name}: {e:?}"))?;
+        literal.to_tuple().map_err(|e| anyhow!("untupling result of {name}: {e:?}"))
+    }
+
+    /// Builds an `f32[n][3]` literal from packed coordinates.
+    pub fn literal_f32_matrix(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+        assert_eq!(data.len(), rows * cols);
+        xla::Literal::vec1(data)
+            .reshape(&[rows as i64, cols as i64])
+            .map_err(|e| anyhow!("reshape literal: {e:?}"))
+    }
+
+    /// Builds an `f32[]` scalar literal.
+    pub fn literal_f32_scalar(v: f32) -> xla::Literal {
+        xla::Literal::from(v)
+    }
+}

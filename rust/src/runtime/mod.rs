@@ -1,0 +1,19 @@
+//! The PJRT runtime — the accelerator backend of this reproduction.
+//!
+//! The paper runs its GPU experiments through Kokkos' CUDA backend; here
+//! the accelerator is an XLA PJRT client (the `xla` crate) executing the
+//! AOT-compiled JAX/Pallas artifacts produced by `make artifacts`
+//! (`python/compile/aot.py`). Python is never on the request path: the
+//! artifacts are HLO *text* files loaded, compiled and executed from rust.
+//!
+//! * [`registry`] — parses `artifacts/manifest.txt` and locates artifacts.
+//! * [`engine`] — the PJRT client wrapper: load + compile + execute.
+//! * [`accel`] — the tiled batched-search engine built on top: k-NN and
+//!   radius counts over fixed-shape distance tiles with rust-side merge.
+
+pub mod accel;
+pub mod engine;
+pub mod registry;
+
+pub use accel::AccelEngine;
+pub use engine::PjrtEngine;

@@ -1,0 +1,134 @@
+//! Artifact discovery: the `artifacts/manifest.txt` index.
+//!
+//! The manifest is a plain `name key=value ...` text format (the offline
+//! crate set has no serde); one line per artifact, written by
+//! `python/compile/aot.py`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One artifact entry from the manifest.
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    /// Logical name (e.g. `knn_tile_q512_p4096_k10`).
+    pub name: String,
+    /// Path of the HLO text file.
+    pub path: PathBuf,
+    /// Remaining key=value metadata (tile shapes etc.).
+    pub meta: HashMap<String, String>,
+}
+
+impl ArtifactInfo {
+    /// Integer metadata field (e.g. `q`, `p`, `k`, `n`).
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key)?.parse().ok()
+    }
+}
+
+/// The parsed artifact manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Registry {
+    entries: HashMap<String, ArtifactInfo>,
+}
+
+impl Registry {
+    /// Loads `<dir>/manifest.txt`. Returns an empty registry (not an
+    /// error) when the directory has not been built yet, so library users
+    /// without artifacts can still use the pure-rust paths.
+    pub fn load(dir: &Path) -> std::io::Result<Registry> {
+        let manifest = dir.join("manifest.txt");
+        if !manifest.exists() {
+            return Ok(Registry::default());
+        }
+        let text = std::fs::read_to_string(&manifest)?;
+        Ok(Self::parse(&text, dir))
+    }
+
+    /// Parses manifest text; `dir` anchors relative artifact paths.
+    pub fn parse(text: &str, dir: &Path) -> Registry {
+        let mut entries = HashMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let Some(name) = parts.next() else { continue };
+            let mut meta = HashMap::new();
+            let mut file = format!("{name}.hlo.txt");
+            for kv in parts {
+                if let Some((k, v)) = kv.split_once('=') {
+                    if k == "file" {
+                        file = v.to_string();
+                    } else {
+                        meta.insert(k.to_string(), v.to_string());
+                    }
+                }
+            }
+            entries.insert(
+                name.to_string(),
+                ArtifactInfo { name: name.to_string(), path: dir.join(file), meta },
+            );
+        }
+        Registry { entries }
+    }
+
+    /// Looks up an artifact by name.
+    pub fn get(&self, name: &str) -> Option<&ArtifactInfo> {
+        self.entries.get(name)
+    }
+
+    /// All known artifact names (sorted, for stable output).
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.entries.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+
+    /// Number of artifacts.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// `true` when no artifacts were found.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// The default artifact directory: `$ARBOR_ARTIFACTS` or `artifacts/`
+    /// relative to the working directory.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("ARBOR_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_lines() {
+        let text = "\
+# comment
+knn_tile_q512_p4096_k10 file=knn.hlo.txt q=512 p=4096 k=10 outputs=d;i
+
+morton_n4096 file=morton.hlo.txt n=4096
+";
+        let r = Registry::parse(text, Path::new("/arts"));
+        assert_eq!(r.len(), 2);
+        let knn = r.get("knn_tile_q512_p4096_k10").unwrap();
+        assert_eq!(knn.meta_usize("q"), Some(512));
+        assert_eq!(knn.meta_usize("k"), Some(10));
+        assert_eq!(knn.path, Path::new("/arts/knn.hlo.txt"));
+        assert_eq!(r.names(), vec!["knn_tile_q512_p4096_k10", "morton_n4096"]);
+    }
+
+    #[test]
+    fn missing_manifest_is_empty_not_error() {
+        let r = Registry::load(Path::new("/nonexistent-dir-xyz")).unwrap();
+        assert!(r.is_empty());
+        assert!(r.get("anything").is_none());
+    }
+}

@@ -1,0 +1,145 @@
+//! Cross-implementation integration tests: the BVH, the k-d tree, the
+//! STR R-tree and brute force must all agree on every Elseberg cloud for
+//! both query kinds — the correctness backbone of the benchmark claims.
+
+use arbor::baselines::{brute::BruteForce, kdtree::KdTree, rtree::RTree};
+use arbor::bvh::{Bvh, QueryOptions, QueryPredicate};
+use arbor::data::shapes::{PointCloud, Shape};
+use arbor::data::workloads::{spatial_radius, Case, Workload};
+use arbor::exec::ExecSpace;
+use arbor::geometry::predicates::Spatial;
+use arbor::geometry::Sphere;
+
+const SHAPES: [Shape; 4] =
+    [Shape::FilledCube, Shape::HollowCube, Shape::FilledSphere, Shape::HollowSphere];
+
+#[test]
+fn all_engines_agree_on_spatial_queries_across_shapes() {
+    let space = ExecSpace::with_threads(2);
+    for shape in SHAPES {
+        let cloud = PointCloud::generate(shape, 3000, 11);
+        let boxes = cloud.boxes();
+        let bvh = Bvh::build(&space, &boxes);
+        let kd = KdTree::build(&cloud.points);
+        let rt = RTree::build(&boxes);
+        let bf = BruteForce::new(&boxes);
+        let r = spatial_radius(10);
+
+        let queries: Vec<QueryPredicate> = cloud
+            .points
+            .iter()
+            .step_by(97)
+            .map(|p| QueryPredicate::intersects_sphere(*p, r))
+            .collect();
+        let out = bvh.query(&space, &queries, &QueryOptions::default());
+
+        for (qi, pred) in queries.iter().enumerate() {
+            let QueryPredicate::Spatial(s) = pred else { unreachable!() };
+            let want = bf.spatial(s);
+            let mut got = out.results_for(qi).to_vec();
+            got.sort();
+            assert_eq!(got, want, "bvh {shape:?} q{qi}");
+            let mut kd_got = kd.spatial(s);
+            kd_got.sort();
+            assert_eq!(kd_got, want, "kdtree {shape:?} q{qi}");
+            let mut rt_got = rt.spatial(s);
+            rt_got.sort();
+            assert_eq!(rt_got, want, "rtree {shape:?} q{qi}");
+        }
+    }
+}
+
+#[test]
+fn all_engines_agree_on_nearest_queries_across_shapes() {
+    let space = ExecSpace::with_threads(2);
+    for shape in SHAPES {
+        let cloud = PointCloud::generate(shape, 2500, 13);
+        let boxes = cloud.boxes();
+        let bvh = Bvh::build(&space, &boxes);
+        let kd = KdTree::build(&cloud.points);
+        let rt = RTree::build(&boxes);
+        let bf = BruteForce::new(&boxes);
+
+        let targets = PointCloud::generate(shape, 100, 14);
+        let queries: Vec<QueryPredicate> =
+            targets.points.iter().map(|p| QueryPredicate::nearest(*p, 10)).collect();
+        let out = bvh.query(&space, &queries, &QueryOptions::default());
+
+        for (qi, p) in targets.points.iter().enumerate() {
+            let want: Vec<f32> =
+                bf.nearest(p, 10).iter().map(|n| n.distance_squared).collect();
+            assert_eq!(out.distances_for(qi), &want[..], "bvh {shape:?} q{qi}");
+            let kd_d: Vec<f32> = kd.nearest(p, 10).iter().map(|n| n.distance_squared).collect();
+            assert_eq!(kd_d, want, "kdtree {shape:?} q{qi}");
+            let rt_d: Vec<f32> = rt.nearest(p, 10).iter().map(|n| n.distance_squared).collect();
+            assert_eq!(rt_d, want, "rtree {shape:?} q{qi}");
+        }
+    }
+}
+
+#[test]
+fn workload_end_to_end_1p_2p_equivalence_hollow() {
+    // The hollow case stresses the 1P overflow fallback: average 2 results
+    // but maxima in the hundreds (paper §3.2).
+    let space = ExecSpace::with_threads(2);
+    let w = Workload::generate(Case::Hollow, 8000, 8000, 5);
+    let bvh = Bvh::build(&space, &w.sources.boxes());
+    let two_pass = bvh.query(
+        &space,
+        &w.spatial,
+        &QueryOptions { buffer_size: None, sort_queries: true },
+    );
+    let one_pass = bvh.query(
+        &space,
+        &w.spatial,
+        &QueryOptions { buffer_size: Some(4), sort_queries: true },
+    );
+    assert_eq!(one_pass.offsets, two_pass.offsets);
+    for q in 0..w.spatial.len() {
+        let mut a = one_pass.results_for(q).to_vec();
+        let mut b = two_pass.results_for(q).to_vec();
+        a.sort();
+        b.sort();
+        assert_eq!(a, b, "query {q}");
+    }
+    assert!(one_pass.overflow_queries > 0, "buffer 4 must overflow somewhere");
+}
+
+#[test]
+fn randomized_invariants_property_style() {
+    // Property-style randomized sweep (seeds logged in the assert): for
+    // random clouds and random radii, CSR output is well-formed and every
+    // reported neighbor actually satisfies the predicate (soundness), and
+    // brute-force counts match (completeness).
+    let space = ExecSpace::with_threads(2);
+    for seed in [1u64, 2, 3, 4, 5, 6, 7, 8] {
+        let m = 500 + (seed as usize * 379) % 2000;
+        let cloud = PointCloud::generate(SHAPES[(seed % 4) as usize], m, seed);
+        let boxes = cloud.boxes();
+        let bvh = Bvh::build(&space, &boxes);
+        assert_eq!(bvh.validate(), Ok(()), "seed {seed}");
+        let bf = BruteForce::new(&boxes);
+        let r = 0.3 + (seed as f32) * 0.71;
+        let queries: Vec<QueryPredicate> = cloud
+            .points
+            .iter()
+            .step_by(53)
+            .map(|p| QueryPredicate::intersects_sphere(*p, r))
+            .collect();
+        let out = bvh.query(&space, &queries, &QueryOptions::default());
+        assert!(out.offsets.windows(2).all(|w| w[0] <= w[1]), "seed {seed}");
+        for (qi, pred) in queries.iter().enumerate() {
+            let QueryPredicate::Spatial(s) = pred else { unreachable!() };
+            let got = out.results_for(qi);
+            // Soundness: every result satisfies the predicate.
+            for &obj in got {
+                assert!(
+                    s.test(&boxes[obj as usize]),
+                    "seed {seed} q{qi}: {obj} fails predicate"
+                );
+            }
+            // Completeness: counts match brute force.
+            assert_eq!(got.len(), bf.spatial(s).len(), "seed {seed} q{qi}");
+        }
+    }
+}

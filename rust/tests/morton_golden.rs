@@ -1,0 +1,66 @@
+//! Golden-vector tests for the Morton codes: the rust implementation must
+//! produce exactly these values, which are the same vectors asserted in
+//! `python/tests/test_morton_kernel.py` — keeping the two layers honest
+//! without a cross-language build dependency (the live cross-check runs
+//! in `runtime_roundtrip.rs`).
+
+use arbor::geometry::{morton, Point};
+
+/// Reference interleave used to derive the goldens.
+fn interleave(x: u32, y: u32, z: u32) -> u32 {
+    let mut code = 0u32;
+    for b in 0..10 {
+        code |= ((x >> b) & 1) << (3 * b + 2);
+        code |= ((y >> b) & 1) << (3 * b + 1);
+        code |= ((z >> b) & 1) << (3 * b);
+    }
+    code
+}
+
+#[test]
+fn unit_cube_golden_vectors() {
+    let cases: [(Point, u32); 6] = [
+        (Point::new(0.0, 0.0, 0.0), 0),
+        (Point::new(1.0, 1.0, 1.0), interleave(1023, 1023, 1023)),
+        (Point::new(0.5, 0.25, 0.75), interleave(512, 256, 768)),
+        (Point::new(0.999, 0.001, 0.5), interleave(1022, 1, 512)),
+        // Out-of-range values clamp.
+        (Point::new(-0.5, 2.0, 0.5), interleave(0, 1023, 512)),
+        (Point::new(0.0009765625, 0.0, 0.0), interleave(1, 0, 0)), // exactly 1/1024
+    ];
+    for (p, want) in cases {
+        assert_eq!(morton::morton32_unit(&p), want, "{p:?}");
+    }
+}
+
+#[test]
+fn axis_order_is_x_highest() {
+    // x contributes the most significant interleaved bit: a point with
+    // only x set must exceed one with only y set, etc.
+    let x = morton::morton32_unit(&Point::new(1.0, 0.0, 0.0));
+    let y = morton::morton32_unit(&Point::new(0.0, 1.0, 0.0));
+    let z = morton::morton32_unit(&Point::new(0.0, 0.0, 1.0));
+    assert!(x > y && y > z);
+    assert_eq!(x, morton::expand_bits_10(1023) << 2);
+    assert_eq!(y, morton::expand_bits_10(1023) << 1);
+    assert_eq!(z, morton::expand_bits_10(1023));
+}
+
+#[test]
+fn morton64_matches_morton32_on_coarse_grid() {
+    // On a 1024-aligned grid the 63-bit code's top 30 bits must order
+    // identically to the 30-bit code.
+    let pts: Vec<Point> = (0..64)
+        .map(|i| {
+            let t = i as f32 / 64.0;
+            Point::new(t, 1.0 - t, (2.0 * t) % 1.0)
+        })
+        .collect();
+    let mut order32: Vec<usize> = (0..pts.len()).collect();
+    let mut order64 = order32.clone();
+    order32.sort_by_key(|&i| morton::morton32_unit(&pts[i]));
+    order64.sort_by_key(|&i| morton::morton64_unit(&pts[i]));
+    // 64-bit refines 32-bit: equal-32-bit groups may permute, others not.
+    let codes32: Vec<u32> = order64.iter().map(|&i| morton::morton32_unit(&pts[i])).collect();
+    assert!(codes32.windows(2).all(|w| w[0] <= w[1]), "64-bit order respects 32-bit order");
+}

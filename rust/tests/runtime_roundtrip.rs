@@ -1,0 +1,139 @@
+//! Runtime integration: the AOT artifacts loaded through PJRT must agree
+//! with the pure-rust implementations — the cross-language correctness
+//! anchor of the three-layer architecture.
+//!
+//! These tests require `make artifacts` to have run; they are skipped
+//! (with a loud message) when the artifact directory is absent so plain
+//! `cargo test` works in a fresh checkout.
+
+use std::path::PathBuf;
+
+use arbor::baselines::brute::BruteForce;
+use arbor::data::rng::Rng;
+use arbor::data::shapes::{PointCloud, Shape};
+use arbor::geometry::{morton, Aabb, Point};
+use arbor::runtime::AccelEngine;
+
+fn artifact_dir() -> Option<PathBuf> {
+    let dir = std::env::var_os("ARBOR_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"));
+    if dir.join("manifest.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn cloud(n: usize, seed: u64) -> Vec<Point> {
+    let mut r = Rng::new(seed);
+    (0..n)
+        .map(|_| Point::new(r.uniform(-7.0, 7.0), r.uniform(-7.0, 7.0), r.uniform(-7.0, 7.0)))
+        .collect()
+}
+
+#[test]
+fn accel_knn_matches_brute_force() {
+    let Some(dir) = artifact_dir() else { return };
+    let engine = AccelEngine::new(&dir).expect("load artifacts");
+    // Sizes straddle the tile boundaries (q=512, p=4096) to exercise
+    // padding and multi-tile merging.
+    let queries = cloud(700, 1);
+    let points = cloud(5000, 2);
+    let boxes: Vec<Aabb> = points.iter().map(|p| Aabb::from_point(*p)).collect();
+    let bf = BruteForce::new(&boxes);
+    let got = engine.batch_knn(&queries, &points, 10).expect("accel knn");
+    assert_eq!(got.len(), queries.len());
+    for (qi, q) in queries.iter().enumerate() {
+        let want = bf.nearest(q, 10);
+        let gd: Vec<f32> = got[qi].iter().map(|n| n.distance_squared).collect();
+        let wd: Vec<f32> = want.iter().map(|n| n.distance_squared).collect();
+        for (g, w) in gd.iter().zip(&wd) {
+            assert!(
+                (g - w).abs() <= 1e-3 * w.max(1.0),
+                "q{qi}: {gd:?} vs {wd:?} (fp32 matmul-trick tolerance)"
+            );
+        }
+    }
+}
+
+#[test]
+fn accel_radius_counts_match_brute_force() {
+    let Some(dir) = artifact_dir() else { return };
+    let engine = AccelEngine::new(&dir).expect("load artifacts");
+    let queries = cloud(600, 3);
+    let points = cloud(9000, 4);
+    let boxes: Vec<Aabb> = points.iter().map(|p| Aabb::from_point(*p)).collect();
+    let bf = BruteForce::new(&boxes);
+    let preds: Vec<arbor::geometry::predicates::Spatial> = queries
+        .iter()
+        .map(|q| {
+            arbor::geometry::predicates::Spatial::IntersectsSphere(arbor::geometry::Sphere::new(
+                *q, 2.0,
+            ))
+        })
+        .collect();
+    let got = engine.batch_radius_count(&queries, &points, 2.0).expect("accel radius");
+    let want = bf.batch_spatial_counts(&arbor::exec::ExecSpace::serial(), &preds);
+    // fp32 boundary effects can flip points sitting exactly at the radius;
+    // allow a tiny discrepancy count.
+    let mismatches = got.iter().zip(&want).filter(|(a, b)| a != b).count();
+    assert!(
+        mismatches <= queries.len() / 100,
+        "{mismatches} of {} counts disagree",
+        queries.len()
+    );
+}
+
+#[test]
+fn accel_morton_codes_match_rust_implementation() {
+    let Some(dir) = artifact_dir() else { return };
+    let engine = AccelEngine::new(&dir).expect("load artifacts");
+    let points = cloud(4096, 5);
+    let got = engine.morton_codes(&points).expect("accel morton");
+
+    // Rust-side scene box + codes.
+    let mut scene = Aabb::empty();
+    for p in &points {
+        scene.expand_point(p);
+    }
+    for (i, p) in points.iter().enumerate() {
+        let want = morton::morton32_scene(&Aabb::from_point(*p), &scene);
+        assert_eq!(got[i], want, "point {i} ({p:?})");
+    }
+}
+
+#[test]
+fn accel_handles_partial_tiles() {
+    let Some(dir) = artifact_dir() else { return };
+    let engine = AccelEngine::new(&dir).expect("load artifacts");
+    // 3 queries, 5 points: everything is padding except a sliver.
+    let queries = cloud(3, 6);
+    let points = cloud(5, 7);
+    let boxes: Vec<Aabb> = points.iter().map(|p| Aabb::from_point(*p)).collect();
+    let bf = BruteForce::new(&boxes);
+    let got = engine.batch_knn(&queries, &points, 5).expect("partial tile knn");
+    for (qi, q) in queries.iter().enumerate() {
+        assert_eq!(got[qi].len(), 5, "all 5 real points returned, no sentinels");
+        let want = bf.nearest(q, 5);
+        for (g, w) in got[qi].iter().zip(&want) {
+            assert!((g.distance_squared - w.distance_squared).abs() <= 1e-3);
+        }
+    }
+}
+
+#[test]
+fn accel_workload_smoke_filled_case() {
+    // The Figure-10 configuration in miniature: filled sphere targets in
+    // a filled cube source through the accelerator.
+    let Some(dir) = artifact_dir() else { return };
+    let engine = AccelEngine::new(&dir).expect("load artifacts");
+    let sources = PointCloud::generate(Shape::FilledCube, 8192, 8);
+    let targets = PointCloud::generate(Shape::FilledSphere, 512, 9);
+    let counts = engine
+        .batch_radius_count(&targets.points, &sources.points, arbor::data::workloads::spatial_radius(10))
+        .expect("radius counts");
+    let avg = counts.iter().map(|&c| c as f64).sum::<f64>() / counts.len() as f64;
+    assert!((5.0..15.0).contains(&avg), "filled-case calibration: avg {avg} ~ 10");
+}
