@@ -16,10 +16,14 @@
 use std::sync::Arc;
 use std::time::Instant;
 
+#[cfg(feature = "accel")]
 use arbor::bvh::QueryPredicate;
 use arbor::coordinator::service::{SearchService, ServiceConfig};
-use arbor::data::workloads::{Case, Workload, K};
+#[cfg(feature = "accel")]
+use arbor::data::workloads::K;
+use arbor::data::workloads::{Case, Workload};
 use arbor::prelude::*;
+#[cfg(feature = "accel")]
 use arbor::runtime::AccelEngine;
 
 fn main() {
@@ -70,6 +74,9 @@ fn main() {
     println!("service metrics: {}", svc.metrics().summary());
 
     // ---- Layer 1/2: accelerator cross-check --------------------------
+    #[cfg(not(feature = "accel"))]
+    println!("accelerator skipped (compiled without the `accel` feature)");
+    #[cfg(feature = "accel")]
     match AccelEngine::from_default_dir() {
         Err(e) => println!("accelerator skipped ({e}); run `make artifacts` first"),
         Ok(engine) => {

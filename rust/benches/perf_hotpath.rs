@@ -5,13 +5,20 @@
 //!   at 1 and all threads — checks whether we reproduce the paper's
 //!   "sorting is the limiting factor" finding (§3.3);
 //! * builder comparison (Karras vs Apetrei single-pass);
-//! * query-engine knobs: 2P vs 1P buffer sizes, sorted vs unsorted.
+//! * query-engine knobs: 2P vs 1P buffer sizes, sorted vs unsorted;
+//! * query-layer engines over the filled workload: enum-facade CSR vs
+//!   monomorphized trait CSR vs callback streaming (no CSR
+//!   materialization) — snapshotted to `BENCH_query_layer.json` so the
+//!   perf trajectory of the trait refactor is recorded run over run.
 
-use arbor::bench_util::{f, reps, time_median, Table};
+use std::sync::atomic::{AtomicU32, Ordering};
+
+use arbor::bench_util::{f, reps, time_median, write_json_snapshot, JsonValue, Table};
 use arbor::bvh::build::build_karras_profiled;
-use arbor::bvh::{Bvh, QueryOptions};
+use arbor::bvh::{Bvh, QueryOptions, QueryPredicate};
 use arbor::data::workloads::{Case, Workload};
 use arbor::exec::ExecSpace;
+use arbor::geometry::predicates::{IntersectsSphere, Spatial};
 
 fn main() {
     let cores = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
@@ -89,4 +96,54 @@ fn main() {
         tab.row(&[name.to_string(), f(spatial), f(nearest)]);
     }
     tab.write_csv();
+
+    // --- query layer: facade CSR vs trait CSR vs callback --------------
+    let typed: Vec<IntersectsSphere> = w
+        .spatial
+        .iter()
+        .map(|q| match q {
+            QueryPredicate::Spatial(Spatial::IntersectsSphere(s)) => IntersectsSphere(*s),
+            _ => unreachable!("filled workload is sphere-only"),
+        })
+        .collect();
+    let opts = QueryOptions::default();
+    let t_facade = time_median(r, || {
+        std::hint::black_box(bvh.query(&space, &w.spatial, &opts));
+    });
+    let t_trait = time_median(r, || {
+        std::hint::black_box(bvh.query_spatial(&space, &typed, &opts));
+    });
+    // The callback consumer mirrors the counting pass's write traffic
+    // (one counter slot per query) without materializing CSR results.
+    let counts: Vec<AtomicU32> = (0..typed.len()).map(|_| AtomicU32::new(0)).collect();
+    let t_callback = time_median(r, || {
+        for c in &counts {
+            c.store(0, Ordering::Relaxed);
+        }
+        bvh.query_with_callback(&space, &typed, |q, _obj| {
+            counts[q as usize].fetch_add(1, Ordering::Relaxed);
+        });
+        std::hint::black_box(&counts);
+    });
+    let total: u64 = counts.iter().map(|c| c.load(Ordering::Relaxed) as u64).sum();
+
+    let mut tab = Table::new("perf_query_layer", &["engine", "spatial_s", "Mq_per_s"]);
+    for (name, t) in [("csr_facade", t_facade), ("csr_trait", t_trait), ("callback", t_callback)] {
+        tab.row(&[name.to_string(), f(t), f(typed.len() as f64 / t / 1e6)]);
+    }
+    tab.write_csv();
+    write_json_snapshot(
+        "BENCH_query_layer.json",
+        &[
+            ("workload", JsonValue::Str("filled".into())),
+            ("m", JsonValue::Int(m as u64)),
+            ("queries", JsonValue::Int(typed.len() as u64)),
+            ("matches", JsonValue::Int(total)),
+            ("threads", JsonValue::Int(cores as u64)),
+            ("csr_facade_s", JsonValue::Num(t_facade)),
+            ("csr_trait_s", JsonValue::Num(t_trait)),
+            ("callback_s", JsonValue::Num(t_callback)),
+            ("callback_speedup_vs_facade", JsonValue::Num(t_facade / t_callback)),
+        ],
+    );
 }

@@ -7,7 +7,7 @@
 
 use crate::bvh::nearest::{KnnHeap, Neighbor};
 use crate::exec::ExecSpace;
-use crate::geometry::predicates::Spatial;
+use crate::geometry::predicates::SpatialPredicate;
 use crate::geometry::{Aabb, Point};
 
 /// A brute-force "index": just the boxes.
@@ -31,8 +31,9 @@ impl BruteForce {
         self.boxes.is_empty()
     }
 
-    /// All objects satisfying the spatial predicate, ascending index.
-    pub fn spatial(&self, pred: &Spatial) -> Vec<u32> {
+    /// All objects satisfying the spatial predicate (any trait kind, the
+    /// legacy enum included), ascending index.
+    pub fn spatial<P: SpatialPredicate>(&self, pred: &P) -> Vec<u32> {
         self.boxes
             .iter()
             .enumerate()
@@ -55,7 +56,11 @@ impl BruteForce {
 
     /// Parallel batched spatial counts (used by the accelerator-comparison
     /// benches as the "dense" CPU reference).
-    pub fn batch_spatial_counts(&self, space: &ExecSpace, preds: &[Spatial]) -> Vec<u32> {
+    pub fn batch_spatial_counts<P: SpatialPredicate + Sync>(
+        &self,
+        space: &ExecSpace,
+        preds: &[P],
+    ) -> Vec<u32> {
         let mut counts = vec![0u32; preds.len()];
         let cp = crate::exec::scan::SendPtr(counts.as_mut_ptr());
         space.parallel_for(preds.len(), |q| {
@@ -70,7 +75,8 @@ impl BruteForce {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::geometry::Sphere;
+    use crate::geometry::predicates::{IntersectsRay, Spatial};
+    use crate::geometry::{Ray, Sphere};
 
     #[test]
     fn spatial_and_nearest_agree_with_hand_results() {
@@ -87,6 +93,18 @@ mod tests {
         assert_eq!(nn[0].index, 4);
         assert_eq!(nn[1].index, 5);
         assert_eq!(nn[2].index, 3);
+    }
+
+    #[test]
+    fn ray_predicates_work_against_the_oracle() {
+        let boxes: Vec<Aabb> = (0..10)
+            .map(|i| Aabb::from_point(Point::new(i as f32, 0.0, 0.0)))
+            .collect();
+        let bf = BruteForce::new(&boxes);
+        let along = IntersectsRay(Ray::new(Point::new(3.5, 0.0, 0.0), Point::new(1.0, 0.0, 0.0)));
+        assert_eq!(bf.spatial(&along), vec![4, 5, 6, 7, 8, 9]);
+        let off = IntersectsRay(Ray::new(Point::new(0.0, 1.0, 0.0), Point::new(1.0, 0.0, 0.0)));
+        assert!(bf.spatial(&off).is_empty());
     }
 
     #[test]

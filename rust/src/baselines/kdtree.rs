@@ -8,7 +8,7 @@
 //! the comparisons ... were done using one thread" (§3.2).
 
 use crate::bvh::nearest::{KnnHeap, Neighbor};
-use crate::geometry::predicates::Spatial;
+use crate::geometry::predicates::SpatialPredicate;
 use crate::geometry::{Aabb, Point};
 
 /// nanoflann's default bucket size.
@@ -167,8 +167,8 @@ impl KdTree {
         }
     }
 
-    /// All points satisfying the spatial predicate.
-    pub fn spatial(&self, pred: &Spatial) -> Vec<u32> {
+    /// All points satisfying the spatial predicate (any trait kind).
+    pub fn spatial<P: SpatialPredicate>(&self, pred: &P) -> Vec<u32> {
         let mut out = Vec::new();
         if self.points.is_empty() {
             return out;
@@ -178,7 +178,13 @@ impl KdTree {
     }
 
     /// Recursive range search with box pruning.
-    fn spatial_recursive(&self, node: u32, pred: &Spatial, bounds: &Aabb, out: &mut Vec<u32>) {
+    fn spatial_recursive<P: SpatialPredicate>(
+        &self,
+        node: u32,
+        pred: &P,
+        bounds: &Aabb,
+        out: &mut Vec<u32>,
+    ) {
         if !pred.test(bounds) {
             return;
         }
@@ -208,7 +214,8 @@ mod tests {
     use super::*;
     use crate::baselines::brute::BruteForce;
     use crate::data::rng::Rng;
-    use crate::geometry::Sphere;
+    use crate::geometry::predicates::{IntersectsRay, Spatial};
+    use crate::geometry::{Ray, Sphere};
 
     fn cloud(n: usize, seed: u64) -> Vec<Point> {
         let mut r = Rng::new(seed);
@@ -242,6 +249,28 @@ mod tests {
         let brute = BruteForce::new(&boxes);
         for q in cloud(40, 123) {
             let pred = Spatial::IntersectsSphere(Sphere::new(q, 1.5));
+            let mut a = tree.spatial(&pred);
+            a.sort();
+            assert_eq!(a, brute.spatial(&pred));
+        }
+    }
+
+    #[test]
+    fn ray_spatial_matches_brute_force() {
+        let pts = cloud(600, 8);
+        let boxes: Vec<Aabb> = pts.iter().map(|p| Aabb::from_point(*p)).collect();
+        let tree = KdTree::build(&pts);
+        let brute = BruteForce::new(&boxes);
+        let mut r = Rng::new(31);
+        for _ in 0..25 {
+            let origin =
+                Point::new(r.uniform(-6.0, 6.0), r.uniform(-6.0, 6.0), r.uniform(-6.0, 6.0));
+            let dir =
+                Point::new(r.uniform(-1.0, 1.0), r.uniform(-1.0, 1.0), r.uniform(-1.0, 1.0));
+            if dir.norm() < 1e-3 {
+                continue;
+            }
+            let pred = IntersectsRay(Ray::new(origin, dir));
             let mut a = tree.spatial(&pred);
             a.sort();
             assert_eq!(a, brute.spatial(&pred));

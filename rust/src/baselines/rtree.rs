@@ -9,7 +9,7 @@
 //! tree has to be built statically" (§3.2) — same here.
 
 use crate::bvh::nearest::{KnnHeap, Neighbor};
-use crate::geometry::predicates::Spatial;
+use crate::geometry::predicates::SpatialPredicate;
 use crate::geometry::{Aabb, Point};
 
 /// Boost's default maximum node fanout is 16.
@@ -83,8 +83,8 @@ impl RTree {
         self.boxes.is_empty()
     }
 
-    /// All objects satisfying the spatial predicate.
-    pub fn spatial(&self, pred: &Spatial) -> Vec<u32> {
+    /// All objects satisfying the spatial predicate (any trait kind).
+    pub fn spatial<P: SpatialPredicate>(&self, pred: &P) -> Vec<u32> {
         let mut out = Vec::new();
         if self.boxes.is_empty() {
             return out;
@@ -176,7 +176,8 @@ mod tests {
     use super::*;
     use crate::baselines::brute::BruteForce;
     use crate::data::rng::Rng;
-    use crate::geometry::Sphere;
+    use crate::geometry::predicates::{IntersectsBox, IntersectsRay, Spatial};
+    use crate::geometry::{Ray, Sphere};
 
     fn cloud(n: usize, seed: u64) -> Vec<Aabb> {
         let mut r = Rng::new(seed);
@@ -220,6 +221,30 @@ mod tests {
             let mut a = tree.spatial(&pred);
             a.sort();
             assert_eq!(a, brute.spatial(&pred));
+        }
+    }
+
+    #[test]
+    fn box_and_ray_predicates_match_brute_force() {
+        let boxes = cloud(800, 41);
+        let tree = RTree::build(&boxes);
+        let brute = BruteForce::new(&boxes);
+        let mut r = Rng::new(13);
+        for _ in 0..25 {
+            let c = Point::new(r.uniform(-5.0, 5.0), r.uniform(-5.0, 5.0), r.uniform(-5.0, 5.0));
+            let region = Aabb::new(c, c + Point::splat(1.5));
+            let pred = IntersectsBox(region);
+            let mut a = tree.spatial(&pred);
+            a.sort();
+            assert_eq!(a, brute.spatial(&pred));
+            let dir = Point::new(r.uniform(-1.0, 1.0), r.uniform(-1.0, 1.0), r.uniform(-1.0, 1.0));
+            if dir.norm() < 1e-3 {
+                continue;
+            }
+            let ray = IntersectsRay(Ray::new(c, dir));
+            let mut a = tree.spatial(&ray);
+            a.sort();
+            assert_eq!(a, brute.spatial(&ray));
         }
     }
 

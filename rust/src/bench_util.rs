@@ -107,6 +107,56 @@ pub fn rate(items: usize, seconds: f64) -> f64 {
     items as f64 / seconds
 }
 
+/// Writes a flat JSON snapshot (string or numeric fields) to `path` — the
+/// machine-readable perf-trajectory record (`BENCH_*.json`). The offline
+/// crate set has no serde, so the (trivial) encoding is done by hand.
+pub fn write_json_snapshot(path: &str, fields: &[(&str, JsonValue)]) {
+    let mut text = String::from("{\n");
+    for (i, (key, value)) in fields.iter().enumerate() {
+        text.push_str(&format!("  \"{key}\": {}", value.encode()));
+        if i + 1 < fields.len() {
+            text.push(',');
+        }
+        text.push('\n');
+    }
+    text.push_str("}\n");
+    if let Err(e) = std::fs::write(path, text) {
+        eprintln!("warning: could not write {path}: {e}");
+    } else {
+        println!("-> {path}");
+    }
+}
+
+/// A JSON scalar for [`write_json_snapshot`].
+pub enum JsonValue {
+    /// A number, encoded in scientific notation with 6 fractional digits
+    /// (sub-microsecond timings survive); non-finite values encode as
+    /// `null` so the file stays parseable.
+    Num(f64),
+    /// An integer (encoded exactly).
+    Int(u64),
+    /// A string (must not contain `"` or `\`; panics otherwise to keep
+    /// the encoder honest).
+    Str(String),
+}
+
+impl JsonValue {
+    fn encode(&self) -> String {
+        match self {
+            JsonValue::Num(v) if !v.is_finite() => "null".to_string(),
+            JsonValue::Num(v) => format!("{v:.6e}"),
+            JsonValue::Int(v) => v.to_string(),
+            JsonValue::Str(s) => {
+                assert!(
+                    !s.contains('"') && !s.contains('\\'),
+                    "JsonValue::Str cannot encode quotes/backslashes"
+                );
+                format!("\"{s}\"")
+            }
+        }
+    }
+}
+
 /// Formats a float with three significant decimals for CSV cells.
 pub fn f(v: f64) -> String {
     format!("{v:.4}")
@@ -141,5 +191,14 @@ mod tests {
         let mut t = Table::new("unit_test_table", &["a", "b"]);
         t.row(&["1".into(), "2".into()]);
         assert_eq!(t.rows.len(), 1);
+    }
+
+    #[test]
+    fn json_values_encode_plainly() {
+        assert_eq!(JsonValue::Int(42).encode(), "42");
+        assert_eq!(JsonValue::Num(1.5).encode(), "1.500000e0");
+        assert_eq!(JsonValue::Num(5.0e-7).encode(), "5.000000e-7");
+        assert_eq!(JsonValue::Num(f64::INFINITY).encode(), "null");
+        assert_eq!(JsonValue::Str("csr".into()).encode(), "\"csr\"");
     }
 }

@@ -18,13 +18,28 @@
 //! Query ordering (§2.2.3): when enabled, queries are pre-sorted by the
 //! Morton code of their origin so that nearby threads traverse similar
 //! subtrees. Output stays in the caller's original query order.
+//!
+//! Two stacked entry layers expose the engines:
+//!
+//! * the **generic layer** ([`run_spatial_queries`], [`for_each_match`])
+//!   is parameterized over [`SpatialPredicate`], monomorphizing the whole
+//!   pipeline per predicate kind; [`for_each_match`] streams matches to a
+//!   callback without materializing CSR storage at all (search is memory
+//!   bound, §2 — skipping the result writes removes the largest store
+//!   stream);
+//! * the **facade layer** ([`run_queries`], over [`QueryPredicate`])
+//!   keeps the closed enum wire format for mixed spatial/nearest batches
+//!   (the coordinator service); it dispatches each query *once* onto the
+//!   generic layer, so the per-node hot loop stays enum-free.
 
 use super::nearest::{nearest_stack, NearestScratch, Neighbor};
 use super::traversal::{count_spatial, for_each_spatial};
 use super::Bvh;
 use crate::exec::scan::{exclusive_scan, SendPtr};
 use crate::exec::{sort, ExecSpace};
-use crate::geometry::predicates::{Nearest, Spatial};
+use crate::geometry::predicates::{
+    IntersectsBox, IntersectsSphere, Nearest, Spatial, SpatialPredicate,
+};
 use crate::geometry::{morton, Aabb, Point, Sphere};
 
 /// One search query: spatial ("all within") or nearest ("k closest").
@@ -114,9 +129,15 @@ impl QueryOutput {
     }
 }
 
-/// Computes the execution order of queries: identity, or Morton-sorted by
-/// query origin scaled to the scene box (§2.2.3).
-pub fn query_order(space: &ExecSpace, bvh: &Bvh, queries: &[QueryPredicate], sort_queries: bool) -> Vec<u32> {
+/// Shared ordering core: identity, or Morton-sorted by a caller-supplied
+/// origin accessor scaled to the scene box (§2.2.3).
+fn order_by_origin<Q: Sync>(
+    space: &ExecSpace,
+    bvh: &Bvh,
+    queries: &[Q],
+    sort_queries: bool,
+    origin_of: impl Fn(&Q) -> Point + Sync,
+) -> Vec<u32> {
     let q = queries.len();
     let mut order: Vec<u32> = (0..q as u32).collect();
     if !sort_queries || q <= 1 {
@@ -127,7 +148,7 @@ pub fn query_order(space: &ExecSpace, bvh: &Bvh, queries: &[QueryPredicate], sor
     {
         let cp = SendPtr(codes.as_mut_ptr());
         space.parallel_for(q, |i| {
-            let p = morton::normalize_to_scene(&queries[i].origin(), &scene);
+            let p = morton::normalize_to_scene(&origin_of(&queries[i]), &scene);
             // SAFETY: one writer per index.
             unsafe { cp.write(i, morton::morton32_unit(&p)) };
         });
@@ -136,8 +157,214 @@ pub fn query_order(space: &ExecSpace, bvh: &Bvh, queries: &[QueryPredicate], sor
     order
 }
 
-/// Executes a batch of queries against the BVH. Spatial and nearest
-/// predicates may be mixed; results come back in the caller's order.
+/// Computes the execution order of mixed facade queries: identity, or
+/// Morton-sorted by query origin scaled to the scene box (§2.2.3).
+pub fn query_order(
+    space: &ExecSpace,
+    bvh: &Bvh,
+    queries: &[QueryPredicate],
+    sort_queries: bool,
+) -> Vec<u32> {
+    order_by_origin(space, bvh, queries, sort_queries, |q| q.origin())
+}
+
+/// [`query_order`] for a batch of trait predicates.
+pub fn query_order_spatial<P: SpatialPredicate + Sync>(
+    space: &ExecSpace,
+    bvh: &Bvh,
+    preds: &[P],
+    sort_queries: bool,
+) -> Vec<u32> {
+    order_by_origin(space, bvh, preds, sort_queries, |p| p.origin())
+}
+
+// ---------------------------------------------------------------------
+// Generic layer: monomorphized spatial engines over SpatialPredicate.
+// ---------------------------------------------------------------------
+
+/// Executes a batch of spatial trait predicates against the BVH,
+/// returning CSR results in the caller's order. The whole pipeline
+/// monomorphizes per predicate kind `P`.
+pub fn run_spatial_queries<P: SpatialPredicate + Sync>(
+    bvh: &Bvh,
+    space: &ExecSpace,
+    preds: &[P],
+    options: &QueryOptions,
+) -> QueryOutput {
+    let order = query_order_spatial(space, bvh, preds, options.sort_queries);
+    match options.buffer_size {
+        Some(buffer) if buffer > 0 => spatial_1p(bvh, space, preds, &order, buffer),
+        _ => spatial_2p(bvh, space, preds, &order),
+    }
+}
+
+/// Streams every (query, object) match to `callback` without building CSR
+/// storage — the zero-materialization entry point behind
+/// [`Bvh::query_with_callback`]. `callback(query_idx, object_idx)` runs
+/// concurrently from worker threads; query indices refer to the caller's
+/// order even when Morton ordering is enabled.
+pub fn for_each_match<P, F>(
+    bvh: &Bvh,
+    space: &ExecSpace,
+    preds: &[P],
+    sort_queries: bool,
+    callback: &F,
+) where
+    P: SpatialPredicate + Sync,
+    F: Fn(u32, u32) + Sync,
+{
+    let order = query_order_spatial(space, bvh, preds, sort_queries);
+    let order_ref = &order;
+    space.parallel_for_chunks(preds.len(), |b, e| {
+        let mut stack = Vec::with_capacity(64);
+        for pos in b..e {
+            let orig = order_ref[pos] as usize;
+            for_each_spatial(bvh, &preds[orig], &mut stack, |obj| {
+                callback(orig as u32, obj)
+            });
+        }
+    });
+}
+
+/// Generic two-pass (2P) count-and-fill execution (§2.2.1).
+fn spatial_2p<P: SpatialPredicate + Sync>(
+    bvh: &Bvh,
+    space: &ExecSpace,
+    preds: &[P],
+    order: &[u32],
+) -> QueryOutput {
+    let q = preds.len();
+    let mut counts = vec![0u32; q];
+
+    // Pass 1: count. Traverse in sorted order, write counts at original
+    // positions so the scan yields caller-order offsets.
+    {
+        let cp = SendPtr(counts.as_mut_ptr());
+        space.parallel_for_chunks(q, |b, e| {
+            let mut stack = Vec::with_capacity(64);
+            for pos in b..e {
+                let orig = order[pos] as usize;
+                let count = count_spatial(bvh, &preds[orig], &mut stack);
+                // SAFETY: one writer per original query index.
+                unsafe { cp.write(orig, count) };
+            }
+        });
+    }
+
+    let offsets = exclusive_scan(space, &counts);
+    let total = offsets[q] as usize;
+    let mut indices = vec![0u32; total];
+
+    // Pass 2: fill.
+    {
+        let ip = SendPtr(indices.as_mut_ptr());
+        let offsets_ref = &offsets;
+        space.parallel_for_chunks(q, |b, e| {
+            let mut stack = Vec::with_capacity(64);
+            for pos in b..e {
+                let orig = order[pos] as usize;
+                let mut cursor = offsets_ref[orig] as usize;
+                for_each_spatial(bvh, &preds[orig], &mut stack, |obj| {
+                    // SAFETY: [offsets[orig], offsets[orig+1]) is owned by
+                    // this query.
+                    unsafe { ip.write(cursor, obj) };
+                    cursor += 1;
+                });
+                debug_assert_eq!(cursor, offsets_ref[orig + 1] as usize);
+            }
+        });
+    }
+
+    QueryOutput { offsets, indices, distances: Vec::new(), overflow_queries: 0 }
+}
+
+/// Generic buffered single-pass (1P) execution with per-query fallback
+/// (§2.2.1).
+fn spatial_1p<P: SpatialPredicate + Sync>(
+    bvh: &Bvh,
+    space: &ExecSpace,
+    preds: &[P],
+    order: &[u32],
+    buffer: usize,
+) -> QueryOutput {
+    let q = preds.len();
+    let mut counts = vec![0u32; q];
+    // The preallocated result buffer: `buffer` slots per query. This is
+    // the allocation that becomes prohibitive for the hollow case at
+    // large n (§3.2) — reproduced faithfully.
+    let mut buf = vec![0u32; q * buffer];
+
+    // Pass 1: count and store into the fixed buffer.
+    {
+        let cp = SendPtr(counts.as_mut_ptr());
+        let bp = SendPtr(buf.as_mut_ptr());
+        space.parallel_for_chunks(q, |b, e| {
+            let mut stack = Vec::with_capacity(64);
+            for pos in b..e {
+                let orig = order[pos] as usize;
+                let base = orig * buffer;
+                let mut count = 0usize;
+                for_each_spatial(bvh, &preds[orig], &mut stack, |obj| {
+                    if count < buffer {
+                        // SAFETY: this query owns [base, base+buffer).
+                        unsafe { bp.write(base + count, obj) };
+                    }
+                    count += 1; // keep counting past the buffer
+                });
+                // SAFETY: one writer per original query index.
+                unsafe { cp.write(orig, count as u32) };
+            }
+        });
+    }
+
+    let offsets = exclusive_scan(space, &counts);
+    let total = offsets[q] as usize;
+    let mut indices = vec![0u32; total];
+    let overflow_queries = counts.iter().filter(|&&c| c as usize > buffer).count();
+
+    // Pass 2: compaction, plus re-traversal only for overflowed queries
+    // (the fallback of §2.2.1).
+    {
+        let ip = SendPtr(indices.as_mut_ptr());
+        let offsets_ref = &offsets;
+        let counts_ref = &counts;
+        let buf_ref = &buf;
+        space.parallel_for_chunks(q, |b, e| {
+            let mut stack = Vec::with_capacity(64);
+            for pos in b..e {
+                let orig = order[pos] as usize;
+                let base = offsets_ref[orig] as usize;
+                let count = counts_ref[orig] as usize;
+                if count <= buffer {
+                    // Fast path: copy the buffered results.
+                    let src = orig * buffer;
+                    for j in 0..count {
+                        // SAFETY: this query owns [base, base+count).
+                        unsafe { ip.write(base + j, buf_ref[src + j]) };
+                    }
+                } else {
+                    // Overflow: redo the traversal straight into the final
+                    // storage.
+                    let mut cursor = base;
+                    for_each_spatial(bvh, &preds[orig], &mut stack, |obj| {
+                        unsafe { ip.write(cursor, obj) };
+                        cursor += 1;
+                    });
+                }
+            }
+        });
+    }
+
+    QueryOutput { offsets, indices, distances: Vec::new(), overflow_queries }
+}
+
+// ---------------------------------------------------------------------
+// Facade layer: the closed QueryPredicate enum for mixed batches.
+// ---------------------------------------------------------------------
+
+/// Executes a batch of facade queries against the BVH. Spatial and
+/// nearest predicates may be mixed; results come back in the caller's
+/// order.
 pub fn run_queries(
     bvh: &Bvh,
     space: &ExecSpace,
@@ -156,7 +383,34 @@ fn batch_has_nearest(queries: &[QueryPredicate]) -> bool {
     queries.iter().any(|p| matches!(p, QueryPredicate::Nearest(_)))
 }
 
-/// Two-pass (2P) count-and-fill execution (§2.2.1).
+/// Counts one facade predicate: a single enum dispatch selecting the
+/// monomorphized counting traversal for that kind.
+#[inline]
+fn count_enum(bvh: &Bvh, s: &Spatial, stack: &mut Vec<super::NodeRef>) -> u32 {
+    match s {
+        Spatial::IntersectsSphere(sp) => count_spatial(bvh, &IntersectsSphere(*sp), stack),
+        Spatial::IntersectsBox(b) => count_spatial(bvh, &IntersectsBox(*b), stack),
+    }
+}
+
+/// Traverses one facade predicate: a single enum dispatch selecting the
+/// monomorphized visiting traversal for that kind.
+#[inline]
+fn for_each_enum<F: FnMut(u32)>(
+    bvh: &Bvh,
+    s: &Spatial,
+    stack: &mut Vec<super::NodeRef>,
+    visit: F,
+) {
+    match s {
+        Spatial::IntersectsSphere(sp) => {
+            for_each_spatial(bvh, &IntersectsSphere(*sp), stack, visit)
+        }
+        Spatial::IntersectsBox(b) => for_each_spatial(bvh, &IntersectsBox(*b), stack, visit),
+    }
+}
+
+/// Two-pass (2P) count-and-fill execution for mixed batches (§2.2.1).
 fn run_2p(bvh: &Bvh, space: &ExecSpace, queries: &[QueryPredicate], order: &[u32]) -> QueryOutput {
     let q = queries.len();
     let mut counts = vec![0u32; q];
@@ -170,7 +424,7 @@ fn run_2p(bvh: &Bvh, space: &ExecSpace, queries: &[QueryPredicate], order: &[u32
             for pos in b..e {
                 let orig = order[pos] as usize;
                 let count = match &queries[orig] {
-                    QueryPredicate::Spatial(s) => count_spatial(bvh, s, &mut stack),
+                    QueryPredicate::Spatial(s) => count_enum(bvh, s, &mut stack),
                     // §2.2.2: for nearest queries the result count is known
                     // in advance (min(k, n)) — no counting traversal needed.
                     QueryPredicate::Nearest(nst) => nst.k.min(bvh.len()) as u32,
@@ -202,7 +456,7 @@ fn run_2p(bvh: &Bvh, space: &ExecSpace, queries: &[QueryPredicate], order: &[u32
                 match &queries[orig] {
                     QueryPredicate::Spatial(s) => {
                         let mut cursor = base;
-                        for_each_spatial(bvh, s, &mut stack, |obj| {
+                        for_each_enum(bvh, s, &mut stack, |obj| {
                             // SAFETY: [base, offsets[orig+1]) is owned by
                             // this query.
                             unsafe { ip.write(cursor, obj) };
@@ -211,7 +465,7 @@ fn run_2p(bvh: &Bvh, space: &ExecSpace, queries: &[QueryPredicate], order: &[u32
                         debug_assert_eq!(cursor, offsets_ref[orig + 1] as usize);
                     }
                     QueryPredicate::Nearest(nst) => {
-                        nearest_stack(bvh, &nst.point, nst.k, &mut scratch, &mut knn);
+                        nearest_stack(bvh, nst, &mut scratch, &mut knn);
                         for (j, nb) in knn.iter().enumerate() {
                             unsafe {
                                 ip.write(base + j, nb.index);
@@ -229,7 +483,8 @@ fn run_2p(bvh: &Bvh, space: &ExecSpace, queries: &[QueryPredicate], order: &[u32
     QueryOutput { offsets, indices, distances, overflow_queries: 0 }
 }
 
-/// Buffered single-pass (1P) execution with per-query fallback (§2.2.1).
+/// Buffered single-pass (1P) execution with per-query fallback for mixed
+/// batches (§2.2.1).
 fn run_1p(
     bvh: &Bvh,
     space: &ExecSpace,
@@ -261,7 +516,7 @@ fn run_1p(
                 let mut count = 0usize;
                 match &queries[orig] {
                     QueryPredicate::Spatial(s) => {
-                        for_each_spatial(bvh, s, &mut stack, |obj| {
+                        for_each_enum(bvh, s, &mut stack, |obj| {
                             if count < buffer {
                                 // SAFETY: this query owns [base, base+buffer).
                                 unsafe { bp.write(base + count, obj) };
@@ -270,7 +525,7 @@ fn run_1p(
                         });
                     }
                     QueryPredicate::Nearest(nst) => {
-                        nearest_stack(bvh, &nst.point, nst.k, &mut scratch, &mut knn);
+                        nearest_stack(bvh, nst, &mut scratch, &mut knn);
                         for nb in &knn {
                             if count < buffer {
                                 unsafe {
@@ -328,7 +583,7 @@ fn run_1p(
                     match &queries[orig] {
                         QueryPredicate::Spatial(s) => {
                             let mut cursor = base;
-                            for_each_spatial(bvh, s, &mut stack, |obj| {
+                            for_each_enum(bvh, s, &mut stack, |obj| {
                                 unsafe { ip.write(cursor, obj) };
                                 cursor += 1;
                             });
@@ -336,7 +591,7 @@ fn run_1p(
                         QueryPredicate::Nearest(nst) => {
                             let mut scratch = NearestScratch::new(nst.k);
                             let mut knn = Vec::new();
-                            nearest_stack(bvh, &nst.point, nst.k, &mut scratch, &mut knn);
+                            nearest_stack(bvh, nst, &mut scratch, &mut knn);
                             for (j, nb) in knn.iter().enumerate() {
                                 unsafe {
                                     ip.write(base + j, nb.index);
@@ -358,7 +613,9 @@ fn run_1p(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::geometry::Point;
+    use crate::geometry::predicates::{attach, IntersectsRay, WithData};
+    use crate::geometry::{Point, Ray};
+    use std::sync::Mutex;
 
     fn grid_points(n: usize) -> Vec<Point> {
         // n^3 grid points with unit spacing.
@@ -435,6 +692,92 @@ mod tests {
     }
 
     #[test]
+    fn generic_engine_matches_facade() {
+        let space = ExecSpace::with_threads(4);
+        let pts = grid_points(9);
+        let bvh = build(&pts, &space);
+        let typed: Vec<IntersectsSphere> = pts
+            .iter()
+            .step_by(5)
+            .map(|p| IntersectsSphere(Sphere::new(*p, 1.8)))
+            .collect();
+        let facade: Vec<QueryPredicate> = pts
+            .iter()
+            .step_by(5)
+            .map(|p| QueryPredicate::intersects_sphere(*p, 1.8))
+            .collect();
+        for opts in [
+            QueryOptions { buffer_size: None, sort_queries: true },
+            QueryOptions { buffer_size: Some(4), sort_queries: false },
+        ] {
+            let a = bvh.query_spatial(&space, &typed, &opts);
+            let b = bvh.query(&space, &facade, &opts);
+            assert_eq!(a.offsets, b.offsets);
+            for qi in 0..typed.len() {
+                assert_eq!(
+                    sorted(a.results_for(qi).to_vec()),
+                    sorted(b.results_for(qi).to_vec()),
+                    "query {qi}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn callback_engine_matches_csr() {
+        let space = ExecSpace::with_threads(4);
+        let pts = grid_points(9);
+        let bvh = build(&pts, &space);
+        let preds: Vec<IntersectsSphere> = pts
+            .iter()
+            .step_by(4)
+            .map(|p| IntersectsSphere(Sphere::new(*p, 1.6)))
+            .collect();
+        let csr = bvh.query_spatial(&space, &preds, &QueryOptions::default());
+        let matches: Mutex<Vec<(u32, u32)>> = Mutex::new(Vec::new());
+        bvh.query_with_callback(&space, &preds, |q, obj| {
+            matches.lock().unwrap().push((q, obj));
+        });
+        let mut got = matches.into_inner().unwrap();
+        got.sort();
+        let mut want = Vec::new();
+        for qi in 0..preds.len() {
+            for &obj in csr.results_for(qi) {
+                want.push((qi as u32, obj));
+            }
+        }
+        want.sort();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn ray_batches_and_attachments_run_through_the_generic_engine() {
+        let space = ExecSpace::with_threads(2);
+        let pts = grid_points(6);
+        let bvh = build(&pts, &space);
+        // One axis-aligned ray per grid row, tagged with its row id.
+        let preds: Vec<WithData<IntersectsRay, usize>> = (0..6)
+            .flat_map(|y| {
+                (0..6).map(move |z| {
+                    attach(
+                        IntersectsRay(Ray::new(
+                            Point::new(-1.0, y as f32, z as f32),
+                            Point::new(1.0, 0.0, 0.0),
+                        )),
+                        (y * 6 + z) as usize,
+                    )
+                })
+            })
+            .collect();
+        let out = bvh.query_spatial(&space, &preds, &QueryOptions::default());
+        // Every row ray hits exactly its 6 points.
+        for qi in 0..preds.len() {
+            assert_eq!(out.results_for(qi).len(), 6, "ray {qi}");
+            assert_eq!(preds[qi].data, qi);
+        }
+    }
+
+    #[test]
     fn nearest_batch_returns_k_sorted_neighbors() {
         let space = ExecSpace::with_threads(2);
         let pts = grid_points(6);
@@ -473,5 +816,9 @@ mod tests {
         let out = bvh.query(&space, &[], &QueryOptions::default());
         assert_eq!(out.offsets, vec![0]);
         assert!(out.indices.is_empty());
+        let none: [IntersectsSphere; 0] = [];
+        let out = bvh.query_spatial(&space, &none, &QueryOptions::default());
+        assert_eq!(out.offsets, vec![0]);
+        bvh.query_with_callback(&space, &none, |_, _| panic!("no matches expected"));
     }
 }

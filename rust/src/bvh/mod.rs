@@ -9,7 +9,11 @@
 //!   style) plus a priority-queue reference variant, §2.2.2.
 //! * [`batched`] — the batched query engines: two-pass count-and-fill
 //!   (2P), buffered single-pass (1P) with fallback and compaction, CSR
-//!   output, and Morton query ordering (§2.2.1–2.2.3).
+//!   output, and Morton query ordering (§2.2.1–2.2.3). Engines are
+//!   generic over [`crate::geometry::predicates::SpatialPredicate`]
+//!   ([`Bvh::query_spatial`]), with a callback entry point
+//!   ([`Bvh::query_with_callback`]) that skips CSR materialization and a
+//!   [`QueryPredicate`] enum facade ([`Bvh::query`]) for mixed batches.
 //! * [`stats`] — hierarchy quality metrics (SAH) and the node-access
 //!   matrix used to reproduce Figure 2.
 
@@ -23,6 +27,7 @@ pub mod traversal;
 pub use batched::{QueryOptions, QueryOutput, QueryPredicate};
 
 use crate::exec::ExecSpace;
+use crate::geometry::predicates::SpatialPredicate;
 use crate::geometry::Aabb;
 
 /// A tagged reference to a BVH node: leaves have the high bit set.
@@ -138,9 +143,11 @@ impl Bvh {
         }
     }
 
-    /// Executes a homogeneous batch of queries, returning CSR results.
-    /// This is the library's primary entry point, mirroring
-    /// `ArborX::BVH::query(queries, indices, offsets)`.
+    /// Executes a batch of facade queries (mixed spatial/nearest),
+    /// returning CSR results. This is the enum-based entry point,
+    /// mirroring `ArborX::BVH::query(queries, indices, offsets)`; it is
+    /// the wire format of the coordinator service and dispatches each
+    /// query once onto the monomorphized trait engines.
     pub fn query(
         &self,
         space: &ExecSpace,
@@ -148,6 +155,35 @@ impl Bvh {
         options: &QueryOptions,
     ) -> QueryOutput {
         batched::run_queries(self, space, queries, options)
+    }
+
+    /// Executes a batch of spatial trait predicates, returning CSR
+    /// results. The whole query pipeline (ordering, 1P/2P engines,
+    /// node-test loop) monomorphizes for the concrete predicate kind `P`
+    /// — the generic seam of §2.2–2.3.
+    pub fn query_spatial<P: SpatialPredicate + Sync>(
+        &self,
+        space: &ExecSpace,
+        preds: &[P],
+        options: &QueryOptions,
+    ) -> QueryOutput {
+        batched::run_spatial_queries(self, space, preds, options)
+    }
+
+    /// Streams every match of a spatial batch to
+    /// `callback(query_idx, object_idx)` without materializing CSR
+    /// storage — no counting pass, no offsets, no result array. Search is
+    /// memory bound (§2), so cutting the result-write traffic is the
+    /// fastest path when the caller can consume matches in place
+    /// (collision response, reductions, filters). The callback runs
+    /// concurrently from worker threads; query indices always refer to
+    /// the caller's order (Morton execution ordering stays internal).
+    pub fn query_with_callback<P, F>(&self, space: &ExecSpace, preds: &[P], callback: F)
+    where
+        P: SpatialPredicate + Sync,
+        F: Fn(u32, u32) + Sync,
+    {
+        batched::for_each_match(self, space, preds, true, &callback)
     }
 
     /// Structural sanity check used by tests and debug assertions: every

@@ -12,8 +12,13 @@
 //!
 //! Both maintain the current k best candidates in a bounded max-heap so
 //! the pruning bound is the distance of the *worst* candidate.
+//!
+//! Traversals are generic over [`NearestQuery`] (the k-NN twin of the
+//! spatial-predicate trait), so attachment wrappers
+//! ([`crate::geometry::predicates::WithData`]) ride along for free.
 
 use super::{is_leaf, ref_index, Bvh, NodeRef};
+use crate::geometry::predicates::NearestQuery;
 use crate::geometry::Point;
 
 /// A candidate neighbor: squared distance and original object index.
@@ -148,20 +153,26 @@ impl NearestScratch {
 /// into `out` sorted by ascending distance; fewer than `k` results are
 /// returned iff the tree holds fewer than `k` objects.
 #[inline]
-pub fn nearest_stack(bvh: &Bvh, point: &Point, k: usize, scratch: &mut NearestScratch, out: &mut Vec<Neighbor>) {
-    nearest_stack_monitored(bvh, point, k, scratch, out, |_| {});
+pub fn nearest_stack<Q: NearestQuery>(
+    bvh: &Bvh,
+    query: &Q,
+    scratch: &mut NearestScratch,
+    out: &mut Vec<Neighbor>,
+) {
+    nearest_stack_monitored(bvh, query, scratch, out, |_| {});
 }
 
 /// [`nearest_stack`] with a `monitor` callback on every internal node
 /// whose box distance is evaluated (for the Figure-2 matrix).
-pub fn nearest_stack_monitored<M: FnMut(u32)>(
+pub fn nearest_stack_monitored<Q: NearestQuery, M: FnMut(u32)>(
     bvh: &Bvh,
-    point: &Point,
-    k: usize,
+    query: &Q,
     scratch: &mut NearestScratch,
     out: &mut Vec<Neighbor>,
     mut monitor: M,
 ) {
+    let point = &query.point();
+    let k = query.k();
     out.clear();
     if bvh.n_leaves == 0 || k == 0 {
         return;
@@ -214,9 +225,12 @@ pub fn nearest_stack_monitored<M: FnMut(u32)>(
 
 /// Best-first k-NN traversal with a true priority queue (reference
 /// implementation; §2.2.2 calls this the "typical implementation").
-pub fn nearest_pq(bvh: &Bvh, point: &Point, k: usize, out: &mut Vec<Neighbor>) {
+pub fn nearest_pq<Q: NearestQuery>(bvh: &Bvh, query: &Q, out: &mut Vec<Neighbor>) {
     use std::cmp::Reverse;
     use std::collections::BinaryHeap;
+
+    let point = &query.point();
+    let k = query.k();
 
     /// f32 ordered wrapper (distances are never NaN).
     #[derive(PartialEq)]
@@ -269,6 +283,7 @@ pub fn nearest_pq(bvh: &Bvh, point: &Point, k: usize, out: &mut Vec<Neighbor>) {
 mod tests {
     use super::*;
     use crate::exec::ExecSpace;
+    use crate::geometry::predicates::{attach, Nearest};
     use crate::geometry::Aabb;
 
     fn cloud(n: usize, seed: u64) -> Vec<Point> {
@@ -321,8 +336,8 @@ mod tests {
         for q in cloud(50, 7) {
             for k in [1usize, 5, 10] {
                 let expect = brute_knn(&points, &q, k);
-                nearest_stack(&bvh, &q, k, &mut scratch, &mut out_stack);
-                nearest_pq(&bvh, &q, k, &mut out_pq);
+                nearest_stack(&bvh, &Nearest::new(q, k), &mut scratch, &mut out_stack);
+                nearest_pq(&bvh, &Nearest::new(q, k), &mut out_pq);
                 let ds: Vec<f32> = out_stack.iter().map(|n| n.distance_squared).collect();
                 let de: Vec<f32> = expect.iter().map(|n| n.distance_squared).collect();
                 assert_eq!(ds, de, "stack k={k}");
@@ -333,13 +348,26 @@ mod tests {
     }
 
     #[test]
+    fn attached_nearest_queries_delegate() {
+        let points = cloud(200, 12);
+        let boxes: Vec<Aabb> = points.iter().map(|p| Aabb::from_point(*p)).collect();
+        let bvh = Bvh::build(&ExecSpace::serial(), &boxes);
+        let mut scratch = NearestScratch::new(5);
+        let (mut plain, mut tagged) = (Vec::new(), Vec::new());
+        let q = Point::splat(0.5);
+        nearest_stack(&bvh, &Nearest::new(q, 5), &mut scratch, &mut plain);
+        nearest_stack(&bvh, &attach(Nearest::new(q, 5), 7u8), &mut scratch, &mut tagged);
+        assert_eq!(plain, tagged);
+    }
+
+    #[test]
     fn k_larger_than_tree_returns_all() {
         let points = cloud(7, 3);
         let boxes: Vec<Aabb> = points.iter().map(|p| Aabb::from_point(*p)).collect();
         let bvh = Bvh::build(&ExecSpace::serial(), &boxes);
         let mut scratch = NearestScratch::new(20);
         let mut out = Vec::new();
-        nearest_stack(&bvh, &Point::origin(), 20, &mut scratch, &mut out);
+        nearest_stack(&bvh, &Nearest::new(Point::origin(), 20), &mut scratch, &mut out);
         assert_eq!(out.len(), 7);
         assert!(out.windows(2).all(|w| w[0].distance_squared <= w[1].distance_squared));
     }
@@ -349,11 +377,11 @@ mod tests {
         let bvh = Bvh::build(&ExecSpace::serial(), &[]);
         let mut scratch = NearestScratch::new(4);
         let mut out = vec![Neighbor { distance_squared: 0.0, index: 0 }];
-        nearest_stack(&bvh, &Point::origin(), 4, &mut scratch, &mut out);
+        nearest_stack(&bvh, &Nearest::new(Point::origin(), 4), &mut scratch, &mut out);
         assert!(out.is_empty());
         let boxes = [Aabb::from_point(Point::splat(1.0))];
         let bvh = Bvh::build(&ExecSpace::serial(), &boxes);
-        nearest_stack(&bvh, &Point::origin(), 0, &mut scratch, &mut out);
+        nearest_stack(&bvh, &Nearest::new(Point::origin(), 0), &mut scratch, &mut out);
         assert!(out.is_empty());
     }
 }

@@ -11,11 +11,12 @@
 //!   uses it to visualize how Morton query ordering makes nearby threads
 //!   "share many nodes of the tree in their traversal" (§2.2.3).
 
-use super::batched::{query_order, QueryPredicate};
+use super::batched::{query_order, query_order_spatial, QueryPredicate};
 use super::nearest::{nearest_stack_monitored, NearestScratch};
 use super::traversal::for_each_spatial_monitored;
 use super::{is_leaf, ref_index, Bvh};
 use crate::exec::ExecSpace;
+use crate::geometry::predicates::SpatialPredicate;
 
 /// SAH-style cost of the hierarchy: `sum over internal nodes of
 /// SA(node)/SA(root)` (lower is better). A standard proxy for expected
@@ -135,8 +136,8 @@ fn jaccard(a: &[u32], b: &[u32]) -> f64 {
     inter as f64 / union as f64
 }
 
-/// Runs the batch serially in the given execution order (sorted or not)
-/// and records the node-access matrix — the Figure-2 experiment.
+/// Runs the facade batch serially in the given execution order (sorted or
+/// not) and records the node-access matrix — the Figure-2 experiment.
 pub fn access_matrix(bvh: &Bvh, queries: &[QueryPredicate], sort_queries: bool) -> AccessMatrix {
     let space = ExecSpace::serial();
     let order = query_order(&space, bvh, queries, sort_queries);
@@ -151,11 +152,32 @@ pub fn access_matrix(bvh: &Bvh, queries: &[QueryPredicate], sort_queries: bool) 
                 for_each_spatial_monitored(bvh, s, &mut stack, |_| {}, |node| row.push(node));
             }
             QueryPredicate::Nearest(n) => {
-                nearest_stack_monitored(bvh, &n.point, n.k, &mut scratch, &mut knn, |node| {
-                    row.push(node)
-                });
+                nearest_stack_monitored(bvh, n, &mut scratch, &mut knn, |node| row.push(node));
             }
         }
+        row.sort();
+        row.dedup();
+        rows.push(row);
+    }
+    AccessMatrix { rows, n_nodes: bvh.len().saturating_sub(1) }
+}
+
+/// [`access_matrix`] for a batch of spatial trait predicates (any
+/// user-defined kind, not just the facade enum).
+pub fn access_matrix_spatial<P: SpatialPredicate + Sync>(
+    bvh: &Bvh,
+    preds: &[P],
+    sort_queries: bool,
+) -> AccessMatrix {
+    let space = ExecSpace::serial();
+    let order = query_order_spatial(&space, bvh, preds, sort_queries);
+    let mut rows = Vec::with_capacity(preds.len());
+    let mut stack = Vec::with_capacity(64);
+    for &qi in &order {
+        let mut row: Vec<u32> = Vec::new();
+        for_each_spatial_monitored(bvh, &preds[qi as usize], &mut stack, |_| {}, |node| {
+            row.push(node)
+        });
         row.sort();
         row.dedup();
         rows.push(row);
@@ -223,6 +245,30 @@ mod tests {
             sorted.adjacent_similarity(),
             unsorted.adjacent_similarity()
         );
+    }
+
+    #[test]
+    fn generic_access_matrix_matches_facade() {
+        use crate::geometry::predicates::IntersectsSphere;
+        use crate::geometry::Sphere;
+        let points = random_cloud(300, 4);
+        let bvh = build(&points);
+        let centers = random_cloud(64, 8);
+        let typed: Vec<IntersectsSphere> = centers
+            .iter()
+            .map(|p| IntersectsSphere(Sphere::new(*p, 0.2)))
+            .collect();
+        let facade: Vec<QueryPredicate> = centers
+            .iter()
+            .map(|p| QueryPredicate::Spatial(crate::geometry::predicates::Spatial::IntersectsSphere(
+                Sphere::new(*p, 0.2),
+            )))
+            .collect();
+        for sorted in [false, true] {
+            let a = access_matrix_spatial(&bvh, &typed, sorted);
+            let b = access_matrix(&bvh, &facade, sorted);
+            assert_eq!(a.rows, b.rows, "sorted={sorted}");
+        }
     }
 
     #[test]

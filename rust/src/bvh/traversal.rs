@@ -5,23 +5,34 @@
 //! stack to keep track of nodes to visit." The stack buffer is owned by
 //! the caller so batched engines can reuse one allocation per thread
 //! across many queries (no allocation in the hot loop).
+//!
+//! Traversal is generic over [`SpatialPredicate`], so every predicate
+//! kind monomorphizes into its own node-test loop — the per-node test
+//! inlines to a concrete sphere/box/ray check with no enum dispatch
+//! (search is memory bound, §2; the test must cost as little as the
+//! cache-line fetch it gates).
 
 use super::{is_leaf, ref_index, Bvh, NodeRef};
-use crate::geometry::predicates::Spatial;
+use crate::geometry::predicates::SpatialPredicate;
 
 /// Visits every object whose leaf box satisfies `pred`, invoking
 /// `visit(original_object_index)`. `stack` is cleared and reused.
 #[inline]
-pub fn for_each_spatial<F: FnMut(u32)>(bvh: &Bvh, pred: &Spatial, stack: &mut Vec<NodeRef>, visit: F) {
+pub fn for_each_spatial<P: SpatialPredicate, F: FnMut(u32)>(
+    bvh: &Bvh,
+    pred: &P,
+    stack: &mut Vec<NodeRef>,
+    visit: F,
+) {
     for_each_spatial_monitored(bvh, pred, stack, visit, |_| {});
 }
 
 /// [`for_each_spatial`] with an extra `monitor` callback invoked with each
 /// *internal* node whose box is tested; used by [`super::stats`] to build
 /// the Figure-2 node-access matrix.
-pub fn for_each_spatial_monitored<F: FnMut(u32), M: FnMut(u32)>(
+pub fn for_each_spatial_monitored<P: SpatialPredicate, F: FnMut(u32), M: FnMut(u32)>(
     bvh: &Bvh,
-    pred: &Spatial,
+    pred: &P,
     stack: &mut Vec<NodeRef>,
     mut visit: F,
     mut monitor: M,
@@ -64,7 +75,7 @@ pub fn for_each_spatial_monitored<F: FnMut(u32), M: FnMut(u32)>(
 /// Counts the number of satisfying objects without storing them — the
 /// first pass of the 2P strategy.
 #[inline]
-pub fn count_spatial(bvh: &Bvh, pred: &Spatial, stack: &mut Vec<NodeRef>) -> u32 {
+pub fn count_spatial<P: SpatialPredicate>(bvh: &Bvh, pred: &P, stack: &mut Vec<NodeRef>) -> u32 {
     let mut count = 0u32;
     for_each_spatial(bvh, pred, stack, |_| count += 1);
     count
@@ -74,7 +85,8 @@ pub fn count_spatial(bvh: &Bvh, pred: &Spatial, stack: &mut Vec<NodeRef>) -> u32
 mod tests {
     use super::*;
     use crate::exec::ExecSpace;
-    use crate::geometry::{Aabb, Point, Sphere};
+    use crate::geometry::predicates::{attach, IntersectsRay, IntersectsSphere, Spatial};
+    use crate::geometry::{Aabb, Point, Ray, Sphere};
 
     fn line_boxes(n: usize) -> Vec<Aabb> {
         (0..n)
@@ -94,6 +106,9 @@ mod tests {
         found.sort();
         assert_eq!(found, vec![8, 9, 10, 11, 12]);
         assert_eq!(count_spatial(&bvh, &pred, &mut stack), 5);
+        // The monomorphized trait kind agrees with the enum facade.
+        let typed = IntersectsSphere(Sphere::new(Point::new(10.0, 0.0, 0.0), 2.5));
+        assert_eq!(count_spatial(&bvh, &typed, &mut stack), 5);
     }
 
     #[test]
@@ -111,6 +126,44 @@ mod tests {
             .filter(|&i| region.intersects(&boxes[i as usize]))
             .collect();
         assert_eq!(found, expect);
+    }
+
+    #[test]
+    fn ray_query_walks_the_line() {
+        let space = ExecSpace::serial();
+        let boxes = line_boxes(64);
+        let bvh = Bvh::build(&space, &boxes);
+        let mut stack = Vec::new();
+        // A ray along the line hits every point from its origin onward.
+        let ray = IntersectsRay(Ray::new(Point::new(10.5, 0.0, 0.0), Point::new(1.0, 0.0, 0.0)));
+        let mut found = Vec::new();
+        for_each_spatial(&bvh, &ray, &mut stack, |i| found.push(i));
+        found.sort();
+        assert_eq!(found, (11..64).collect::<Vec<u32>>());
+        // A bounded segment stops early.
+        let seg = IntersectsRay(Ray::segment(
+            Point::new(10.5, 0.0, 0.0),
+            Point::new(1.0, 0.0, 0.0),
+            4.0,
+        ));
+        assert_eq!(count_spatial(&bvh, &seg, &mut stack), 4); // 11, 12, 13, 14
+        // Off-line rays miss everything.
+        let miss = IntersectsRay(Ray::new(Point::new(0.0, 5.0, 0.0), Point::new(1.0, 0.0, 0.0)));
+        assert_eq!(count_spatial(&bvh, &miss, &mut stack), 0);
+    }
+
+    #[test]
+    fn attached_data_is_transparent_to_traversal() {
+        let space = ExecSpace::serial();
+        let bvh = Bvh::build(&space, &line_boxes(32));
+        let mut stack = Vec::new();
+        let plain = IntersectsSphere(Sphere::new(Point::new(4.0, 0.0, 0.0), 1.5));
+        let tagged = attach(plain, 99usize);
+        assert_eq!(
+            count_spatial(&bvh, &plain, &mut stack),
+            count_spatial(&bvh, &tagged, &mut stack)
+        );
+        assert_eq!(tagged.data, 99);
     }
 
     #[test]

@@ -18,7 +18,7 @@ use crate::bvh::nearest::{KnnHeap, Neighbor, NearestScratch};
 use crate::bvh::traversal::for_each_spatial;
 use crate::bvh::{nearest, Bvh};
 use crate::exec::ExecSpace;
-use crate::geometry::predicates::Spatial;
+use crate::geometry::predicates::{Nearest, SpatialPredicate};
 use crate::geometry::{Aabb, Point};
 
 /// One rank's shard: a local tree plus the map back to global indices.
@@ -94,8 +94,9 @@ impl DistributedTree {
     }
 
     /// Phase-1 forward: the ranks whose scene box satisfies the spatial
-    /// predicate.
-    pub fn candidate_ranks(&self, pred: &Spatial) -> Vec<u32> {
+    /// predicate (any trait kind — the forwarding tree reuses the same
+    /// monomorphized traversal as the local trees).
+    pub fn candidate_ranks<P: SpatialPredicate>(&self, pred: &P) -> Vec<u32> {
         let mut out = Vec::new();
         let mut stack = Vec::new();
         for_each_spatial(&self.top, pred, &mut stack, |r| out.push(r));
@@ -105,7 +106,7 @@ impl DistributedTree {
 
     /// Distributed spatial query: global indices of all matches
     /// (ascending). Communication cost stats are returned alongside.
-    pub fn spatial(&self, pred: &Spatial) -> (Vec<u32>, DistStats) {
+    pub fn spatial<P: SpatialPredicate>(&self, pred: &P) -> (Vec<u32>, DistStats) {
         let ranks = self.candidate_ranks(pred);
         let mut out = Vec::new();
         let mut stack = Vec::new();
@@ -148,7 +149,7 @@ impl DistributedTree {
             }
             contacted += 1;
             let shard = &self.ranks[ri];
-            nearest::nearest_stack(&shard.bvh, point, k, &mut scratch, &mut local);
+            nearest::nearest_stack(&shard.bvh, &Nearest::new(*point, k), &mut scratch, &mut local);
             for nb in &local {
                 heap.offer(nb.distance_squared, shard.global[nb.index as usize]);
             }
@@ -173,7 +174,8 @@ mod tests {
     use super::*;
     use crate::baselines::brute::BruteForce;
     use crate::data::rng::Rng;
-    use crate::geometry::Sphere;
+    use crate::geometry::predicates::{IntersectsRay, Spatial};
+    use crate::geometry::{Ray, Sphere};
 
     fn cloud(n: usize, seed: u64) -> Vec<Aabb> {
         let mut r = Rng::new(seed);
@@ -258,6 +260,36 @@ mod tests {
             cm += morton.spatial(&pred).1.ranks_contacted;
         }
         assert!(cm < cb, "morton {cm} should contact fewer ranks than block {cb}");
+    }
+
+    #[test]
+    fn distributed_ray_queries_match_brute_force() {
+        // User-defined trait predicates flow through the two-phase
+        // forward/merge path unchanged.
+        let space = ExecSpace::serial();
+        let boxes = cloud(2000, 19);
+        let brute = BruteForce::new(&boxes);
+        let dt = DistributedTree::build(&space, &boxes, 6, Partition::MortonBlock);
+        let mut rng = Rng::new(23);
+        for _ in 0..20 {
+            let origin = Point::new(
+                rng.uniform(-9.0, 9.0),
+                rng.uniform(-9.0, 9.0),
+                rng.uniform(-9.0, 9.0),
+            );
+            let dir = Point::new(
+                rng.uniform(-1.0, 1.0),
+                rng.uniform(-1.0, 1.0),
+                rng.uniform(-1.0, 1.0),
+            );
+            if dir.norm() < 1e-3 {
+                continue;
+            }
+            let pred = IntersectsRay(Ray::new(origin, dir));
+            let (got, stats) = dt.spatial(&pred);
+            assert_eq!(got, brute.spatial(&pred));
+            assert!(stats.ranks_contacted <= 6);
+        }
     }
 
     #[test]

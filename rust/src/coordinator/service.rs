@@ -6,6 +6,13 @@
 //! (reaping the query-ordering and traversal-locality wins of §2.2), and
 //! delivers per-query results back through channels. This is the
 //! vLLM-router-shaped packaging of the paper's batched execution model.
+//!
+//! The wire format is the closed [`QueryPredicate`] enum — deliberately:
+//! a serializable protocol cannot carry arbitrary monomorphized types.
+//! Execution still reaps the trait layer's monomorphization because the
+//! facade dispatches each query once onto the generic engines
+//! (`bvh::batched`); extending the *protocol* with user-defined predicate
+//! kinds is a ROADMAP follow-on.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};

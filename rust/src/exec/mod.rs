@@ -103,6 +103,11 @@ impl ExecSpace {
     /// Parallel reduction: `map_chunk` folds a contiguous range into a
     /// partial value; partials are combined with `join` (which must be
     /// associative and commutative, e.g. box union, sum, min, max).
+    ///
+    /// Each participating worker folds its chunks into a private slot
+    /// (no lock, no sharing — the Kokkos `parallel_reduce` contract); the
+    /// at-most-`threads` partials are joined once on the caller after the
+    /// dispatch completes.
     pub fn parallel_reduce<T, M, J>(&self, n: usize, identity: T, map_chunk: M, join: J) -> T
     where
         T: Send,
@@ -115,14 +120,30 @@ impl ExecSpace {
         match &self.pool {
             None => join(identity, map_chunk(0, n)),
             Some(pool) => {
-                let acc = std::sync::Mutex::new(Some(identity));
-                pool.run_chunked(n, &|b, e| {
-                    let local = map_chunk(b, e);
-                    let mut guard = acc.lock().unwrap();
-                    let prev = guard.take().expect("reduce accumulator");
-                    *guard = Some(join(prev, local));
-                });
-                acc.into_inner().unwrap().unwrap()
+                let mut partials: Vec<Option<T>> = Vec::new();
+                partials.resize_with(pool.threads(), || None);
+                {
+                    let pp = scan::SendPtr(partials.as_mut_ptr());
+                    let map_ref = &map_chunk;
+                    let join_ref = &join;
+                    pool.run_chunked_worker(n, &|w, b, e| {
+                        let local = map_ref(b, e);
+                        // SAFETY: slot `w` belongs exclusively to the worker
+                        // that claimed id `w` for this dispatch.
+                        let slot = unsafe { &mut *pp.0.add(w) };
+                        *slot = Some(match slot.take() {
+                            Some(prev) => join_ref(prev, local),
+                            None => local,
+                        });
+                    });
+                }
+                let mut acc = identity;
+                for partial in &mut partials {
+                    if let Some(v) = partial.take() {
+                        acc = join(acc, v);
+                    }
+                }
+                acc
             }
         }
     }
@@ -157,6 +178,21 @@ mod tests {
             );
             assert_eq!(total, (n as u64 - 1) * n as u64 / 2);
         }
+    }
+
+    #[test]
+    fn parallel_reduce_tracks_range_extremes() {
+        // Non-arithmetic partials exercise the per-worker slot path: the
+        // reduction must see every chunk exactly once in some order.
+        let space = ExecSpace::with_threads(8);
+        let n = 50_000usize;
+        let (min, max) = space.parallel_reduce(
+            n,
+            (usize::MAX, 0usize),
+            |b, e| (b, e - 1),
+            |a, b| (a.0.min(b.0), a.1.max(b.1)),
+        );
+        assert_eq!((min, max), (0, n - 1));
     }
 
     #[test]

@@ -25,11 +25,13 @@ const MIN_GRAIN: usize = 64;
 
 /// Type-erased view of the user closure for one dispatch.
 struct Dispatch {
-    /// `&dyn Fn(usize, usize)` with its lifetime erased; valid for the
-    /// duration of the dispatch only.
-    func: *const (dyn Fn(usize, usize) + Sync),
+    /// `&dyn Fn(worker, begin, end)` with its lifetime erased; valid for
+    /// the duration of the dispatch only.
+    func: *const (dyn Fn(usize, usize, usize) + Sync),
     /// Next chunk index to claim.
     next: AtomicUsize,
+    /// Next worker slot to hand out (each participant claims one).
+    worker: AtomicUsize,
     /// Total number of chunks.
     chunks: usize,
     /// Chunk size in iterations.
@@ -46,9 +48,11 @@ unsafe impl Send for Dispatch {}
 unsafe impl Sync for Dispatch {}
 
 impl Dispatch {
-    /// Claims and runs chunks until the iteration space is exhausted.
+    /// Claims a worker slot, then claims and runs chunks until the
+    /// iteration space is exhausted.
     fn work(&self) {
         let f = unsafe { &*self.func };
+        let w = self.worker.fetch_add(1, Ordering::Relaxed);
         loop {
             let c = self.next.fetch_add(1, Ordering::Relaxed);
             if c >= self.chunks {
@@ -57,7 +61,7 @@ impl Dispatch {
             let begin = c * self.grain;
             let end = ((c + 1) * self.grain).min(self.n);
             if begin < end {
-                f(begin, end);
+                f(w, begin, end);
             }
         }
         let _ = self.done.send(());
@@ -99,6 +103,15 @@ impl ThreadPool {
     /// Runs `f(begin, end)` over a chunked partition of `0..n`, blocking
     /// until all chunks are complete. The caller participates as a worker.
     pub fn run_chunked(&self, n: usize, f: &(dyn Fn(usize, usize) + Sync)) {
+        self.run_chunked_worker(n, &|_w, b, e| f(b, e));
+    }
+
+    /// [`ThreadPool::run_chunked`] with worker identity: `f(worker, begin,
+    /// end)`, where `worker` is a dense id in `0..threads()` unique to the
+    /// participating thread for the duration of the dispatch. This is the
+    /// seam reductions use to accumulate per-worker partials without
+    /// sharing (one slot per worker, joined once after the dispatch).
+    pub fn run_chunked_worker(&self, n: usize, f: &(dyn Fn(usize, usize, usize) + Sync)) {
         if n == 0 {
             return;
         }
@@ -109,18 +122,19 @@ impl ThreadPool {
 
         // Small dispatch: not worth waking workers.
         if chunks == 1 {
-            f(0, n);
+            f(0, 0, n);
             return;
         }
 
         let (done_tx, done_rx) = channel();
         // SAFETY: see module docs — we block on `done_rx` below until every
         // participant is finished, so `f` outlives all dereferences.
-        let func: *const (dyn Fn(usize, usize) + Sync) =
-            unsafe { std::mem::transmute::<_, &'static (dyn Fn(usize, usize) + Sync)>(f) };
+        let func: *const (dyn Fn(usize, usize, usize) + Sync) =
+            unsafe { std::mem::transmute::<_, &'static (dyn Fn(usize, usize, usize) + Sync)>(f) };
         let dispatch = Arc::new(Dispatch {
             func,
             next: AtomicUsize::new(0),
+            worker: AtomicUsize::new(0),
             chunks,
             grain,
             n,
@@ -165,6 +179,22 @@ mod tests {
             });
             assert_eq!(sum.load(Ordering::Relaxed), (n as u64 - 1) * n as u64 / 2, "n={n}");
         }
+    }
+
+    #[test]
+    fn worker_ids_are_dense_and_exclusive() {
+        let pool = ThreadPool::new(4);
+        let n = 100_000;
+        // Every chunk records its worker id; ids must stay below the
+        // thread count and jointly cover the whole iteration space.
+        let owner: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(usize::MAX)).collect();
+        pool.run_chunked_worker(n, &|w, b, e| {
+            assert!(w < 4, "worker id {w} out of range");
+            for i in b..e {
+                owner[i].store(w, Ordering::Relaxed);
+            }
+        });
+        assert!(owner.iter().all(|o| o.load(Ordering::Relaxed) < 4));
     }
 
     #[test]

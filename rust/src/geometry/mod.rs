@@ -5,10 +5,14 @@
 //! floating point numbers in 3D) and are fast to test for intersections".
 //! This module provides those primitives plus the distance/intersection
 //! predicates used by traversal, and the Morton (Z-order) codes used both
-//! for construction (§2.1) and query ordering (§2.2.3).
+//! for construction (§2.1) and query ordering (§2.2.3). Search regions are
+//! expressed through the [`predicates::SpatialPredicate`] trait (sphere,
+//! box, and [`Ray`] kinds ship in-tree; applications can add their own),
+//! with [`predicates::WithData`] attaching per-query user data.
 
 mod aabb;
 mod point;
+mod ray;
 mod sphere;
 mod triangle;
 pub mod morton;
@@ -16,5 +20,6 @@ pub mod predicates;
 
 pub use aabb::Aabb;
 pub use point::Point;
+pub use ray::Ray;
 pub use sphere::Sphere;
 pub use triangle::Triangle;

@@ -3,10 +3,120 @@
 //! The paper distinguishes two query kinds (§2.2): *spatial* queries
 //! ("all objects within a certain distance") and *nearest* queries
 //! ("a certain number of closest objects regardless of distance").
+//!
+//! Spatial queries are expressed through the [`SpatialPredicate`] trait —
+//! the flexible-interface seam of §2.2–2.3, mirroring ArborX's
+//! user-defined predicates. Every traversal and batched engine is generic
+//! over the trait, so each predicate kind monomorphizes into its own hot
+//! loop: no per-node enum dispatch. The crate ships four kinds —
+//! [`IntersectsSphere`], [`IntersectsBox`], [`IntersectsRay`], and the
+//! [`WithData`] attachment wrapper (ArborX's `attach`) that carries
+//! per-query user data to traversal callbacks — and applications can add
+//! their own by implementing the trait.
+//!
+//! The closed [`Spatial`] enum is kept as a compatibility facade: it is
+//! the wire format of the coordinator service and of mixed
+//! [`crate::bvh::QueryPredicate`] batches, and it implements the trait by
+//! dispatching *once per query* to the concrete kinds above.
 
-use super::{Aabb, Point, Sphere};
+use super::{Aabb, Point, Ray, Sphere};
 
-/// A spatial predicate: does a node/leaf box satisfy the search region?
+/// A spatial predicate: does a candidate bounding box satisfy the search
+/// region? Implementations must be consistent between internal-node boxes
+/// and leaf boxes — the traversal prunes with the same `test` it accepts
+/// leaves with.
+pub trait SpatialPredicate {
+    /// Tests the predicate against a bounding box.
+    fn test(&self, bbox: &Aabb) -> bool;
+
+    /// A representative point of the search region, used for Morton-code
+    /// query ordering (§2.2.3).
+    fn origin(&self) -> Point;
+}
+
+/// All objects whose box intersects the sphere (radius search).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct IntersectsSphere(pub Sphere);
+
+impl SpatialPredicate for IntersectsSphere {
+    #[inline]
+    fn test(&self, bbox: &Aabb) -> bool {
+        self.0.intersects_box(bbox)
+    }
+
+    #[inline]
+    fn origin(&self) -> Point {
+        self.0.center
+    }
+}
+
+/// All objects whose box overlaps the box.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct IntersectsBox(pub Aabb);
+
+impl SpatialPredicate for IntersectsBox {
+    #[inline]
+    fn test(&self, bbox: &Aabb) -> bool {
+        self.0.intersects(bbox)
+    }
+
+    #[inline]
+    fn origin(&self) -> Point {
+        self.0.centroid()
+    }
+}
+
+/// All objects whose box is hit by the ray (collision / visibility
+/// workloads).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct IntersectsRay(pub Ray);
+
+impl SpatialPredicate for IntersectsRay {
+    #[inline]
+    fn test(&self, bbox: &Aabb) -> bool {
+        self.0.intersects_box(bbox)
+    }
+
+    #[inline]
+    fn origin(&self) -> Point {
+        self.0.origin
+    }
+}
+
+/// A predicate with attached per-query user data — the ArborX `attach`
+/// pattern. The wrapper is transparent to traversal (it delegates to the
+/// inner predicate); callbacks reach the payload through the query index:
+/// `preds[query_idx].data`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WithData<P, T> {
+    /// The wrapped predicate.
+    pub pred: P,
+    /// The attached payload.
+    pub data: T,
+}
+
+/// Attaches `data` to `pred` (see [`WithData`]).
+#[inline]
+pub fn attach<P, T>(pred: P, data: T) -> WithData<P, T> {
+    WithData { pred, data }
+}
+
+impl<P: SpatialPredicate, T> SpatialPredicate for WithData<P, T> {
+    #[inline]
+    fn test(&self, bbox: &Aabb) -> bool {
+        self.pred.test(bbox)
+    }
+
+    #[inline]
+    fn origin(&self) -> Point {
+        self.pred.origin()
+    }
+}
+
+/// The closed pre-trait predicate enum, kept as a thin compatibility
+/// facade (service wire format, mixed batches). The batched engines
+/// dispatch it once per query onto the concrete trait kinds, so no enum
+/// match survives in the per-node hot loop.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Spatial {
     /// All objects whose box intersects the sphere (radius search).
@@ -36,6 +146,29 @@ impl Spatial {
     }
 }
 
+impl SpatialPredicate for Spatial {
+    #[inline]
+    fn test(&self, bbox: &Aabb) -> bool {
+        Spatial::test(self, bbox)
+    }
+
+    #[inline]
+    fn origin(&self) -> Point {
+        Spatial::origin(self)
+    }
+}
+
+/// A nearest query: what point are the `k` closest objects sought around?
+/// The trait twin of [`SpatialPredicate`] for the k-NN traversals, so
+/// attachments ([`WithData`]) work for nearest queries too.
+pub trait NearestQuery {
+    /// Query location.
+    fn point(&self) -> Point;
+
+    /// Number of neighbors requested.
+    fn k(&self) -> usize;
+}
+
 /// A nearest predicate: the `k` closest objects to `point`.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Nearest {
@@ -43,6 +176,38 @@ pub struct Nearest {
     pub point: Point,
     /// Number of neighbors requested.
     pub k: usize,
+}
+
+impl Nearest {
+    /// Creates a k-NN predicate around `point`.
+    #[inline]
+    pub const fn new(point: Point, k: usize) -> Nearest {
+        Nearest { point, k }
+    }
+}
+
+impl NearestQuery for Nearest {
+    #[inline]
+    fn point(&self) -> Point {
+        self.point
+    }
+
+    #[inline]
+    fn k(&self) -> usize {
+        self.k
+    }
+}
+
+impl<Q: NearestQuery, T> NearestQuery for WithData<Q, T> {
+    #[inline]
+    fn point(&self) -> Point {
+        self.pred.point()
+    }
+
+    #[inline]
+    fn k(&self) -> usize {
+        self.pred.k()
+    }
 }
 
 #[cfg(test)]
@@ -66,5 +231,46 @@ mod tests {
         assert_eq!(s.origin(), Point::new(1.0, 2.0, 3.0));
         let b = Spatial::IntersectsBox(Aabb::new(Point::origin(), Point::splat(2.0)));
         assert_eq!(b.origin(), Point::splat(1.0));
+    }
+
+    #[test]
+    fn trait_kinds_agree_with_enum_facade() {
+        let unit = Aabb::new(Point::origin(), Point::splat(1.0));
+        let sphere = Sphere::new(Point::splat(2.0), 1.8);
+        assert_eq!(
+            IntersectsSphere(sphere).test(&unit),
+            Spatial::IntersectsSphere(sphere).test(&unit)
+        );
+        let region = Aabb::new(Point::splat(0.9), Point::splat(2.0));
+        assert_eq!(
+            IntersectsBox(region).test(&unit),
+            Spatial::IntersectsBox(region).test(&unit)
+        );
+        assert_eq!(IntersectsSphere(sphere).origin(), sphere.center);
+        assert_eq!(IntersectsBox(region).origin(), region.centroid());
+    }
+
+    #[test]
+    fn ray_predicate_tests_boxes() {
+        let unit = Aabb::new(Point::origin(), Point::splat(1.0));
+        let hit = IntersectsRay(Ray::new(Point::new(-1.0, 0.5, 0.5), Point::new(1.0, 0.0, 0.0)));
+        assert!(hit.test(&unit));
+        let miss = IntersectsRay(Ray::new(Point::new(-1.0, 3.0, 0.5), Point::new(1.0, 0.0, 0.0)));
+        assert!(!miss.test(&unit));
+        assert_eq!(hit.origin(), Point::new(-1.0, 0.5, 0.5));
+    }
+
+    #[test]
+    fn with_data_delegates_and_carries_payload() {
+        let unit = Aabb::new(Point::origin(), Point::splat(1.0));
+        let p = attach(IntersectsSphere(Sphere::new(Point::splat(0.5), 0.1)), 42u64);
+        assert!(p.test(&unit));
+        assert_eq!(p.data, 42);
+        assert_eq!(p.origin(), Point::splat(0.5));
+        // Nearest attachments expose the inner point/k.
+        let nq = attach(Nearest::new(Point::splat(1.0), 7), "label");
+        assert_eq!(nq.point(), Point::splat(1.0));
+        assert_eq!(nq.k(), 7);
+        assert_eq!(nq.data, "label");
     }
 }

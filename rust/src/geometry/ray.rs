@@ -1,0 +1,183 @@
+//! Rays and ray–box intersection.
+//!
+//! Rays back the collision/visibility predicate kind of the trait-based
+//! query layer (ArborX ships the same `intersects(ray)` predicate for ray
+//! tracing and line-of-sight workloads). The box test is the classic slab
+//! method with precomputed inverse direction, made NaN-robust the usual
+//! way: `f32::max`/`f32::min` ignore a NaN operand, so a degenerate slab
+//! (zero direction component against a zero-extent box) never poisons the
+//! interval and at worst widens it — safe for BVH pruning, where the same
+//! predicate is applied to the leaf boxes.
+
+use super::{Aabb, Point};
+
+/// A ray (or segment, when `t_max` is finite): `origin + t * direction`
+/// for `t` in `[0, t_max]`. The direction need not be normalized; `t` is
+/// measured in units of the direction's length.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Ray {
+    /// Ray origin.
+    pub origin: Point,
+    /// Ray direction (any non-zero vector).
+    pub direction: Point,
+    /// Largest admissible parameter (`+inf` for a full ray).
+    pub t_max: f32,
+    /// Componentwise reciprocal of `direction`, precomputed for the slab
+    /// test (`±inf` for zero components, which the test tolerates).
+    inv_direction: Point,
+}
+
+impl Ray {
+    /// An unbounded ray from `origin` along `direction`.
+    #[inline]
+    pub fn new(origin: Point, direction: Point) -> Ray {
+        Ray::segment(origin, direction, f32::INFINITY)
+    }
+
+    /// A bounded ray: parameters beyond `t_max` do not count as hits.
+    #[inline]
+    pub fn segment(origin: Point, direction: Point, t_max: f32) -> Ray {
+        let inv_direction =
+            Point::new(1.0 / direction[0], 1.0 / direction[1], 1.0 / direction[2]);
+        Ray { origin, direction, t_max, inv_direction }
+    }
+
+    /// The point at parameter `t`.
+    #[inline]
+    pub fn at(&self, t: f32) -> Point {
+        self.origin + self.direction * t
+    }
+
+    /// Returns `true` if the ray intersects the closed box within
+    /// `[0, t_max]` (slab method).
+    #[inline]
+    pub fn intersects_box(&self, b: &Aabb) -> bool {
+        self.box_entry(b).is_some()
+    }
+
+    /// Entry parameter of the ray into the box, if it hits within
+    /// `[0, t_max]` (0 when the origin is inside). This is the single
+    /// slab-test implementation; [`Ray::intersects_box`] delegates here so
+    /// the pruning predicate and the entry parameter can never diverge.
+    #[inline]
+    pub fn box_entry(&self, b: &Aabb) -> Option<f32> {
+        let mut t_enter = 0.0f32;
+        let mut t_exit = self.t_max;
+        for d in 0..3 {
+            let inv = self.inv_direction[d];
+            let t0 = (b.min[d] - self.origin[d]) * inv;
+            let t1 = (b.max[d] - self.origin[d]) * inv;
+            let (near, far) = if inv < 0.0 { (t1, t0) } else { (t0, t1) };
+            // NaN slabs (0 * inf) are ignored by max/min, not propagated.
+            t_enter = t_enter.max(near);
+            t_exit = t_exit.min(far);
+            if t_enter > t_exit {
+                return None;
+            }
+        }
+        Some(t_enter)
+    }
+
+    /// First intersection parameter with the sphere `(center, radius)`
+    /// within `[0, t_max]`, for narrow-phase hit refinement.
+    pub fn sphere_entry(&self, center: &Point, radius: f32) -> Option<f32> {
+        let oc = self.origin - *center;
+        let a = self.direction[0] * self.direction[0]
+            + self.direction[1] * self.direction[1]
+            + self.direction[2] * self.direction[2];
+        if a == 0.0 {
+            return None;
+        }
+        let half_b = oc[0] * self.direction[0]
+            + oc[1] * self.direction[1]
+            + oc[2] * self.direction[2];
+        let c = oc[0] * oc[0] + oc[1] * oc[1] + oc[2] * oc[2] - radius * radius;
+        let disc = half_b * half_b - a * c;
+        if disc < 0.0 {
+            return None;
+        }
+        let sqrt_disc = disc.sqrt();
+        // Nearer root first; accept the farther one when the origin is
+        // inside the sphere.
+        for t in [(-half_b - sqrt_disc) / a, (-half_b + sqrt_disc) / a] {
+            if (0.0..=self.t_max).contains(&t) {
+                return Some(t);
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn unit_box() -> Aabb {
+        Aabb::new(Point::origin(), Point::splat(1.0))
+    }
+
+    #[test]
+    fn hits_and_misses() {
+        let b = unit_box();
+        // Straight through the middle.
+        assert!(Ray::new(Point::new(-1.0, 0.5, 0.5), Point::new(1.0, 0.0, 0.0)).intersects_box(&b));
+        // Pointing away.
+        let away = Ray::new(Point::new(-1.0, 0.5, 0.5), Point::new(-1.0, 0.0, 0.0));
+        assert!(!away.intersects_box(&b));
+        // Parallel offset miss.
+        let offset = Ray::new(Point::new(-1.0, 2.0, 0.5), Point::new(1.0, 0.0, 0.0));
+        assert!(!offset.intersects_box(&b));
+        // Diagonal hit.
+        assert!(Ray::new(Point::new(-1.0, -1.0, -1.0), Point::splat(1.0)).intersects_box(&b));
+    }
+
+    #[test]
+    fn origin_inside_always_hits() {
+        let b = unit_box();
+        for dir in [Point::new(1.0, 0.0, 0.0), Point::new(-0.3, 0.9, 0.1), Point::splat(-1.0)] {
+            assert!(Ray::new(Point::splat(0.5), dir).intersects_box(&b), "{dir:?}");
+        }
+    }
+
+    #[test]
+    fn segment_respects_t_max() {
+        let b = unit_box();
+        let dir = Point::new(1.0, 0.0, 0.0);
+        let origin = Point::new(-2.0, 0.5, 0.5);
+        assert!(Ray::segment(origin, dir, 3.0).intersects_box(&b));
+        // The box starts at t = 2; a segment ending at t = 1.5 misses.
+        assert!(!Ray::segment(origin, dir, 1.5).intersects_box(&b));
+        assert_eq!(Ray::segment(origin, dir, 3.0).box_entry(&b), Some(2.0));
+    }
+
+    #[test]
+    fn degenerate_point_boxes() {
+        // Leaf boxes of point data have zero extent; the slab test must
+        // still hit them when the ray passes through the point.
+        let p = Aabb::from_point(Point::new(2.0, 0.0, 0.0));
+        assert!(Ray::new(Point::origin(), Point::new(1.0, 0.0, 0.0)).intersects_box(&p));
+        assert!(!Ray::new(Point::origin(), Point::new(0.0, 1.0, 0.0)).intersects_box(&p));
+        // Axis-parallel ray in the plane of a degenerate box it starts on.
+        let q = Aabb::from_point(Point::origin());
+        assert!(Ray::new(Point::origin(), Point::new(0.0, 0.0, 1.0)).intersects_box(&q));
+    }
+
+    #[test]
+    fn sphere_entry_roots() {
+        let ray = Ray::new(Point::new(-3.0, 0.0, 0.0), Point::new(1.0, 0.0, 0.0));
+        let t = ray.sphere_entry(&Point::origin(), 1.0).unwrap();
+        assert!((t - 2.0).abs() < 1e-5);
+        // Origin inside: the exit root is returned.
+        let inside = Ray::new(Point::origin(), Point::new(1.0, 0.0, 0.0));
+        let t = inside.sphere_entry(&Point::origin(), 1.0).unwrap();
+        assert!((t - 1.0).abs() < 1e-5);
+        // Clean miss.
+        assert!(ray.sphere_entry(&Point::new(0.0, 5.0, 0.0), 1.0).is_none());
+    }
+
+    #[test]
+    fn at_walks_the_ray() {
+        let ray = Ray::new(Point::new(1.0, 2.0, 3.0), Point::new(0.0, 1.0, 0.0));
+        assert_eq!(ray.at(2.0), Point::new(1.0, 4.0, 3.0));
+    }
+}

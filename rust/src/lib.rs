@@ -6,8 +6,13 @@
 //!
 //! The crate provides:
 //!
-//! * [`geometry`] — points, axis-aligned bounding boxes, spheres, distance
-//!   and intersection predicates, and Morton (Z-order) codes.
+//! * [`geometry`] — points, axis-aligned bounding boxes, spheres, rays,
+//!   distance and intersection predicates, and Morton (Z-order) codes.
+//!   Search regions are trait-based
+//!   ([`geometry::predicates::SpatialPredicate`]): sphere, box, and ray
+//!   kinds ship in-tree, [`geometry::predicates::WithData`] attaches
+//!   per-query user data (ArborX `attach`), and applications can define
+//!   their own kinds.
 //! * [`exec`] — a Kokkos-like execution-space abstraction: the same
 //!   algorithm runs serially or on a persistent thread pool
 //!   (`parallel_for` / `parallel_reduce` / `exclusive_scan` / radix sort).
@@ -15,7 +20,9 @@
 //!   hierarchy with fully parallel construction (Karras 2012, plus the
 //!   Apetrei 2014 single-pass variant), stack-based spatial and nearest
 //!   traversals, the 1P/2P batched query engines with CSR output, and
-//!   Morton-ordered query sorting.
+//!   Morton-ordered query sorting. Engines are generic over the predicate
+//!   trait (monomorphized hot loops); [`bvh::Bvh::query_with_callback`]
+//!   streams matches to a callback with no CSR materialization.
 //! * [`baselines`] — the comparison libraries of the paper's evaluation,
 //!   re-implemented: a nanoflann-style k-d tree, a Boost-style STR-packed
 //!   R-tree, and a brute-force oracle.
@@ -23,7 +30,8 @@
 //!   (filled/hollow cube/sphere) and workload helpers.
 //! * [`runtime`] — a PJRT client (via the `xla` crate) that loads the
 //!   AOT-compiled JAX/Pallas artifacts and exposes them as an accelerator
-//!   backend for batched distance tiles.
+//!   backend for batched distance tiles. Gated behind the `accel` feature
+//!   (its `xla`/`anyhow` dependencies are unavailable offline).
 //! * [`coordinator`] — the batched query service (router + dynamic
 //!   batcher + metrics) and a simulated multi-rank distributed tree.
 //!
@@ -41,10 +49,20 @@
 //! let boxes: Vec<Aabb> = points.iter().map(|p| Aabb::from_point(*p)).collect();
 //! let bvh = Bvh::build(&space, &boxes);
 //!
-//! // All boxes within distance 1.5 of the origin:
+//! // All boxes within distance 1.5 of the origin (CSR facade):
 //! let queries = vec![QueryPredicate::intersects_sphere(Point::new(0.0, 0.0, 0.0), 1.5)];
 //! let out = bvh.query(&space, &queries, &QueryOptions::default());
 //! assert_eq!(out.results_for(0).len(), 2);
+//!
+//! // The same search, trait-based and streamed to a callback — the
+//! // monomorphized zero-materialization path:
+//! use std::sync::atomic::{AtomicU32, Ordering};
+//! let preds = vec![IntersectsSphere(Sphere::new(Point::origin(), 1.5))];
+//! let hits = AtomicU32::new(0);
+//! bvh.query_with_callback(&space, &preds, |_query, _object| {
+//!     hits.fetch_add(1, Ordering::Relaxed);
+//! });
+//! assert_eq!(hits.load(Ordering::Relaxed), 2);
 //! ```
 
 pub mod baselines;
@@ -54,6 +72,7 @@ pub mod coordinator;
 pub mod data;
 pub mod exec;
 pub mod geometry;
+#[cfg(feature = "accel")]
 pub mod runtime;
 
 /// Convenience re-exports of the most common types.
@@ -63,5 +82,9 @@ pub mod prelude {
     pub use crate::coordinator::service::{SearchService, ServiceConfig};
     pub use crate::data::shapes::{PointCloud, Shape};
     pub use crate::exec::ExecSpace;
-    pub use crate::geometry::{Aabb, Point, Sphere, Triangle};
+    pub use crate::geometry::predicates::{
+        attach, IntersectsBox, IntersectsRay, IntersectsSphere, Nearest, NearestQuery,
+        SpatialPredicate, WithData,
+    };
+    pub use crate::geometry::{Aabb, Point, Ray, Sphere, Triangle};
 }

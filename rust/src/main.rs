@@ -21,7 +21,11 @@ use arbor::coordinator::service::{SearchService, ServiceConfig};
 use arbor::data::shapes::{PointCloud, Shape};
 use arbor::data::workloads::{Case, Workload, K};
 use arbor::exec::ExecSpace;
+#[cfg(feature = "accel")]
 use arbor::runtime::AccelEngine;
+
+/// CLI error type: whatever the failing layer reports.
+type CliResult = Result<(), Box<dyn std::error::Error>>;
 
 /// Tiny flag parser: `--key value` pairs after the subcommand.
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
@@ -60,7 +64,7 @@ fn usage() -> ! {
     std::process::exit(2);
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> CliResult {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = args.first() else { usage() };
     let flags = parse_flags(&args[1..]);
@@ -70,12 +74,19 @@ fn main() -> anyhow::Result<()> {
         "build" => cmd_build(&flags),
         "query" => cmd_query(&flags),
         "serve" => cmd_serve(&flags),
+        #[cfg(feature = "accel")]
         "accel" => cmd_accel(&flags),
+        #[cfg(not(feature = "accel"))]
+        "accel" => {
+            eprintln!("accelerator support not compiled in (build with --features accel)");
+            std::process::exit(2);
+        }
         _ => usage(),
     }
 }
 
-fn cmd_info() -> anyhow::Result<()> {
+fn cmd_info() -> CliResult {
+    #[cfg(feature = "accel")]
     match AccelEngine::from_default_dir() {
         Ok(engine) => {
             println!("pjrt platform: {}", engine.platform());
@@ -86,11 +97,13 @@ fn cmd_info() -> anyhow::Result<()> {
         }
         Err(e) => println!("accelerator unavailable ({e}); pure-rust paths still work"),
     }
+    #[cfg(not(feature = "accel"))]
+    println!("accelerator support not compiled in (build with --features accel)");
     println!("threads available: {}", std::thread::available_parallelism()?.get());
     Ok(())
 }
 
-fn cmd_generate(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+fn cmd_generate(flags: &HashMap<String, String>) -> CliResult {
     let shape = Shape::parse(&flag::<String>(flags, "shape", "filled-cube".into()))
         .unwrap_or(Shape::FilledCube);
     let n: usize = flag(flags, "n", 1000);
@@ -107,7 +120,7 @@ fn cmd_generate(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_build(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+fn cmd_build(flags: &HashMap<String, String>) -> CliResult {
     let case = Case::parse(&flag::<String>(flags, "case", "filled".into())).unwrap_or(Case::Filled);
     let m: usize = flag(flags, "m", 1_000_000);
     let threads: usize = flag(flags, "threads", 1);
@@ -135,7 +148,7 @@ fn cmd_build(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_query(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+fn cmd_query(flags: &HashMap<String, String>) -> CliResult {
     let case = Case::parse(&flag::<String>(flags, "case", "filled".into())).unwrap_or(Case::Filled);
     let m: usize = flag(flags, "m", 100_000);
     let n: usize = flag(flags, "n", m);
@@ -166,7 +179,7 @@ fn cmd_query(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+fn cmd_serve(flags: &HashMap<String, String>) -> CliResult {
     let case = Case::parse(&flag::<String>(flags, "case", "filled".into())).unwrap_or(Case::Filled);
     let m: usize = flag(flags, "m", 100_000);
     let requests: usize = flag(flags, "requests", 10_000);
@@ -208,7 +221,8 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_accel(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+#[cfg(feature = "accel")]
+fn cmd_accel(flags: &HashMap<String, String>) -> CliResult {
     let case = Case::parse(&flag::<String>(flags, "case", "filled".into())).unwrap_or(Case::Filled);
     let m: usize = flag(flags, "m", 8192);
     let n: usize = flag(flags, "n", 2048);
@@ -247,6 +261,8 @@ fn cmd_accel(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         n as f64 / dt_bvh.as_secs_f64() / 1e6,
         mismatches
     );
-    anyhow::ensure!(mismatches == 0, "accelerator and BVH disagree");
+    if mismatches != 0 {
+        return Err(format!("accelerator and BVH disagree on {mismatches} distances").into());
+    }
     Ok(())
 }

@@ -1,0 +1,248 @@
+//! Differential property tests for the trait-based query layer.
+//!
+//! Randomized filled/hollow workloads are run through every engine
+//! combination — Karras and Apetrei builds, serial and threaded spaces,
+//! CSR (2P and tight-buffer 1P) and callback execution — and compared
+//! against the `BruteForce` oracle for every predicate kind: sphere, box,
+//! ray (unbounded and segment), and `WithData` attachments. This is the
+//! acceptance harness of the trait refactor: the generic engines, the
+//! enum facade, and the callback path must all report the same match
+//! sets.
+
+use std::sync::Mutex;
+
+use arbor::baselines::brute::BruteForce;
+use arbor::bvh::{Bvh, QueryOptions, QueryPredicate};
+use arbor::data::rng::Rng;
+use arbor::data::shapes::{PointCloud, Shape};
+use arbor::exec::ExecSpace;
+use arbor::geometry::predicates::{
+    attach, IntersectsBox, IntersectsRay, IntersectsSphere, SpatialPredicate, WithData,
+};
+use arbor::geometry::{Aabb, Point, Ray, Sphere};
+
+const SHAPES: [Shape; 2] = [Shape::FilledCube, Shape::HollowCube];
+
+/// Every (builder, space) engine combination under test.
+fn engines(boxes: &[Aabb]) -> Vec<(String, Bvh, ExecSpace)> {
+    let mut out = Vec::new();
+    for (space_name, space) in [("serial", ExecSpace::serial()), ("mt", ExecSpace::with_threads(4))]
+    {
+        out.push((
+            format!("karras/{space_name}"),
+            Bvh::build(&space, boxes),
+            space.clone(),
+        ));
+        out.push((
+            format!("apetrei/{space_name}"),
+            Bvh::build_apetrei(&space, boxes),
+            space.clone(),
+        ));
+    }
+    out
+}
+
+/// Checks one predicate batch on one engine against brute force, for 2P,
+/// tight 1P, and callback execution.
+fn check_batch<P: SpatialPredicate + Sync>(
+    label: &str,
+    bvh: &Bvh,
+    space: &ExecSpace,
+    brute: &BruteForce,
+    preds: &[P],
+) {
+    let want: Vec<Vec<u32>> = preds.iter().map(|p| brute.spatial(p)).collect();
+
+    for (opt_name, opts) in [
+        ("2p", QueryOptions { buffer_size: None, sort_queries: true }),
+        ("1p-tight", QueryOptions { buffer_size: Some(2), sort_queries: false }),
+    ] {
+        let out = bvh.query_spatial(space, preds, &opts);
+        for (qi, expect) in want.iter().enumerate() {
+            let mut got = out.results_for(qi).to_vec();
+            got.sort();
+            assert_eq!(&got, expect, "{label} {opt_name} query {qi}");
+        }
+    }
+
+    // Callback path: collect (query, object) pairs concurrently.
+    let matches: Mutex<Vec<(u32, u32)>> = Mutex::new(Vec::new());
+    bvh.query_with_callback(space, preds, |q, obj| {
+        matches.lock().unwrap().push((q, obj));
+    });
+    let mut got = matches.into_inner().unwrap();
+    got.sort();
+    let mut expect_pairs = Vec::new();
+    for (qi, expect) in want.iter().enumerate() {
+        for &obj in expect {
+            expect_pairs.push((qi as u32, obj));
+        }
+    }
+    expect_pairs.sort();
+    assert_eq!(got, expect_pairs, "{label} callback");
+}
+
+#[test]
+fn sphere_and_box_predicates_match_brute_force_everywhere() {
+    for (si, shape) in SHAPES.iter().enumerate() {
+        let cloud = PointCloud::generate(*shape, 2000, 100 + si as u64);
+        let boxes = cloud.boxes();
+        let brute = BruteForce::new(&boxes);
+        let mut rng = Rng::new(7 + si as u64);
+
+        let spheres: Vec<IntersectsSphere> = (0..40)
+            .map(|_| {
+                let c = Point::new(
+                    rng.uniform(-cloud.a, cloud.a),
+                    rng.uniform(-cloud.a, cloud.a),
+                    rng.uniform(-cloud.a, cloud.a),
+                );
+                IntersectsSphere(Sphere::new(c, rng.uniform(0.5, 4.0)))
+            })
+            .collect();
+        let regions: Vec<IntersectsBox> = (0..40)
+            .map(|_| {
+                let c = Point::new(
+                    rng.uniform(-cloud.a, cloud.a),
+                    rng.uniform(-cloud.a, cloud.a),
+                    rng.uniform(-cloud.a, cloud.a),
+                );
+                let half = Point::new(
+                    rng.uniform(0.2, 3.0),
+                    rng.uniform(0.2, 3.0),
+                    rng.uniform(0.2, 3.0),
+                );
+                IntersectsBox(Aabb::new(c - half, c + half))
+            })
+            .collect();
+
+        for (name, bvh, space) in engines(&boxes) {
+            check_batch(&format!("{shape:?}/{name}/sphere"), &bvh, &space, &brute, &spheres);
+            check_batch(&format!("{shape:?}/{name}/box"), &bvh, &space, &brute, &regions);
+        }
+    }
+}
+
+#[test]
+fn ray_predicates_match_brute_force_everywhere() {
+    for (si, shape) in SHAPES.iter().enumerate() {
+        let cloud = PointCloud::generate(*shape, 1500, 300 + si as u64);
+        let boxes = cloud.boxes();
+        let brute = BruteForce::new(&boxes);
+        let mut rng = Rng::new(17 + si as u64);
+
+        let mut rays: Vec<IntersectsRay> = Vec::new();
+        // Random rays and segments (consistency: hit sets must agree even
+        // when grazing) ...
+        for _ in 0..30 {
+            let origin = Point::new(
+                rng.uniform(-cloud.a, cloud.a),
+                rng.uniform(-cloud.a, cloud.a),
+                rng.uniform(-cloud.a, cloud.a),
+            );
+            let dir = Point::new(
+                rng.uniform(-1.0, 1.0),
+                rng.uniform(-1.0, 1.0),
+                rng.uniform(-1.0, 1.0),
+            );
+            if dir.norm() < 1e-3 {
+                continue;
+            }
+            if rays.len() % 2 == 0 {
+                rays.push(IntersectsRay(Ray::new(origin, dir)));
+            } else {
+                rays.push(IntersectsRay(Ray::segment(origin, dir, rng.uniform(0.5, 3.0))));
+            }
+        }
+        // ... plus axis-aligned rays straight through existing points
+        // (guaranteed hits: the direction has exact zero components, so
+        // the slab test is exact along the other axes).
+        for i in (0..cloud.points.len()).step_by(97) {
+            let p = cloud.points[i];
+            rays.push(IntersectsRay(Ray::new(
+                Point::new(p[0], p[1], p[2] - 2.0 * cloud.a),
+                Point::new(0.0, 0.0, 1.0),
+            )));
+        }
+        // At least one axis ray must actually hit its target point.
+        assert!(
+            rays.iter().any(|r| !brute.spatial(r).is_empty()),
+            "{shape:?}: no ray hits anything — test workload is vacuous"
+        );
+
+        for (name, bvh, space) in engines(&boxes) {
+            check_batch(&format!("{shape:?}/{name}/ray"), &bvh, &space, &brute, &rays);
+        }
+    }
+}
+
+#[test]
+fn attachment_predicates_are_transparent_and_carry_data() {
+    let cloud = PointCloud::generate(Shape::FilledSphere, 1200, 5);
+    let boxes = cloud.boxes();
+    let brute = BruteForce::new(&boxes);
+    let mut rng = Rng::new(23);
+
+    let tagged: Vec<WithData<IntersectsSphere, u64>> = (0..50)
+        .map(|i| {
+            let c = Point::new(
+                rng.uniform(-cloud.a, cloud.a),
+                rng.uniform(-cloud.a, cloud.a),
+                rng.uniform(-cloud.a, cloud.a),
+            );
+            attach(IntersectsSphere(Sphere::new(c, rng.uniform(0.5, 3.0))), i * i)
+        })
+        .collect();
+    for (qi, p) in tagged.iter().enumerate() {
+        assert_eq!(p.data, (qi * qi) as u64);
+    }
+    for (name, bvh, space) in engines(&boxes) {
+        check_batch(&format!("attach/{name}"), &bvh, &space, &brute, &tagged);
+        // The attachment changes nothing about the match set.
+        let plain: Vec<IntersectsSphere> = tagged.iter().map(|t| t.pred).collect();
+        let a = bvh.query_spatial(&space, &tagged, &QueryOptions::default());
+        let b = bvh.query_spatial(&space, &plain, &QueryOptions::default());
+        assert_eq!(a.offsets, b.offsets, "{name}");
+        assert_eq!(a.indices, b.indices, "{name}");
+    }
+}
+
+#[test]
+fn facade_and_generic_engines_agree_on_workloads() {
+    // The compatibility acceptance: the enum facade (service wire format)
+    // and the generic trait path return identical CSR output.
+    let space = ExecSpace::with_threads(4);
+    let cloud = PointCloud::generate(Shape::FilledCube, 3000, 77);
+    let boxes = cloud.boxes();
+    let bvh = Bvh::build(&space, &boxes);
+    let mut rng = Rng::new(99);
+    let centers: Vec<Point> = (0..200)
+        .map(|_| {
+            Point::new(
+                rng.uniform(-cloud.a, cloud.a),
+                rng.uniform(-cloud.a, cloud.a),
+                rng.uniform(-cloud.a, cloud.a),
+            )
+        })
+        .collect();
+    let facade: Vec<QueryPredicate> =
+        centers.iter().map(|c| QueryPredicate::intersects_sphere(*c, 2.7)).collect();
+    let typed: Vec<IntersectsSphere> =
+        centers.iter().map(|c| IntersectsSphere(Sphere::new(*c, 2.7))).collect();
+    for opts in [
+        QueryOptions { buffer_size: None, sort_queries: true },
+        QueryOptions { buffer_size: Some(8), sort_queries: true },
+        QueryOptions { buffer_size: None, sort_queries: false },
+    ] {
+        let a = bvh.query(&space, &facade, &opts);
+        let b = bvh.query_spatial(&space, &typed, &opts);
+        assert_eq!(a.offsets, b.offsets);
+        for qi in 0..centers.len() {
+            let mut ra = a.results_for(qi).to_vec();
+            let mut rb = b.results_for(qi).to_vec();
+            ra.sort();
+            rb.sort();
+            assert_eq!(ra, rb, "query {qi}");
+        }
+    }
+}

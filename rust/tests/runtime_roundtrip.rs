@@ -4,7 +4,10 @@
 //!
 //! These tests require `make artifacts` to have run; they are skipped
 //! (with a loud message) when the artifact directory is absent so plain
-//! `cargo test` works in a fresh checkout.
+//! `cargo test` works in a fresh checkout. The whole file is gated on the
+//! `accel` feature (the PJRT runtime's `xla`/`anyhow` dependencies are
+//! not available in the offline build environment).
+#![cfg(feature = "accel")]
 
 use std::path::PathBuf;
 
