@@ -15,11 +15,16 @@
 //!   largest write stream;
 //! * **ray casting** — a lidar-style sweep of `IntersectsRay` predicates
 //!   finds the first body hit by each ray (atomic min over exact
-//!   ray–sphere entry parameters).
+//!   ray–sphere entry parameters);
+//! * **the service front door** — the same rays submitted through
+//!   `SearchService` as wire predicates (`attach(ray, ray_id)`), showing
+//!   that the open protocol carries ray and attachment queries and that
+//!   its per-kind sub-batched answers match the direct traversal.
 //!
 //! Run with: `cargo run --release --example collision_detection`
 
 use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
+use std::sync::Arc;
 
 use arbor::data::rng::Rng;
 use arbor::prelude::*;
@@ -155,4 +160,42 @@ fn main() {
         t0.elapsed().as_secs_f64() * 1e3,
     );
     assert!(hits > 0, "a 20k-body swarm must intercept some rays");
+
+    // Service front door: the same rays as wire predicates. Each ray is
+    // submitted as attach(ray, ray_id) — the payload rides the protocol
+    // and comes back with the result — and the first hit is recomputed
+    // from the returned candidate set, then checked against the direct
+    // traversal above.
+    let bvh = Arc::new(bvh);
+    let svc = SearchService::start(Arc::clone(&bvh), ServiceConfig::default());
+    let probe = 256usize.min(rays.len());
+    let t0 = std::time::Instant::now();
+    let pendings: Vec<_> = rays[..probe]
+        .iter()
+        .enumerate()
+        .map(|(i, r)| svc.submit(QueryPredicate::attach(Spatial::IntersectsRay(r.0), i as u64)))
+        .collect();
+    let mut service_mismatches = 0usize;
+    for (i, pending) in pendings.into_iter().enumerate() {
+        let result = pending.wait();
+        assert_eq!(result.data, Some(i as u64), "payload echoed");
+        let mut first = f32::INFINITY;
+        for &obj in &result.indices {
+            let body = &bodies[obj as usize];
+            if let Some(t) = rays[i].0.sphere_entry(&body.center, body.radius) {
+                first = first.min(t);
+            }
+        }
+        let direct = best[i].load(Ordering::Relaxed);
+        let direct = if direct == u32::MAX { f32::INFINITY } else { f32::from_bits(direct) };
+        if first != direct {
+            service_mismatches += 1;
+        }
+    }
+    println!(
+        "service lidar: {probe} wire rays in {:.1} ms, {service_mismatches} first-hit mismatches",
+        t0.elapsed().as_secs_f64() * 1e3,
+    );
+    println!("service metrics: {}", svc.metrics().summary());
+    assert_eq!(service_mismatches, 0, "service and direct traversal disagree");
 }

@@ -88,7 +88,8 @@ fn main() {
     let bvh = Bvh::build(&space, &boxes);
     let queries: Vec<QueryPredicate> =
         particles.iter().map(|p| QueryPredicate::intersects_sphere(*p, b)).collect();
-    let out = bvh.query(&space, &queries, &QueryOptions { buffer_size: Some(32), sort_queries: true });
+    let out =
+        bvh.query(&space, &queries, &QueryOptions { buffer_size: Some(32), sort_queries: true });
     let t_search = t0.elapsed();
 
     // Union-find over the friendship edges.

@@ -4,8 +4,10 @@
 //! 1. **Data**: the paper's filled-case workload (§3.1) at m = 10^6
 //!    sources.
 //! 2. **Coordinator (L3)**: the BVH is built in parallel, wrapped in the
-//!    batched SearchService; 8 concurrent clients submit 20k mixed
-//!    spatial/nearest queries; latency and throughput are reported.
+//!    batched SearchService; 8 concurrent clients submit 20k queries
+//!    covering the whole wire family (sphere/box/ray/attach/nearest),
+//!    exercising per-kind sub-batching and the adaptive 1P buffers;
+//!    latency, throughput, and pass counts are reported.
 //! 3. **Accelerator (L1/L2 via PJRT)**: the same k-NN batch is executed
 //!    through the AOT JAX/Pallas artifacts and cross-checked against the
 //!    service's answers (skipped with a message if `make artifacts` has
@@ -41,24 +43,54 @@ fn main() {
     // ---- Layer 3: build + serve --------------------------------------
     let t0 = Instant::now();
     let bvh = Arc::new(Bvh::build(&space, &w.sources.boxes()));
-    println!("BVH build: {:.1} ms ({:.2} Mobj/s)", ms(t0), m as f64 / t0.elapsed().as_secs_f64() / 1e6);
+    println!(
+        "BVH build: {:.1} ms ({:.2} Mobj/s)",
+        ms(t0),
+        m as f64 / t0.elapsed().as_secs_f64() / 1e6
+    );
 
-    let svc = Arc::new(SearchService::start(Arc::clone(&bvh), ServiceConfig { threads, ..Default::default() }));
+    let svc = Arc::new(SearchService::start(
+        Arc::clone(&bvh),
+        ServiceConfig { threads, ..Default::default() },
+    ));
 
-    // Mixed client load: half nearest, half spatial.
+    // Mixed client load over the whole wire family: every client strides
+    // through the target points, rotating sphere/box/ray/attach/nearest
+    // predicates — the batcher coalesces across clients and sub-batches
+    // by kind.
     let clients = 8;
     let per_client = n_requests / clients;
+    let radius = w.radius;
     let t0 = Instant::now();
     let mut handles = Vec::new();
     for c in 0..clients {
         let svc = Arc::clone(&svc);
-        let spatial = w.spatial[c * per_client / 2..(c + 1) * per_client / 2].to_vec();
-        let nearest = w.nearest[c * per_client / 2..(c + 1) * per_client / 2].to_vec();
+        let targets: Vec<Point> =
+            w.targets.points[c * per_client..(c + 1) * per_client].to_vec();
         handles.push(std::thread::spawn(move || {
             let mut results = 0usize;
-            for (s, nst) in spatial.iter().zip(&nearest) {
-                results += svc.query(*s).indices.len();
-                results += svc.query(*nst).indices.len();
+            for (i, p) in targets.iter().enumerate() {
+                let pred = match i % 5 {
+                    0 => QueryPredicate::intersects_sphere(*p, radius),
+                    1 => QueryPredicate::intersects_box(Aabb::new(
+                        Point::new(p[0] - radius, p[1] - radius, p[2] - radius),
+                        Point::new(p[0] + radius, p[1] + radius, p[2] + radius),
+                    )),
+                    2 => QueryPredicate::intersects_ray(Ray::new(
+                        *p,
+                        Point::new(0.0, 0.0, 1.0),
+                    )),
+                    3 => QueryPredicate::attach(
+                        Spatial::IntersectsSphere(Sphere::new(*p, radius)),
+                        i as u64,
+                    ),
+                    _ => QueryPredicate::nearest(*p, 10),
+                };
+                let r = svc.query(pred);
+                if i % 5 == 3 {
+                    assert_eq!(r.data, Some(i as u64), "attachment payload echoed");
+                }
+                results += r.indices.len();
             }
             results
         }));
@@ -72,6 +104,14 @@ fn main() {
         (per_client * clients) as f64 / wall.as_secs_f64()
     );
     println!("service metrics: {}", svc.metrics().summary());
+    for kind in [PredicateKind::Sphere, PredicateKind::Box, PredicateKind::Ray] {
+        println!(
+            "adaptive buffer[{}]: {:?} (from {} samples)",
+            kind.name(),
+            svc.metrics().suggest_buffer(kind),
+            svc.metrics().result_histogram(kind).samples(),
+        );
+    }
 
     // ---- Layer 1/2: accelerator cross-check --------------------------
     #[cfg(not(feature = "accel"))]

@@ -1,0 +1,23 @@
+"""Hypothesis import shim shared by the kernel property tests: in the
+offline image (no hypothesis) the deterministic tests still run and the
+property tests self-skip."""
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # offline image
+
+    def settings(**_kw):
+        return lambda f: f
+
+    def given(**_kw):
+        return lambda f: pytest.mark.skip(reason="hypothesis not installed")(f)
+
+    class _MissingStrategies:
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _MissingStrategies()
+
+__all__ = ["given", "settings", "st"]

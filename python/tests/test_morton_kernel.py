@@ -2,20 +2,7 @@
 
 import numpy as np
 import pytest
-try:
-    from hypothesis import given, settings, strategies as st
-except ModuleNotFoundError:  # offline image: run the deterministic tests, skip the property ones
-    def settings(**_kw):
-        return lambda f: f
-
-    def given(**_kw):
-        return lambda f: pytest.mark.skip(reason="hypothesis not installed")(f)
-
-    class _MissingStrategies:
-        def __getattr__(self, _name):
-            return lambda *a, **k: None
-
-    st = _MissingStrategies()
+from tests.hypothesis_compat import given, settings, st  # noqa: F401
 
 from compile.kernels import morton, ref
 

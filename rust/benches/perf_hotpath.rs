@@ -9,16 +9,36 @@
 //! * query-layer engines over the filled workload: enum-facade CSR vs
 //!   monomorphized trait CSR vs callback streaming (no CSR
 //!   materialization) — snapshotted to `BENCH_query_layer.json` so the
-//!   perf trajectory of the trait refactor is recorded run over run.
+//!   perf trajectory of the trait refactor is recorded run over run;
+//! * per-kind sub-batching over the open wire family: a mixed
+//!   sphere/box/ray/attach/nearest batch through the per-query-dispatch
+//!   facade vs the service's kind-grouped sub-batcher, plus homogeneous
+//!   per-kind timings — appended to the same JSON snapshot.
 
 use std::sync::atomic::{AtomicU32, Ordering};
 
 use arbor::bench_util::{f, reps, time_median, write_json_snapshot, JsonValue, Table};
 use arbor::bvh::build::build_karras_profiled;
 use arbor::bvh::{Bvh, QueryOptions, QueryPredicate};
+use arbor::coordinator::metrics::Metrics;
+use arbor::coordinator::service::{execute_sub_batched, BufferPolicy};
 use arbor::data::workloads::{Case, Workload};
 use arbor::exec::ExecSpace;
-use arbor::geometry::predicates::{IntersectsSphere, Spatial};
+use arbor::geometry::predicates::{
+    attach, IntersectsBox, IntersectsRay, IntersectsSphere, Spatial, WithData,
+};
+use arbor::geometry::{Aabb, Point, Ray, Sphere};
+
+/// A ray from `p` toward the scene center (axis fallback for the
+/// degenerate center point).
+fn ray_towards(p: &Point, center: &Point) -> Ray {
+    let dir = *center - *p;
+    if dir.norm() < 1e-3 {
+        Ray::new(*p, Point::new(1.0, 0.0, 0.0))
+    } else {
+        Ray::new(*p, dir)
+    }
+}
 
 fn main() {
     let cores = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
@@ -132,6 +152,122 @@ fn main() {
         tab.row(&[name.to_string(), f(t), f(typed.len() as f64 / t / 1e6)]);
     }
     tab.write_csv();
+
+    // --- per-kind sub-batching over the open wire family ---------------
+    // Mixed client traffic: round-robin sphere/box/ray/attach/nearest
+    // wire predicates over the target points. The facade engine executes
+    // the mix with one enum dispatch per query; the service's
+    // sub-batcher splits by kind and dispatches once per sub-batch onto
+    // the monomorphized engines.
+    let radius = w.radius;
+    let center = bvh.scene_box().centroid();
+    let targets = &w.targets.points;
+    let mixed: Vec<QueryPredicate> = targets
+        .iter()
+        .enumerate()
+        .map(|(i, p)| match i % 5 {
+            0 => QueryPredicate::intersects_sphere(*p, radius),
+            1 => QueryPredicate::intersects_box(Aabb::new(
+                Point::new(p[0] - radius, p[1] - radius, p[2] - radius),
+                Point::new(p[0] + radius, p[1] + radius, p[2] + radius),
+            )),
+            2 => QueryPredicate::intersects_ray(ray_towards(p, &center)),
+            3 => QueryPredicate::attach(
+                Spatial::IntersectsSphere(Sphere::new(*p, radius)),
+                i as u64,
+            ),
+            _ => QueryPredicate::nearest(*p, 10),
+        })
+        .collect();
+
+    let t_mixed_facade = time_median(r, || {
+        std::hint::black_box(bvh.query(&space, &mixed, &opts));
+    });
+    // Both sides run the 2P strategy so 1P-vs-2P buffering stays out of
+    // the delta. Note the sub-batched side is the service's *full*
+    // executor: it also pays per-query result scatter and histogram
+    // recording the facade does not, so this row is the end-to-end
+    // service-executor cost; the homogeneous per-kind rows below (pure
+    // CSR engine calls) are what isolate monomorphized dispatch.
+    let sub_metrics = Metrics::default();
+    let t_mixed_sub = time_median(r, || {
+        std::hint::black_box(execute_sub_batched(
+            &bvh,
+            &space,
+            &mixed,
+            BufferPolicy::TwoPass,
+            true,
+            &sub_metrics,
+        ));
+    });
+
+    // Homogeneous per-kind sub-batches on the monomorphized engines.
+    let spheres: Vec<IntersectsSphere> = targets
+        .iter()
+        .step_by(5)
+        .map(|p| IntersectsSphere(Sphere::new(*p, radius)))
+        .collect();
+    let boxes_preds: Vec<IntersectsBox> = targets
+        .iter()
+        .skip(1)
+        .step_by(5)
+        .map(|p| {
+            IntersectsBox(Aabb::new(
+                Point::new(p[0] - radius, p[1] - radius, p[2] - radius),
+                Point::new(p[0] + radius, p[1] + radius, p[2] + radius),
+            ))
+        })
+        .collect();
+    let rays: Vec<IntersectsRay> = targets
+        .iter()
+        .skip(2)
+        .step_by(5)
+        .map(|p| IntersectsRay(ray_towards(p, &center)))
+        .collect();
+    let attached: Vec<WithData<IntersectsSphere, u64>> = targets
+        .iter()
+        .skip(3)
+        .step_by(5)
+        .enumerate()
+        .map(|(i, p)| attach(IntersectsSphere(Sphere::new(*p, radius)), i as u64))
+        .collect();
+    let nearest: Vec<QueryPredicate> = targets
+        .iter()
+        .skip(4)
+        .step_by(5)
+        .map(|p| QueryPredicate::nearest(*p, 10))
+        .collect();
+
+    let t_sphere = time_median(r, || {
+        std::hint::black_box(bvh.query_spatial(&space, &spheres, &opts));
+    });
+    let t_box = time_median(r, || {
+        std::hint::black_box(bvh.query_spatial(&space, &boxes_preds, &opts));
+    });
+    let t_ray = time_median(r, || {
+        std::hint::black_box(bvh.query_spatial(&space, &rays, &opts));
+    });
+    let t_attach = time_median(r, || {
+        std::hint::black_box(bvh.query_spatial(&space, &attached, &opts));
+    });
+    let t_nearest = time_median(r, || {
+        std::hint::black_box(bvh.query(&space, &nearest, &opts));
+    });
+
+    let mut tab = Table::new("perf_kind_subbatch", &["kind", "queries", "time_s", "Mq_per_s"]);
+    for (name, n, t) in [
+        ("mixed_facade", mixed.len(), t_mixed_facade),
+        ("mixed_subbatched", mixed.len(), t_mixed_sub),
+        ("sphere", spheres.len(), t_sphere),
+        ("box", boxes_preds.len(), t_box),
+        ("ray", rays.len(), t_ray),
+        ("attach_sphere", attached.len(), t_attach),
+        ("nearest", nearest.len(), t_nearest),
+    ] {
+        tab.row(&[name.to_string(), n.to_string(), f(t), f(n as f64 / t / 1e6)]);
+    }
+    tab.write_csv();
+
     write_json_snapshot(
         "BENCH_query_layer.json",
         &[
@@ -144,6 +280,18 @@ fn main() {
             ("csr_trait_s", JsonValue::Num(t_trait)),
             ("callback_s", JsonValue::Num(t_callback)),
             ("callback_speedup_vs_facade", JsonValue::Num(t_facade / t_callback)),
+            ("mixed_queries", JsonValue::Int(mixed.len() as u64)),
+            ("mixed_facade_s", JsonValue::Num(t_mixed_facade)),
+            ("mixed_subbatched_s", JsonValue::Num(t_mixed_sub)),
+            (
+                "service_exec_speedup_vs_facade",
+                JsonValue::Num(t_mixed_facade / t_mixed_sub),
+            ),
+            ("subbatch_sphere_s", JsonValue::Num(t_sphere)),
+            ("subbatch_box_s", JsonValue::Num(t_box)),
+            ("subbatch_ray_s", JsonValue::Num(t_ray)),
+            ("subbatch_attach_sphere_s", JsonValue::Num(t_attach)),
+            ("subbatch_nearest_s", JsonValue::Num(t_nearest)),
         ],
     );
 }

@@ -56,7 +56,13 @@ impl KdTree {
     }
 
     /// Recursively splits `indices[begin..end)`; returns the node id.
-    fn build_recursive(&mut self, indices: &mut [u32], begin: usize, end: usize, bounds: &Aabb) -> u32 {
+    fn build_recursive(
+        &mut self,
+        indices: &mut [u32],
+        begin: usize,
+        end: usize,
+        bounds: &Aabb,
+    ) -> u32 {
         let count = end - begin;
         if count <= LEAF_MAX_SIZE {
             self.nodes.push(Node::Leaf { begin: begin as u32, end: end as u32 });

@@ -111,7 +111,8 @@ pub fn build_apetrei(space: &ExecSpace, boxes: &[Aabb]) -> Bvh {
                 // subtrees compact). Parent internal node index = the
                 // boundary position.
                 let go_right = first == 0
-                    || (last != n - 1 && split_level(codes_ref, last) > split_level(codes_ref, first - 1));
+                    || (last != n - 1
+                        && split_level(codes_ref, last) > split_level(codes_ref, first - 1));
                 let parent = if go_right { last } else { first - 1 };
 
                 // Publish our child slot *before* the swap so the sibling

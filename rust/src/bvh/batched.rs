@@ -28,9 +28,12 @@
 //!   bound, §2 — skipping the result writes removes the largest store
 //!   stream);
 //! * the **facade layer** ([`run_queries`], over [`QueryPredicate`])
-//!   keeps the closed enum wire format for mixed spatial/nearest batches
-//!   (the coordinator service); it dispatches each query *once* onto the
-//!   generic layer, so the per-node hot loop stays enum-free.
+//!   executes the open tagged wire family (sphere/box/ray, attachments,
+//!   nearest) in arbitrary mixes; it dispatches each query *once* onto
+//!   the generic layer, so the per-node hot loop stays enum-free. The
+//!   coordinator service goes one step further and sub-batches a flushed
+//!   batch by [`PredicateKind`], dispatching *once per sub-batch* (see
+//!   [`crate::coordinator::service::execute_sub_batched`]).
 
 use super::nearest::{nearest_stack, NearestScratch, Neighbor};
 use super::traversal::{count_spatial, for_each_spatial};
@@ -38,17 +41,82 @@ use super::Bvh;
 use crate::exec::scan::{exclusive_scan, SendPtr};
 use crate::exec::{sort, ExecSpace};
 use crate::geometry::predicates::{
-    IntersectsBox, IntersectsSphere, Nearest, Spatial, SpatialPredicate,
+    IntersectsBox, IntersectsRay, IntersectsSphere, Nearest, Spatial, SpatialPredicate,
 };
-use crate::geometry::{morton, Aabb, Point, Sphere};
+use crate::geometry::{morton, Aabb, Point, Ray, Sphere};
 
-/// One search query: spatial ("all within") or nearest ("k closest").
+/// One wire-format search query — the open tagged predicate family of the
+/// coordinator protocol. Every variant carries a serializable payload;
+/// [`QueryPredicate::kind`] exposes the tag the service sub-batches on.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum QueryPredicate {
-    /// Spatial query (radius or box overlap).
+    /// Spatial query (sphere, box, or ray region).
     Spatial(Spatial),
+    /// Spatial query with an attached per-query payload (ArborX `attach`):
+    /// executes exactly like the inner predicate; the payload rides along
+    /// on the monomorphized [`crate::geometry::predicates::WithData`]
+    /// wrapper and is echoed back with the results.
+    Attach(Spatial, u64),
     /// k-nearest-neighbors query.
     Nearest(Nearest),
+}
+
+/// The kind tag of a wire predicate: the sub-batching key of the
+/// coordinator service. Each tag maps onto exactly one monomorphized
+/// instantiation of the generic engines, so a kind-homogeneous batch
+/// never pays per-node enum dispatch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PredicateKind {
+    /// [`Spatial::IntersectsSphere`].
+    Sphere,
+    /// [`Spatial::IntersectsBox`].
+    Box,
+    /// [`Spatial::IntersectsRay`].
+    Ray,
+    /// Sphere with attachment.
+    AttachSphere,
+    /// Box with attachment.
+    AttachBox,
+    /// Ray with attachment.
+    AttachRay,
+    /// k-NN query.
+    Nearest,
+}
+
+impl PredicateKind {
+    /// Number of kinds (size of per-kind tables).
+    pub const COUNT: usize = 7;
+
+    /// Every kind, in sub-batch execution order.
+    pub const ALL: [PredicateKind; PredicateKind::COUNT] = [
+        PredicateKind::Sphere,
+        PredicateKind::Box,
+        PredicateKind::Ray,
+        PredicateKind::AttachSphere,
+        PredicateKind::AttachBox,
+        PredicateKind::AttachRay,
+        PredicateKind::Nearest,
+    ];
+
+    /// Dense index for per-kind tables (declaration order, which
+    /// [`PredicateKind::ALL`] mirrors — checked by a unit test).
+    #[inline]
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    /// Stable lowercase name (metrics, bench output).
+    pub fn name(self) -> &'static str {
+        match self {
+            PredicateKind::Sphere => "sphere",
+            PredicateKind::Box => "box",
+            PredicateKind::Ray => "ray",
+            PredicateKind::AttachSphere => "attach_sphere",
+            PredicateKind::AttachBox => "attach_box",
+            PredicateKind::AttachRay => "attach_ray",
+            PredicateKind::Nearest => "nearest",
+        }
+    }
 }
 
 impl QueryPredicate {
@@ -62,16 +130,50 @@ impl QueryPredicate {
         QueryPredicate::Spatial(Spatial::IntersectsBox(b))
     }
 
+    /// Ray search: all objects whose box is hit by `r`.
+    pub fn intersects_ray(r: Ray) -> Self {
+        QueryPredicate::Spatial(Spatial::IntersectsRay(r))
+    }
+
+    /// Attaches a wire payload to a spatial predicate; the service echoes
+    /// it back in the query's result.
+    pub fn attach(pred: Spatial, data: u64) -> Self {
+        QueryPredicate::Attach(pred, data)
+    }
+
     /// k-NN search around `point`.
     pub fn nearest(point: Point, k: usize) -> Self {
         QueryPredicate::Nearest(Nearest { point, k })
+    }
+
+    /// The kind tag this predicate sub-batches under.
+    #[inline]
+    pub fn kind(&self) -> PredicateKind {
+        match self {
+            QueryPredicate::Spatial(Spatial::IntersectsSphere(_)) => PredicateKind::Sphere,
+            QueryPredicate::Spatial(Spatial::IntersectsBox(_)) => PredicateKind::Box,
+            QueryPredicate::Spatial(Spatial::IntersectsRay(_)) => PredicateKind::Ray,
+            QueryPredicate::Attach(Spatial::IntersectsSphere(_), _) => PredicateKind::AttachSphere,
+            QueryPredicate::Attach(Spatial::IntersectsBox(_), _) => PredicateKind::AttachBox,
+            QueryPredicate::Attach(Spatial::IntersectsRay(_), _) => PredicateKind::AttachRay,
+            QueryPredicate::Nearest(_) => PredicateKind::Nearest,
+        }
+    }
+
+    /// The attached payload, if this is an attachment query.
+    #[inline]
+    pub fn data(&self) -> Option<u64> {
+        match self {
+            QueryPredicate::Attach(_, d) => Some(*d),
+            _ => None,
+        }
     }
 
     /// Representative location, used for Morton query ordering.
     #[inline]
     pub fn origin(&self) -> Point {
         match self {
-            QueryPredicate::Spatial(s) => s.origin(),
+            QueryPredicate::Spatial(s) | QueryPredicate::Attach(s, _) => s.origin(),
             QueryPredicate::Nearest(n) => n.point,
         }
     }
@@ -359,7 +461,7 @@ fn spatial_1p<P: SpatialPredicate + Sync>(
 }
 
 // ---------------------------------------------------------------------
-// Facade layer: the closed QueryPredicate enum for mixed batches.
+// Facade layer: the tagged QueryPredicate family for mixed batches.
 // ---------------------------------------------------------------------
 
 /// Executes a batch of facade queries against the BVH. Spatial and
@@ -390,6 +492,7 @@ fn count_enum(bvh: &Bvh, s: &Spatial, stack: &mut Vec<super::NodeRef>) -> u32 {
     match s {
         Spatial::IntersectsSphere(sp) => count_spatial(bvh, &IntersectsSphere(*sp), stack),
         Spatial::IntersectsBox(b) => count_spatial(bvh, &IntersectsBox(*b), stack),
+        Spatial::IntersectsRay(r) => count_spatial(bvh, &IntersectsRay(*r), stack),
     }
 }
 
@@ -407,6 +510,7 @@ fn for_each_enum<F: FnMut(u32)>(
             for_each_spatial(bvh, &IntersectsSphere(*sp), stack, visit)
         }
         Spatial::IntersectsBox(b) => for_each_spatial(bvh, &IntersectsBox(*b), stack, visit),
+        Spatial::IntersectsRay(r) => for_each_spatial(bvh, &IntersectsRay(*r), stack, visit),
     }
 }
 
@@ -424,7 +528,9 @@ fn run_2p(bvh: &Bvh, space: &ExecSpace, queries: &[QueryPredicate], order: &[u32
             for pos in b..e {
                 let orig = order[pos] as usize;
                 let count = match &queries[orig] {
-                    QueryPredicate::Spatial(s) => count_enum(bvh, s, &mut stack),
+                    QueryPredicate::Spatial(s) | QueryPredicate::Attach(s, _) => {
+                        count_enum(bvh, s, &mut stack)
+                    }
                     // §2.2.2: for nearest queries the result count is known
                     // in advance (min(k, n)) — no counting traversal needed.
                     QueryPredicate::Nearest(nst) => nst.k.min(bvh.len()) as u32,
@@ -454,7 +560,7 @@ fn run_2p(bvh: &Bvh, space: &ExecSpace, queries: &[QueryPredicate], order: &[u32
                 let orig = order[pos] as usize;
                 let base = offsets_ref[orig] as usize;
                 match &queries[orig] {
-                    QueryPredicate::Spatial(s) => {
+                    QueryPredicate::Spatial(s) | QueryPredicate::Attach(s, _) => {
                         let mut cursor = base;
                         for_each_enum(bvh, s, &mut stack, |obj| {
                             // SAFETY: [base, offsets[orig+1]) is owned by
@@ -515,7 +621,7 @@ fn run_1p(
                 let base = orig * buffer;
                 let mut count = 0usize;
                 match &queries[orig] {
-                    QueryPredicate::Spatial(s) => {
+                    QueryPredicate::Spatial(s) | QueryPredicate::Attach(s, _) => {
                         for_each_enum(bvh, s, &mut stack, |obj| {
                             if count < buffer {
                                 // SAFETY: this query owns [base, base+buffer).
@@ -581,7 +687,7 @@ fn run_1p(
                     // storage (spatial only — nearest can't overflow: its
                     // count is ≤ k ≤ buffer or handled by the same path).
                     match &queries[orig] {
-                        QueryPredicate::Spatial(s) => {
+                        QueryPredicate::Spatial(s) | QueryPredicate::Attach(s, _) => {
                             let mut cursor = base;
                             for_each_enum(bvh, s, &mut stack, |obj| {
                                 unsafe { ip.write(cursor, obj) };
@@ -807,6 +913,63 @@ mod tests {
         let out = bvh.query(&space, &queries, &QueryOptions::default());
         assert_eq!(out.results_for(0).len(), 3);
         assert_eq!(out.results_for(1).len(), 4); // origin + 3 axis neighbors
+    }
+
+    #[test]
+    fn facade_executes_every_wire_kind() {
+        // The open wire family (sphere/box/ray/attach/nearest) runs
+        // through the facade engines under both strategies.
+        let space = ExecSpace::with_threads(2);
+        let pts = grid_points(6);
+        let bvh = build(&pts, &space);
+        let ray = Ray::new(Point::new(-1.0, 2.0, 3.0), Point::new(1.0, 0.0, 0.0));
+        let queries = vec![
+            QueryPredicate::intersects_sphere(Point::new(2.0, 2.0, 2.0), 1.1),
+            QueryPredicate::intersects_box(Aabb::new(Point::origin(), Point::splat(1.0))),
+            QueryPredicate::intersects_ray(ray),
+            QueryPredicate::attach(Spatial::IntersectsRay(ray), 99),
+            QueryPredicate::nearest(Point::origin(), 4),
+        ];
+        assert_eq!(queries[3].kind(), PredicateKind::AttachRay);
+        assert_eq!(queries[3].data(), Some(99));
+        assert_eq!(queries[3].origin(), ray.origin);
+        for opts in [
+            QueryOptions { buffer_size: None, sort_queries: true },
+            QueryOptions { buffer_size: Some(2), sort_queries: false },
+        ] {
+            let out = bvh.query(&space, &queries, &opts);
+            assert_eq!(out.results_for(0).len(), 7); // center + 6 face neighbors
+            assert_eq!(out.results_for(1).len(), 8); // unit-cube corner block
+            assert_eq!(out.results_for(2).len(), 6); // the y=2, z=3 grid row
+            // Attachment executes exactly like its inner predicate.
+            assert_eq!(
+                sorted(out.results_for(2).to_vec()),
+                sorted(out.results_for(3).to_vec())
+            );
+            assert_eq!(out.results_for(4).len(), 4);
+        }
+    }
+
+    #[test]
+    fn kind_tags_cover_the_family() {
+        let ray = Ray::new(Point::origin(), Point::new(0.0, 1.0, 0.0));
+        let b = Aabb::new(Point::origin(), Point::splat(1.0));
+        let preds = [
+            QueryPredicate::intersects_sphere(Point::origin(), 1.0),
+            QueryPredicate::intersects_box(b),
+            QueryPredicate::intersects_ray(ray),
+            QueryPredicate::attach(
+                Spatial::IntersectsSphere(Sphere::new(Point::origin(), 1.0)),
+                1,
+            ),
+            QueryPredicate::attach(Spatial::IntersectsBox(b), 2),
+            QueryPredicate::attach(Spatial::IntersectsRay(ray), 3),
+            QueryPredicate::nearest(Point::origin(), 1),
+        ];
+        for (i, (p, kind)) in preds.iter().zip(PredicateKind::ALL).enumerate() {
+            assert_eq!(p.kind(), kind);
+            assert_eq!(kind.index(), i, "{}", kind.name());
+        }
     }
 
     #[test]

@@ -404,7 +404,9 @@ mod tests {
 
     #[test]
     fn structure_is_valid_for_grids() {
-        for (space_name, space) in [("serial", ExecSpace::serial()), ("par", ExecSpace::with_threads(4))] {
+        for (space_name, space) in
+            [("serial", ExecSpace::serial()), ("par", ExecSpace::with_threads(4))]
+        {
             for (nx, ny, nz) in [(2, 1, 1), (3, 3, 1), (7, 5, 3), (16, 16, 4)] {
                 let boxes = grid_boxes(nx, ny, nz);
                 let t = Bvh::build(&space, &boxes);

@@ -24,7 +24,7 @@ pub mod nearest;
 pub mod stats;
 pub mod traversal;
 
-pub use batched::{QueryOptions, QueryOutput, QueryPredicate};
+pub use batched::{PredicateKind, QueryOptions, QueryOutput, QueryPredicate};
 
 use crate::exec::ExecSpace;
 use crate::geometry::predicates::SpatialPredicate;
@@ -143,11 +143,13 @@ impl Bvh {
         }
     }
 
-    /// Executes a batch of facade queries (mixed spatial/nearest),
-    /// returning CSR results. This is the enum-based entry point,
-    /// mirroring `ArborX::BVH::query(queries, indices, offsets)`; it is
-    /// the wire format of the coordinator service and dispatches each
-    /// query once onto the monomorphized trait engines.
+    /// Executes a batch of wire-format queries (any mix of the open
+    /// family: sphere/box/ray, attachments, nearest), returning CSR
+    /// results. This is the enum-based entry point, mirroring
+    /// `ArborX::BVH::query(queries, indices, offsets)`; it dispatches
+    /// each query once onto the monomorphized trait engines. The
+    /// coordinator service instead splits batches by [`PredicateKind`]
+    /// and dispatches once per sub-batch.
     pub fn query(
         &self,
         space: &ExecSpace,

@@ -148,7 +148,7 @@ pub fn access_matrix(bvh: &Bvh, queries: &[QueryPredicate], sort_queries: bool) 
     for &qi in &order {
         let mut row: Vec<u32> = Vec::new();
         match &queries[qi as usize] {
-            QueryPredicate::Spatial(s) => {
+            QueryPredicate::Spatial(s) | QueryPredicate::Attach(s, _) => {
                 for_each_spatial_monitored(bvh, s, &mut stack, |_| {}, |node| row.push(node));
             }
             QueryPredicate::Nearest(n) => {

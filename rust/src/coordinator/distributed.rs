@@ -16,9 +16,11 @@
 
 use crate::bvh::nearest::{KnnHeap, Neighbor, NearestScratch};
 use crate::bvh::traversal::for_each_spatial;
-use crate::bvh::{nearest, Bvh};
+use crate::bvh::{nearest, Bvh, QueryPredicate};
 use crate::exec::ExecSpace;
-use crate::geometry::predicates::{Nearest, SpatialPredicate};
+use crate::geometry::predicates::{
+    IntersectsBox, IntersectsRay, IntersectsSphere, Nearest, Spatial, SpatialPredicate,
+};
 use crate::geometry::{Aabb, Point};
 
 /// One rank's shard: a local tree plus the map back to global indices.
@@ -48,7 +50,12 @@ pub enum Partition {
 
 impl DistributedTree {
     /// Partitions `boxes` over `n_ranks` ranks and builds all trees.
-    pub fn build(space: &ExecSpace, boxes: &[Aabb], n_ranks: usize, partition: Partition) -> DistributedTree {
+    pub fn build(
+        space: &ExecSpace,
+        boxes: &[Aabb],
+        n_ranks: usize,
+        partition: Partition,
+    ) -> DistributedTree {
         assert!(n_ranks >= 1);
         let n = boxes.len();
         // Assign a rank to each object.
@@ -119,6 +126,39 @@ impl DistributedTree {
         out.sort();
         let stats = DistStats { ranks_contacted: ranks.len(), results: out.len() };
         (out, stats)
+    }
+
+    /// Wire-level entry point: executes one open-family predicate. All
+    /// spatial kinds — ray and attachment queries included — go through
+    /// the two-phase forward/merge path; nearest goes through the
+    /// closest-rank-first refinement. The enum is matched *once per
+    /// query*, selecting the monomorphized forward/merge instance, so
+    /// the distributed layer accepts everything the service protocol
+    /// carries. Returns (global indices, squared distances — nearest
+    /// only, stats).
+    pub fn query_predicate(&self, pred: &QueryPredicate) -> (Vec<u32>, Vec<f32>, DistStats) {
+        match pred {
+            QueryPredicate::Spatial(s) | QueryPredicate::Attach(s, _) => {
+                let (indices, stats) = self.spatial_enum(s);
+                (indices, Vec::new(), stats)
+            }
+            QueryPredicate::Nearest(n) => {
+                let (neighbors, stats) = self.nearest(&n.point, n.k);
+                let indices = neighbors.iter().map(|nb| nb.index).collect();
+                let distances = neighbors.iter().map(|nb| nb.distance_squared).collect();
+                (indices, distances, stats)
+            }
+        }
+    }
+
+    /// One enum dispatch selecting the monomorphized forward/merge
+    /// instance for a wire spatial kind.
+    fn spatial_enum(&self, s: &Spatial) -> (Vec<u32>, DistStats) {
+        match s {
+            Spatial::IntersectsSphere(sp) => self.spatial(&IntersectsSphere(*sp)),
+            Spatial::IntersectsBox(b) => self.spatial(&IntersectsBox(*b)),
+            Spatial::IntersectsRay(r) => self.spatial(&IntersectsRay(*r)),
+        }
     }
 
     /// Distributed k-NN: phase 1 queries the *closest* rank to seed the
@@ -290,6 +330,40 @@ mod tests {
             assert_eq!(got, brute.spatial(&pred));
             assert!(stats.ranks_contacted <= 6);
         }
+    }
+
+    #[test]
+    fn wire_family_flows_through_forward_merge() {
+        // Every kind of the service wire format executes distributed and
+        // matches the oracle / single-tree answers.
+        let space = ExecSpace::serial();
+        let boxes = cloud(1500, 41);
+        let brute = BruteForce::new(&boxes);
+        let dt = DistributedTree::build(&space, &boxes, 5, Partition::MortonBlock);
+        let ray = Ray::new(Point::new(-9.0, 0.1, 0.2), Point::new(1.0, 0.0, 0.0));
+        let sphere = Sphere::new(Point::new(1.0, -2.0, 3.0), 2.5);
+        let region = Aabb::new(Point::splat(-3.0), Point::splat(0.5));
+        let wire_sphere = Spatial::IntersectsSphere(sphere);
+        let wire_box = Spatial::IntersectsBox(region);
+        let wire_ray = Spatial::IntersectsRay(ray);
+        for (pred, spatial) in [
+            (QueryPredicate::Spatial(wire_sphere), wire_sphere),
+            (QueryPredicate::intersects_box(region), wire_box),
+            (QueryPredicate::intersects_ray(ray), wire_ray),
+            (QueryPredicate::attach(wire_ray, 11), wire_ray),
+            (QueryPredicate::attach(wire_sphere, 5), wire_sphere),
+        ] {
+            let (got, distances, stats) = dt.query_predicate(&pred);
+            assert_eq!(got, brute.spatial(&spatial), "{pred:?}");
+            assert!(distances.is_empty());
+            assert!(stats.ranks_contacted <= 5);
+        }
+        let q = Point::new(0.5, 0.5, 0.5);
+        let (got, distances, _) = dt.query_predicate(&QueryPredicate::nearest(q, 8));
+        let want = brute.nearest(&q, 8);
+        assert_eq!(got.len(), 8);
+        let wd: Vec<f32> = want.iter().map(|n| n.distance_squared).collect();
+        assert_eq!(distances, wd);
     }
 
     #[test]

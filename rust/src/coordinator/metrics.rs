@@ -1,8 +1,127 @@
-//! Service metrics: request counts, latency quantiles, throughput.
+//! Service metrics: request counts, latency quantiles, throughput, and
+//! the per-kind result-count histograms that drive the adaptive 1P
+//! buffer policy.
+//!
+//! The histograms use power-of-two buckets with lock-free recording
+//! (batcher worker threads record concurrently). The adaptive policy
+//! ([`Metrics::suggest_buffer`]) picks a per-kind
+//! `QueryOptions::buffer_size` from a high quantile of the running
+//! histogram, with one bucket of headroom and a hard cap — the
+//! §3.2 hollow-case pathology (a few monster queries must not inflate
+//! every query's slot allocation, and a mis-sized static buffer must not
+//! force mass second-pass fallbacks) is the motivating failure.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
+
+use crate::bvh::PredicateKind;
+
+/// Minimum per-kind samples before the adaptive policy trusts the
+/// histogram; colder kinds keep running the 2P strategy.
+pub const ADAPTIVE_MIN_SAMPLES: u64 = 64;
+
+/// The quantile of the result-count distribution the adaptive 1P buffer
+/// targets. High enough that fallback second passes are rare, but
+/// percentile-based so a vanishing fraction of monster queries cannot
+/// dictate the allocation.
+pub const ADAPTIVE_QUANTILE: f64 = 0.999;
+
+/// Hard cap on the adaptive buffer: per-query slots never exceed this,
+/// bounding a sub-batch's 1P allocation at `max_batch * cap` no matter
+/// how heavy the observed tail is (hollow-case safety).
+pub const ADAPTIVE_MAX_BUFFER: usize = 4096;
+
+/// Maximum retained latency samples (reservoir truncates beyond this).
+const MAX_SAMPLES: usize = 1 << 20;
+
+/// Number of histogram buckets (covers every `u32` result count).
+const HISTOGRAM_BUCKETS: usize = 33;
+
+/// How a spatial sub-batch was executed (the pass-count probe).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubBatchPass {
+    /// 1P with a sufficient buffer: one traversal, no fallback.
+    OnePass,
+    /// 1P where at least one query overflowed its buffer and took the
+    /// second-traversal fallback of §2.2.1.
+    OnePassFallback,
+    /// 2P count-and-fill (two traversals by construction).
+    TwoPass,
+}
+
+/// A power-of-two result-count histogram with lock-free recording.
+///
+/// Bucket `0` counts queries with zero results; bucket `i >= 1` counts
+/// queries whose result count `c` satisfies `2^(i-1) <= c < 2^i` (upper
+/// bound `2^i - 1`). Counts at or above `2^32` clamp into the last
+/// bucket.
+#[derive(Debug)]
+pub struct ResultHistogram {
+    buckets: [AtomicU64; HISTOGRAM_BUCKETS],
+}
+
+impl Default for ResultHistogram {
+    fn default() -> Self {
+        ResultHistogram { buckets: std::array::from_fn(|_| AtomicU64::new(0)) }
+    }
+}
+
+impl ResultHistogram {
+    /// Number of buckets (covers every `u32` result count).
+    pub const BUCKETS: usize = HISTOGRAM_BUCKETS;
+
+    /// The bucket a result count lands in.
+    #[inline]
+    pub fn bucket_of(count: u64) -> usize {
+        (64 - count.leading_zeros() as usize).min(Self::BUCKETS - 1)
+    }
+
+    /// The largest count bucket `i` covers.
+    #[inline]
+    pub fn upper_bound(i: usize) -> u64 {
+        if i == 0 {
+            0
+        } else {
+            (1u64 << i) - 1
+        }
+    }
+
+    /// Records one query's result count (thread-safe, lock-free).
+    #[inline]
+    pub fn record(&self, count: u64) {
+        self.buckets[Self::bucket_of(count)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total recorded samples.
+    pub fn samples(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// A snapshot of the bucket counts.
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Upper bound of the smallest bucket whose cumulative sample share
+    /// reaches quantile `q` (0 when the histogram is empty).
+    pub fn percentile(&self, q: f64) -> u64 {
+        let counts = self.bucket_counts();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, c) in counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return Self::upper_bound(i);
+            }
+        }
+        Self::upper_bound(Self::BUCKETS - 1)
+    }
+}
 
 /// Rolling metrics for a search service.
 #[derive(Debug)]
@@ -11,12 +130,19 @@ pub struct Metrics {
     requests: AtomicU64,
     batches: AtomicU64,
     results: AtomicU64,
+    /// Per-kind result-count histograms (adaptive-buffer input).
+    result_counts: [ResultHistogram; PredicateKind::COUNT],
+    /// Sub-batches executed 1P without any overflow.
+    one_pass_batches: AtomicU64,
+    /// Sub-batches executed 1P where the fallback second pass ran.
+    fallback_batches: AtomicU64,
+    /// Sub-batches executed 2P (including adaptive cold starts).
+    two_pass_batches: AtomicU64,
+    /// Individual queries that overflowed their 1P buffer.
+    overflowed_queries: AtomicU64,
     /// Per-request latencies in microseconds (bounded reservoir).
     latencies_us: Mutex<Vec<u64>>,
 }
-
-/// Maximum retained latency samples (reservoir truncates beyond this).
-const MAX_SAMPLES: usize = 1 << 20;
 
 impl Default for Metrics {
     fn default() -> Self {
@@ -25,6 +151,11 @@ impl Default for Metrics {
             requests: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             results: AtomicU64::new(0),
+            result_counts: std::array::from_fn(|_| ResultHistogram::default()),
+            one_pass_batches: AtomicU64::new(0),
+            fallback_batches: AtomicU64::new(0),
+            two_pass_batches: AtomicU64::new(0),
+            overflowed_queries: AtomicU64::new(0),
             latencies_us: Mutex::new(Vec::new()),
         }
     }
@@ -45,6 +176,48 @@ impl Metrics {
         }
     }
 
+    /// Records one executed sub-batch of `kind`: every query's result
+    /// count feeds the kind's histogram, plus the pass-count probes.
+    pub fn record_sub_batch(
+        &self,
+        kind: PredicateKind,
+        counts: &[u64],
+        overflowed: u64,
+        pass: SubBatchPass,
+    ) {
+        let h = &self.result_counts[kind.index()];
+        for &c in counts {
+            h.record(c);
+        }
+        self.overflowed_queries.fetch_add(overflowed, Ordering::Relaxed);
+        let probe = match pass {
+            SubBatchPass::OnePass => &self.one_pass_batches,
+            SubBatchPass::OnePassFallback => &self.fallback_batches,
+            SubBatchPass::TwoPass => &self.two_pass_batches,
+        };
+        probe.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The running result-count histogram of `kind`.
+    pub fn result_histogram(&self, kind: PredicateKind) -> &ResultHistogram {
+        &self.result_counts[kind.index()]
+    }
+
+    /// The adaptive 1P buffer for `kind`: `None` (run 2P) until the kind
+    /// has [`ADAPTIVE_MIN_SAMPLES`] observations, then the
+    /// [`ADAPTIVE_QUANTILE`] bucket bound with one bucket of headroom,
+    /// capped at [`ADAPTIVE_MAX_BUFFER`].
+    pub fn suggest_buffer(&self, kind: PredicateKind) -> Option<usize> {
+        let h = &self.result_counts[kind.index()];
+        if h.samples() < ADAPTIVE_MIN_SAMPLES {
+            return None;
+        }
+        let p = h.percentile(ADAPTIVE_QUANTILE);
+        // One bucket of headroom: 2^i - 1 -> 2^(i+1) - 1.
+        let buffer = (2 * p + 1).min(ADAPTIVE_MAX_BUFFER as u64);
+        Some(buffer.max(1) as usize)
+    }
+
     /// Total requests served.
     pub fn requests(&self) -> u64 {
         self.requests.load(Ordering::Relaxed)
@@ -58,6 +231,27 @@ impl Metrics {
     /// Total result indices returned.
     pub fn results(&self) -> u64 {
         self.results.load(Ordering::Relaxed)
+    }
+
+    /// Sub-batches that ran 1P and never overflowed.
+    pub fn one_pass_batches(&self) -> u64 {
+        self.one_pass_batches.load(Ordering::Relaxed)
+    }
+
+    /// Sub-batches that ran 1P and took the fallback second pass for at
+    /// least one overflowed query (§2.2.1).
+    pub fn fallback_batches(&self) -> u64 {
+        self.fallback_batches.load(Ordering::Relaxed)
+    }
+
+    /// Sub-batches that ran the two-pass strategy.
+    pub fn two_pass_batches(&self) -> u64 {
+        self.two_pass_batches.load(Ordering::Relaxed)
+    }
+
+    /// Individual queries that overflowed their 1P buffer.
+    pub fn overflowed_queries(&self) -> u64 {
+        self.overflowed_queries.load(Ordering::Relaxed)
     }
 
     /// Requests per second since service start.
@@ -85,14 +279,18 @@ impl Metrics {
     pub fn summary(&self) -> String {
         let (p50, p95, p99) = self.latency_quantiles();
         format!(
-            "requests={} batches={} results={} throughput={:.0}/s p50={}us p95={}us p99={}us",
+            "requests={} batches={} results={} throughput={:.0}/s \
+             p50={}us p95={}us p99={}us passes(1p/fallback/2p)={}/{}/{}",
             self.requests(),
             self.batches(),
             self.results(),
             self.throughput(),
             p50,
             p95,
-            p99
+            p99,
+            self.one_pass_batches(),
+            self.fallback_batches(),
+            self.two_pass_batches(),
         )
     }
 }
@@ -100,6 +298,7 @@ impl Metrics {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::Arc;
 
     #[test]
     fn batch_recording_accumulates() {
@@ -119,5 +318,102 @@ mod tests {
         let m = Metrics::default();
         assert_eq!(m.latency_quantiles(), (0, 0, 0));
         assert_eq!(m.requests(), 0);
+        assert_eq!(m.one_pass_batches(), 0);
+        assert_eq!(m.overflowed_queries(), 0);
+        assert_eq!(m.result_histogram(PredicateKind::Sphere).samples(), 0);
+        assert_eq!(m.suggest_buffer(PredicateKind::Sphere), None);
+    }
+
+    #[test]
+    fn histogram_bucket_boundaries() {
+        // bucket_of: 0 -> 0; 1 -> 1; [2,3] -> 2; [4,7] -> 3; [8,15] -> 4.
+        assert_eq!(ResultHistogram::bucket_of(0), 0);
+        assert_eq!(ResultHistogram::bucket_of(1), 1);
+        assert_eq!(ResultHistogram::bucket_of(2), 2);
+        assert_eq!(ResultHistogram::bucket_of(3), 2);
+        assert_eq!(ResultHistogram::bucket_of(4), 3);
+        assert_eq!(ResultHistogram::bucket_of(7), 3);
+        assert_eq!(ResultHistogram::bucket_of(8), 4);
+        assert_eq!(ResultHistogram::bucket_of(u64::MAX), ResultHistogram::BUCKETS - 1);
+        assert_eq!(ResultHistogram::upper_bound(0), 0);
+        assert_eq!(ResultHistogram::upper_bound(1), 1);
+        assert_eq!(ResultHistogram::upper_bound(2), 3);
+        assert_eq!(ResultHistogram::upper_bound(3), 7);
+        // Every count's bucket covers it.
+        for c in [0u64, 1, 2, 3, 5, 8, 100, 4096, 1 << 20] {
+            assert!(ResultHistogram::upper_bound(ResultHistogram::bucket_of(c)) >= c, "{c}");
+        }
+        let h = ResultHistogram::default();
+        for c in [0u64, 1, 2, 3, 4, 7, 8] {
+            h.record(c);
+        }
+        let counts = h.bucket_counts();
+        assert_eq!(&counts[..5], &[1, 1, 2, 2, 1]);
+        assert_eq!(h.samples(), 7);
+    }
+
+    #[test]
+    fn histogram_percentile_extraction() {
+        let h = ResultHistogram::default();
+        assert_eq!(h.percentile(0.5), 0, "empty histogram");
+        // 90 queries with 1 result, 10 with 100 results (bucket 7, ub 127).
+        for _ in 0..90 {
+            h.record(1);
+        }
+        for _ in 0..10 {
+            h.record(100);
+        }
+        assert_eq!(h.percentile(0.0), 1);
+        assert_eq!(h.percentile(0.5), 1);
+        assert_eq!(h.percentile(0.9), 1);
+        assert_eq!(h.percentile(0.95), 127);
+        assert_eq!(h.percentile(1.0), 127);
+    }
+
+    #[test]
+    fn histogram_concurrent_recording() {
+        let h = Arc::new(ResultHistogram::default());
+        let threads = 8;
+        let per_thread = 1000u64;
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let h = Arc::clone(&h);
+                std::thread::spawn(move || {
+                    for _ in 0..per_thread {
+                        h.record(t as u64);
+                    }
+                })
+            })
+            .collect();
+        for handle in handles {
+            handle.join().unwrap();
+        }
+        assert_eq!(h.samples(), threads as u64 * per_thread);
+        let counts = h.bucket_counts();
+        // t=0 -> bucket 0; t=1 -> 1; t=2,3 -> 2; t=4..7 -> 3.
+        assert_eq!(counts[0], per_thread);
+        assert_eq!(counts[1], per_thread);
+        assert_eq!(counts[2], 2 * per_thread);
+        assert_eq!(counts[3], 4 * per_thread);
+    }
+
+    #[test]
+    fn adaptive_suggestion_needs_samples_then_tracks_the_tail() {
+        let m = Metrics::default();
+        let counts: Vec<u64> = vec![5; ADAPTIVE_MIN_SAMPLES as usize - 1];
+        m.record_sub_batch(PredicateKind::Ray, &counts, 0, SubBatchPass::TwoPass);
+        assert_eq!(m.suggest_buffer(PredicateKind::Ray), None, "still cold");
+        assert_eq!(m.suggest_buffer(PredicateKind::Sphere), None, "per-kind isolation");
+        m.record_sub_batch(PredicateKind::Ray, &[5], 0, SubBatchPass::TwoPass);
+        // count 5 -> bucket 3 (ub 7) -> one bucket headroom -> 15.
+        assert_eq!(m.suggest_buffer(PredicateKind::Ray), Some(15));
+        assert_eq!(m.two_pass_batches(), 2);
+        // A heavy tail above 2% moves the suggestion to the tail bucket,
+        // but never past the cap.
+        let monsters: Vec<u64> = vec![1 << 20; 64];
+        m.record_sub_batch(PredicateKind::Ray, &monsters, 3, SubBatchPass::OnePassFallback);
+        assert_eq!(m.suggest_buffer(PredicateKind::Ray), Some(ADAPTIVE_MAX_BUFFER));
+        assert_eq!(m.fallback_batches(), 1);
+        assert_eq!(m.overflowed_queries(), 3);
     }
 }

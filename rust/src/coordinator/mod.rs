@@ -6,16 +6,24 @@
 //! modern serving system would:
 //!
 //! * [`service`] — a request router + dynamic batcher over a built index:
-//!   clients submit single queries; the service coalesces them into
-//!   batches (bounded by size and timeout), executes them with the
-//!   batched engines of [`crate::bvh::batched`], and returns per-query
-//!   results with latency accounting.
-//! * [`metrics`] — latency/throughput counters (p50/p95/p99).
+//!   clients submit single queries from the open predicate family
+//!   (sphere/box/ray, attachments, nearest); the service coalesces them
+//!   into batches (bounded by size and timeout), sub-batches each batch
+//!   by predicate kind onto the monomorphized engines of
+//!   [`crate::bvh::batched`], and returns per-query results with latency
+//!   accounting.
+//! * [`wire`] — the byte-level tag + payload encoding of the predicate
+//!   family (the out-of-process transport of the same protocol).
+//! * [`metrics`] — latency/throughput counters (p50/p95/p99), per-kind
+//!   result-count histograms, and the adaptive 1P buffer policy fed by
+//!   them.
 //! * [`distributed`] — the paper's §4 outlook ("implementing the
 //!   distributed search algorithms using MPI"): a simulated multi-rank
 //!   distributed tree — per-rank BVHs plus a top-level tree over rank
-//!   scene boxes, with two-phase forward/merge query execution.
+//!   scene boxes, with two-phase forward/merge query execution carrying
+//!   every wire kind.
 
 pub mod distributed;
 pub mod metrics;
 pub mod service;
+pub mod wire;

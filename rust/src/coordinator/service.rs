@@ -1,18 +1,30 @@
-//! The search service: request router + dynamic batcher.
+//! The search service: request router + dynamic batcher over the open
+//! predicate family.
 //!
-//! Clients submit individual [`QueryPredicate`]s; a coordinator thread
-//! coalesces them into batches bounded by `max_batch` and
-//! `batch_timeout`, executes the batch with the BVH's batched engines
-//! (reaping the query-ordering and traversal-locality wins of §2.2), and
-//! delivers per-query results back through channels. This is the
-//! vLLM-router-shaped packaging of the paper's batched execution model.
+//! Clients submit individual [`QueryPredicate`]s — the *open tagged wire
+//! format*: a kind tag ([`PredicateKind`]) plus a serializable payload,
+//! covering sphere/box/ray regions, attachment queries (payload echoed
+//! back with the results, ArborX's `attach`), and k-NN. A coordinator
+//! thread coalesces submissions into batches bounded by `max_batch` and
+//! `batch_timeout`, then **sub-batches each flushed batch by kind**:
+//! every kind's queries are extracted into a typed vector and dispatched
+//! *once* onto the monomorphized engines ([`Bvh::query_spatial`] /
+//! [`Bvh::query`]), so the per-node hot loop never pays enum dispatch no
+//! matter how mixed the client traffic is (the §2.2 flexible-interface
+//! claim, served). [`super::wire`] supplies a byte-level tag + payload
+//! encoding of the same family for out-of-process clients
+//! ([`SearchService::submit_encoded`]).
 //!
-//! The wire format is the closed [`QueryPredicate`] enum — deliberately:
-//! a serializable protocol cannot carry arbitrary monomorphized types.
-//! Execution still reaps the trait layer's monomorphization because the
-//! facade dispatches each query once onto the generic engines
-//! (`bvh::batched`); extending the *protocol* with user-defined predicate
-//! kinds is a ROADMAP follow-on.
+//! The 1P/2P strategy choice is governed by [`BufferPolicy`]. The
+//! default, [`BufferPolicy::Adaptive`], replaces the static
+//! `QueryOptions` the service used to hold: per-kind result-count
+//! histograms accumulate in [`Metrics`], and each spatial sub-batch
+//! picks its `buffer_size` from a high quantile of the running histogram
+//! (capped, with headroom — see [`Metrics::suggest_buffer`]). Cold kinds
+//! run 2P until enough samples exist. This keeps the filled case on the
+//! fast single-pass path while staying safe on §3.2 hollow-style
+//! workloads, where a static buffer is either mis-sized (mass fallback
+//! second passes) or prohibitively large.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
@@ -20,9 +32,27 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use super::metrics::Metrics;
-use crate::bvh::{Bvh, QueryOptions, QueryPredicate};
+use super::metrics::{Metrics, SubBatchPass};
+use crate::bvh::{Bvh, PredicateKind, QueryOptions, QueryPredicate};
 use crate::exec::ExecSpace;
+use crate::geometry::predicates::{
+    attach, IntersectsBox, IntersectsRay, IntersectsSphere, Spatial, SpatialPredicate, WithData,
+};
+
+/// How spatial sub-batches choose between the 1P and 2P strategies.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BufferPolicy {
+    /// Two-pass count-and-fill for every sub-batch.
+    TwoPass,
+    /// Fixed 1P buffer for every spatial sub-batch — the pre-adaptive
+    /// static configuration; reproduces the §3.2 pathology when
+    /// mis-sized (see the pass-count probes in [`Metrics`]).
+    Static(usize),
+    /// Per-kind buffers from the running result-count histograms
+    /// ([`Metrics::suggest_buffer`]); sub-batches run 2P until their
+    /// kind has enough samples.
+    Adaptive,
+}
 
 /// Service tuning knobs.
 #[derive(Clone, Debug)]
@@ -31,8 +61,11 @@ pub struct ServiceConfig {
     pub max_batch: usize,
     /// Maximum time the first queued query waits for company.
     pub batch_timeout: Duration,
-    /// Batched-execution options (1P/2P, query ordering).
-    pub options: QueryOptions,
+    /// 1P/2P strategy selection for spatial sub-batches.
+    pub buffer_policy: BufferPolicy,
+    /// Pre-sort each sub-batch by Morton code of the query origins
+    /// (§2.2.3).
+    pub sort_queries: bool,
     /// Worker threads used to execute each batch.
     pub threads: usize,
 }
@@ -42,7 +75,8 @@ impl Default for ServiceConfig {
         ServiceConfig {
             max_batch: 1024,
             batch_timeout: Duration::from_millis(2),
-            options: QueryOptions::default(),
+            buffer_policy: BufferPolicy::Adaptive,
+            sort_queries: true,
             threads: std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1),
         }
     }
@@ -55,8 +89,22 @@ pub struct QueryResult {
     pub indices: Vec<u32>,
     /// Squared distances (nearest queries only).
     pub distances: Vec<f32>,
+    /// The attached payload, echoed back (attachment queries only).
+    pub data: Option<u64>,
     /// Submission-to-completion latency.
     pub latency: Duration,
+}
+
+/// Per-query outcome of [`execute_sub_batched`] (the wire-level result,
+/// before the service stamps a latency on it).
+#[derive(Clone, Debug, Default)]
+pub struct SubBatchResult {
+    /// Matching object indices.
+    pub indices: Vec<u32>,
+    /// Squared distances (nearest queries only).
+    pub distances: Vec<f32>,
+    /// The attached payload, echoed back (attachment queries only).
+    pub data: Option<u64>,
 }
 
 /// One in-flight request.
@@ -115,6 +163,17 @@ impl SearchService {
         Pending(resp_rx)
     }
 
+    /// Decodes one byte-encoded predicate (see [`super::wire`]) and
+    /// submits it. Returns `None` when `bytes` is not exactly one
+    /// well-formed encoded predicate.
+    pub fn submit_encoded(&self, bytes: &[u8]) -> Option<Pending> {
+        let (pred, used) = super::wire::decode(bytes)?;
+        if used != bytes.len() {
+            return None;
+        }
+        Some(self.submit(pred))
+    }
+
     /// Convenience: submit and wait.
     pub fn query(&self, pred: QueryPredicate) -> QueryResult {
         self.submit(pred).wait()
@@ -142,7 +201,7 @@ impl Drop for SearchService {
 }
 
 /// The batching loop: wait for the first request, then gather until
-/// `max_batch` or `batch_timeout`, execute, respond.
+/// `max_batch` or `batch_timeout`, execute sub-batched by kind, respond.
 fn coordinator_loop(
     bvh: &Bvh,
     space: &ExecSpace,
@@ -171,32 +230,192 @@ fn coordinator_loop(
             }
         }
 
-        // Execute the coalesced batch with the paper's batched engine.
+        // Execute the coalesced batch, sub-batched by predicate kind.
         let preds: Vec<QueryPredicate> = batch.iter().map(|r| r.pred).collect();
-        let out = bvh.query(space, &preds, &config.options);
+        let responses = execute_sub_batched(
+            bvh,
+            space,
+            &preds,
+            config.buffer_policy,
+            config.sort_queries,
+            metrics,
+        );
 
         // Respond and account.
         let done = Instant::now();
         let mut latencies = Vec::with_capacity(batch.len());
-        for (i, req) in batch.into_iter().enumerate() {
-            let indices = out.results_for(i).to_vec();
-            let distances = if out.distances.is_empty() {
-                Vec::new()
-            } else {
-                out.distances_for(i).to_vec()
-            };
+        let mut total = 0u64;
+        for (req, resp) in batch.into_iter().zip(responses) {
+            total += resp.indices.len() as u64;
             let latency = done.duration_since(req.enqueued);
             latencies.push(latency);
-            let _ = req.resp.send(QueryResult { indices, distances, latency });
+            let _ = req.resp.send(QueryResult {
+                indices: resp.indices,
+                distances: resp.distances,
+                data: resp.data,
+                latency,
+            });
         }
-        metrics.record_batch(&latencies, out.total() as u64);
+        metrics.record_batch(&latencies, total);
+    }
+}
+
+/// Executes one coalesced wire batch sub-batched by [`PredicateKind`]:
+/// each kind's queries are extracted into a typed vector and dispatched
+/// once onto the monomorphized engines, so mixed batches reintroduce no
+/// per-node enum dispatch. Results come back in the caller's order;
+/// attachment payloads are echoed. Public so benchmarks can measure
+/// sub-batching against the mixed facade without a running service.
+pub fn execute_sub_batched(
+    bvh: &Bvh,
+    space: &ExecSpace,
+    preds: &[QueryPredicate],
+    policy: BufferPolicy,
+    sort_queries: bool,
+    metrics: &Metrics,
+) -> Vec<SubBatchResult> {
+    let mut groups: Vec<Vec<u32>> = vec![Vec::new(); PredicateKind::COUNT];
+    for (i, p) in preds.iter().enumerate() {
+        groups[p.kind().index()].push(i as u32);
+    }
+    let mut results: Vec<SubBatchResult> = vec![SubBatchResult::default(); preds.len()];
+    for kind in PredicateKind::ALL {
+        let members = &groups[kind.index()];
+        if members.is_empty() {
+            continue;
+        }
+        // Extracts this kind's payloads into a typed vector (one
+        // monomorphization per invocation) and runs it through the
+        // spatial engine; evaluates to the typed vector so attach arms
+        // can echo payloads.
+        macro_rules! spatial_kind {
+            ($pat:pat => $make:expr) => {{
+                let typed = members
+                    .iter()
+                    .map(|&i| match &preds[i as usize] {
+                        $pat => $make,
+                        _ => unreachable!("grouped by kind"),
+                    })
+                    .collect::<Vec<_>>();
+                spatial_sub_batch(
+                    bvh,
+                    space,
+                    &typed,
+                    members,
+                    kind,
+                    policy,
+                    sort_queries,
+                    metrics,
+                    &mut results,
+                );
+                typed
+            }};
+        }
+        match kind {
+            PredicateKind::Sphere => {
+                let _ = spatial_kind!(
+                    QueryPredicate::Spatial(Spatial::IntersectsSphere(s)) => IntersectsSphere(*s)
+                );
+            }
+            PredicateKind::Box => {
+                let _ = spatial_kind!(
+                    QueryPredicate::Spatial(Spatial::IntersectsBox(b)) => IntersectsBox(*b)
+                );
+            }
+            PredicateKind::Ray => {
+                let _ = spatial_kind!(
+                    QueryPredicate::Spatial(Spatial::IntersectsRay(r)) => IntersectsRay(*r)
+                );
+            }
+            PredicateKind::AttachSphere => {
+                let typed = spatial_kind!(
+                    QueryPredicate::Attach(Spatial::IntersectsSphere(s), d)
+                        => attach(IntersectsSphere(*s), *d)
+                );
+                echo_payloads(members, &typed, &mut results);
+            }
+            PredicateKind::AttachBox => {
+                let typed = spatial_kind!(
+                    QueryPredicate::Attach(Spatial::IntersectsBox(b), d)
+                        => attach(IntersectsBox(*b), *d)
+                );
+                echo_payloads(members, &typed, &mut results);
+            }
+            PredicateKind::AttachRay => {
+                let typed = spatial_kind!(
+                    QueryPredicate::Attach(Spatial::IntersectsRay(r), d)
+                        => attach(IntersectsRay(*r), *d)
+                );
+                echo_payloads(members, &typed, &mut results);
+            }
+            PredicateKind::Nearest => {
+                // Nearest result sizes are bounded by k up front (§2.2.2);
+                // the 1P/2P distinction does not apply.
+                let typed: Vec<QueryPredicate> =
+                    members.iter().map(|&i| preds[i as usize]).collect();
+                let opts = QueryOptions { buffer_size: None, sort_queries };
+                let out = bvh.query(space, &typed, &opts);
+                let h = metrics.result_histogram(kind);
+                for (j, &i) in members.iter().enumerate() {
+                    h.record((out.offsets[j + 1] - out.offsets[j]) as u64);
+                    results[i as usize].indices = out.results_for(j).to_vec();
+                    results[i as usize].distances = out.distances_for(j).to_vec();
+                }
+            }
+        }
+    }
+    results
+}
+
+/// Runs one kind-homogeneous spatial sub-batch on the monomorphized CSR
+/// engine, applying the buffer policy and recording histogram samples
+/// plus the pass-count probes; scatters results back to caller order.
+#[allow(clippy::too_many_arguments)]
+fn spatial_sub_batch<P: SpatialPredicate + Sync>(
+    bvh: &Bvh,
+    space: &ExecSpace,
+    typed: &[P],
+    members: &[u32],
+    kind: PredicateKind,
+    policy: BufferPolicy,
+    sort_queries: bool,
+    metrics: &Metrics,
+    results: &mut [SubBatchResult],
+) {
+    let buffer = match policy {
+        BufferPolicy::TwoPass => None,
+        BufferPolicy::Static(b) => (b > 0).then_some(b),
+        BufferPolicy::Adaptive => metrics.suggest_buffer(kind),
+    };
+    let opts = QueryOptions { buffer_size: buffer, sort_queries };
+    let out = bvh.query_spatial(space, typed, &opts);
+    let counts: Vec<u64> = out.offsets.windows(2).map(|w| w[1] - w[0]).collect();
+    let pass = match buffer {
+        None => SubBatchPass::TwoPass,
+        Some(_) if out.overflow_queries > 0 => SubBatchPass::OnePassFallback,
+        Some(_) => SubBatchPass::OnePass,
+    };
+    metrics.record_sub_batch(kind, &counts, out.overflow_queries as u64, pass);
+    for (j, &i) in members.iter().enumerate() {
+        results[i as usize].indices = out.results_for(j).to_vec();
+    }
+}
+
+/// Copies each attachment's payload into its query's result slot.
+fn echo_payloads<P, T: Copy + Into<u64>>(
+    members: &[u32],
+    typed: &[WithData<P, T>],
+    results: &mut [SubBatchResult],
+) {
+    for (&i, t) in members.iter().zip(typed) {
+        results[i as usize].data = Some(t.data.into());
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::geometry::{Aabb, Point};
+    use crate::geometry::{Aabb, Point, Ray, Sphere};
 
     fn service(n: usize, max_batch: usize) -> (SearchService, Vec<Point>) {
         let points: Vec<Point> =
@@ -219,7 +438,53 @@ mod tests {
         let mut got = r.indices.clone();
         got.sort();
         assert_eq!(got, vec![4, 5, 6]);
+        assert_eq!(r.data, None);
         assert_eq!(svc.metrics().requests(), 1);
+    }
+
+    #[test]
+    fn every_wire_kind_round_trips() {
+        let (svc, _) = service(100, 16);
+        let ray = Ray::new(Point::new(-1.0, 0.0, 0.0), Point::new(1.0, 0.0, 0.0));
+        let r = svc.query(QueryPredicate::intersects_ray(ray));
+        assert_eq!(r.indices.len(), 100, "axis ray hits the whole line");
+        let r = svc.query(QueryPredicate::intersects_box(Aabb::new(
+            Point::new(2.5, -1.0, -1.0),
+            Point::new(5.5, 1.0, 1.0),
+        )));
+        let mut got = r.indices;
+        got.sort();
+        assert_eq!(got, vec![3, 4, 5]);
+        let r = svc.query(QueryPredicate::attach(
+            Spatial::IntersectsSphere(Sphere::new(Point::new(7.0, 0.0, 0.0), 0.5)),
+            0xBEEF,
+        ));
+        assert_eq!(r.indices, vec![7]);
+        assert_eq!(r.data, Some(0xBEEF), "payload echoed");
+        let r = svc.query(QueryPredicate::attach(Spatial::IntersectsRay(ray), 7));
+        assert_eq!(r.indices.len(), 100);
+        assert_eq!(r.data, Some(7));
+        let r = svc.query(QueryPredicate::nearest(Point::new(9.2, 0.0, 0.0), 2));
+        assert_eq!(r.indices, vec![9, 10]);
+        assert_eq!(r.distances.len(), 2);
+    }
+
+    #[test]
+    fn encoded_submission_round_trips() {
+        let (svc, _) = service(50, 8);
+        let pred = QueryPredicate::attach(
+            Spatial::IntersectsSphere(Sphere::new(Point::new(5.0, 0.0, 0.0), 1.5)),
+            42,
+        );
+        let mut bytes = Vec::new();
+        super::super::wire::encode(&pred, &mut bytes);
+        let r = svc.submit_encoded(&bytes).expect("decodes").wait();
+        let mut got = r.indices;
+        got.sort();
+        assert_eq!(got, vec![4, 5, 6]);
+        assert_eq!(r.data, Some(42));
+        assert!(svc.submit_encoded(&bytes[..3]).is_none(), "truncated");
+        assert!(svc.submit_encoded(&[0xFF; 16]).is_none(), "bad tag");
     }
 
     #[test]

@@ -1,0 +1,279 @@
+//! Byte-level tag + payload encoding of the open predicate family.
+//!
+//! The service protocol is the open [`QueryPredicate`] family; this
+//! module gives it a transport representation so out-of-process clients
+//! can speak it: one kind-tag byte, then a fixed little-endian payload
+//! per kind. Attachments set the high bit of the spatial tag and append
+//! their `u64` payload after the geometric fields:
+//!
+//! | tag | payload |
+//! |-----|---------|
+//! | `TAG_SPHERE`  | center `3xf32`, radius `f32` |
+//! | `TAG_BOX`     | min `3xf32`, max `3xf32` |
+//! | `TAG_RAY`     | origin `3xf32`, direction `3xf32`, `t_max f32` |
+//! | `TAG_NEAREST` | point `3xf32`, k `u32` |
+//! | spatial tag \| `TAG_ATTACH` | spatial payload, then data `u64` |
+//!
+//! Decoding is streaming ([`decode`] returns the bytes consumed), so a
+//! request pipe can carry back-to-back predicates. Unknown tags and
+//! truncated payloads decode to `None` rather than panicking — the wire
+//! is untrusted input.
+
+use crate::bvh::QueryPredicate;
+use crate::geometry::predicates::{Nearest, Spatial};
+use crate::geometry::{Aabb, Point, Ray, Sphere};
+
+/// Kind tag: sphere (radius search).
+pub const TAG_SPHERE: u8 = 1;
+/// Kind tag: box overlap.
+pub const TAG_BOX: u8 = 2;
+/// Kind tag: ray intersection.
+pub const TAG_RAY: u8 = 3;
+/// Kind tag: k-nearest neighbors.
+pub const TAG_NEAREST: u8 = 4;
+/// Attachment flag, OR-ed onto a spatial tag.
+pub const TAG_ATTACH: u8 = 0x80;
+
+/// Largest `k` a wire nearest query may request. The k-NN scratch heap
+/// reserves `k` slots up front, so an unclamped `u32::MAX` from an
+/// untrusted client would be a multi-gigabyte allocation; messages
+/// beyond the cap are rejected as malformed.
+pub const MAX_NEAREST_K: u32 = 1 << 16;
+
+/// Appends the encoding of one predicate to `out`.
+pub fn encode(pred: &QueryPredicate, out: &mut Vec<u8>) {
+    match pred {
+        QueryPredicate::Spatial(s) => encode_spatial(s, None, out),
+        QueryPredicate::Attach(s, d) => encode_spatial(s, Some(*d), out),
+        QueryPredicate::Nearest(n) => {
+            out.push(TAG_NEAREST);
+            put_point(out, &n.point);
+            out.extend_from_slice(&(n.k as u32).to_le_bytes());
+        }
+    }
+}
+
+/// Encodes a batch back-to-back (the pipe format).
+pub fn encode_batch(preds: &[QueryPredicate], out: &mut Vec<u8>) {
+    for p in preds {
+        encode(p, out);
+    }
+}
+
+fn encode_spatial(s: &Spatial, data: Option<u64>, out: &mut Vec<u8>) {
+    let tag = match s {
+        Spatial::IntersectsSphere(_) => TAG_SPHERE,
+        Spatial::IntersectsBox(_) => TAG_BOX,
+        Spatial::IntersectsRay(_) => TAG_RAY,
+    };
+    out.push(if data.is_some() { tag | TAG_ATTACH } else { tag });
+    match s {
+        Spatial::IntersectsSphere(sp) => {
+            put_point(out, &sp.center);
+            put_f32(out, sp.radius);
+        }
+        Spatial::IntersectsBox(b) => {
+            put_point(out, &b.min);
+            put_point(out, &b.max);
+        }
+        Spatial::IntersectsRay(r) => {
+            put_point(out, &r.origin);
+            put_point(out, &r.direction);
+            put_f32(out, r.t_max);
+        }
+    }
+    if let Some(d) = data {
+        out.extend_from_slice(&d.to_le_bytes());
+    }
+}
+
+/// Decodes one predicate from the front of `bytes`; returns it and the
+/// number of bytes consumed, or `None` on an unknown tag or truncated
+/// payload.
+pub fn decode(bytes: &[u8]) -> Option<(QueryPredicate, usize)> {
+    let mut cur = Cursor { bytes, pos: 0 };
+    let tag = cur.u8()?;
+    let attached = tag & TAG_ATTACH != 0;
+    let spatial = match tag & !TAG_ATTACH {
+        TAG_SPHERE => {
+            let center = cur.point()?;
+            let radius = cur.f32()?;
+            Spatial::IntersectsSphere(Sphere::new(center, radius))
+        }
+        TAG_BOX => {
+            let min = cur.point()?;
+            let max = cur.point()?;
+            Spatial::IntersectsBox(Aabb::new(min, max))
+        }
+        TAG_RAY => {
+            let origin = cur.point()?;
+            let direction = cur.point()?;
+            let t_max = cur.f32()?;
+            Spatial::IntersectsRay(Ray::segment(origin, direction, t_max))
+        }
+        TAG_NEAREST if !attached => {
+            let point = cur.point()?;
+            let k = cur.u32()?;
+            if k > MAX_NEAREST_K {
+                return None;
+            }
+            let nearest = Nearest::new(point, k as usize);
+            return Some((QueryPredicate::Nearest(nearest), cur.pos));
+        }
+        _ => return None,
+    };
+    let pred = if attached {
+        QueryPredicate::Attach(spatial, cur.u64()?)
+    } else {
+        QueryPredicate::Spatial(spatial)
+    };
+    Some((pred, cur.pos))
+}
+
+/// Decodes a back-to-back batch; `None` if any predicate is malformed or
+/// trailing bytes remain.
+pub fn decode_batch(mut bytes: &[u8]) -> Option<Vec<QueryPredicate>> {
+    let mut out = Vec::new();
+    while !bytes.is_empty() {
+        let (pred, used) = decode(bytes)?;
+        out.push(pred);
+        bytes = &bytes[used..];
+    }
+    Some(out)
+}
+
+fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_point(out: &mut Vec<u8>, p: &Point) {
+    for d in 0..3 {
+        put_f32(out, p[d]);
+    }
+}
+
+/// A bounds-checked little-endian reader over the wire bytes.
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl Cursor<'_> {
+    fn take<const N: usize>(&mut self) -> Option<[u8; N]> {
+        let end = self.pos.checked_add(N)?;
+        let chunk = self.bytes.get(self.pos..end)?;
+        self.pos = end;
+        chunk.try_into().ok()
+    }
+
+    fn u8(&mut self) -> Option<u8> {
+        self.take::<1>().map(|b| b[0])
+    }
+
+    fn f32(&mut self) -> Option<f32> {
+        self.take::<4>().map(f32::from_le_bytes)
+    }
+
+    fn u32(&mut self) -> Option<u32> {
+        self.take::<4>().map(u32::from_le_bytes)
+    }
+
+    fn u64(&mut self) -> Option<u64> {
+        self.take::<8>().map(u64::from_le_bytes)
+    }
+
+    fn point(&mut self) -> Option<Point> {
+        let x = self.f32()?;
+        let y = self.f32()?;
+        let z = self.f32()?;
+        Some(Point::new(x, y, z))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn family() -> Vec<QueryPredicate> {
+        let ray = Ray::new(Point::new(-1.0, 0.5, 0.5), Point::new(1.0, 0.25, 0.0));
+        let segment = Ray::segment(Point::origin(), Point::new(0.0, 1.0, 0.0), 7.5);
+        vec![
+            QueryPredicate::intersects_sphere(Point::new(1.0, 2.0, 3.0), 4.5),
+            QueryPredicate::intersects_box(Aabb::new(Point::origin(), Point::splat(2.0))),
+            QueryPredicate::intersects_ray(ray),
+            QueryPredicate::intersects_ray(segment),
+            QueryPredicate::attach(Spatial::IntersectsSphere(Sphere::new(Point::origin(), 1.0)), 0),
+            QueryPredicate::attach(Spatial::IntersectsRay(ray), u64::MAX),
+            QueryPredicate::attach(Spatial::IntersectsBox(Aabb::from_point(Point::origin())), 9),
+            QueryPredicate::nearest(Point::new(-3.0, 0.0, 1.5), 17),
+        ]
+    }
+
+    #[test]
+    fn every_kind_round_trips() {
+        for pred in family() {
+            let mut bytes = Vec::new();
+            encode(&pred, &mut bytes);
+            let (decoded, used) = decode(&bytes).expect("decodes");
+            assert_eq!(used, bytes.len());
+            assert_eq!(decoded, pred);
+        }
+    }
+
+    #[test]
+    fn batches_round_trip_back_to_back() {
+        let preds = family();
+        let mut bytes = Vec::new();
+        encode_batch(&preds, &mut bytes);
+        assert_eq!(decode_batch(&bytes).expect("decodes"), preds);
+        // A trailing garbage byte poisons the batch.
+        bytes.push(0x7F);
+        assert!(decode_batch(&bytes).is_none());
+    }
+
+    #[test]
+    fn malformed_input_is_rejected() {
+        assert!(decode(&[]).is_none(), "empty");
+        assert!(decode(&[0]).is_none(), "reserved tag");
+        assert!(decode(&[0x7F]).is_none(), "unknown tag");
+        assert!(decode(&[TAG_NEAREST | TAG_ATTACH, 0, 0, 0, 0]).is_none(), "attached nearest");
+        let mut bytes = Vec::new();
+        encode(&family()[0], &mut bytes);
+        for cut in 0..bytes.len() {
+            assert!(decode(&bytes[..cut]).is_none(), "truncated at {cut}");
+        }
+    }
+
+    #[test]
+    fn oversized_nearest_k_is_rejected() {
+        // An untrusted 17-byte message must not be able to demand a
+        // multi-gigabyte k-NN heap reservation.
+        let mut bytes = Vec::new();
+        encode(&QueryPredicate::nearest(Point::origin(), MAX_NEAREST_K as usize), &mut bytes);
+        assert!(decode(&bytes).is_some(), "cap itself is accepted");
+        let mut bytes = Vec::new();
+        encode(
+            &QueryPredicate::nearest(Point::origin(), MAX_NEAREST_K as usize + 1),
+            &mut bytes,
+        );
+        assert!(decode(&bytes).is_none(), "beyond the cap is malformed");
+        bytes.truncate(bytes.len() - 4);
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode(&bytes).is_none(), "u32::MAX k is malformed");
+    }
+
+    #[test]
+    fn infinity_t_max_survives_the_wire() {
+        let pred = QueryPredicate::intersects_ray(Ray::new(
+            Point::origin(),
+            Point::new(0.0, 0.0, -1.0),
+        ));
+        let mut bytes = Vec::new();
+        encode(&pred, &mut bytes);
+        let (decoded, _) = decode(&bytes).unwrap();
+        let QueryPredicate::Spatial(Spatial::IntersectsRay(r)) = decoded else {
+            panic!("wrong kind")
+        };
+        assert_eq!(r.t_max, f32::INFINITY);
+    }
+}

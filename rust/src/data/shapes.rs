@@ -137,7 +137,9 @@ mod tests {
 
     #[test]
     fn counts_and_scaling() {
-        for shape in [Shape::FilledCube, Shape::HollowCube, Shape::FilledSphere, Shape::HollowSphere] {
+        for shape in
+            [Shape::FilledCube, Shape::HollowCube, Shape::FilledSphere, Shape::HollowSphere]
+        {
             let c = PointCloud::generate(shape, 1000, 42);
             assert_eq!(c.len(), 1000);
             assert!((c.a - 10.0).abs() < 1e-3, "a = p^(1/3) = 10");

@@ -14,10 +14,12 @@
 //! per-query user data to traversal callbacks — and applications can add
 //! their own by implementing the trait.
 //!
-//! The closed [`Spatial`] enum is kept as a compatibility facade: it is
-//! the wire format of the coordinator service and of mixed
+//! The [`Spatial`] enum mirrors the trait kinds as a serializable tagged
+//! family: it is the wire format of the coordinator service and of mixed
 //! [`crate::bvh::QueryPredicate`] batches, and it implements the trait by
-//! dispatching *once per query* to the concrete kinds above.
+//! dispatching *once per query* to the concrete kinds above. The service
+//! additionally sub-batches by kind tag so whole batches execute on the
+//! monomorphized engines (see [`crate::coordinator::service`]).
 
 use super::{Aabb, Point, Ray, Sphere};
 
@@ -113,16 +115,20 @@ impl<P: SpatialPredicate, T> SpatialPredicate for WithData<P, T> {
     }
 }
 
-/// The closed pre-trait predicate enum, kept as a thin compatibility
-/// facade (service wire format, mixed batches). The batched engines
-/// dispatch it once per query onto the concrete trait kinds, so no enum
-/// match survives in the per-node hot loop.
+/// The serializable spatial-predicate enum: the *wire format* of the
+/// coordinator service and of mixed [`crate::bvh::QueryPredicate`]
+/// batches. One variant per supported kind tag (sphere, box, ray). The
+/// batched engines and the service's per-kind sub-batcher dispatch it
+/// once per query (or once per sub-batch) onto the concrete trait kinds
+/// above, so no enum match survives in the per-node hot loop.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Spatial {
     /// All objects whose box intersects the sphere (radius search).
     IntersectsSphere(Sphere),
     /// All objects whose box overlaps the box.
     IntersectsBox(Aabb),
+    /// All objects whose box is hit by the ray.
+    IntersectsRay(Ray),
 }
 
 impl Spatial {
@@ -132,6 +138,7 @@ impl Spatial {
         match self {
             Spatial::IntersectsSphere(s) => s.intersects_box(b),
             Spatial::IntersectsBox(q) => q.intersects(b),
+            Spatial::IntersectsRay(r) => r.intersects_box(b),
         }
     }
 
@@ -142,6 +149,7 @@ impl Spatial {
         match self {
             Spatial::IntersectsSphere(s) => s.center,
             Spatial::IntersectsBox(b) => b.centroid(),
+            Spatial::IntersectsRay(r) => r.origin,
         }
     }
 }
@@ -246,8 +254,14 @@ mod tests {
             IntersectsBox(region).test(&unit),
             Spatial::IntersectsBox(region).test(&unit)
         );
+        let ray = Ray::new(Point::new(-1.0, 0.5, 0.5), Point::new(1.0, 0.0, 0.0));
+        assert_eq!(
+            IntersectsRay(ray).test(&unit),
+            Spatial::IntersectsRay(ray).test(&unit)
+        );
         assert_eq!(IntersectsSphere(sphere).origin(), sphere.center);
         assert_eq!(IntersectsBox(region).origin(), region.centroid());
+        assert_eq!(Spatial::IntersectsRay(ray).origin(), ray.origin);
     }
 
     #[test]

@@ -198,7 +198,11 @@ mod tests {
                     rng.uniform(-10.0, 10.0),
                 );
                 let j = |rng: &mut Rng| {
-                    Point::new(rng.uniform(-0.5, 0.5), rng.uniform(-0.5, 0.5), rng.uniform(-0.5, 0.5))
+                    Point::new(
+                        rng.uniform(-0.5, 0.5),
+                        rng.uniform(-0.5, 0.5),
+                        rng.uniform(-0.5, 0.5),
+                    )
                 };
                 Triangle::new(base, base + j(&mut rng), base + j(&mut rng))
             })

@@ -32,8 +32,11 @@
 //!   AOT-compiled JAX/Pallas artifacts and exposes them as an accelerator
 //!   backend for batched distance tiles. Gated behind the `accel` feature
 //!   (its `xla`/`anyhow` dependencies are unavailable offline).
-//! * [`coordinator`] — the batched query service (router + dynamic
-//!   batcher + metrics) and a simulated multi-rank distributed tree.
+//! * [`coordinator`] — the batched query service: router + dynamic
+//!   batcher speaking the open tagged predicate family (sphere/box/ray,
+//!   attachments, nearest) with per-kind monomorphized sub-batching and
+//!   adaptive 1P buffers, a byte-level wire codec, per-kind metrics, and
+//!   a simulated multi-rank distributed tree carrying the same kinds.
 //!
 //! ## Quick start
 //!
@@ -78,12 +81,12 @@ pub mod runtime;
 /// Convenience re-exports of the most common types.
 pub mod prelude {
     pub use crate::baselines::{brute::BruteForce, kdtree::KdTree, rtree::RTree};
-    pub use crate::bvh::{Bvh, QueryOptions, QueryOutput, QueryPredicate};
-    pub use crate::coordinator::service::{SearchService, ServiceConfig};
+    pub use crate::bvh::{Bvh, PredicateKind, QueryOptions, QueryOutput, QueryPredicate};
+    pub use crate::coordinator::service::{BufferPolicy, SearchService, ServiceConfig};
     pub use crate::data::shapes::{PointCloud, Shape};
     pub use crate::exec::ExecSpace;
     pub use crate::geometry::predicates::{
-        attach, IntersectsBox, IntersectsRay, IntersectsSphere, Nearest, NearestQuery,
+        attach, IntersectsBox, IntersectsRay, IntersectsSphere, Nearest, NearestQuery, Spatial,
         SpatialPredicate, WithData,
     };
     pub use crate::geometry::{Aabb, Point, Ray, Sphere, Triangle};

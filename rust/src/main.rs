@@ -19,7 +19,9 @@ use std::time::Instant;
 use arbor::bvh::{stats, Bvh, QueryOptions, QueryPredicate};
 use arbor::coordinator::service::{SearchService, ServiceConfig};
 use arbor::data::shapes::{PointCloud, Shape};
-use arbor::data::workloads::{Case, Workload, K};
+#[cfg(feature = "accel")]
+use arbor::data::workloads::K;
+use arbor::data::workloads::{Case, Workload};
 use arbor::exec::ExecSpace;
 #[cfg(feature = "accel")]
 use arbor::runtime::AccelEngine;

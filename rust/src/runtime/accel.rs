@@ -80,7 +80,12 @@ impl AccelEngine {
     /// Point tiles are selected on-device (top-k of each tile), and the
     /// per-tile winners are merged on the host — valid because the global
     /// top-k is a subset of the union of per-tile top-ks for k ≤ tile_k.
-    pub fn batch_knn(&self, queries: &[Point], points: &[Point], k: usize) -> Result<Vec<Vec<Neighbor>>> {
+    pub fn batch_knn(
+        &self,
+        queries: &[Point],
+        points: &[Point],
+        k: usize,
+    ) -> Result<Vec<Vec<Neighbor>>> {
         if k > self.tile_k {
             return Err(anyhow!("k={k} exceeds artifact top-k width {}", self.tile_k));
         }
@@ -91,8 +96,11 @@ impl AccelEngine {
             let q_end = (q_base + self.tile_q).min(nq);
             let mut q_tile: Vec<Point> = queries[q_base..q_end].to_vec();
             q_tile.resize(self.tile_q, queries[q_base]); // pad with a real point
-            let q_lit =
-                PjrtEngine::literal_f32_matrix(&Self::pack(&q_tile, self.tile_q, 0.0), self.tile_q, 3)?;
+            let q_lit = PjrtEngine::literal_f32_matrix(
+                &Self::pack(&q_tile, self.tile_q, 0.0),
+                self.tile_q,
+                3,
+            )?;
 
             for p_base in (0..points.len()).step_by(self.tile_p) {
                 let p_end = (p_base + self.tile_p).min(points.len());
@@ -131,7 +139,12 @@ impl AccelEngine {
 
     /// Batched radius counts: for each query, how many points lie within
     /// `radius` (the accelerator twin of the 2P counting pass).
-    pub fn batch_radius_count(&self, queries: &[Point], points: &[Point], radius: f32) -> Result<Vec<u32>> {
+    pub fn batch_radius_count(
+        &self,
+        queries: &[Point],
+        points: &[Point],
+        radius: f32,
+    ) -> Result<Vec<u32>> {
         let nq = queries.len();
         let r2 = PjrtEngine::literal_f32_scalar(radius * radius);
         let mut counts = vec![0u32; nq];
@@ -140,8 +153,11 @@ impl AccelEngine {
             let q_end = (q_base + self.tile_q).min(nq);
             let mut q_tile: Vec<Point> = queries[q_base..q_end].to_vec();
             q_tile.resize(self.tile_q, queries[q_base]);
-            let q_lit =
-                PjrtEngine::literal_f32_matrix(&Self::pack(&q_tile, self.tile_q, 0.0), self.tile_q, 3)?;
+            let q_lit = PjrtEngine::literal_f32_matrix(
+                &Self::pack(&q_tile, self.tile_q, 0.0),
+                self.tile_q,
+                3,
+            )?;
 
             for p_base in (0..points.len()).step_by(self.tile_p) {
                 let p_end = (p_base + self.tile_p).min(points.len());

@@ -135,7 +135,11 @@ fn accel_workload_smoke_filled_case() {
     let sources = PointCloud::generate(Shape::FilledCube, 8192, 8);
     let targets = PointCloud::generate(Shape::FilledSphere, 512, 9);
     let counts = engine
-        .batch_radius_count(&targets.points, &sources.points, arbor::data::workloads::spatial_radius(10))
+        .batch_radius_count(
+            &targets.points,
+            &sources.points,
+            arbor::data::workloads::spatial_radius(10),
+        )
         .expect("radius counts");
     let avg = counts.iter().map(|&c| c as f64).sum::<f64>() / counts.len() as f64;
     assert!((5.0..15.0).contains(&avg), "filled-case calibration: avg {avg} ~ 10");

@@ -1,16 +1,22 @@
 //! Integration tests across the coordinator layer: the batched service
-//! and the simulated distributed tree against direct batched queries.
+//! and the simulated distributed tree against direct batched queries,
+//! including the service-vs-direct differential over every wire
+//! predicate kind and the adaptive-buffer regression for the §3.2
+//! hollow-sphere pathology.
 
 use std::sync::Arc;
 
-use arbor::bvh::{Bvh, QueryOptions, QueryPredicate};
+use arbor::bvh::{Bvh, PredicateKind, QueryOptions, QueryPredicate};
 use arbor::coordinator::distributed::{DistributedTree, Partition};
-use arbor::coordinator::service::{SearchService, ServiceConfig};
+use arbor::coordinator::metrics::{ADAPTIVE_MAX_BUFFER, ADAPTIVE_MIN_SAMPLES};
+use arbor::coordinator::service::{BufferPolicy, SearchService, ServiceConfig};
 use arbor::data::shapes::{PointCloud, Shape};
 use arbor::data::workloads::{spatial_radius, Case, Workload};
 use arbor::exec::ExecSpace;
-use arbor::geometry::predicates::Spatial;
-use arbor::geometry::Sphere;
+use arbor::geometry::predicates::{
+    attach, IntersectsBox, IntersectsRay, IntersectsSphere, Spatial, WithData,
+};
+use arbor::geometry::{Aabb, Point, Ray, Sphere};
 
 #[test]
 fn service_results_equal_direct_batched_queries() {
@@ -64,19 +70,245 @@ fn distributed_tree_equals_single_tree_on_workload() {
 #[test]
 fn service_handles_hollow_imbalance() {
     // The hollow case's wild per-query imbalance must not wedge the
-    // batcher (most queries empty, some returning hundreds).
+    // batcher (most queries empty, some returning hundreds). A static
+    // buffer of 1 mass-overflows into the fallback second pass; the
+    // adaptive policy returns identical results on the same load.
     let space = ExecSpace::with_threads(2);
     let w = Workload::generate(Case::Hollow, 20_000, 1_000, 29);
     let bvh = Arc::new(Bvh::build(&space, &w.sources.boxes()));
-    let svc = SearchService::start(
-        bvh,
+    let direct = bvh.query(&space, &w.spatial, &QueryOptions::default());
+    let max = (0..w.spatial.len()).map(|q| direct.results_for(q).len()).max().unwrap();
+    assert!(max > 1, "hollow workload must be imbalanced (max {max})");
+
+    let static_svc = SearchService::start(
+        Arc::clone(&bvh),
+        ServiceConfig {
+            max_batch: 128,
+            buffer_policy: BufferPolicy::Static(1),
+            ..Default::default()
+        },
+    );
+    let pendings: Vec<_> = w.spatial.iter().map(|p| static_svc.submit(*p)).collect();
+    let total: usize = pendings.into_iter().map(|p| p.wait().indices.len()).sum();
+    // n != m here, so the calibration doesn't hold; require progress,
+    // consistency with metrics, and the §3.2 second-pass signature.
+    assert_eq!(static_svc.metrics().results(), total as u64);
+    assert!(static_svc.metrics().fallback_batches() > 0, "static(1) must fall back");
+    assert!(static_svc.metrics().overflowed_queries() > 0);
+    static_svc.shutdown();
+
+    let adaptive_svc = SearchService::start(
+        Arc::clone(&bvh),
         ServiceConfig { max_batch: 128, ..Default::default() },
     );
-    let pendings: Vec<_> = w.spatial.iter().map(|p| svc.submit(*p)).collect();
-    let total: usize = pendings.into_iter().map(|p| p.wait().indices.len()).sum();
-    // n != m here, so the calibration doesn't hold; just require progress
-    // and consistency with metrics.
-    assert_eq!(svc.metrics().results(), total as u64);
+    let pendings: Vec<_> = w.spatial.iter().map(|p| adaptive_svc.submit(*p)).collect();
+    for (qi, pending) in pendings.into_iter().enumerate() {
+        let mut got = pending.wait().indices;
+        got.sort();
+        let mut want = direct.results_for(qi).to_vec();
+        want.sort();
+        assert_eq!(got, want, "query {qi}");
+    }
+    let suggested = adaptive_svc.metrics().suggest_buffer(PredicateKind::Sphere);
+    assert!(suggested.is_some_and(|b| b <= ADAPTIVE_MAX_BUFFER), "{suggested:?}");
+}
+
+/// Builds a mixed wire batch covering every predicate kind, round-robin
+/// over `points`.
+fn mixed_wire_batch(points: &[Point], radius: f32) -> Vec<QueryPredicate> {
+    points
+        .iter()
+        .enumerate()
+        .map(|(i, p)| match i % 6 {
+            0 => QueryPredicate::intersects_sphere(*p, radius),
+            1 => QueryPredicate::intersects_box(Aabb::new(
+                Point::new(p[0] - radius, p[1] - radius, p[2] - radius),
+                Point::new(p[0] + radius, p[1] + radius, p[2] + radius),
+            )),
+            2 => QueryPredicate::intersects_ray(Ray::new(*p, Point::new(0.3, 1.0, -0.2))),
+            3 => QueryPredicate::attach(
+                Spatial::IntersectsSphere(Sphere::new(*p, radius)),
+                i as u64,
+            ),
+            4 => QueryPredicate::attach(
+                Spatial::IntersectsRay(Ray::new(*p, Point::new(-1.0, 0.4, 0.1))),
+                i as u64,
+            ),
+            _ => QueryPredicate::nearest(*p, 7),
+        })
+        .collect()
+}
+
+/// Direct (service-free) ground truth for one wire predicate: spatial
+/// kinds through the monomorphized `Bvh::query_spatial`, nearest through
+/// the facade.
+fn direct_one(bvh: &Bvh, space: &ExecSpace, pred: &QueryPredicate) -> (Vec<u32>, Vec<f32>) {
+    let opts = QueryOptions::default();
+    match pred {
+        QueryPredicate::Spatial(s) | QueryPredicate::Attach(s, _) => {
+            let out = match s {
+                Spatial::IntersectsSphere(sp) => {
+                    bvh.query_spatial(space, &[IntersectsSphere(*sp)], &opts)
+                }
+                Spatial::IntersectsBox(b) => {
+                    bvh.query_spatial(space, &[IntersectsBox(*b)], &opts)
+                }
+                Spatial::IntersectsRay(r) => {
+                    bvh.query_spatial(space, &[IntersectsRay(*r)], &opts)
+                }
+            };
+            (out.results_for(0).to_vec(), Vec::new())
+        }
+        QueryPredicate::Nearest(_) => {
+            let out = bvh.query(space, &[*pred], &opts);
+            (out.results_for(0).to_vec(), out.distances_for(0).to_vec())
+        }
+    }
+}
+
+#[test]
+fn service_differential_every_wire_kind_under_concurrency() {
+    // Acceptance: every wire kind (sphere, box, ray, attach, nearest)
+    // submitted through the service under concurrent submitters returns
+    // results equal to direct Bvh::query_spatial on the same data,
+    // including mixed-kind interleavings that force sub-batch splits.
+    let space = ExecSpace::with_threads(4);
+    let cloud = PointCloud::generate(Shape::FilledCube, 6_000, 13);
+    let bvh = Arc::new(Bvh::build(&space, &cloud.boxes()));
+    let radius = spatial_radius(10);
+    let preds = mixed_wire_batch(&cloud.points[..960], radius);
+    // WithData flows through the generic engine identically to its inner
+    // predicate — anchor one attachment against its typed twin.
+    let typed_attach: Vec<WithData<IntersectsSphere, u64>> = match &preds[3] {
+        QueryPredicate::Attach(Spatial::IntersectsSphere(s), d) => {
+            vec![attach(IntersectsSphere(*s), *d)]
+        }
+        other => panic!("slot 3 must be attach_sphere, got {other:?}"),
+    };
+    let typed_out = bvh.query_spatial(&space, &typed_attach, &QueryOptions::default());
+    assert_eq!(typed_out.results_for(0), direct_one(&bvh, &space, &preds[3]).0);
+
+    let want: Vec<(Vec<u32>, Vec<f32>)> =
+        preds.iter().map(|p| direct_one(&bvh, &space, p)).collect();
+
+    // Small batches force splits across mixed-kind boundaries.
+    let svc = Arc::new(SearchService::start(
+        Arc::clone(&bvh),
+        ServiceConfig { max_batch: 64, threads: 2, ..Default::default() },
+    ));
+    let submitters = 4;
+    let mut handles = Vec::new();
+    for t in 0..submitters {
+        let svc = Arc::clone(&svc);
+        let preds = preds.clone();
+        handles.push(std::thread::spawn(move || {
+            // Strided slices keep each thread's stream mixed-kind.
+            let pendings: Vec<_> = (t..preds.len())
+                .step_by(submitters)
+                .map(|i| (i, svc.submit(preds[i])))
+                .collect();
+            pendings.into_iter().map(|(i, p)| (i, p.wait())).collect::<Vec<_>>()
+        }));
+    }
+    let mut seen = 0usize;
+    for h in handles {
+        for (i, r) in h.join().unwrap() {
+            seen += 1;
+            let (want_idx, want_dist) = &want[i];
+            let mut got = r.indices.clone();
+            got.sort();
+            let mut want_sorted = want_idx.clone();
+            want_sorted.sort();
+            assert_eq!(got, want_sorted, "query {i} ({:?})", preds[i].kind());
+            if preds[i].kind() == PredicateKind::Nearest {
+                assert_eq!(r.indices, *want_idx, "nearest order {i}");
+                assert_eq!(r.distances, *want_dist, "nearest distances {i}");
+            }
+            assert_eq!(r.data, preds[i].data(), "payload {i}");
+        }
+    }
+    assert_eq!(seen, preds.len());
+    assert_eq!(svc.metrics().requests(), preds.len() as u64);
+    assert!(svc.metrics().batches() >= (preds.len() / 64) as u64, "max_batch respected");
+}
+
+#[test]
+fn adaptive_buffer_regression_hollow_style() {
+    // Modeled on the §3.2 hollow-sphere pathology: almost every query
+    // returns one result while a 2% tail returns ~600, so a static small
+    // buffer mass-overflows into the fallback second pass and a static
+    // max-sized buffer is the prohibitive allocation the paper reports.
+    // The adaptive policy must converge to a buffer that covers the tail
+    // (no fallback) while staying capped.
+    let space = ExecSpace::with_threads(2);
+    let points: Vec<Point> = (0..4096).map(|i| Point::new(i as f32, 0.0, 0.0)).collect();
+    let boxes: Vec<Aabb> = points.iter().map(|p| Aabb::from_point(*p)).collect();
+    let bvh = Arc::new(Bvh::build(&space, &boxes));
+    let monster = QueryPredicate::intersects_sphere(Point::new(2048.0, 0.0, 0.0), 300.0);
+    let preds: Vec<QueryPredicate> = (0..5000)
+        .map(|i| {
+            if i % 50 == 0 {
+                monster
+            } else {
+                QueryPredicate::intersects_sphere(Point::new((i % 4096) as f32, 0.0, 0.0), 0.4)
+            }
+        })
+        .collect();
+    let direct = bvh.query(&space, &preds, &QueryOptions::default());
+    let max_count = (0..preds.len()).map(|q| direct.results_for(q).len()).max().unwrap();
+    assert_eq!(max_count, 601, "the monster spans [1748, 2348]");
+
+    let run = |svc: &SearchService| -> usize {
+        let pendings: Vec<_> = preds.iter().map(|p| svc.submit(*p)).collect();
+        pendings.into_iter().map(|p| p.wait().indices.len()).sum()
+    };
+
+    // The static mis-sized buffer takes the fallback second pass.
+    let static_svc = SearchService::start(
+        Arc::clone(&bvh),
+        ServiceConfig {
+            max_batch: 256,
+            buffer_policy: BufferPolicy::Static(8),
+            threads: 2,
+            ..Default::default()
+        },
+    );
+    let static_total = run(&static_svc);
+    assert_eq!(static_total, direct.total());
+    assert!(static_svc.metrics().fallback_batches() > 0, "static(8) must take the 2nd pass");
+    assert!(static_svc.metrics().overflowed_queries() > 0);
+    assert_eq!(static_svc.metrics().two_pass_batches(), 0);
+    static_svc.shutdown();
+
+    // Adaptive: cold sub-batches run 2P, then the percentile buffer
+    // covers the tail.
+    let svc = SearchService::start(
+        Arc::clone(&bvh),
+        ServiceConfig { max_batch: 256, threads: 2, ..Default::default() },
+    );
+    let adaptive_total = run(&svc);
+    assert_eq!(adaptive_total, static_total, "strategies agree on results");
+    assert!(svc.metrics().two_pass_batches() > 0, "cold start ran 2P");
+    let hist_samples = svc.metrics().result_histogram(PredicateKind::Sphere).samples();
+    assert!(hist_samples >= ADAPTIVE_MIN_SAMPLES.max(5000));
+    let suggested = svc.metrics().suggest_buffer(PredicateKind::Sphere).expect("warmed up");
+    assert!(
+        suggested >= max_count,
+        "converged buffer {suggested} must cover the worst query ({max_count})"
+    );
+    assert!(suggested <= ADAPTIVE_MAX_BUFFER);
+
+    // Steady state: a second identical round takes no fallback pass and
+    // runs single-pass.
+    let fallback_before = svc.metrics().fallback_batches();
+    let one_pass_before = svc.metrics().one_pass_batches();
+    run(&svc);
+    assert_eq!(
+        svc.metrics().fallback_batches(),
+        fallback_before,
+        "adaptive steady state avoids the fallback second pass"
+    );
+    assert!(svc.metrics().one_pass_batches() > one_pass_before, "warm sub-batches run 1P");
 }
 
 #[test]
