@@ -1,5 +1,5 @@
-//! Quickstart: build a BVH, run spatial and nearest queries, inspect CSR
-//! output — the 60-second tour of the public API.
+//! Quickstart: build a BVH, run spatial, nearest, and first-hit ray
+//! queries, inspect CSR output — the 60-second tour of the public API.
 //!
 //! Run with: `cargo run --release --example quickstart`
 
@@ -59,4 +59,27 @@ fn main() {
         out.total(),
         out.overflow_queries
     );
+
+    // 7. First-hit ray casting: the single nearest object hit by each
+    //    ray. The traversal descends children in ray-entry order and
+    //    prunes subtrees behind the best hit, so it answers without
+    //    visiting the whole ray corridor; output is fixed width (one
+    //    Option<RayHit> per ray), no CSR needed. The rays here are
+    //    axis-aligned shots from below the scene straight through known
+    //    points (point boxes have zero extent, so an exact line is the
+    //    honest way to hit one).
+    let rays: Vec<FirstHit> = cloud
+        .points
+        .iter()
+        .take(1_000)
+        .map(|p| {
+            FirstHit(Ray::new(
+                Point::new(p[0], p[1], -2.0 * cloud.a),
+                Point::new(0.0, 0.0, 1.0),
+            ))
+        })
+        .collect();
+    let hits = bvh.query_first_hit(&space, &rays, true);
+    let n_hits = hits.iter().filter(|h| h.is_some()).count();
+    println!("first-hit: {}/{} rays hit; ray 0 -> {:?}", n_hits, rays.len(), hits[0]);
 }

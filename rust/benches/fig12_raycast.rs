@@ -1,0 +1,164 @@
+//! Figure 12 (ours): first-hit ray casting.
+//!
+//! Three strategies answer the same question — "what is the nearest
+//! object this ray hits?" — over a filled-cube scene of finite-extent
+//! boxes:
+//!
+//! * **first_hit** — the ordered-descent traversal (`bvh::first_hit`):
+//!   children popped in ascending ray-entry order, subtrees behind the
+//!   best hit pruned, fixed-width output;
+//! * **all_hits_min** — the pre-first-hit recipe: the all-hits CSR
+//!   engine (`IntersectsRay`) followed by a min-entry reduction per ray;
+//! * **brute_march** — the linear ray march over every box (the oracle),
+//!   timed on a subsample and reported per-ray.
+//!
+//! Alongside wall time, the internal-node access counts of the first two
+//! are recorded (the monitored traversals), quantifying how much of the
+//! tree the ordered descent skips. Results go to
+//! `bench_out/fig12_raycast_first_hit.csv` and `BENCH_raycast.json`.
+
+use arbor::baselines::brute::BruteForce;
+use arbor::bench_util::{f, reps, time_median, write_json_snapshot, JsonValue, Table};
+use arbor::bvh::first_hit::first_hit_monitored;
+use arbor::bvh::traversal::for_each_spatial_monitored;
+use arbor::bvh::{Bvh, QueryOptions};
+use arbor::data::rng::Rng;
+use arbor::data::shapes::{PointCloud, Shape};
+use arbor::exec::ExecSpace;
+use arbor::geometry::predicates::{FirstHit, IntersectsRay};
+use arbor::geometry::{Aabb, Point, Ray};
+
+fn main() {
+    let space = ExecSpace::default_parallel();
+    let n = 100_000;
+    let n_rays = 10_000;
+    let half = 0.5f32; // finite leaf extent: generic rays really hit
+
+    let cloud = PointCloud::generate(Shape::FilledCube, n, 42);
+    let boxes: Vec<Aabb> = cloud
+        .points
+        .iter()
+        .map(|p| Aabb::new(*p - Point::splat(half), *p + Point::splat(half)))
+        .collect();
+    let bvh = Bvh::build(&space, &boxes);
+    let brute = BruteForce::new(&boxes);
+
+    // Lidar-style rays: origins on a shell outside the scene, aimed at
+    // random interior points (normalized so t is a Euclidean distance).
+    let mut rng = Rng::new(7);
+    let rays: Vec<FirstHit> = (0..n_rays)
+        .map(|_| {
+            let origin = Point::new(
+                2.0 * cloud.a,
+                rng.uniform(-cloud.a, cloud.a),
+                rng.uniform(-cloud.a, cloud.a),
+            );
+            let target = cloud.points[rng.below(n)];
+            let dir = target - origin;
+            let dir = dir * (1.0 / dir.norm().max(1e-6));
+            FirstHit(Ray::new(origin, dir))
+        })
+        .collect();
+    let all_preds: Vec<IntersectsRay> = rays.iter().map(|r| IntersectsRay(r.0)).collect();
+    let r = reps();
+
+    // --- wall time ----------------------------------------------------
+    let t_first = time_median(r, || {
+        std::hint::black_box(bvh.query_first_hit(&space, &rays, true));
+    });
+    let t_allmin = time_median(r, || {
+        let out = bvh.query_spatial(&space, &all_preds, &QueryOptions::default());
+        let mut acc = 0u64;
+        for (qi, pred) in all_preds.iter().enumerate() {
+            let mut best_t = f32::INFINITY;
+            let mut best_idx = u32::MAX;
+            for &obj in out.results_for(qi) {
+                if let Some(t) = pred.0.box_entry(&boxes[obj as usize]) {
+                    if t < best_t || (t == best_t && obj < best_idx) {
+                        best_t = t;
+                        best_idx = obj;
+                    }
+                }
+            }
+            acc = acc.wrapping_add(best_idx as u64);
+        }
+        std::hint::black_box(acc);
+    });
+    // Brute march on a subsample (1e5 boxes x 1e4 rays is a 1e9-test
+    // bill); report per-ray time.
+    let brute_sample = 100.min(n_rays);
+    let t_brute_sample = time_median(r, || {
+        for ray in &rays[..brute_sample] {
+            std::hint::black_box(brute.first_hit(&ray.0));
+        }
+    });
+    let t_brute_per_ray = t_brute_sample / brute_sample as f64;
+
+    // --- node accesses + answer cross-check ---------------------------
+    let probe = 1_000.min(n_rays);
+    let (mut fh_nodes, mut all_nodes, mut hits) = (0u64, 0u64, 0u64);
+    let mut stack = Vec::new();
+    let mut fh_stack = Vec::new();
+    for ray in &rays[..probe] {
+        let hit = first_hit_monitored(&bvh, ray, &mut fh_stack, |_| fh_nodes += 1);
+        let mut best_t = f32::INFINITY;
+        let mut best_idx = u32::MAX;
+        for_each_spatial_monitored(
+            &bvh,
+            &IntersectsRay(ray.0),
+            &mut stack,
+            |obj| {
+                if let Some(t) = ray.0.box_entry(&boxes[obj as usize]) {
+                    if t < best_t || (t == best_t && obj < best_idx) {
+                        best_t = t;
+                        best_idx = obj;
+                    }
+                }
+            },
+            |_| all_nodes += 1,
+        );
+        match hit {
+            Some(h) => {
+                assert_eq!((h.index, h.t), (best_idx, best_t), "strategies disagree");
+                hits += 1;
+            }
+            None => assert_eq!(best_idx, u32::MAX, "strategies disagree on a miss"),
+        }
+    }
+
+    let mut tab = Table::new(
+        "fig12_raycast_first_hit",
+        &["strategy", "total_s", "per_ray_us", "rays_per_s"],
+    );
+    for (name, total, per_ray) in [
+        ("first_hit", t_first, t_first / n_rays as f64),
+        ("all_hits_min", t_allmin, t_allmin / n_rays as f64),
+        ("brute_march", t_brute_per_ray * n_rays as f64, t_brute_per_ray),
+    ] {
+        tab.row(&[name.to_string(), f(total), f(per_ray * 1e6), f(1.0 / per_ray)]);
+    }
+    tab.write_csv();
+    println!(
+        "node accesses over {probe} rays ({hits} hits): first_hit={fh_nodes} \
+         all_hits={all_nodes} ({:.1}x fewer)",
+        all_nodes as f64 / fh_nodes.max(1) as f64
+    );
+
+    write_json_snapshot(
+        "BENCH_raycast.json",
+        &[
+            ("n_boxes", JsonValue::Int(n as u64)),
+            ("n_rays", JsonValue::Int(n_rays as u64)),
+            ("leaf_half_extent", JsonValue::Num(half as f64)),
+            ("first_hit_s", JsonValue::Num(t_first)),
+            ("all_hits_min_s", JsonValue::Num(t_allmin)),
+            ("brute_march_per_ray_s", JsonValue::Num(t_brute_per_ray)),
+            ("first_hit_rays_per_s", JsonValue::Num(n_rays as f64 / t_first)),
+            ("speedup_vs_all_hits_min", JsonValue::Num(t_allmin / t_first)),
+            ("probe_rays", JsonValue::Int(probe as u64)),
+            ("probe_hits", JsonValue::Int(hits)),
+            ("first_hit_internal_nodes", JsonValue::Int(fh_nodes)),
+            ("all_hits_internal_nodes", JsonValue::Int(all_nodes)),
+        ],
+    );
+}

@@ -5,10 +5,11 @@
 //! perfect ground truth for testing the trees, and the CPU-side twin of
 //! the accelerator's tiled distance engine in [`crate::runtime`].
 
+use crate::bvh::first_hit::{offer_hit, RayHit};
 use crate::bvh::nearest::{KnnHeap, Neighbor};
 use crate::exec::ExecSpace;
 use crate::geometry::predicates::SpatialPredicate;
-use crate::geometry::{Aabb, Point};
+use crate::geometry::{Aabb, Point, Ray};
 
 /// A brute-force "index": just the boxes.
 pub struct BruteForce {
@@ -52,6 +53,20 @@ impl BruteForce {
         let mut out = Vec::new();
         heap.drain_sorted_into(&mut out);
         out
+    }
+
+    /// The single nearest object hit by the ray — a linear march over
+    /// every box, sharing the tree's [`offer_hit`] tie-break (smallest
+    /// entry parameter, then smallest index) so it is the exact oracle
+    /// of the first-hit traversal.
+    pub fn first_hit(&self, ray: &Ray) -> Option<RayHit> {
+        let mut best = None;
+        for (i, b) in self.boxes.iter().enumerate() {
+            if let Some(t) = ray.box_entry(b) {
+                offer_hit(&mut best, t, i as u32);
+            }
+        }
+        best
     }
 
     /// Parallel batched spatial counts (used by the accelerator-comparison
@@ -105,6 +120,9 @@ mod tests {
         assert_eq!(bf.spatial(&along), vec![4, 5, 6, 7, 8, 9]);
         let off = IntersectsRay(Ray::new(Point::new(0.0, 1.0, 0.0), Point::new(1.0, 0.0, 0.0)));
         assert!(bf.spatial(&off).is_empty());
+        // First hit: the nearest of the six, at t = 0.5.
+        assert_eq!(bf.first_hit(&along.0), Some(RayHit { index: 4, t: 0.5 }));
+        assert_eq!(bf.first_hit(&off.0), None);
     }
 
     #[test]

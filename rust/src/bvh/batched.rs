@@ -35,18 +35,21 @@
 //!   batch by [`PredicateKind`], dispatching *once per sub-batch* (see
 //!   [`crate::coordinator::service::execute_sub_batched`]).
 
+use super::first_hit::{first_hit, RayHit};
 use super::nearest::{nearest_stack, NearestScratch, Neighbor};
 use super::traversal::{count_spatial, for_each_spatial};
-use super::Bvh;
+use super::{Bvh, NodeRef};
 use crate::exec::scan::{exclusive_scan, SendPtr};
 use crate::exec::{sort, ExecSpace};
 use crate::geometry::predicates::{
-    IntersectsBox, IntersectsRay, IntersectsSphere, Nearest, Spatial, SpatialPredicate,
+    FirstHit, FirstHitQuery, IntersectsBox, IntersectsRay, IntersectsSphere, Nearest, Spatial,
+    SpatialPredicate,
 };
 use crate::geometry::{morton, Aabb, Point, Ray, Sphere};
 
 /// One wire-format search query — the open tagged predicate family of the
-/// coordinator protocol. Every variant carries a serializable payload;
+/// coordinator protocol (sphere/box/ray regions, attachments, nearest,
+/// first-hit ray casts). Every variant carries a serializable payload;
 /// [`QueryPredicate::kind`] exposes the tag the service sub-batches on.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum QueryPredicate {
@@ -59,6 +62,10 @@ pub enum QueryPredicate {
     Attach(Spatial, u64),
     /// k-nearest-neighbors query.
     Nearest(Nearest),
+    /// First-hit ray cast: the single nearest object hit by the ray
+    /// (ordered descent, [`super::first_hit`]). At most one result; the
+    /// hit's entry parameter rides in [`QueryOutput::distances`].
+    FirstHit(Ray),
 }
 
 /// The kind tag of a wire predicate: the sub-batching key of the
@@ -81,11 +88,13 @@ pub enum PredicateKind {
     AttachRay,
     /// k-NN query.
     Nearest,
+    /// First-hit ray cast.
+    FirstHit,
 }
 
 impl PredicateKind {
     /// Number of kinds (size of per-kind tables).
-    pub const COUNT: usize = 7;
+    pub const COUNT: usize = 8;
 
     /// Every kind, in sub-batch execution order.
     pub const ALL: [PredicateKind; PredicateKind::COUNT] = [
@@ -96,6 +105,7 @@ impl PredicateKind {
         PredicateKind::AttachBox,
         PredicateKind::AttachRay,
         PredicateKind::Nearest,
+        PredicateKind::FirstHit,
     ];
 
     /// Dense index for per-kind tables (declaration order, which
@@ -115,6 +125,7 @@ impl PredicateKind {
             PredicateKind::AttachBox => "attach_box",
             PredicateKind::AttachRay => "attach_ray",
             PredicateKind::Nearest => "nearest",
+            PredicateKind::FirstHit => "first_hit",
         }
     }
 }
@@ -146,6 +157,12 @@ impl QueryPredicate {
         QueryPredicate::Nearest(Nearest { point, k })
     }
 
+    /// Nearest-intersection ray cast: the single closest object hit by
+    /// `r` (at most one result per query).
+    pub fn first_hit(r: Ray) -> Self {
+        QueryPredicate::FirstHit(r)
+    }
+
     /// The kind tag this predicate sub-batches under.
     #[inline]
     pub fn kind(&self) -> PredicateKind {
@@ -157,6 +174,7 @@ impl QueryPredicate {
             QueryPredicate::Attach(Spatial::IntersectsBox(_), _) => PredicateKind::AttachBox,
             QueryPredicate::Attach(Spatial::IntersectsRay(_), _) => PredicateKind::AttachRay,
             QueryPredicate::Nearest(_) => PredicateKind::Nearest,
+            QueryPredicate::FirstHit(_) => PredicateKind::FirstHit,
         }
     }
 
@@ -175,6 +193,7 @@ impl QueryPredicate {
         match self {
             QueryPredicate::Spatial(s) | QueryPredicate::Attach(s, _) => s.origin(),
             QueryPredicate::Nearest(n) => n.point,
+            QueryPredicate::FirstHit(r) => r.origin,
         }
     }
 }
@@ -326,6 +345,35 @@ pub fn for_each_match<P, F>(
             });
         }
     });
+}
+
+/// Executes a batch of first-hit ray casts, returning one `Option` per
+/// query in the caller's order — fixed-width output, so neither a
+/// counting pass nor CSR offsets are needed. Workers reuse one traversal
+/// stack per thread; Morton ordering of the ray origins (§2.2.3) applies
+/// when `sort_queries` is set.
+pub fn run_first_hit_queries<Q: FirstHitQuery + Sync>(
+    bvh: &Bvh,
+    space: &ExecSpace,
+    queries: &[Q],
+    sort_queries: bool,
+) -> Vec<Option<RayHit>> {
+    let order = order_by_origin(space, bvh, queries, sort_queries, |q| q.ray().origin);
+    let mut out: Vec<Option<RayHit>> = vec![None; queries.len()];
+    {
+        let op = SendPtr(out.as_mut_ptr());
+        let order_ref = &order;
+        space.parallel_for_chunks(queries.len(), |b, e| {
+            let mut stack: Vec<(NodeRef, f32)> = Vec::with_capacity(64);
+            for pos in b..e {
+                let orig = order_ref[pos] as usize;
+                let hit = first_hit(bvh, &queries[orig], &mut stack);
+                // SAFETY: one writer per original query index.
+                unsafe { op.write(orig, hit) };
+            }
+        });
+    }
+    out
 }
 
 /// Generic two-pass (2P) count-and-fill execution (§2.2.1).
@@ -480,9 +528,12 @@ pub fn run_queries(
     }
 }
 
-/// The needs-distances test: nearest batches also fill `distances`.
-fn batch_has_nearest(queries: &[QueryPredicate]) -> bool {
-    queries.iter().any(|p| matches!(p, QueryPredicate::Nearest(_)))
+/// The needs-distances test: nearest batches fill `distances` with
+/// squared distances, first-hit batches with ray-entry parameters.
+fn batch_needs_distances(queries: &[QueryPredicate]) -> bool {
+    queries
+        .iter()
+        .any(|p| matches!(p, QueryPredicate::Nearest(_) | QueryPredicate::FirstHit(_)))
 }
 
 /// Counts one facade predicate: a single enum dispatch selecting the
@@ -518,13 +569,19 @@ fn for_each_enum<F: FnMut(u32)>(
 fn run_2p(bvh: &Bvh, space: &ExecSpace, queries: &[QueryPredicate], order: &[u32]) -> QueryOutput {
     let q = queries.len();
     let mut counts = vec![0u32; q];
+    // First-hit casts are cached from the counting pass (fixed-width
+    // results are cheap to hold) so the fill pass never re-traverses.
+    let has_first_hit = queries.iter().any(|p| matches!(p, QueryPredicate::FirstHit(_)));
+    let mut fh_cache: Vec<Option<RayHit>> = vec![None; if has_first_hit { q } else { 0 }];
 
     // Pass 1: count. Traverse in sorted order, write counts at original
     // positions so the scan yields caller-order offsets.
     {
         let cp = SendPtr(counts.as_mut_ptr());
+        let fp = SendPtr(fh_cache.as_mut_ptr());
         space.parallel_for_chunks(q, |b, e| {
             let mut stack = Vec::with_capacity(64);
+            let mut fh_stack: Vec<(NodeRef, f32)> = Vec::with_capacity(64);
             for pos in b..e {
                 let orig = order[pos] as usize;
                 let count = match &queries[orig] {
@@ -534,6 +591,12 @@ fn run_2p(bvh: &Bvh, space: &ExecSpace, queries: &[QueryPredicate], order: &[u32
                     // §2.2.2: for nearest queries the result count is known
                     // in advance (min(k, n)) — no counting traversal needed.
                     QueryPredicate::Nearest(nst) => nst.k.min(bvh.len()) as u32,
+                    QueryPredicate::FirstHit(r) => {
+                        let hit = first_hit(bvh, &FirstHit(*r), &mut fh_stack);
+                        // SAFETY: one writer per original query index.
+                        unsafe { fp.write(orig, hit) };
+                        hit.is_some() as u32
+                    }
                 };
                 // SAFETY: one writer per original query index.
                 unsafe { cp.write(orig, count) };
@@ -544,7 +607,7 @@ fn run_2p(bvh: &Bvh, space: &ExecSpace, queries: &[QueryPredicate], order: &[u32
     let offsets = exclusive_scan(space, &counts);
     let total = offsets[q] as usize;
     let mut indices = vec![0u32; total];
-    let want_dist = batch_has_nearest(queries);
+    let want_dist = batch_needs_distances(queries);
     let mut distances = vec![0.0f32; if want_dist { total } else { 0 }];
 
     // Pass 2: fill.
@@ -552,6 +615,7 @@ fn run_2p(bvh: &Bvh, space: &ExecSpace, queries: &[QueryPredicate], order: &[u32
         let ip = SendPtr(indices.as_mut_ptr());
         let dp = SendPtr(distances.as_mut_ptr());
         let offsets_ref = &offsets;
+        let fh_cache_ref = &fh_cache;
         space.parallel_for_chunks(q, |b, e| {
             let mut stack = Vec::with_capacity(64);
             let mut scratch = NearestScratch::new(16);
@@ -581,6 +645,17 @@ fn run_2p(bvh: &Bvh, space: &ExecSpace, queries: &[QueryPredicate], order: &[u32
                             }
                         }
                     }
+                    QueryPredicate::FirstHit(_) => {
+                        // Cast already done (and cached) by pass 1.
+                        if let Some(hit) = fh_cache_ref[orig] {
+                            unsafe {
+                                ip.write(base, hit.index);
+                                if want_dist {
+                                    dp.write(base, hit.t);
+                                }
+                            }
+                        }
+                    }
                 }
             }
         });
@@ -599,7 +674,7 @@ fn run_1p(
     buffer: usize,
 ) -> QueryOutput {
     let q = queries.len();
-    let want_dist = batch_has_nearest(queries);
+    let want_dist = batch_needs_distances(queries);
     let mut counts = vec![0u32; q];
     // The preallocated result buffer: `buffer` slots per query. This is
     // the allocation that becomes prohibitive for the hollow case at
@@ -614,6 +689,7 @@ fn run_1p(
         let dp = SendPtr(dbuf.as_mut_ptr());
         space.parallel_for_chunks(q, |b, e| {
             let mut stack = Vec::with_capacity(64);
+            let mut fh_stack: Vec<(NodeRef, f32)> = Vec::with_capacity(64);
             let mut scratch = NearestScratch::new(16);
             let mut knn: Vec<Neighbor> = Vec::new();
             for pos in b..e {
@@ -642,6 +718,20 @@ fn run_1p(
                                 }
                             }
                             count += 1;
+                        }
+                    }
+                    QueryPredicate::FirstHit(r) => {
+                        // At most one result, and `buffer >= 1` always
+                        // holds (0 selects 2P), so first-hit can never
+                        // overflow.
+                        if let Some(hit) = first_hit(bvh, &FirstHit(*r), &mut fh_stack) {
+                            unsafe {
+                                bp.write(base, hit.index);
+                                if want_dist {
+                                    dp.write(base, hit.t);
+                                }
+                            }
+                            count = 1;
                         }
                     }
                 }
@@ -703,6 +793,19 @@ fn run_1p(
                                     ip.write(base + j, nb.index);
                                     if want_dist {
                                         dp.write(base + j, nb.distance_squared);
+                                    }
+                                }
+                            }
+                        }
+                        QueryPredicate::FirstHit(r) => {
+                            // Unreachable in practice (count <= 1 <= buffer);
+                            // kept total by re-running the cast.
+                            let mut fh_stack = Vec::new();
+                            if let Some(hit) = first_hit(bvh, &FirstHit(*r), &mut fh_stack) {
+                                unsafe {
+                                    ip.write(base, hit.index);
+                                    if want_dist {
+                                        dp.write(base, hit.t);
                                     }
                                 }
                             }
@@ -929,10 +1032,13 @@ mod tests {
             QueryPredicate::intersects_ray(ray),
             QueryPredicate::attach(Spatial::IntersectsRay(ray), 99),
             QueryPredicate::nearest(Point::origin(), 4),
+            QueryPredicate::first_hit(ray),
         ];
         assert_eq!(queries[3].kind(), PredicateKind::AttachRay);
         assert_eq!(queries[3].data(), Some(99));
         assert_eq!(queries[3].origin(), ray.origin);
+        assert_eq!(queries[5].kind(), PredicateKind::FirstHit);
+        assert_eq!(queries[5].origin(), ray.origin);
         for opts in [
             QueryOptions { buffer_size: None, sort_queries: true },
             QueryOptions { buffer_size: Some(2), sort_queries: false },
@@ -947,7 +1053,55 @@ mod tests {
                 sorted(out.results_for(3).to_vec())
             );
             assert_eq!(out.results_for(4).len(), 4);
+            // First hit of the row ray: grid point (0, 2, 3) at t = 1.
+            assert_eq!(out.results_for(5), &[2 * 6 + 3]);
+            assert_eq!(out.distances_for(5), &[1.0]);
         }
+    }
+
+    #[test]
+    fn first_hit_batch_matches_facade_engine() {
+        let space = ExecSpace::with_threads(2);
+        let pts = grid_points(8);
+        let bvh = build(&pts, &space);
+        // One ray per (y, z) grid row, entering from x = -1.
+        let rays: Vec<FirstHit> = (0..8)
+            .flat_map(|y| {
+                (0..8).map(move |z| {
+                    FirstHit(Ray::new(
+                        Point::new(-1.0, y as f32, z as f32),
+                        Point::new(1.0, 0.0, 0.0),
+                    ))
+                })
+            })
+            .collect();
+        for sort in [false, true] {
+            let hits = bvh.query_first_hit(&space, &rays, sort);
+            for (qi, hit) in hits.iter().enumerate() {
+                let h = hit.expect("row rays always hit");
+                // First point of row (y, z) is index y*8 + z, at t = 1.
+                assert_eq!(h.index as usize, qi, "sort={sort}");
+                assert_eq!(h.t, 1.0);
+            }
+            // The facade engine returns the same answers through CSR.
+            let facade: Vec<QueryPredicate> =
+                rays.iter().map(|r| QueryPredicate::first_hit(r.0)).collect();
+            let opts = QueryOptions { buffer_size: None, sort_queries: sort };
+            let out = bvh.query(&space, &facade, &opts);
+            for (qi, hit) in hits.iter().enumerate() {
+                let h = hit.unwrap();
+                assert_eq!(out.results_for(qi), &[h.index]);
+                assert_eq!(out.distances_for(qi), &[h.t]);
+            }
+        }
+        // A miss yields an empty result row.
+        let miss = vec![QueryPredicate::first_hit(Ray::new(
+            Point::new(-1.0, 20.0, 20.0),
+            Point::new(1.0, 0.0, 0.0),
+        ))];
+        let out = bvh.query(&space, &miss, &QueryOptions::default());
+        assert!(out.results_for(0).is_empty());
+        assert_eq!(out.total(), 0);
     }
 
     #[test]
@@ -965,6 +1119,7 @@ mod tests {
             QueryPredicate::attach(Spatial::IntersectsBox(b), 2),
             QueryPredicate::attach(Spatial::IntersectsRay(ray), 3),
             QueryPredicate::nearest(Point::origin(), 1),
+            QueryPredicate::first_hit(ray),
         ];
         for (i, (p, kind)) in preds.iter().zip(PredicateKind::ALL).enumerate() {
             assert_eq!(p.kind(), kind);

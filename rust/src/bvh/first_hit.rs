@@ -1,0 +1,228 @@
+//! First-hit (nearest-intersection) ray traversal.
+//!
+//! The stack traversal of §2.2.1 visits *every* node the predicate
+//! admits — the right shape for "all overlaps", pessimal for ray casting
+//! where the answer is the single nearest hit. This module is the ray
+//! analogue of the k-NN ordered descent (§2.2.2): children are pushed so
+//! the one the ray *enters first* is popped first, the best leaf hit
+//! found so far tightens the admissible parameter range, and whole
+//! subtrees are skipped once their entry parameter exceeds it.
+//!
+//! Pruning and ordering both come from the one slab implementation,
+//! [`Ray::box_entry`] — the same test [`Ray::intersects_box`] delegates
+//! to — so the first-hit path can never disagree with the all-hits path
+//! about *whether* a box is hit, only stop earlier.
+
+use super::{is_leaf, ref_index, Bvh, NodeRef};
+use crate::geometry::predicates::FirstHitQuery;
+
+/// The result of a first-hit ray cast: the nearest intersected object
+/// and the ray parameter at which its box is entered.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RayHit {
+    /// Original (user) object index.
+    pub index: u32,
+    /// Entry parameter of the ray into the object's box (`0` when the
+    /// ray origin is inside it).
+    pub t: f32,
+}
+
+/// Offers a candidate leaf hit: keeps the smaller entry parameter,
+/// breaking exact ties toward the smaller object index so every entry
+/// point (direct, batched, wire, distributed) agrees with the
+/// brute-force oracle no matter what order candidates arrive in.
+#[inline]
+pub fn offer_hit(best: &mut Option<RayHit>, t: f32, index: u32) {
+    let better = match best {
+        None => true,
+        Some(b) => t < b.t || (t == b.t && index < b.index),
+    };
+    if better {
+        *best = Some(RayHit { index, t });
+    }
+}
+
+/// Casts the query's ray through the tree, returning the nearest hit (by
+/// box-entry parameter, ties to the smaller object index) or `None` when
+/// nothing is hit within `[0, t_max]`. `stack` is cleared and reused, as
+/// in the spatial and nearest traversals.
+#[inline]
+pub fn first_hit<Q: FirstHitQuery>(
+    bvh: &Bvh,
+    query: &Q,
+    stack: &mut Vec<(NodeRef, f32)>,
+) -> Option<RayHit> {
+    first_hit_monitored(bvh, query, stack, |_| {})
+}
+
+/// [`first_hit`] with a `monitor` callback invoked with each *internal*
+/// node whose box is slab-tested — comparable with
+/// [`super::traversal::for_each_spatial_monitored`], which is how the
+/// prune-versus-scan test quantifies the ordered descent.
+pub fn first_hit_monitored<Q: FirstHitQuery, M: FnMut(u32)>(
+    bvh: &Bvh,
+    query: &Q,
+    stack: &mut Vec<(NodeRef, f32)>,
+    mut monitor: M,
+) -> Option<RayHit> {
+    let ray = query.ray();
+    if bvh.n_leaves == 0 {
+        return None;
+    }
+    // Single-leaf tree: the root is a leaf.
+    if is_leaf(bvh.root) {
+        return ray.box_entry(&bvh.leaf_boxes[0]).map(|t| RayHit { index: bvh.leaf_perm[0], t });
+    }
+    monitor(0);
+    let root_entry = ray.box_entry(&bvh.nodes[ref_index(bvh.root)].bbox)?;
+    let mut best: Option<RayHit> = None;
+    stack.clear();
+    stack.push((bvh.root, root_entry));
+    while let Some((node, entry)) = stack.pop() {
+        // Prune: a box contains its subtree's leaf boxes, so every leaf
+        // below enters at or after `entry`; strictly behind the best hit
+        // means the subtree cannot improve it. Equal entries survive so
+        // the index tie-break stays exact.
+        if best.as_ref().is_some_and(|b| entry > b.t) {
+            continue;
+        }
+        let nd = &bvh.nodes[ref_index(node)];
+        let mut pending: [(NodeRef, f32); 2] = [(0, f32::INFINITY); 2];
+        let mut n_pending = 0usize;
+        for child in [nd.left, nd.right] {
+            let ci = ref_index(child);
+            if is_leaf(child) {
+                if let Some(t) = ray.box_entry(&bvh.leaf_boxes[ci]) {
+                    offer_hit(&mut best, t, bvh.leaf_perm[ci]);
+                }
+            } else {
+                monitor(ci as u32);
+                if let Some(t) = ray.box_entry(&bvh.nodes[ci].bbox) {
+                    pending[n_pending] = (child, t);
+                    n_pending += 1;
+                }
+            }
+        }
+        // Ordered descent: push the later-entered child first so the
+        // earlier-entered one is popped (and can tighten the bound)
+        // first — the k-NN LIFO trick (§2.2.2) aimed at rays.
+        if n_pending == 2 && pending[0].1 < pending[1].1 {
+            pending.swap(0, 1);
+        }
+        for &(child, t) in pending.iter().take(n_pending) {
+            if best.as_ref().map_or(true, |b| t <= b.t) {
+                stack.push((child, t));
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::ExecSpace;
+    use crate::geometry::predicates::{attach, FirstHit};
+    use crate::geometry::{Aabb, Point, Ray};
+
+    fn line_boxes(n: usize) -> Vec<Aabb> {
+        (0..n)
+            .map(|i| Aabb::from_point(Point::new(i as f32, 0.0, 0.0)))
+            .collect()
+    }
+
+    #[test]
+    fn nearest_hit_along_a_line() {
+        let space = ExecSpace::serial();
+        let bvh = Bvh::build(&space, &line_boxes(64));
+        let mut stack = Vec::new();
+        // From between points 10 and 11, forward: first hit is 11.
+        let fwd = FirstHit(Ray::new(Point::new(10.5, 0.0, 0.0), Point::new(1.0, 0.0, 0.0)));
+        assert_eq!(first_hit(&bvh, &fwd, &mut stack), Some(RayHit { index: 11, t: 0.5 }));
+        // Backward: first hit is 10.
+        let bwd = FirstHit(Ray::new(Point::new(10.5, 0.0, 0.0), Point::new(-1.0, 0.0, 0.0)));
+        assert_eq!(first_hit(&bvh, &bwd, &mut stack), Some(RayHit { index: 10, t: 0.5 }));
+        // Off the line: no hit.
+        let miss = FirstHit(Ray::new(Point::new(0.0, 5.0, 0.0), Point::new(1.0, 0.0, 0.0)));
+        assert_eq!(first_hit(&bvh, &miss, &mut stack), None);
+    }
+
+    #[test]
+    fn t_max_boundary_is_inclusive() {
+        let space = ExecSpace::serial();
+        let bvh = Bvh::build(&space, &line_boxes(16));
+        let mut stack = Vec::new();
+        let origin = Point::new(-2.0, 0.0, 0.0);
+        let dir = Point::new(1.0, 0.0, 0.0);
+        // Point 0 sits exactly at t = 2: a segment ending there hits it...
+        let exact = FirstHit(Ray::segment(origin, dir, 2.0));
+        assert_eq!(first_hit(&bvh, &exact, &mut stack), Some(RayHit { index: 0, t: 2.0 }));
+        // ...and one ending any earlier misses everything.
+        let short = FirstHit(Ray::segment(origin, dir, 1.9));
+        assert_eq!(first_hit(&bvh, &short, &mut stack), None);
+    }
+
+    #[test]
+    fn origin_inside_a_leaf_hits_at_zero() {
+        let space = ExecSpace::serial();
+        let boxes = vec![
+            Aabb::new(Point::new(-1.0, -1.0, -1.0), Point::new(1.0, 1.0, 1.0)),
+            Aabb::from_point(Point::new(5.0, 0.0, 0.0)),
+        ];
+        let bvh = Bvh::build(&space, &boxes);
+        let mut stack = Vec::new();
+        let q = FirstHit(Ray::new(Point::origin(), Point::new(1.0, 0.0, 0.0)));
+        assert_eq!(first_hit(&bvh, &q, &mut stack), Some(RayHit { index: 0, t: 0.0 }));
+    }
+
+    #[test]
+    fn ties_resolve_to_the_smaller_index() {
+        let space = ExecSpace::serial();
+        // Duplicate points: entry parameters tie exactly.
+        let mut boxes = line_boxes(8);
+        boxes.extend(line_boxes(8)); // indices 8..16 duplicate 0..8
+        let bvh = Bvh::build(&space, &boxes);
+        let mut stack = Vec::new();
+        let q = FirstHit(Ray::new(Point::new(2.5, 0.0, 0.0), Point::new(1.0, 0.0, 0.0)));
+        assert_eq!(first_hit(&bvh, &q, &mut stack), Some(RayHit { index: 3, t: 0.5 }));
+    }
+
+    #[test]
+    fn empty_and_single_leaf_trees() {
+        let space = ExecSpace::serial();
+        let mut stack = Vec::new();
+        let q = FirstHit(Ray::new(Point::new(-1.0, 0.0, 0.0), Point::new(1.0, 0.0, 0.0)));
+        let empty = Bvh::build(&space, &[]);
+        assert_eq!(first_hit(&empty, &q, &mut stack), None);
+        let one = Bvh::build(&space, &[Aabb::from_point(Point::origin())]);
+        assert_eq!(first_hit(&one, &q, &mut stack), Some(RayHit { index: 0, t: 1.0 }));
+        let far = FirstHit(Ray::new(Point::new(0.0, 3.0, 0.0), Point::new(1.0, 0.0, 0.0)));
+        assert_eq!(first_hit(&one, &far, &mut stack), None);
+    }
+
+    #[test]
+    fn attachments_are_transparent() {
+        let space = ExecSpace::serial();
+        let bvh = Bvh::build(&space, &line_boxes(32));
+        let mut stack = Vec::new();
+        let plain = FirstHit(Ray::new(Point::new(-1.0, 0.0, 0.0), Point::new(1.0, 0.0, 0.0)));
+        let tagged = attach(plain, 77u64);
+        assert_eq!(first_hit(&bvh, &plain, &mut stack), first_hit(&bvh, &tagged, &mut stack));
+        assert_eq!(tagged.data, 77);
+    }
+
+    #[test]
+    fn offer_hit_orders_by_entry_then_index() {
+        let mut best = None;
+        offer_hit(&mut best, 2.0, 9);
+        assert_eq!(best, Some(RayHit { index: 9, t: 2.0 }));
+        offer_hit(&mut best, 3.0, 1); // farther: rejected
+        assert_eq!(best, Some(RayHit { index: 9, t: 2.0 }));
+        offer_hit(&mut best, 2.0, 4); // tie, smaller index: accepted
+        assert_eq!(best, Some(RayHit { index: 4, t: 2.0 }));
+        offer_hit(&mut best, 2.0, 6); // tie, larger index: rejected
+        assert_eq!(best, Some(RayHit { index: 4, t: 2.0 }));
+        offer_hit(&mut best, 0.5, 8); // nearer: accepted
+        assert_eq!(best, Some(RayHit { index: 8, t: 0.5 }));
+    }
+}

@@ -7,6 +7,10 @@
 //! * [`traversal`] — stack-based spatial traversal, §2.2.1.
 //! * [`nearest`] — stack-based nearest traversal (Patwary et al. 2016
 //!   style) plus a priority-queue reference variant, §2.2.2.
+//! * [`first_hit`] — nearest-intersection ray casting: ordered child
+//!   descent by ray-entry parameter with best-hit pruning, returning
+//!   `Option<RayHit>` instead of a match list (the ArborX 2.0
+//!   `nearest-intersection` family).
 //! * [`batched`] — the batched query engines: two-pass count-and-fill
 //!   (2P), buffered single-pass (1P) with fallback and compaction, CSR
 //!   output, and Morton query ordering (§2.2.1–2.2.3). Engines are
@@ -20,14 +24,16 @@
 pub mod apetrei;
 pub mod batched;
 pub mod build;
+pub mod first_hit;
 pub mod nearest;
 pub mod stats;
 pub mod traversal;
 
 pub use batched::{PredicateKind, QueryOptions, QueryOutput, QueryPredicate};
+pub use first_hit::RayHit;
 
 use crate::exec::ExecSpace;
-use crate::geometry::predicates::SpatialPredicate;
+use crate::geometry::predicates::{FirstHitQuery, SpatialPredicate};
 use crate::geometry::Aabb;
 
 /// A tagged reference to a BVH node: leaves have the high bit set.
@@ -186,6 +192,21 @@ impl Bvh {
         F: Fn(u32, u32) + Sync,
     {
         batched::for_each_match(self, space, preds, true, &callback)
+    }
+
+    /// Executes a batch of first-hit ray casts, returning one
+    /// [`RayHit`] option per query in the caller's order. The output is
+    /// fixed width (every query yields at most one result), so no CSR
+    /// offsets are needed; queries are Morton-ordered by ray origin when
+    /// `sort_queries` is set (§2.2.3) and each worker thread reuses one
+    /// traversal stack.
+    pub fn query_first_hit<Q: FirstHitQuery + Sync>(
+        &self,
+        space: &ExecSpace,
+        queries: &[Q],
+        sort_queries: bool,
+    ) -> Vec<Option<RayHit>> {
+        batched::run_first_hit_queries(self, space, queries, sort_queries)
     }
 
     /// Structural sanity check used by tests and debug assertions: every

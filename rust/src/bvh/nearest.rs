@@ -34,9 +34,23 @@ pub struct Neighbor {
 ///
 /// `heap[0]` is the worst retained candidate, so the traversal prune
 /// bound is `O(1)` to read and candidates are replaced in `O(log k)`.
+/// The heap orders candidates lexicographically by (distance, index), so
+/// on exact distance ties the *smaller original index* is retained — the
+/// same total order the brute-force oracle sorts by, which makes k-NN
+/// results deterministic regardless of traversal or rank visitation
+/// order.
 pub struct KnnHeap {
     k: usize,
     heap: Vec<Neighbor>,
+}
+
+/// The heap's total order: is `a` a worse candidate than `b`?
+/// Lexicographic on (distance, index), so distance ties resolve to the
+/// smaller original index.
+#[inline]
+fn worse(a: &Neighbor, b: &Neighbor) -> bool {
+    a.distance_squared > b.distance_squared
+        || (a.distance_squared == b.distance_squared && a.index > b.index)
 }
 
 impl KnnHeap {
@@ -45,13 +59,22 @@ impl KnnHeap {
         KnnHeap { k, heap: Vec::with_capacity(k) }
     }
 
-    /// Clears the heap for reuse (keeps capacity and `k`).
+    /// Clears the heap for reuse (keeps `k` and grows the allocation to
+    /// at least `k` slots so the offer loop never reallocates).
     pub fn reset(&mut self, k: usize) {
         self.k = k;
         self.heap.clear();
-        if self.heap.capacity() < k {
-            self.heap.reserve(k - self.heap.capacity());
-        }
+        // `reserve` takes *additional* capacity: after `clear` the length
+        // is 0, so this guarantees `capacity() >= k`. (Passing
+        // `k - capacity` here left the heap under-sized and reallocating
+        // inside the hot offer loop whenever k grew.)
+        self.heap.reserve(k);
+    }
+
+    /// Slots currently allocated for candidates (the scratch-reuse
+    /// probe: stays `>= k` after [`KnnHeap::reset`]).
+    pub fn capacity(&self) -> usize {
+        self.heap.capacity()
     }
 
     /// Current pruning bound: squared distance of the worst candidate, or
@@ -65,37 +88,40 @@ impl KnnHeap {
         }
     }
 
-    /// Offers a candidate; keeps it only if it improves the k-best set.
+    /// Offers a candidate; keeps it only if it improves the k-best set
+    /// under the (distance, index) order — so on a distance tie with the
+    /// current worst candidate, the smaller index wins.
     #[inline]
     pub fn offer(&mut self, distance_squared: f32, index: u32) {
         if self.k == 0 {
             return;
         }
+        let cand = Neighbor { distance_squared, index };
         if self.heap.len() < self.k {
-            self.heap.push(Neighbor { distance_squared, index });
+            self.heap.push(cand);
             // Sift up.
             let mut i = self.heap.len() - 1;
             while i > 0 {
                 let parent = (i - 1) / 2;
-                if self.heap[parent].distance_squared < self.heap[i].distance_squared {
+                if worse(&self.heap[i], &self.heap[parent]) {
                     self.heap.swap(parent, i);
                     i = parent;
                 } else {
                     break;
                 }
             }
-        } else if distance_squared < self.heap[0].distance_squared {
-            self.heap[0] = Neighbor { distance_squared, index };
+        } else if worse(&self.heap[0], &cand) {
+            self.heap[0] = cand;
             // Sift down.
             let n = self.heap.len();
             let mut i = 0;
             loop {
                 let (l, r) = (2 * i + 1, 2 * i + 2);
                 let mut largest = i;
-                if l < n && self.heap[l].distance_squared > self.heap[largest].distance_squared {
+                if l < n && worse(&self.heap[l], &self.heap[largest]) {
                     largest = l;
                 }
-                if r < n && self.heap[r].distance_squared > self.heap[largest].distance_squared {
+                if r < n && worse(&self.heap[r], &self.heap[largest]) {
                     largest = r;
                 }
                 if largest == i {
@@ -338,13 +364,83 @@ mod tests {
                 let expect = brute_knn(&points, &q, k);
                 nearest_stack(&bvh, &Nearest::new(q, k), &mut scratch, &mut out_stack);
                 nearest_pq(&bvh, &Nearest::new(q, k), &mut out_pq);
-                let ds: Vec<f32> = out_stack.iter().map(|n| n.distance_squared).collect();
-                let de: Vec<f32> = expect.iter().map(|n| n.distance_squared).collect();
-                assert_eq!(ds, de, "stack k={k}");
-                let dp: Vec<f32> = out_pq.iter().map(|n| n.distance_squared).collect();
-                assert_eq!(dp, de, "pq k={k}");
+                // Full Neighbor equality: distances AND indices, so the
+                // (distance, index) tie-break is part of the contract.
+                assert_eq!(out_stack, expect, "stack k={k}");
+                assert_eq!(out_pq, expect, "pq k={k}");
             }
         }
+    }
+
+    #[test]
+    fn knn_ties_resolve_to_ascending_indices() {
+        // Duplicated points create exact distance ties; both traversals
+        // must return the same indices as the brute-force oracle no
+        // matter what order the duplicates are visited in.
+        let mut points = cloud(40, 11);
+        let dups = points.clone();
+        points.extend(dups); // every point appears as i and i + 40
+        let boxes: Vec<Aabb> = points.iter().map(|p| Aabb::from_point(*p)).collect();
+        let bvh = Bvh::build(&ExecSpace::serial(), &boxes);
+        let mut scratch = NearestScratch::new(8);
+        let (mut out_stack, mut out_pq) = (Vec::new(), Vec::new());
+        for q in cloud(10, 5) {
+            for k in [1usize, 3, 8] {
+                let expect = brute_knn(&points, &q, k);
+                nearest_stack(&bvh, &Nearest::new(q, k), &mut scratch, &mut out_stack);
+                nearest_pq(&bvh, &Nearest::new(q, k), &mut out_pq);
+                assert_eq!(out_stack, expect, "stack k={k}");
+                assert_eq!(out_pq, expect, "pq k={k}");
+            }
+        }
+        // The k = 1 answer on a duplicated site is always the lower copy.
+        nearest_stack(&bvh, &Nearest::new(points[3], 2), &mut scratch, &mut out_stack);
+        assert_eq!(out_stack[0].index, 3);
+        assert_eq!(out_stack[1].index, 43);
+    }
+
+    #[test]
+    fn heap_tie_break_prefers_smaller_index() {
+        let mut h = KnnHeap::new(2);
+        h.offer(1.0, 5);
+        h.offer(1.0, 7);
+        h.offer(1.0, 3); // tie with the worst (7): 3 replaces it
+        let mut out = Vec::new();
+        h.drain_sorted_into(&mut out);
+        let idx: Vec<u32> = out.iter().map(|n| n.index).collect();
+        assert_eq!(idx, vec![3, 5]);
+        // A tie with a larger index than every retained candidate loses.
+        let mut h = KnnHeap::new(2);
+        h.offer(1.0, 1);
+        h.offer(1.0, 2);
+        h.offer(1.0, 9);
+        h.drain_sorted_into(&mut out);
+        let idx: Vec<u32> = out.iter().map(|n| n.index).collect();
+        assert_eq!(idx, vec![1, 2]);
+    }
+
+    #[test]
+    fn reset_grows_capacity_to_k() {
+        // Regression: `Vec::reserve` takes *additional* capacity, so
+        // `reserve(k - capacity)` left `capacity() < k` and the offer
+        // loop reallocated mid-traversal, defeating scratch reuse.
+        let mut h = KnnHeap::new(2);
+        assert!(h.capacity() >= 2);
+        h.reset(64);
+        assert!(h.capacity() >= 64, "capacity {} < k 64", h.capacity());
+        h.reset(1000);
+        assert!(h.capacity() >= 1000, "capacity {} < k 1000", h.capacity());
+        // Shrinking k keeps the larger scratch allocation.
+        h.reset(3);
+        assert!(h.capacity() >= 1000);
+        // And a grown heap holds k candidates without reallocating.
+        h.reset(129);
+        let cap = h.capacity();
+        for i in 0..129u32 {
+            h.offer(i as f32, i);
+        }
+        assert_eq!(h.len(), 129);
+        assert_eq!(h.capacity(), cap, "offer loop must not reallocate");
     }
 
     #[test]

@@ -12,11 +12,12 @@
 //!   "share many nodes of the tree in their traversal" (§2.2.3).
 
 use super::batched::{query_order, query_order_spatial, QueryPredicate};
+use super::first_hit::first_hit_monitored;
 use super::nearest::{nearest_stack_monitored, NearestScratch};
 use super::traversal::for_each_spatial_monitored;
 use super::{is_leaf, ref_index, Bvh};
 use crate::exec::ExecSpace;
-use crate::geometry::predicates::SpatialPredicate;
+use crate::geometry::predicates::{FirstHit, SpatialPredicate};
 
 /// SAH-style cost of the hierarchy: `sum over internal nodes of
 /// SA(node)/SA(root)` (lower is better). A standard proxy for expected
@@ -143,6 +144,7 @@ pub fn access_matrix(bvh: &Bvh, queries: &[QueryPredicate], sort_queries: bool) 
     let order = query_order(&space, bvh, queries, sort_queries);
     let mut rows = Vec::with_capacity(queries.len());
     let mut stack = Vec::with_capacity(64);
+    let mut fh_stack = Vec::with_capacity(64);
     let mut scratch = NearestScratch::new(16);
     let mut knn = Vec::new();
     for &qi in &order {
@@ -153,6 +155,11 @@ pub fn access_matrix(bvh: &Bvh, queries: &[QueryPredicate], sort_queries: bool) 
             }
             QueryPredicate::Nearest(n) => {
                 nearest_stack_monitored(bvh, n, &mut scratch, &mut knn, |node| row.push(node));
+            }
+            QueryPredicate::FirstHit(r) => {
+                let _ = first_hit_monitored(bvh, &FirstHit(*r), &mut fh_stack, |node| {
+                    row.push(node)
+                });
             }
         }
         row.sort();

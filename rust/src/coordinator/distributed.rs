@@ -14,14 +14,15 @@
 //! 2. **merge** — execute on each candidate rank's local tree and merge
 //!    local results back to global indices.
 
+use crate::bvh::first_hit::{self, RayHit};
 use crate::bvh::nearest::{KnnHeap, Neighbor, NearestScratch};
 use crate::bvh::traversal::for_each_spatial;
 use crate::bvh::{nearest, Bvh, QueryPredicate};
 use crate::exec::ExecSpace;
 use crate::geometry::predicates::{
-    IntersectsBox, IntersectsRay, IntersectsSphere, Nearest, Spatial, SpatialPredicate,
+    FirstHit, IntersectsBox, IntersectsRay, IntersectsSphere, Nearest, Spatial, SpatialPredicate,
 };
-use crate::geometry::{Aabb, Point};
+use crate::geometry::{Aabb, Point, Ray};
 
 /// One rank's shard: a local tree plus the map back to global indices.
 struct RankShard {
@@ -75,9 +76,19 @@ impl DistributedTree {
         let shard_size = n.div_ceil(n_ranks.max(1)).max(1);
         let mut ranks = Vec::new();
         for chunk in order.chunks(shard_size) {
+            // Store each shard in ascending *global* order. The partition
+            // only decides which objects a rank owns; re-sorting inside
+            // the shard costs nothing (the local build re-sorts by Morton
+            // code anyway) and makes local index order monotone in global
+            // index order — so the (distance, index) / (entry, index)
+            // tie-breaks of the local traversals agree with the global
+            // ones, and merged answers match the single-tree oracle even
+            // when ties are truncated inside a shard.
+            let mut chunk: Vec<u32> = chunk.to_vec();
+            chunk.sort_unstable();
             let local_boxes: Vec<Aabb> = chunk.iter().map(|&g| boxes[g as usize]).collect();
             let bvh = Bvh::build(space, &local_boxes);
-            ranks.push(RankShard { bvh, global: chunk.to_vec() });
+            ranks.push(RankShard { bvh, global: chunk });
         }
         // Top tree over rank scene boxes.
         let rank_boxes: Vec<Aabb> = ranks.iter().map(|r| r.bvh.scene_box()).collect();
@@ -131,11 +142,13 @@ impl DistributedTree {
     /// Wire-level entry point: executes one open-family predicate. All
     /// spatial kinds — ray and attachment queries included — go through
     /// the two-phase forward/merge path; nearest goes through the
-    /// closest-rank-first refinement. The enum is matched *once per
-    /// query*, selecting the monomorphized forward/merge instance, so
-    /// the distributed layer accepts everything the service protocol
-    /// carries. Returns (global indices, squared distances — nearest
-    /// only, stats).
+    /// closest-rank-first refinement; first-hit through the
+    /// entry-ordered rank walk ([`DistributedTree::first_hit`]). The
+    /// enum is matched *once per query*, selecting the monomorphized
+    /// forward/merge instance, so the distributed layer accepts
+    /// everything the service protocol carries. Returns (global indices,
+    /// distances — squared for nearest, box-entry parameters for
+    /// first-hit — and stats).
     pub fn query_predicate(&self, pred: &QueryPredicate) -> (Vec<u32>, Vec<f32>, DistStats) {
         match pred {
             QueryPredicate::Spatial(s) | QueryPredicate::Attach(s, _) => {
@@ -148,6 +161,13 @@ impl DistributedTree {
                 let distances = neighbors.iter().map(|nb| nb.distance_squared).collect();
                 (indices, distances, stats)
             }
+            QueryPredicate::FirstHit(r) => {
+                let (hit, stats) = self.first_hit(r);
+                match hit {
+                    Some(h) => (vec![h.index], vec![h.t], stats),
+                    None => (Vec::new(), Vec::new(), stats),
+                }
+            }
         }
     }
 
@@ -159,6 +179,39 @@ impl DistributedTree {
             Spatial::IntersectsBox(b) => self.spatial(&IntersectsBox(*b)),
             Spatial::IntersectsRay(r) => self.spatial(&IntersectsRay(*r)),
         }
+    }
+
+    /// Distributed first-hit ray cast: candidate ranks are visited in
+    /// ascending scene-box *entry* order — the ray analogue of the
+    /// closest-rank-first k-NN heuristic — and the walk stops as soon as
+    /// the next rank's entry parameter exceeds the best global hit (its
+    /// whole shard enters the ray strictly later). Ties on the entry
+    /// parameter are still visited so the global tie-break (smaller
+    /// global index) matches the single-tree and brute-force answers.
+    pub fn first_hit(&self, ray: &Ray) -> (Option<RayHit>, DistStats) {
+        let mut rank_entry: Vec<(usize, f32)> = self
+            .ranks
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| !s.bvh.is_empty())
+            .filter_map(|(i, s)| ray.box_entry(&s.bvh.scene_box()).map(|t| (i, t)))
+            .collect();
+        rank_entry.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        let mut best: Option<RayHit> = None;
+        let mut stack = Vec::new();
+        let mut contacted = 0usize;
+        for (ri, entry) in rank_entry {
+            if best.as_ref().is_some_and(|b| entry > b.t) {
+                break; // every remaining rank enters even later
+            }
+            contacted += 1;
+            let shard = &self.ranks[ri];
+            if let Some(local) = first_hit::first_hit(&shard.bvh, &FirstHit(*ray), &mut stack) {
+                first_hit::offer_hit(&mut best, local.t, shard.global[local.index as usize]);
+            }
+        }
+        let stats = DistStats { ranks_contacted: contacted, results: best.is_some() as usize };
+        (best, stats)
     }
 
     /// Distributed k-NN: phase 1 queries the *closest* rank to seed the
@@ -270,10 +323,48 @@ mod tests {
             for k in [1usize, 10] {
                 let (got, stats) = dt.nearest(&q, k);
                 let want = brute.nearest(&q, k);
-                let gd: Vec<f32> = got.iter().map(|n| n.distance_squared).collect();
-                let wd: Vec<f32> = want.iter().map(|n| n.distance_squared).collect();
-                assert_eq!(gd, wd, "k={k}");
+                // Full Neighbor equality: indices too, not just distances
+                // — shard layout and rank visitation order must not leak
+                // into the answer.
+                assert_eq!(got, want, "k={k}");
                 assert!(stats.ranks_contacted >= 1);
+            }
+        }
+    }
+
+    #[test]
+    fn distributed_knn_ties_resolve_to_smallest_global_index() {
+        // Two ranks each hold a point at distance 1 from the query; the
+        // rank owning the *larger* global index is visited first (its
+        // scene box contains the query, so its forwarding distance is 0).
+        // The survivor must still be the smaller index — the strict-<
+        // offer kept whichever rank was visited first.
+        let boxes = vec![
+            Aabb::from_point(Point::new(1.0, 0.0, 0.0)),  // rank 0, global 0
+            Aabb::from_point(Point::new(2.0, 0.0, 0.0)),  // rank 0, global 1
+            Aabb::from_point(Point::new(-1.0, 0.0, 0.0)), // rank 1, global 2
+            Aabb::from_point(Point::new(0.0, 2.0, 0.0)),  // rank 1, global 3
+        ];
+        let dt = DistributedTree::build(&ExecSpace::serial(), &boxes, 2, Partition::Block);
+        let (got, _) = dt.nearest(&Point::origin(), 1);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].index, 0, "tie at distance 1 must resolve to global index 0");
+        assert_eq!(got, BruteForce::new(&boxes).nearest(&Point::origin(), 1));
+        // Duplicated sites across ranks behave the same at larger k.
+        let mut dup = cloud(600, 99);
+        dup.extend(cloud(600, 99)); // identical copies land in other ranks
+        let brute = BruteForce::new(&dup);
+        let dt = DistributedTree::build(&ExecSpace::serial(), &dup, 4, Partition::Block);
+        let mut rng = Rng::new(3);
+        for _ in 0..15 {
+            let q = Point::new(
+                rng.uniform(-8.0, 8.0),
+                rng.uniform(-8.0, 8.0),
+                rng.uniform(-8.0, 8.0),
+            );
+            for k in [1usize, 5] {
+                let (got, _) = dt.nearest(&q, k);
+                assert_eq!(got, brute.nearest(&q, k), "k={k}");
             }
         }
     }
@@ -364,6 +455,103 @@ mod tests {
         assert_eq!(got.len(), 8);
         let wd: Vec<f32> = want.iter().map(|n| n.distance_squared).collect();
         assert_eq!(distances, wd);
+    }
+
+    #[test]
+    fn within_shard_ties_are_global_index_order_under_morton_partition() {
+        // Regression: shards used to store objects in Morton order, so
+        // the local traversals' (distance, index) tie-break ran on
+        // *local* indices — and a tied candidate could be truncated away
+        // inside the shard before global indices existed. Here global 0
+        // sits at x = +1 (Morton-later) and global 1 at x = -1
+        // (Morton-earlier); both are distance 1 from the origin, in the
+        // same (only) shard.
+        let space = ExecSpace::serial();
+        let points = vec![
+            Aabb::from_point(Point::new(1.0, 0.0, 0.0)),  // global 0
+            Aabb::from_point(Point::new(-1.0, 0.0, 0.0)), // global 1
+        ];
+        let dt = DistributedTree::build(&space, &points, 1, Partition::MortonBlock);
+        let (got, _) = dt.nearest(&Point::origin(), 1);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].index, 0, "k-NN tie must keep the smaller global index");
+        assert_eq!(got, BruteForce::new(&points).nearest(&Point::origin(), 1));
+
+        // Same shape for first-hit: two boxes sharing the origin (entry
+        // t = 0 for both), the global-0 box Morton-later.
+        let boxes = vec![
+            Aabb::new(Point::origin(), Point::splat(2.0)),   // global 0
+            Aabb::new(Point::splat(-2.0), Point::origin()),  // global 1
+        ];
+        let dt = DistributedTree::build(&space, &boxes, 1, Partition::MortonBlock);
+        let ray = Ray::new(Point::origin(), Point::new(1.0, 0.0, 0.0));
+        let (hit, _) = dt.first_hit(&ray);
+        assert_eq!(hit, Some(RayHit { index: 0, t: 0.0 }), "tie at t = 0");
+        assert_eq!(hit, BruteForce::new(&boxes).first_hit(&ray));
+    }
+
+    #[test]
+    fn distributed_first_hit_matches_brute_force() {
+        let space = ExecSpace::serial();
+        let boxes = cloud(2000, 53);
+        let brute = BruteForce::new(&boxes);
+        for partition in [Partition::Block, Partition::MortonBlock] {
+            let dt = DistributedTree::build(&space, &boxes, 6, partition);
+            let mut rng = Rng::new(29);
+            for _ in 0..30 {
+                let origin = Point::new(
+                    rng.uniform(-12.0, 12.0),
+                    rng.uniform(-12.0, 12.0),
+                    rng.uniform(-12.0, 12.0),
+                );
+                let dir = Point::new(
+                    rng.uniform(-1.0, 1.0),
+                    rng.uniform(-1.0, 1.0),
+                    rng.uniform(-1.0, 1.0),
+                );
+                if dir.norm() < 1e-3 {
+                    continue;
+                }
+                let ray = Ray::new(origin, dir);
+                let (got, stats) = dt.first_hit(&ray);
+                assert_eq!(got, brute.first_hit(&ray), "{partition:?}");
+                assert!(stats.ranks_contacted <= 6);
+            }
+            // The wire entry point returns the same answer.
+            let ray = Ray::new(Point::new(-20.0, 0.1, 0.2), Point::new(1.0, 0.0, 0.0));
+            let (idx, ts, _) = dt.query_predicate(&QueryPredicate::first_hit(ray));
+            match brute.first_hit(&ray) {
+                Some(h) => {
+                    assert_eq!(idx, vec![h.index], "{partition:?}");
+                    assert_eq!(ts, vec![h.t]);
+                }
+                None => assert!(idx.is_empty() && ts.is_empty()),
+            }
+        }
+    }
+
+    #[test]
+    fn distributed_first_hit_stops_at_the_nearest_rank() {
+        // Two well-separated clusters on the x axis; a ray entering the
+        // near cluster must never contact the far rank (its scene-box
+        // entry lies behind the best hit).
+        let mut boxes: Vec<Aabb> = (0..100)
+            .map(|i| Aabb::from_point(Point::new(i as f32 * 0.01, 0.0, 0.0)))
+            .collect();
+        boxes.extend(
+            (0..100).map(|i| Aabb::from_point(Point::new(100.0 + i as f32 * 0.01, 0.0, 0.0))),
+        );
+        let dt = DistributedTree::build(&ExecSpace::serial(), &boxes, 2, Partition::Block);
+        let ray = Ray::new(Point::new(-1.0, 0.0, 0.0), Point::new(1.0, 0.0, 0.0));
+        let (hit, stats) = dt.first_hit(&ray);
+        assert_eq!(hit, Some(crate::bvh::RayHit { index: 0, t: 1.0 }));
+        assert_eq!(stats.ranks_contacted, 1, "far rank must be pruned");
+        // All-miss rays report zero results and contact nothing.
+        let miss = Ray::new(Point::new(-1.0, 5.0, 0.0), Point::new(1.0, 0.0, 0.0));
+        let (hit, stats) = dt.first_hit(&miss);
+        assert_eq!(hit, None);
+        assert_eq!(stats.ranks_contacted, 0);
+        assert_eq!(stats.results, 0);
     }
 
     #[test]

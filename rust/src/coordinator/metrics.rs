@@ -140,6 +140,10 @@ pub struct Metrics {
     two_pass_batches: AtomicU64,
     /// Individual queries that overflowed their 1P buffer.
     overflowed_queries: AtomicU64,
+    /// First-hit ray casts executed (the fixed-width sub-batch lane).
+    first_hit_casts: AtomicU64,
+    /// First-hit casts that found an object.
+    first_hit_hits: AtomicU64,
     /// Per-request latencies in microseconds (bounded reservoir).
     latencies_us: Mutex<Vec<u64>>,
 }
@@ -156,6 +160,8 @@ impl Default for Metrics {
             fallback_batches: AtomicU64::new(0),
             two_pass_batches: AtomicU64::new(0),
             overflowed_queries: AtomicU64::new(0),
+            first_hit_casts: AtomicU64::new(0),
+            first_hit_hits: AtomicU64::new(0),
             latencies_us: Mutex::new(Vec::new()),
         }
     }
@@ -254,6 +260,25 @@ impl Metrics {
         self.overflowed_queries.load(Ordering::Relaxed)
     }
 
+    /// Records one first-hit sub-batch: `casts` rays, of which `hits`
+    /// found an object. (Result counts are 0 or 1 by construction, so
+    /// the hit ratio is the interesting per-kind signal, not the
+    /// histogram tail.)
+    pub fn record_first_hit(&self, casts: u64, hits: u64) {
+        self.first_hit_casts.fetch_add(casts, Ordering::Relaxed);
+        self.first_hit_hits.fetch_add(hits, Ordering::Relaxed);
+    }
+
+    /// First-hit ray casts executed.
+    pub fn first_hit_casts(&self) -> u64 {
+        self.first_hit_casts.load(Ordering::Relaxed)
+    }
+
+    /// First-hit casts that found an object.
+    pub fn first_hit_hits(&self) -> u64 {
+        self.first_hit_hits.load(Ordering::Relaxed)
+    }
+
     /// Requests per second since service start.
     pub fn throughput(&self) -> f64 {
         let secs = self.started.elapsed().as_secs_f64();
@@ -280,7 +305,8 @@ impl Metrics {
         let (p50, p95, p99) = self.latency_quantiles();
         format!(
             "requests={} batches={} results={} throughput={:.0}/s \
-             p50={}us p95={}us p99={}us passes(1p/fallback/2p)={}/{}/{}",
+             p50={}us p95={}us p99={}us passes(1p/fallback/2p)={}/{}/{} \
+             first_hit={}/{}",
             self.requests(),
             self.batches(),
             self.results(),
@@ -291,6 +317,8 @@ impl Metrics {
             self.one_pass_batches(),
             self.fallback_batches(),
             self.two_pass_batches(),
+            self.first_hit_hits(),
+            self.first_hit_casts(),
         )
     }
 }
@@ -322,6 +350,18 @@ mod tests {
         assert_eq!(m.overflowed_queries(), 0);
         assert_eq!(m.result_histogram(PredicateKind::Sphere).samples(), 0);
         assert_eq!(m.suggest_buffer(PredicateKind::Sphere), None);
+        assert_eq!(m.first_hit_casts(), 0);
+        assert_eq!(m.first_hit_hits(), 0);
+    }
+
+    #[test]
+    fn first_hit_counters_accumulate() {
+        let m = Metrics::default();
+        m.record_first_hit(10, 7);
+        m.record_first_hit(5, 0);
+        assert_eq!(m.first_hit_casts(), 15);
+        assert_eq!(m.first_hit_hits(), 7);
+        assert!(m.summary().contains("first_hit=7/15"));
     }
 
     #[test]

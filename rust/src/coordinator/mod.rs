@@ -7,7 +7,8 @@
 //!
 //! * [`service`] — a request router + dynamic batcher over a built index:
 //!   clients submit single queries from the open predicate family
-//!   (sphere/box/ray, attachments, nearest); the service coalesces them
+//!   (sphere/box/ray, attachments, nearest, first-hit ray casts); the
+//!   service coalesces them
 //!   into batches (bounded by size and timeout), sub-batches each batch
 //!   by predicate kind onto the monomorphized engines of
 //!   [`crate::bvh::batched`], and returns per-query results with latency

@@ -4,16 +4,18 @@
 //! Clients submit individual [`QueryPredicate`]s — the *open tagged wire
 //! format*: a kind tag ([`PredicateKind`]) plus a serializable payload,
 //! covering sphere/box/ray regions, attachment queries (payload echoed
-//! back with the results, ArborX's `attach`), and k-NN. A coordinator
-//! thread coalesces submissions into batches bounded by `max_batch` and
-//! `batch_timeout`, then **sub-batches each flushed batch by kind**:
-//! every kind's queries are extracted into a typed vector and dispatched
-//! *once* onto the monomorphized engines ([`Bvh::query_spatial`] /
-//! [`Bvh::query`]), so the per-node hot loop never pays enum dispatch no
-//! matter how mixed the client traffic is (the §2.2 flexible-interface
-//! claim, served). [`super::wire`] supplies a byte-level tag + payload
-//! encoding of the same family for out-of-process clients
-//! ([`SearchService::submit_encoded`]).
+//! back with the results, ArborX's `attach`), k-NN, and first-hit ray
+//! casts (`TAG_FIRST_HIT` on the wire; at most one result, the box-entry
+//! parameter returned in `distances`). A coordinator thread coalesces
+//! submissions into batches bounded by `max_batch` and `batch_timeout`,
+//! then **sub-batches each flushed batch by kind**: every kind's queries
+//! are extracted into a typed vector and dispatched *once* onto the
+//! monomorphized engines ([`Bvh::query_spatial`] / [`Bvh::query`] /
+//! [`Bvh::query_first_hit`]), so the per-node hot loop never pays enum
+//! dispatch no matter how mixed the client traffic is (the §2.2
+//! flexible-interface claim, served). [`super::wire`] supplies a
+//! byte-level tag + payload encoding of the same family for
+//! out-of-process clients ([`SearchService::submit_encoded`]).
 //!
 //! The 1P/2P strategy choice is governed by [`BufferPolicy`]. The
 //! default, [`BufferPolicy::Adaptive`], replaces the static
@@ -36,7 +38,8 @@ use super::metrics::{Metrics, SubBatchPass};
 use crate::bvh::{Bvh, PredicateKind, QueryOptions, QueryPredicate};
 use crate::exec::ExecSpace;
 use crate::geometry::predicates::{
-    attach, IntersectsBox, IntersectsRay, IntersectsSphere, Spatial, SpatialPredicate, WithData,
+    attach, FirstHit, IntersectsBox, IntersectsRay, IntersectsSphere, Spatial, SpatialPredicate,
+    WithData,
 };
 
 /// How spatial sub-batches choose between the 1P and 2P strategies.
@@ -362,6 +365,33 @@ pub fn execute_sub_batched(
                     results[i as usize].distances = out.distances_for(j).to_vec();
                 }
             }
+            PredicateKind::FirstHit => {
+                // First-hit output is fixed width (at most one result per
+                // ray), so the lane skips CSR entirely: the monomorphized
+                // ordered-descent engine returns one Option per query.
+                let typed: Vec<FirstHit> = members
+                    .iter()
+                    .map(|&i| match &preds[i as usize] {
+                        QueryPredicate::FirstHit(r) => FirstHit(*r),
+                        _ => unreachable!("grouped by kind"),
+                    })
+                    .collect();
+                let hits = bvh.query_first_hit(space, &typed, sort_queries);
+                let h = metrics.result_histogram(kind);
+                let mut n_hits = 0u64;
+                for (j, &i) in members.iter().enumerate() {
+                    match hits[j] {
+                        Some(hit) => {
+                            n_hits += 1;
+                            h.record(1);
+                            results[i as usize].indices = vec![hit.index];
+                            results[i as usize].distances = vec![hit.t];
+                        }
+                        None => h.record(0),
+                    }
+                }
+                metrics.record_first_hit(members.len() as u64, n_hits);
+            }
         }
     }
     results
@@ -467,6 +497,30 @@ mod tests {
         let r = svc.query(QueryPredicate::nearest(Point::new(9.2, 0.0, 0.0), 2));
         assert_eq!(r.indices, vec![9, 10]);
         assert_eq!(r.distances.len(), 2);
+    }
+
+    #[test]
+    fn first_hit_round_trips_through_the_service() {
+        let (svc, _) = service(100, 16);
+        let ray = Ray::new(Point::new(-1.0, 0.0, 0.0), Point::new(1.0, 0.0, 0.0));
+        let r = svc.query(QueryPredicate::first_hit(ray));
+        assert_eq!(r.indices, vec![0], "nearest point on the line");
+        assert_eq!(r.distances.len(), 1);
+        assert!((r.distances[0] - 1.0).abs() < 1e-6, "entry at t = 1");
+        assert_eq!(r.data, None);
+        let miss = svc.query(QueryPredicate::first_hit(Ray::new(
+            Point::new(0.0, 5.0, 0.0),
+            Point::new(1.0, 0.0, 0.0),
+        )));
+        assert!(miss.indices.is_empty());
+        assert!(miss.distances.is_empty());
+        assert_eq!(svc.metrics().first_hit_casts(), 2);
+        assert_eq!(svc.metrics().first_hit_hits(), 1);
+        // The byte-level front door carries the same query.
+        let mut bytes = Vec::new();
+        super::super::wire::encode(&QueryPredicate::first_hit(ray), &mut bytes);
+        let r = svc.submit_encoded(&bytes).expect("decodes").wait();
+        assert_eq!(r.indices, vec![0]);
     }
 
     #[test]

@@ -8,16 +8,21 @@
 //!
 //! | tag | payload |
 //! |-----|---------|
-//! | `TAG_SPHERE`  | center `3xf32`, radius `f32` |
-//! | `TAG_BOX`     | min `3xf32`, max `3xf32` |
-//! | `TAG_RAY`     | origin `3xf32`, direction `3xf32`, `t_max f32` |
-//! | `TAG_NEAREST` | point `3xf32`, k `u32` |
+//! | `TAG_SPHERE`    | center `3xf32`, radius `f32` |
+//! | `TAG_BOX`       | min `3xf32`, max `3xf32` |
+//! | `TAG_RAY`       | origin `3xf32`, direction `3xf32`, `t_max f32` |
+//! | `TAG_NEAREST`   | point `3xf32`, k `u32` |
+//! | `TAG_FIRST_HIT` | origin `3xf32`, direction `3xf32`, `t_max f32` |
 //! | spatial tag \| `TAG_ATTACH` | spatial payload, then data `u64` |
 //!
 //! Decoding is streaming ([`decode`] returns the bytes consumed), so a
-//! request pipe can carry back-to-back predicates. Unknown tags and
-//! truncated payloads decode to `None` rather than panicking — the wire
-//! is untrusted input.
+//! request pipe can carry back-to-back predicates. Unknown tags,
+//! truncated payloads, and degenerate geometry all decode to `None`
+//! rather than panicking — the wire is untrusted input. The geometry
+//! gate rejects non-finite coordinates everywhere, negative or NaN
+//! sphere radii, inverted boxes (`min > max`), zero- or NaN-direction
+//! rays, negative or NaN `t_max` (`+∞` stays legal — it is the encoding
+//! of an unbounded ray), and `k == 0` or oversized nearest queries.
 
 use crate::bvh::QueryPredicate;
 use crate::geometry::predicates::{Nearest, Spatial};
@@ -31,6 +36,8 @@ pub const TAG_BOX: u8 = 2;
 pub const TAG_RAY: u8 = 3;
 /// Kind tag: k-nearest neighbors.
 pub const TAG_NEAREST: u8 = 4;
+/// Kind tag: first-hit (nearest-intersection) ray cast.
+pub const TAG_FIRST_HIT: u8 = 5;
 /// Attachment flag, OR-ed onto a spatial tag.
 pub const TAG_ATTACH: u8 = 0x80;
 
@@ -49,6 +56,12 @@ pub fn encode(pred: &QueryPredicate, out: &mut Vec<u8>) {
             out.push(TAG_NEAREST);
             put_point(out, &n.point);
             out.extend_from_slice(&(n.k as u32).to_le_bytes());
+        }
+        QueryPredicate::FirstHit(r) => {
+            out.push(TAG_FIRST_HIT);
+            put_point(out, &r.origin);
+            put_point(out, &r.direction);
+            put_f32(out, r.t_max);
         }
     }
 }
@@ -87,9 +100,26 @@ fn encode_spatial(s: &Spatial, data: Option<u64>, out: &mut Vec<u8>) {
     }
 }
 
+/// All three components are finite — the untrusted-input geometry gate
+/// every decoded coordinate passes through.
+fn finite(p: &Point) -> bool {
+    p[0].is_finite() && p[1].is_finite() && p[2].is_finite()
+}
+
+/// Rays must have a finite origin, a finite non-zero direction, and a
+/// non-negative extent. `t_max >= 0.0` is false for NaN and true for
+/// `+∞`, so unbounded rays stay legal and NaN extents do not.
+fn valid_ray(origin: &Point, direction: &Point, t_max: f32) -> bool {
+    finite(origin)
+        && finite(direction)
+        && (direction[0] != 0.0 || direction[1] != 0.0 || direction[2] != 0.0)
+        && t_max >= 0.0
+}
+
 /// Decodes one predicate from the front of `bytes`; returns it and the
-/// number of bytes consumed, or `None` on an unknown tag or truncated
-/// payload.
+/// number of bytes consumed, or `None` on an unknown tag, truncated
+/// payload, or degenerate geometry (see the module docs for the exact
+/// validation rules).
 pub fn decode(bytes: &[u8]) -> Option<(QueryPredicate, usize)> {
     let mut cur = Cursor { bytes, pos: 0 };
     let tag = cur.u8()?;
@@ -98,27 +128,46 @@ pub fn decode(bytes: &[u8]) -> Option<(QueryPredicate, usize)> {
         TAG_SPHERE => {
             let center = cur.point()?;
             let radius = cur.f32()?;
+            if !finite(&center) || !radius.is_finite() || radius < 0.0 {
+                return None;
+            }
             Spatial::IntersectsSphere(Sphere::new(center, radius))
         }
         TAG_BOX => {
             let min = cur.point()?;
             let max = cur.point()?;
+            if !finite(&min) || !finite(&max) || (0..3).any(|d| min[d] > max[d]) {
+                return None;
+            }
             Spatial::IntersectsBox(Aabb::new(min, max))
         }
         TAG_RAY => {
             let origin = cur.point()?;
             let direction = cur.point()?;
             let t_max = cur.f32()?;
+            if !valid_ray(&origin, &direction, t_max) {
+                return None;
+            }
             Spatial::IntersectsRay(Ray::segment(origin, direction, t_max))
         }
         TAG_NEAREST if !attached => {
             let point = cur.point()?;
             let k = cur.u32()?;
-            if k > MAX_NEAREST_K {
+            if !finite(&point) || k == 0 || k > MAX_NEAREST_K {
                 return None;
             }
             let nearest = Nearest::new(point, k as usize);
             return Some((QueryPredicate::Nearest(nearest), cur.pos));
+        }
+        TAG_FIRST_HIT if !attached => {
+            let origin = cur.point()?;
+            let direction = cur.point()?;
+            let t_max = cur.f32()?;
+            if !valid_ray(&origin, &direction, t_max) {
+                return None;
+            }
+            let ray = Ray::segment(origin, direction, t_max);
+            return Some((QueryPredicate::FirstHit(ray), cur.pos));
         }
         _ => return None,
     };
@@ -206,7 +255,15 @@ mod tests {
             QueryPredicate::attach(Spatial::IntersectsRay(ray), u64::MAX),
             QueryPredicate::attach(Spatial::IntersectsBox(Aabb::from_point(Point::origin())), 9),
             QueryPredicate::nearest(Point::new(-3.0, 0.0, 1.5), 17),
+            QueryPredicate::first_hit(ray),
+            QueryPredicate::first_hit(segment),
         ]
+    }
+
+    fn encoded(pred: &QueryPredicate) -> Vec<u8> {
+        let mut bytes = Vec::new();
+        encode(pred, &mut bytes);
+        bytes
     }
 
     #[test]
@@ -237,11 +294,91 @@ mod tests {
         assert!(decode(&[0]).is_none(), "reserved tag");
         assert!(decode(&[0x7F]).is_none(), "unknown tag");
         assert!(decode(&[TAG_NEAREST | TAG_ATTACH, 0, 0, 0, 0]).is_none(), "attached nearest");
+        assert!(
+            decode(&[TAG_FIRST_HIT | TAG_ATTACH, 0, 0, 0, 0]).is_none(),
+            "attached first-hit"
+        );
         let mut bytes = Vec::new();
         encode(&family()[0], &mut bytes);
         for cut in 0..bytes.len() {
             assert!(decode(&bytes[..cut]).is_none(), "truncated at {cut}");
         }
+    }
+
+    #[test]
+    fn degenerate_geometry_is_rejected() {
+        // The module doc promises the wire is untrusted input: every
+        // non-finite or inside-out payload must decode to None even
+        // though the bytes themselves are well-formed.
+        let o = Point::origin();
+        let x = Point::new(1.0, 0.0, 0.0);
+        let bad: Vec<(&str, QueryPredicate)> = vec![
+            (
+                "NaN sphere center",
+                QueryPredicate::intersects_sphere(Point::new(f32::NAN, 0.0, 0.0), 1.0),
+            ),
+            (
+                "infinite sphere center",
+                QueryPredicate::intersects_sphere(Point::new(f32::INFINITY, 0.0, 0.0), 1.0),
+            ),
+            ("negative radius", QueryPredicate::intersects_sphere(o, -1.0)),
+            ("NaN radius", QueryPredicate::intersects_sphere(o, f32::NAN)),
+            (
+                "inverted box",
+                QueryPredicate::intersects_box(Aabb::new(Point::splat(1.0), Point::splat(-1.0))),
+            ),
+            (
+                "NaN box corner",
+                QueryPredicate::intersects_box(Aabb::new(
+                    Point::new(0.0, f32::NAN, 0.0),
+                    Point::splat(1.0),
+                )),
+            ),
+            (
+                "infinite box corner",
+                QueryPredicate::intersects_box(Aabb::new(
+                    Point::splat(0.0),
+                    Point::new(1.0, f32::INFINITY, 1.0),
+                )),
+            ),
+            ("zero-direction ray", QueryPredicate::intersects_ray(Ray::new(o, Point::origin()))),
+            (
+                "NaN-direction ray",
+                QueryPredicate::intersects_ray(Ray::new(o, Point::new(f32::NAN, 1.0, 0.0))),
+            ),
+            (
+                "NaN ray origin",
+                QueryPredicate::intersects_ray(Ray::new(Point::new(f32::NAN, 0.0, 0.0), x)),
+            ),
+            (
+                "infinite ray origin",
+                QueryPredicate::intersects_ray(Ray::new(Point::splat(f32::INFINITY), x)),
+            ),
+            ("negative t_max", QueryPredicate::intersects_ray(Ray::segment(o, x, -2.0))),
+            ("NaN t_max", QueryPredicate::intersects_ray(Ray::segment(o, x, f32::NAN))),
+            ("zero-direction first-hit", QueryPredicate::first_hit(Ray::new(o, Point::origin()))),
+            ("negative-t_max first-hit", QueryPredicate::first_hit(Ray::segment(o, x, -1.0))),
+            ("k == 0 nearest", QueryPredicate::nearest(o, 0)),
+            ("NaN nearest point", QueryPredicate::nearest(Point::new(0.0, 0.0, f32::NAN), 3)),
+        ];
+        for (label, pred) in bad {
+            assert!(decode(&encoded(&pred)).is_none(), "{label} must be rejected");
+        }
+        // Degenerate-but-legal edges: a zero-radius sphere, a zero-extent
+        // box, and an unbounded (+inf) ray all stay accepted.
+        for pred in [
+            QueryPredicate::intersects_sphere(o, 0.0),
+            QueryPredicate::intersects_box(Aabb::from_point(o)),
+            QueryPredicate::first_hit(Ray::new(o, x)),
+        ] {
+            assert!(decode(&encoded(&pred)).is_some(), "{pred:?} must stay legal");
+        }
+        // Attached variants run the same gate.
+        let bad_attach = QueryPredicate::attach(
+            Spatial::IntersectsSphere(Sphere::new(o, f32::NAN)),
+            7,
+        );
+        assert!(decode(&encoded(&bad_attach)).is_none(), "attached NaN radius");
     }
 
     #[test]

@@ -218,6 +218,36 @@ impl<Q: NearestQuery, T> NearestQuery for WithData<Q, T> {
     }
 }
 
+/// A first-hit ray cast: what ray is the single nearest intersected
+/// object sought along? The trait twin of [`SpatialPredicate`] for the
+/// ordered-descent traversal ([`crate::bvh::first_hit`]), so attachments
+/// ([`WithData`]) ride along for nearest-intersection queries too.
+pub trait FirstHitQuery {
+    /// The ray being cast.
+    fn ray(&self) -> Ray;
+}
+
+/// The nearest-intersection predicate: the closest object hit by the ray
+/// within `[0, t_max]` (ArborX 2.0's `nearest-intersection` ray family).
+/// Unlike [`IntersectsRay`] — which reports *every* object the ray
+/// touches — this query returns at most one result.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FirstHit(pub Ray);
+
+impl FirstHitQuery for FirstHit {
+    #[inline]
+    fn ray(&self) -> Ray {
+        self.0
+    }
+}
+
+impl<Q: FirstHitQuery, T> FirstHitQuery for WithData<Q, T> {
+    #[inline]
+    fn ray(&self) -> Ray {
+        self.pred.ray()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -286,5 +316,16 @@ mod tests {
         assert_eq!(nq.point(), Point::splat(1.0));
         assert_eq!(nq.k(), 7);
         assert_eq!(nq.data, "label");
+    }
+
+    #[test]
+    fn first_hit_queries_expose_their_ray() {
+        let ray = Ray::segment(Point::origin(), Point::new(0.0, 1.0, 0.0), 5.0);
+        let q = FirstHit(ray);
+        assert_eq!(q.ray(), ray);
+        // Attachments delegate, like the spatial and nearest twins.
+        let tagged = attach(q, 3u8);
+        assert_eq!(tagged.ray(), ray);
+        assert_eq!(tagged.data, 3);
     }
 }

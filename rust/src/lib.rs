@@ -19,10 +19,13 @@
 //! * [`bvh`] — the paper's core contribution: a linear bounding volume
 //!   hierarchy with fully parallel construction (Karras 2012, plus the
 //!   Apetrei 2014 single-pass variant), stack-based spatial and nearest
-//!   traversals, the 1P/2P batched query engines with CSR output, and
-//!   Morton-ordered query sorting. Engines are generic over the predicate
-//!   trait (monomorphized hot loops); [`bvh::Bvh::query_with_callback`]
-//!   streams matches to a callback with no CSR materialization.
+//!   traversals, a first-hit ray traversal with ordered child descent
+//!   ([`bvh::first_hit`]), the 1P/2P batched query engines with CSR
+//!   output, and Morton-ordered query sorting. Engines are generic over
+//!   the predicate traits (monomorphized hot loops);
+//!   [`bvh::Bvh::query_with_callback`] streams matches to a callback
+//!   with no CSR materialization, [`bvh::Bvh::query_first_hit`] returns
+//!   fixed-width `Option<RayHit>` results.
 //! * [`baselines`] — the comparison libraries of the paper's evaluation,
 //!   re-implemented: a nanoflann-style k-d tree, a Boost-style STR-packed
 //!   R-tree, and a brute-force oracle.
@@ -81,13 +84,13 @@ pub mod runtime;
 /// Convenience re-exports of the most common types.
 pub mod prelude {
     pub use crate::baselines::{brute::BruteForce, kdtree::KdTree, rtree::RTree};
-    pub use crate::bvh::{Bvh, PredicateKind, QueryOptions, QueryOutput, QueryPredicate};
+    pub use crate::bvh::{Bvh, PredicateKind, QueryOptions, QueryOutput, QueryPredicate, RayHit};
     pub use crate::coordinator::service::{BufferPolicy, SearchService, ServiceConfig};
     pub use crate::data::shapes::{PointCloud, Shape};
     pub use crate::exec::ExecSpace;
     pub use crate::geometry::predicates::{
-        attach, IntersectsBox, IntersectsRay, IntersectsSphere, Nearest, NearestQuery, Spatial,
-        SpatialPredicate, WithData,
+        attach, FirstHit, FirstHitQuery, IntersectsBox, IntersectsRay, IntersectsSphere, Nearest,
+        NearestQuery, Spatial, SpatialPredicate, WithData,
     };
     pub use crate::geometry::{Aabb, Point, Ray, Sphere, Triangle};
 }

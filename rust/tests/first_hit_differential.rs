@@ -1,0 +1,339 @@
+//! Differential tests for the first-hit ray-cast subsystem.
+//!
+//! A brute-force ray-march oracle (`BruteForce::first_hit`, sharing the
+//! traversal's tie-break) is compared against every entry point the
+//! query family owns: the direct traversal, the batched fixed-width
+//! engine (sorted and unsorted), the CSR facade, the service wire path
+//! (byte-encoded `TAG_FIRST_HIT` submissions), and the distributed
+//! forward/merge — over Karras and Apetrei builds on serial and threaded
+//! execution spaces, plus the degenerate geometry the slab test must
+//! survive. The prune-versus-scan test at the bottom is the performance
+//! acceptance: ordered descent must examine strictly fewer internal
+//! nodes than the all-hits traversal it replaces.
+
+use std::sync::Arc;
+
+use arbor::baselines::brute::BruteForce;
+use arbor::bvh::first_hit::{first_hit, first_hit_monitored};
+use arbor::bvh::traversal::for_each_spatial_monitored;
+use arbor::bvh::{Bvh, QueryOptions, QueryPredicate, RayHit};
+use arbor::coordinator::distributed::{DistributedTree, Partition};
+use arbor::coordinator::service::{SearchService, ServiceConfig};
+use arbor::coordinator::wire;
+use arbor::data::rng::Rng;
+use arbor::data::shapes::{PointCloud, Shape};
+use arbor::exec::ExecSpace;
+use arbor::geometry::predicates::{FirstHit, IntersectsRay};
+use arbor::geometry::{Aabb, Point, Ray};
+
+const SHAPES: [Shape; 2] = [Shape::FilledCube, Shape::HollowCube];
+
+/// Every (builder, space) engine combination under test.
+fn engines(boxes: &[Aabb]) -> Vec<(String, Bvh, ExecSpace)> {
+    let mut out = Vec::new();
+    for (space_name, space) in [("serial", ExecSpace::serial()), ("mt", ExecSpace::with_threads(4))]
+    {
+        out.push((
+            format!("karras/{space_name}"),
+            Bvh::build(&space, boxes),
+            space.clone(),
+        ));
+        out.push((
+            format!("apetrei/{space_name}"),
+            Bvh::build_apetrei(&space, boxes),
+            space.clone(),
+        ));
+    }
+    out
+}
+
+/// Finite-extent boxes around the cloud points: random (non-axis) rays
+/// can genuinely hit these, unlike the measure-zero point boxes.
+fn inflate(cloud: &PointCloud, half: f32) -> Vec<Aabb> {
+    cloud
+        .points
+        .iter()
+        .map(|p| Aabb::new(*p - Point::splat(half), *p + Point::splat(half)))
+        .collect()
+}
+
+/// Random rays and segments plus axis-parallel rays aimed exactly at
+/// existing (zero-extent) points, so both hit-rich and grazing cases are
+/// always present.
+fn ray_set(cloud: &PointCloud, seed: u64) -> Vec<FirstHit> {
+    let mut rng = Rng::new(seed);
+    let mut rays = Vec::new();
+    for _ in 0..40 {
+        let origin = Point::new(
+            rng.uniform(-2.0 * cloud.a, 2.0 * cloud.a),
+            rng.uniform(-2.0 * cloud.a, 2.0 * cloud.a),
+            rng.uniform(-2.0 * cloud.a, 2.0 * cloud.a),
+        );
+        let dir = Point::new(
+            rng.uniform(-1.0, 1.0),
+            rng.uniform(-1.0, 1.0),
+            rng.uniform(-1.0, 1.0),
+        );
+        if dir.norm() < 1e-3 {
+            continue;
+        }
+        if rays.len() % 2 == 0 {
+            rays.push(FirstHit(Ray::new(origin, dir)));
+        } else {
+            rays.push(FirstHit(Ray::segment(origin, dir, rng.uniform(0.5, 4.0))));
+        }
+    }
+    // Axis rays straight through existing points: the direction has exact
+    // zero components, so the slab test is exact along the other axes and
+    // the targeted zero-extent leaf box is a guaranteed hit.
+    for i in (0..cloud.points.len()).step_by(101) {
+        let p = cloud.points[i];
+        rays.push(FirstHit(Ray::new(
+            Point::new(p[0], p[1], p[2] - 2.0 * cloud.a),
+            Point::new(0.0, 0.0, 1.0),
+        )));
+    }
+    rays
+}
+
+#[test]
+fn first_hit_matches_brute_force_everywhere() {
+    for (si, shape) in SHAPES.iter().enumerate() {
+        let cloud = PointCloud::generate(*shape, 2000, 400 + si as u64);
+        // Two leaf geometries: zero-extent point boxes (axis rays hit
+        // them exactly) and inflated boxes (random rays hit them often).
+        for (variant, boxes) in [("points", cloud.boxes()), ("solid", inflate(&cloud, 0.6))] {
+            check_every_engine(*shape, variant, &cloud, &boxes, 31 + si as u64);
+        }
+    }
+}
+
+/// Runs the ray set against every engine combination on one leaf
+/// geometry, comparing direct, batched, and facade answers to the
+/// brute-force ray-march oracle.
+fn check_every_engine(shape: Shape, variant: &str, cloud: &PointCloud, boxes: &[Aabb], seed: u64) {
+    let brute = BruteForce::new(boxes);
+    let rays = ray_set(cloud, seed);
+    let want: Vec<Option<RayHit>> = rays.iter().map(|r| brute.first_hit(&r.0)).collect();
+    assert!(
+        want.iter().any(|h| h.is_some()),
+        "{shape:?}/{variant}: no ray hits anything — test workload is vacuous"
+    );
+
+    for (name, bvh, space) in engines(boxes) {
+        // Direct traversal.
+        let mut stack = Vec::new();
+        for (qi, r) in rays.iter().enumerate() {
+            assert_eq!(
+                first_hit(&bvh, r, &mut stack),
+                want[qi],
+                "{shape:?}/{variant}/{name} direct ray {qi}"
+            );
+        }
+        // Batched fixed-width engine, sorted and unsorted.
+        for sort in [false, true] {
+            let got = bvh.query_first_hit(&space, &rays, sort);
+            assert_eq!(got, want, "{shape:?}/{variant}/{name} batched sort={sort}");
+        }
+        // CSR facade (2P and tight 1P): one row per query, the entry
+        // parameter in `distances`.
+        let facade: Vec<QueryPredicate> =
+            rays.iter().map(|r| QueryPredicate::first_hit(r.0)).collect();
+        for (opt_name, opts) in [
+            ("2p", QueryOptions { buffer_size: None, sort_queries: true }),
+            ("1p-tight", QueryOptions { buffer_size: Some(1), sort_queries: false }),
+        ] {
+            let out = bvh.query(&space, &facade, &opts);
+            assert_eq!(out.overflow_queries, 0, "first-hit cannot overflow");
+            for (qi, w) in want.iter().enumerate() {
+                match w {
+                    Some(h) => {
+                        assert_eq!(
+                            out.results_for(qi),
+                            &[h.index],
+                            "{shape:?}/{variant}/{name}/{opt_name} ray {qi}"
+                        );
+                        assert_eq!(out.distances_for(qi), &[h.t]);
+                    }
+                    None => assert!(
+                        out.results_for(qi).is_empty(),
+                        "{shape:?}/{variant}/{name}/{opt_name} ray {qi} must miss"
+                    ),
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn first_hit_matches_brute_force_through_wire_and_distributed() {
+    let cloud = PointCloud::generate(Shape::FilledCube, 3000, 9);
+    let boxes = inflate(&cloud, 0.6); // random rays hit real extents
+    let brute = BruteForce::new(&boxes);
+    let rays = ray_set(&cloud, 77);
+    let want: Vec<Option<RayHit>> = rays.iter().map(|r| brute.first_hit(&r.0)).collect();
+
+    // Service wire path: every ray byte-encoded with TAG_FIRST_HIT and
+    // submitted through the batcher.
+    let space = ExecSpace::with_threads(2);
+    let bvh = Arc::new(Bvh::build(&space, &boxes));
+    let svc = SearchService::start(
+        Arc::clone(&bvh),
+        ServiceConfig { max_batch: 32, threads: 2, ..Default::default() },
+    );
+    let pendings: Vec<_> = rays
+        .iter()
+        .map(|r| {
+            let mut bytes = Vec::new();
+            wire::encode(&QueryPredicate::first_hit(r.0), &mut bytes);
+            svc.submit_encoded(&bytes).expect("well-formed first-hit encoding")
+        })
+        .collect();
+    for (qi, pending) in pendings.into_iter().enumerate() {
+        let result = pending.wait();
+        match &want[qi] {
+            Some(h) => {
+                assert_eq!(result.indices, vec![h.index], "wire ray {qi}");
+                assert_eq!(result.distances, vec![h.t], "wire ray {qi}");
+            }
+            None => assert!(result.indices.is_empty(), "wire ray {qi} must miss"),
+        }
+    }
+    assert_eq!(svc.metrics().first_hit_casts(), rays.len() as u64);
+    let hits = want.iter().filter(|h| h.is_some()).count() as u64;
+    assert_eq!(svc.metrics().first_hit_hits(), hits);
+
+    // Distributed forward/merge under both partitions.
+    for partition in [Partition::Block, Partition::MortonBlock] {
+        let dt = DistributedTree::build(&space, &boxes, 5, partition);
+        for (qi, r) in rays.iter().enumerate() {
+            let (got, stats) = dt.first_hit(&r.0);
+            assert_eq!(got, want[qi], "{partition:?} ray {qi}");
+            assert!(stats.ranks_contacted <= 5);
+        }
+    }
+}
+
+#[test]
+fn degenerate_first_hit_cases() {
+    let space = ExecSpace::serial();
+    // Zero-extent leaf boxes on a line.
+    let boxes: Vec<Aabb> = (0..50)
+        .map(|i| Aabb::from_point(Point::new(i as f32, 0.0, 0.0)))
+        .collect();
+    let brute = BruteForce::new(&boxes);
+    let bvh = Bvh::build(&space, &boxes);
+    let mut stack = Vec::new();
+
+    // Axis-parallel ray through a zero-extent box, approaching along z.
+    let through = FirstHit(Ray::new(Point::new(7.0, 0.0, -5.0), Point::new(0.0, 0.0, 1.0)));
+    let want = Some(RayHit { index: 7, t: 5.0 });
+    assert_eq!(first_hit(&bvh, &through, &mut stack), want);
+    assert_eq!(brute.first_hit(&through.0), want);
+
+    // Origin exactly on a point: the hit is at t = 0.
+    let on_point = FirstHit(Ray::new(Point::new(7.0, 0.0, 0.0), Point::new(0.0, 0.0, 1.0)));
+    assert_eq!(first_hit(&bvh, &on_point, &mut stack), Some(RayHit { index: 7, t: 0.0 }));
+
+    // t_max exactly at the hit is inclusive; any shorter misses.
+    let origin = Point::new(-3.0, 0.0, 0.0);
+    let dir = Point::new(1.0, 0.0, 0.0);
+    let exact = FirstHit(Ray::segment(origin, dir, 3.0));
+    assert_eq!(first_hit(&bvh, &exact, &mut stack), Some(RayHit { index: 0, t: 3.0 }));
+    assert_eq!(brute.first_hit(&exact.0), Some(RayHit { index: 0, t: 3.0 }));
+    let short = FirstHit(Ray::segment(origin, dir, 2.999));
+    assert_eq!(first_hit(&bvh, &short, &mut stack), None);
+    assert_eq!(brute.first_hit(&short.0), None);
+
+    // Origin inside an extended leaf box.
+    let fat = vec![
+        Aabb::new(Point::splat(-2.0), Point::splat(2.0)),
+        Aabb::from_point(Point::new(10.0, 0.0, 0.0)),
+    ];
+    let fat_bvh = Bvh::build(&space, &fat);
+    let inside = FirstHit(Ray::new(Point::origin(), Point::new(1.0, 0.0, 0.0)));
+    assert_eq!(first_hit(&fat_bvh, &inside, &mut stack), Some(RayHit { index: 0, t: 0.0 }));
+    assert_eq!(BruteForce::new(&fat).first_hit(&inside.0), Some(RayHit { index: 0, t: 0.0 }));
+
+    // All-miss scene: empty everywhere, through every entry point.
+    let miss = FirstHit(Ray::new(Point::new(0.0, 3.0, 0.0), Point::new(1.0, 0.0, 0.0)));
+    assert_eq!(first_hit(&bvh, &miss, &mut stack), None);
+    assert_eq!(brute.first_hit(&miss.0), None);
+    assert_eq!(bvh.query_first_hit(&space, &[miss], true), vec![None]);
+    let out = bvh.query(&space, &[QueryPredicate::first_hit(miss.0)], &QueryOptions::default());
+    assert_eq!(out.total(), 0);
+}
+
+#[test]
+fn first_hit_visits_strictly_fewer_internal_nodes_than_all_hits() {
+    // The performance acceptance for the ordered descent: on a 10k-leaf
+    // scene, casting to the nearest hit must examine strictly fewer
+    // internal nodes than the all-hits traversal whose results would be
+    // min-reduced — while returning exactly the same answer.
+    let cloud = PointCloud::generate(Shape::FilledCube, 10_000, 5);
+    let boxes = inflate(&cloud, 0.5); // finite extents: rays really hit
+    let bvh = Bvh::build(&ExecSpace::serial(), &boxes);
+    let mut rng = Rng::new(13);
+    let mut stack = Vec::new();
+    let mut fh_stack = Vec::new();
+    let (mut total_fh, mut total_all) = (0usize, 0usize);
+    let mut hitting_rays = 0usize;
+    for _ in 0..25 {
+        // From outside the cloud toward a random interior point, so the
+        // ray pierces the scene and the bound tightens early.
+        let target = cloud.points[rng.below(cloud.points.len())];
+        let origin = Point::new(
+            3.0 * cloud.a,
+            rng.uniform(-cloud.a, cloud.a),
+            rng.uniform(-cloud.a, cloud.a),
+        );
+        let dir = target - origin;
+        if dir.norm() < 1e-3 {
+            continue;
+        }
+        let ray = Ray::new(origin, dir);
+
+        let mut fh_nodes = 0usize;
+        let hit = first_hit_monitored(&bvh, &FirstHit(ray), &mut fh_stack, |_| fh_nodes += 1);
+
+        // All-hits + min: the recipe first-hit replaces.
+        let mut all_nodes = 0usize;
+        let mut best_t = f32::INFINITY;
+        let mut best_idx = u32::MAX;
+        for_each_spatial_monitored(
+            &bvh,
+            &IntersectsRay(ray),
+            &mut stack,
+            |obj| {
+                if let Some(t) = ray.box_entry(&boxes[obj as usize]) {
+                    if t < best_t || (t == best_t && obj < best_idx) {
+                        best_t = t;
+                        best_idx = obj;
+                    }
+                }
+            },
+            |_| all_nodes += 1,
+        );
+
+        // Same answer, fewer nodes.
+        match hit {
+            Some(h) => {
+                hitting_rays += 1;
+                assert_eq!(h.index, best_idx);
+                assert_eq!(h.t, best_t);
+                assert!(
+                    fh_nodes < all_nodes,
+                    "ordered descent must prune: {fh_nodes} vs {all_nodes}"
+                );
+            }
+            None => assert_eq!(best_idx, u32::MAX),
+        }
+        total_fh += fh_nodes;
+        total_all += all_nodes;
+    }
+    assert!(hitting_rays >= 10, "workload too sparse to be meaningful");
+    assert!(
+        total_fh < total_all,
+        "aggregate node accesses: first-hit {total_fh} vs all-hits {total_all}"
+    );
+}

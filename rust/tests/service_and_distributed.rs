@@ -119,7 +119,7 @@ fn mixed_wire_batch(points: &[Point], radius: f32) -> Vec<QueryPredicate> {
     points
         .iter()
         .enumerate()
-        .map(|(i, p)| match i % 6 {
+        .map(|(i, p)| match i % 7 {
             0 => QueryPredicate::intersects_sphere(*p, radius),
             1 => QueryPredicate::intersects_box(Aabb::new(
                 Point::new(p[0] - radius, p[1] - radius, p[2] - radius),
@@ -134,7 +134,10 @@ fn mixed_wire_batch(points: &[Point], radius: f32) -> Vec<QueryPredicate> {
                 Spatial::IntersectsRay(Ray::new(*p, Point::new(-1.0, 0.4, 0.1))),
                 i as u64,
             ),
-            _ => QueryPredicate::nearest(*p, 7),
+            5 => QueryPredicate::nearest(*p, 7),
+            // An axis ray starting on the point itself: a guaranteed
+            // first hit at t = 0.
+            _ => QueryPredicate::first_hit(Ray::new(*p, Point::new(0.0, 0.0, 1.0))),
         })
         .collect()
 }
@@ -159,7 +162,7 @@ fn direct_one(bvh: &Bvh, space: &ExecSpace, pred: &QueryPredicate) -> (Vec<u32>,
             };
             (out.results_for(0).to_vec(), Vec::new())
         }
-        QueryPredicate::Nearest(_) => {
+        QueryPredicate::Nearest(_) | QueryPredicate::FirstHit(_) => {
             let out = bvh.query(space, &[*pred], &opts);
             (out.results_for(0).to_vec(), out.distances_for(0).to_vec())
         }
@@ -220,9 +223,12 @@ fn service_differential_every_wire_kind_under_concurrency() {
             let mut want_sorted = want_idx.clone();
             want_sorted.sort();
             assert_eq!(got, want_sorted, "query {i} ({:?})", preds[i].kind());
-            if preds[i].kind() == PredicateKind::Nearest {
-                assert_eq!(r.indices, *want_idx, "nearest order {i}");
-                assert_eq!(r.distances, *want_dist, "nearest distances {i}");
+            if matches!(
+                preds[i].kind(),
+                PredicateKind::Nearest | PredicateKind::FirstHit
+            ) {
+                assert_eq!(r.indices, *want_idx, "ordered result {i}");
+                assert_eq!(r.distances, *want_dist, "result distances {i}");
             }
             assert_eq!(r.data, preds[i].data(), "payload {i}");
         }
