@@ -1,5 +1,6 @@
-//! Quickstart: build a BVH, run spatial, nearest, and first-hit ray
-//! queries, inspect CSR output — the 60-second tour of the public API.
+//! Quickstart: build a BVH, run spatial, nearest (to points and to
+//! geometries), and first-hit ray queries, inspect CSR output — the
+//! 60-second tour of the public API.
 //!
 //! Run with: `cargo run --release --example quickstart`
 
@@ -82,4 +83,32 @@ fn main() {
     let hits = bvh.query_first_hit(&space, &rays, true);
     let n_hits = hits.iter().filter(|h| h.is_some()).count();
     println!("first-hit: {}/{} rays hit; ray 0 -> {:?}", n_hits, rays.len(), hits[0]);
+
+    // 8. Nearest-to-geometry: k-NN around a *sphere* (or box) instead of
+    //    a point, via the DistanceTo seam. Distances are squared set
+    //    distances, so every object the ball overlaps reports 0.0 and
+    //    ties resolve to the smaller index deterministically. The facade
+    //    kind is QueryPredicate::nearest_sphere / nearest_box; the typed
+    //    engine below monomorphizes for Nearest<Sphere>.
+    let around: Vec<Nearest<Sphere>> = probes
+        .points
+        .iter()
+        .take(100)
+        .map(|p| Nearest::new(Sphere::new(*p, 1.5), 5))
+        .collect();
+    let out = bvh.query_nearest(&space, &around, true);
+    let touching = out.distances_for(0).iter().filter(|&&d| d == 0.0).count();
+    println!(
+        "nearest-to-sphere: query 0 -> indices {:?} dist2 {:?} ({touching} inside the ball)",
+        out.results_for(0),
+        out.distances_for(0)
+    );
+    // The same query through the wire facade returns identical rows.
+    let facade: Vec<QueryPredicate> = around
+        .iter()
+        .map(|n| QueryPredicate::nearest_sphere(n.geometry, n.k))
+        .collect();
+    let wire_out = bvh.query(&space, &facade, &QueryOptions::default());
+    assert_eq!(wire_out.results_for(0), out.results_for(0));
+    assert_eq!(wire_out.distances_for(0), out.distances_for(0));
 }

@@ -1,0 +1,147 @@
+//! Figure 13 (ours): nearest-to-geometry k-NN.
+//!
+//! The same question — "what are the k closest objects?" — asked around
+//! three query geometries over one filled-cube scene of finite-extent
+//! boxes:
+//!
+//! * **point** — the classical k-NN path (the seed's only geometry);
+//! * **sphere** — nearest-to-sphere through the `DistanceTo` seam
+//!   (objects the ball overlaps are zero-distance ties);
+//! * **box** — nearest-to-box via the box-to-box set distance.
+//!
+//! Each geometry runs through the Morton-ordered batched engine
+//! (`Bvh::query_nearest`, sorted vs unsorted — quantifying §2.2.3 for
+//! the nearest path) and is cross-checked on a subsample against the
+//! brute oracle (`BruteForce::nearest_to`), whose per-query time is the
+//! reported baseline. Results go to
+//! `bench_out/fig13_nearest_geometry.csv` and
+//! `BENCH_nearest_geometry.json`.
+
+use arbor::baselines::brute::BruteForce;
+use arbor::bench_util::{f, reps, time_median, write_json_snapshot, JsonValue, Table};
+use arbor::bvh::nearest::Neighbor;
+use arbor::bvh::Bvh;
+use arbor::data::rng::Rng;
+use arbor::data::shapes::{PointCloud, Shape};
+use arbor::exec::ExecSpace;
+use arbor::geometry::predicates::Nearest;
+use arbor::geometry::{Aabb, Point, Sphere};
+
+fn main() {
+    let space = ExecSpace::default_parallel();
+    let n = 100_000;
+    let n_queries = 10_000;
+    let k = 10;
+    let half = 0.5f32; // finite leaf extent: geometry queries really overlap
+
+    let cloud = PointCloud::generate(Shape::FilledCube, n, 42);
+    let boxes: Vec<Aabb> = cloud
+        .points
+        .iter()
+        .map(|p| Aabb::new(*p - Point::splat(half), *p + Point::splat(half)))
+        .collect();
+    let bvh = Bvh::build(&space, &boxes);
+    let brute = BruteForce::new(&boxes);
+
+    let mut rng = Rng::new(7);
+    let mut centers = Vec::with_capacity(n_queries);
+    for _ in 0..n_queries {
+        centers.push(Point::new(
+            rng.uniform(-cloud.a, cloud.a),
+            rng.uniform(-cloud.a, cloud.a),
+            rng.uniform(-cloud.a, cloud.a),
+        ));
+    }
+    let points: Vec<Nearest> = centers.iter().map(|c| Nearest::new(*c, k)).collect();
+    let spheres: Vec<Nearest<Sphere>> =
+        centers.iter().map(|c| Nearest::new(Sphere::new(*c, 1.5), k)).collect();
+    let regions: Vec<Nearest<Aabb>> = centers
+        .iter()
+        .map(|c| Nearest::new(Aabb::new(*c - Point::splat(1.5), *c + Point::splat(1.5)), k))
+        .collect();
+    let r = reps();
+
+    // --- wall time: batched engine per geometry, sorted vs unsorted ----
+    let mut tab = Table::new(
+        "fig13_nearest_geometry",
+        &["geometry", "sorted_s", "unsorted_s", "queries_per_s", "brute_per_query_us"],
+    );
+    let mut json: Vec<(&str, JsonValue)> = vec![
+        ("n_boxes", JsonValue::Int(n as u64)),
+        ("n_queries", JsonValue::Int(n_queries as u64)),
+        ("k", JsonValue::Int(k as u64)),
+        ("leaf_half_extent", JsonValue::Num(half as f64)),
+    ];
+    let brute_sample = 200.min(n_queries);
+
+    macro_rules! geometry_case {
+        ($name:literal, $queries:expr, $sorted_key:literal, $unsorted_key:literal,
+         $rate_key:literal, $brute_key:literal) => {{
+            let queries = $queries;
+            let t_sorted = time_median(r, || {
+                std::hint::black_box(bvh.query_nearest(&space, queries, true));
+            });
+            let t_unsorted = time_median(r, || {
+                std::hint::black_box(bvh.query_nearest(&space, queries, false));
+            });
+            // Brute oracle on a subsample: per-query cost plus the
+            // answer cross-check of the fastest tree path.
+            let t_brute_sample = time_median(r, || {
+                for q in &queries[..brute_sample] {
+                    std::hint::black_box(brute.nearest_to(&q.geometry, q.k));
+                }
+            });
+            let per_brute = t_brute_sample / brute_sample as f64;
+            let out = bvh.query_nearest(&space, queries, true);
+            for (qi, q) in queries[..brute_sample].iter().enumerate() {
+                let want = brute.nearest_to(&q.geometry, q.k);
+                let got: Vec<Neighbor> = out
+                    .results_for(qi)
+                    .iter()
+                    .zip(out.distances_for(qi))
+                    .map(|(&index, &distance_squared)| Neighbor { distance_squared, index })
+                    .collect();
+                assert_eq!(got, want, "{} query {qi} disagrees with the oracle", $name);
+            }
+            tab.row(&[
+                $name.to_string(),
+                f(t_sorted),
+                f(t_unsorted),
+                f(n_queries as f64 / t_sorted),
+                f(per_brute * 1e6),
+            ]);
+            json.push(($sorted_key, JsonValue::Num(t_sorted)));
+            json.push(($unsorted_key, JsonValue::Num(t_unsorted)));
+            json.push(($rate_key, JsonValue::Num(n_queries as f64 / t_sorted)));
+            json.push(($brute_key, JsonValue::Num(per_brute)));
+        }};
+    }
+
+    geometry_case!(
+        "point",
+        &points,
+        "point_sorted_s",
+        "point_unsorted_s",
+        "point_queries_per_s",
+        "point_brute_per_query_s"
+    );
+    geometry_case!(
+        "sphere",
+        &spheres,
+        "sphere_sorted_s",
+        "sphere_unsorted_s",
+        "sphere_queries_per_s",
+        "sphere_brute_per_query_s"
+    );
+    geometry_case!(
+        "box",
+        &regions,
+        "box_sorted_s",
+        "box_unsorted_s",
+        "box_queries_per_s",
+        "box_brute_per_query_s"
+    );
+
+    tab.write_csv();
+    write_json_snapshot("BENCH_nearest_geometry.json", &json);
+}

@@ -8,7 +8,7 @@
 use crate::bvh::first_hit::{offer_hit, RayHit};
 use crate::bvh::nearest::{KnnHeap, Neighbor};
 use crate::exec::ExecSpace;
-use crate::geometry::predicates::SpatialPredicate;
+use crate::geometry::predicates::{DistanceTo, SpatialPredicate};
 use crate::geometry::{Aabb, Point, Ray};
 
 /// A brute-force "index": just the boxes.
@@ -46,9 +46,17 @@ impl BruteForce {
     /// The k nearest objects to `point`, sorted ascending by distance
     /// (ties broken by index, matching the tree traversals).
     pub fn nearest(&self, point: &Point, k: usize) -> Vec<Neighbor> {
+        self.nearest_to(point, k)
+    }
+
+    /// The k nearest objects to any [`DistanceTo`] geometry (point,
+    /// sphere, box, ...), scored with the exact squared leaf distance and
+    /// sorted ascending by (distance, index) — the ground truth of the
+    /// nearest-to-geometry differential suite.
+    pub fn nearest_to<G: DistanceTo>(&self, geometry: &G, k: usize) -> Vec<Neighbor> {
         let mut heap = KnnHeap::new(k);
         for (i, b) in self.boxes.iter().enumerate() {
-            heap.offer(b.distance_squared(point), i as u32);
+            heap.offer(geometry.distance_squared(b), i as u32);
         }
         let mut out = Vec::new();
         heap.drain_sorted_into(&mut out);
@@ -108,6 +116,31 @@ mod tests {
         assert_eq!(nn[0].index, 4);
         assert_eq!(nn[1].index, 5);
         assert_eq!(nn[2].index, 3);
+    }
+
+    #[test]
+    fn nearest_to_geometry_scores_with_the_exact_leaf_metric() {
+        let boxes: Vec<Aabb> = (0..10)
+            .map(|i| Aabb::from_point(Point::new(i as f32, 0.0, 0.0)))
+            .collect();
+        let bf = BruteForce::new(&boxes);
+        // Sphere around x = 4.2, radius 1: points 4 and 5 are inside the
+        // ball (distance 0, tie by index); point 3 trails at 0.2².
+        let nn = bf.nearest_to(&Sphere::new(Point::new(4.2, 0.0, 0.0), 1.0), 3);
+        let idx: Vec<u32> = nn.iter().map(|n| n.index).collect();
+        assert_eq!(idx, vec![4, 5, 3]);
+        assert_eq!(nn[0].distance_squared, 0.0);
+        assert_eq!(nn[1].distance_squared, 0.0);
+        assert!((nn[2].distance_squared - 0.04).abs() < 1e-6);
+        // Box covering x in [2.5, 5.5]: three zero-distance ties.
+        let region = Aabb::new(Point::new(2.5, -1.0, -1.0), Point::new(5.5, 1.0, 1.0));
+        let nn = bf.nearest_to(&region, 3);
+        let idx: Vec<u32> = nn.iter().map(|n| n.index).collect();
+        assert_eq!(idx, vec![3, 4, 5]);
+        assert!(nn.iter().all(|n| n.distance_squared == 0.0));
+        // The point specialization is the old oracle.
+        let q = Point::new(4.2, 0.0, 0.0);
+        assert_eq!(bf.nearest_to(&q, 3), bf.nearest(&q, 3));
     }
 
     #[test]

@@ -21,9 +21,11 @@
 //!
 //! Two stacked entry layers expose the engines:
 //!
-//! * the **generic layer** ([`run_spatial_queries`], [`for_each_match`])
-//!   is parameterized over [`SpatialPredicate`], monomorphizing the whole
-//!   pipeline per predicate kind; [`for_each_match`] streams matches to a
+//! * the **generic layer** ([`run_spatial_queries`], [`for_each_match`],
+//!   [`run_nearest_queries`], [`run_first_hit_queries`]) is parameterized
+//!   over the predicate traits ([`SpatialPredicate`], [`NearestQuery`]
+//!   over any [`DistanceTo`] geometry, [`FirstHitQuery`]), monomorphizing
+//!   the whole pipeline per kind; [`for_each_match`] streams matches to a
 //!   callback without materializing CSR storage at all (search is memory
 //!   bound, §2 — skipping the result writes removes the largest store
 //!   stream);
@@ -42,15 +44,16 @@ use super::{Bvh, NodeRef};
 use crate::exec::scan::{exclusive_scan, SendPtr};
 use crate::exec::{sort, ExecSpace};
 use crate::geometry::predicates::{
-    FirstHit, FirstHitQuery, IntersectsBox, IntersectsRay, IntersectsSphere, Nearest, Spatial,
-    SpatialPredicate,
+    DistanceTo, FirstHit, FirstHitQuery, IntersectsBox, IntersectsRay, IntersectsSphere, Nearest,
+    NearestQuery, Spatial, SpatialPredicate,
 };
 use crate::geometry::{morton, Aabb, Point, Ray, Sphere};
 
 /// One wire-format search query — the open tagged predicate family of the
-/// coordinator protocol (sphere/box/ray regions, attachments, nearest,
-/// first-hit ray casts). Every variant carries a serializable payload;
-/// [`QueryPredicate::kind`] exposes the tag the service sub-batches on.
+/// coordinator protocol (sphere/box/ray regions, attachments,
+/// nearest-to-point/sphere/box, first-hit ray casts). Every variant
+/// carries a serializable payload; [`QueryPredicate::kind`] exposes the
+/// tag the service sub-batches on.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum QueryPredicate {
     /// Spatial query (sphere, box, or ray region).
@@ -60,8 +63,15 @@ pub enum QueryPredicate {
     /// on the monomorphized [`crate::geometry::predicates::WithData`]
     /// wrapper and is echoed back with the results.
     Attach(Spatial, u64),
-    /// k-nearest-neighbors query.
+    /// k-nearest-neighbors query around a point.
     Nearest(Nearest),
+    /// k-NN around a sphere: distances are to the ball, so every object
+    /// the sphere overlaps is at distance 0 (the ArborX 2.0
+    /// nearest-to-geometry family, via the
+    /// [`crate::geometry::predicates::DistanceTo`] seam).
+    NearestSphere(Nearest<Sphere>),
+    /// k-NN around a box, measured by the box-to-box set distance.
+    NearestBox(Nearest<Aabb>),
     /// First-hit ray cast: the single nearest object hit by the ray
     /// (ordered descent, [`super::first_hit`]). At most one result; the
     /// hit's entry parameter rides in [`QueryOutput::distances`].
@@ -86,15 +96,19 @@ pub enum PredicateKind {
     AttachBox,
     /// Ray with attachment.
     AttachRay,
-    /// k-NN query.
+    /// k-NN query around a point.
     Nearest,
+    /// k-NN query around a sphere.
+    NearestSphere,
+    /// k-NN query around a box.
+    NearestBox,
     /// First-hit ray cast.
     FirstHit,
 }
 
 impl PredicateKind {
     /// Number of kinds (size of per-kind tables).
-    pub const COUNT: usize = 8;
+    pub const COUNT: usize = 10;
 
     /// Every kind, in sub-batch execution order.
     pub const ALL: [PredicateKind; PredicateKind::COUNT] = [
@@ -105,6 +119,8 @@ impl PredicateKind {
         PredicateKind::AttachBox,
         PredicateKind::AttachRay,
         PredicateKind::Nearest,
+        PredicateKind::NearestSphere,
+        PredicateKind::NearestBox,
         PredicateKind::FirstHit,
     ];
 
@@ -125,6 +141,8 @@ impl PredicateKind {
             PredicateKind::AttachBox => "attach_box",
             PredicateKind::AttachRay => "attach_ray",
             PredicateKind::Nearest => "nearest",
+            PredicateKind::NearestSphere => "nearest_sphere",
+            PredicateKind::NearestBox => "nearest_box",
             PredicateKind::FirstHit => "first_hit",
         }
     }
@@ -154,7 +172,18 @@ impl QueryPredicate {
 
     /// k-NN search around `point`.
     pub fn nearest(point: Point, k: usize) -> Self {
-        QueryPredicate::Nearest(Nearest { point, k })
+        QueryPredicate::Nearest(Nearest::new(point, k))
+    }
+
+    /// k-NN search around a sphere (objects the ball overlaps are at
+    /// distance 0; see [`crate::geometry::predicates::DistanceTo`]).
+    pub fn nearest_sphere(sphere: Sphere, k: usize) -> Self {
+        QueryPredicate::NearestSphere(Nearest::new(sphere, k))
+    }
+
+    /// k-NN search around a box (box-to-box set distance).
+    pub fn nearest_box(b: Aabb, k: usize) -> Self {
+        QueryPredicate::NearestBox(Nearest::new(b, k))
     }
 
     /// Nearest-intersection ray cast: the single closest object hit by
@@ -174,6 +203,8 @@ impl QueryPredicate {
             QueryPredicate::Attach(Spatial::IntersectsBox(_), _) => PredicateKind::AttachBox,
             QueryPredicate::Attach(Spatial::IntersectsRay(_), _) => PredicateKind::AttachRay,
             QueryPredicate::Nearest(_) => PredicateKind::Nearest,
+            QueryPredicate::NearestSphere(_) => PredicateKind::NearestSphere,
+            QueryPredicate::NearestBox(_) => PredicateKind::NearestBox,
             QueryPredicate::FirstHit(_) => PredicateKind::FirstHit,
         }
     }
@@ -192,8 +223,21 @@ impl QueryPredicate {
     pub fn origin(&self) -> Point {
         match self {
             QueryPredicate::Spatial(s) | QueryPredicate::Attach(s, _) => s.origin(),
-            QueryPredicate::Nearest(n) => n.point,
+            QueryPredicate::Nearest(n) => n.geometry,
+            QueryPredicate::NearestSphere(n) => n.geometry.center,
+            QueryPredicate::NearestBox(n) => n.geometry.centroid(),
             QueryPredicate::FirstHit(r) => r.origin,
+        }
+    }
+
+    /// The requested neighbor count of a nearest-family predicate.
+    #[inline]
+    fn nearest_k(&self) -> Option<usize> {
+        match self {
+            QueryPredicate::Nearest(n) => Some(n.k),
+            QueryPredicate::NearestSphere(n) => Some(n.k),
+            QueryPredicate::NearestBox(n) => Some(n.k),
+            _ => None,
         }
     }
 }
@@ -376,6 +420,59 @@ pub fn run_first_hit_queries<Q: FirstHitQuery + Sync>(
     out
 }
 
+/// Executes a batch of nearest trait queries (any [`NearestQuery`] —
+/// point, sphere, box, or user-defined [`DistanceTo`] geometries,
+/// attachments included), returning CSR results in the caller's order
+/// with squared distances aligned in [`QueryOutput::distances`].
+///
+/// Unlike the spatial engines no counting traversal is needed: each
+/// query yields exactly `min(k, n)` results (§2.2.2), so offsets are
+/// computed up front and a single traversal pass fills the storage.
+/// Queries are Morton-ordered by geometry origin when `sort_queries` is
+/// set (§2.2.3); each worker thread reuses one
+/// [`NearestScratch`] across its chunk. The whole pipeline monomorphizes
+/// per query type `Q`.
+pub fn run_nearest_queries<Q: NearestQuery + Sync>(
+    bvh: &Bvh,
+    space: &ExecSpace,
+    queries: &[Q],
+    sort_queries: bool,
+) -> QueryOutput {
+    let q = queries.len();
+    let order = order_by_origin(space, bvh, queries, sort_queries, |nq| nq.geometry().origin());
+    let counts: Vec<u32> =
+        queries.iter().map(|nq| nq.k().min(bvh.len()) as u32).collect();
+    let offsets = exclusive_scan(space, &counts);
+    let total = offsets[q] as usize;
+    let mut indices = vec![0u32; total];
+    let mut distances = vec![0.0f32; total];
+    {
+        let ip = SendPtr(indices.as_mut_ptr());
+        let dp = SendPtr(distances.as_mut_ptr());
+        let offsets_ref = &offsets;
+        let order_ref = &order;
+        space.parallel_for_chunks(q, |b, e| {
+            let mut scratch = NearestScratch::new(16);
+            let mut knn: Vec<Neighbor> = Vec::new();
+            for pos in b..e {
+                let orig = order_ref[pos] as usize;
+                nearest_stack(bvh, &queries[orig], &mut scratch, &mut knn);
+                debug_assert_eq!(knn.len(), counts[orig] as usize);
+                let base = offsets_ref[orig] as usize;
+                for (j, nb) in knn.iter().enumerate() {
+                    // SAFETY: [base, base + counts[orig]) is owned by this
+                    // query.
+                    unsafe {
+                        ip.write(base + j, nb.index);
+                        dp.write(base + j, nb.distance_squared);
+                    }
+                }
+            }
+        });
+    }
+    QueryOutput { offsets, indices, distances, overflow_queries: 0 }
+}
+
 /// Generic two-pass (2P) count-and-fill execution (§2.2.1).
 fn spatial_2p<P: SpatialPredicate + Sync>(
     bvh: &Bvh,
@@ -531,9 +628,32 @@ pub fn run_queries(
 /// The needs-distances test: nearest batches fill `distances` with
 /// squared distances, first-hit batches with ray-entry parameters.
 fn batch_needs_distances(queries: &[QueryPredicate]) -> bool {
-    queries
-        .iter()
-        .any(|p| matches!(p, QueryPredicate::Nearest(_) | QueryPredicate::FirstHit(_)))
+    queries.iter().any(|p| {
+        matches!(
+            p,
+            QueryPredicate::Nearest(_)
+                | QueryPredicate::NearestSphere(_)
+                | QueryPredicate::NearestBox(_)
+                | QueryPredicate::FirstHit(_)
+        )
+    })
+}
+
+/// Runs one facade nearest predicate: a single enum dispatch selecting
+/// the monomorphized stack traversal for that query geometry.
+#[inline]
+fn nearest_enum(
+    bvh: &Bvh,
+    p: &QueryPredicate,
+    scratch: &mut NearestScratch,
+    out: &mut Vec<Neighbor>,
+) {
+    match p {
+        QueryPredicate::Nearest(n) => nearest_stack(bvh, n, scratch, out),
+        QueryPredicate::NearestSphere(n) => nearest_stack(bvh, n, scratch, out),
+        QueryPredicate::NearestBox(n) => nearest_stack(bvh, n, scratch, out),
+        _ => unreachable!("nearest_enum called on a non-nearest predicate"),
+    }
 }
 
 /// Counts one facade predicate: a single enum dispatch selecting the
@@ -588,9 +708,14 @@ fn run_2p(bvh: &Bvh, space: &ExecSpace, queries: &[QueryPredicate], order: &[u32
                     QueryPredicate::Spatial(s) | QueryPredicate::Attach(s, _) => {
                         count_enum(bvh, s, &mut stack)
                     }
-                    // §2.2.2: for nearest queries the result count is known
-                    // in advance (min(k, n)) — no counting traversal needed.
-                    QueryPredicate::Nearest(nst) => nst.k.min(bvh.len()) as u32,
+                    // §2.2.2: for nearest queries (any geometry) the result
+                    // count is known in advance (min(k, n)) — no counting
+                    // traversal needed.
+                    QueryPredicate::Nearest(_)
+                    | QueryPredicate::NearestSphere(_)
+                    | QueryPredicate::NearestBox(_) => {
+                        queries[orig].nearest_k().unwrap().min(bvh.len()) as u32
+                    }
                     QueryPredicate::FirstHit(r) => {
                         let hit = first_hit(bvh, &FirstHit(*r), &mut fh_stack);
                         // SAFETY: one writer per original query index.
@@ -634,8 +759,10 @@ fn run_2p(bvh: &Bvh, space: &ExecSpace, queries: &[QueryPredicate], order: &[u32
                         });
                         debug_assert_eq!(cursor, offsets_ref[orig + 1] as usize);
                     }
-                    QueryPredicate::Nearest(nst) => {
-                        nearest_stack(bvh, nst, &mut scratch, &mut knn);
+                    QueryPredicate::Nearest(_)
+                    | QueryPredicate::NearestSphere(_)
+                    | QueryPredicate::NearestBox(_) => {
+                        nearest_enum(bvh, &queries[orig], &mut scratch, &mut knn);
                         for (j, nb) in knn.iter().enumerate() {
                             unsafe {
                                 ip.write(base + j, nb.index);
@@ -706,8 +833,10 @@ fn run_1p(
                             count += 1; // keep counting past the buffer
                         });
                     }
-                    QueryPredicate::Nearest(nst) => {
-                        nearest_stack(bvh, nst, &mut scratch, &mut knn);
+                    QueryPredicate::Nearest(_)
+                    | QueryPredicate::NearestSphere(_)
+                    | QueryPredicate::NearestBox(_) => {
+                        nearest_enum(bvh, &queries[orig], &mut scratch, &mut knn);
                         for nb in &knn {
                             if count < buffer {
                                 unsafe {
@@ -774,8 +903,8 @@ fn run_1p(
                     }
                 } else {
                     // Overflow: redo the traversal straight into the final
-                    // storage (spatial only — nearest can't overflow: its
-                    // count is ≤ k ≤ buffer or handled by the same path).
+                    // storage (spatial monsters, or nearest with k larger
+                    // than the buffer).
                     match &queries[orig] {
                         QueryPredicate::Spatial(s) | QueryPredicate::Attach(s, _) => {
                             let mut cursor = base;
@@ -784,10 +913,13 @@ fn run_1p(
                                 cursor += 1;
                             });
                         }
-                        QueryPredicate::Nearest(nst) => {
-                            let mut scratch = NearestScratch::new(nst.k);
+                        QueryPredicate::Nearest(_)
+                        | QueryPredicate::NearestSphere(_)
+                        | QueryPredicate::NearestBox(_) => {
+                            let k = queries[orig].nearest_k().unwrap();
+                            let mut scratch = NearestScratch::new(k);
                             let mut knn = Vec::new();
-                            nearest_stack(bvh, nst, &mut scratch, &mut knn);
+                            nearest_enum(bvh, &queries[orig], &mut scratch, &mut knn);
                             for (j, nb) in knn.iter().enumerate() {
                                 unsafe {
                                     ip.write(base + j, nb.index);
@@ -1033,6 +1165,8 @@ mod tests {
             QueryPredicate::attach(Spatial::IntersectsRay(ray), 99),
             QueryPredicate::nearest(Point::origin(), 4),
             QueryPredicate::first_hit(ray),
+            QueryPredicate::nearest_sphere(Sphere::new(Point::new(2.0, 2.0, 2.0), 1.0), 7),
+            QueryPredicate::nearest_box(Aabb::new(Point::origin(), Point::splat(1.0)), 3),
         ];
         assert_eq!(queries[3].kind(), PredicateKind::AttachRay);
         assert_eq!(queries[3].data(), Some(99));
@@ -1056,6 +1190,57 @@ mod tests {
             // First hit of the row ray: grid point (0, 2, 3) at t = 1.
             assert_eq!(out.results_for(5), &[2 * 6 + 3]);
             assert_eq!(out.distances_for(5), &[1.0]);
+            // Nearest-to-sphere: (2,2,2) and its 6 face neighbors all lie
+            // inside the radius-1 ball → 7 zero-distance ties kept in
+            // ascending index order (index = x*36 + y*6 + z).
+            assert_eq!(out.results_for(6), &[50, 80, 85, 86, 87, 92, 122]);
+            assert!(out.distances_for(6).iter().all(|&d| d == 0.0));
+            // Nearest-to-box: the unit cube overlaps its 8 corner points;
+            // k = 3 keeps the smallest indices.
+            assert_eq!(out.results_for(7), &[0, 1, 6]);
+            assert!(out.distances_for(7).iter().all(|&d| d == 0.0));
+        }
+    }
+
+    #[test]
+    fn generic_nearest_engine_matches_facade() {
+        let space = ExecSpace::with_threads(2);
+        let pts = grid_points(7);
+        let bvh = build(&pts, &space);
+        let spheres: Vec<Nearest<Sphere>> = pts
+            .iter()
+            .step_by(9)
+            .map(|p| Nearest::new(Sphere::new(*p, 0.8), 5))
+            .collect();
+        let facade: Vec<QueryPredicate> = spheres
+            .iter()
+            .map(|n| QueryPredicate::NearestSphere(*n))
+            .collect();
+        for sort in [false, true] {
+            let a = bvh.query_nearest(&space, &spheres, sort);
+            let b = bvh.query(
+                &space,
+                &facade,
+                &QueryOptions { buffer_size: None, sort_queries: sort },
+            );
+            assert_eq!(a.offsets, b.offsets, "sort={sort}");
+            assert_eq!(a.indices, b.indices, "sort={sort}");
+            assert_eq!(a.distances, b.distances, "sort={sort}");
+            assert_eq!(a.overflow_queries, 0);
+        }
+        // Point queries through the generic engine agree with the facade
+        // too, and attachments are transparent.
+        let points: Vec<Nearest> =
+            pts.iter().step_by(11).map(|p| Nearest::new(*p, 4)).collect();
+        let tagged: Vec<WithData<Nearest, u64>> =
+            points.iter().map(|n| attach(*n, 5)).collect();
+        let a = bvh.query_nearest(&space, &points, true);
+        let b = bvh.query_nearest(&space, &tagged, true);
+        assert_eq!(a.indices, b.indices);
+        assert_eq!(a.distances, b.distances);
+        for (qi, n) in points.iter().enumerate() {
+            assert_eq!(a.results_for(qi).len(), n.k.min(bvh.len()));
+            assert_eq!(a.distances_for(qi)[0], 0.0, "self is nearest");
         }
     }
 
@@ -1119,6 +1304,8 @@ mod tests {
             QueryPredicate::attach(Spatial::IntersectsBox(b), 2),
             QueryPredicate::attach(Spatial::IntersectsRay(ray), 3),
             QueryPredicate::nearest(Point::origin(), 1),
+            QueryPredicate::nearest_sphere(Sphere::new(Point::origin(), 1.0), 2),
+            QueryPredicate::nearest_box(b, 3),
             QueryPredicate::first_hit(ray),
         ];
         for (i, (p, kind)) in preds.iter().zip(PredicateKind::ALL).enumerate() {

@@ -6,7 +6,10 @@
 //!   [`Bvh::build_apetrei`].
 //! * [`traversal`] — stack-based spatial traversal, §2.2.1.
 //! * [`nearest`] — stack-based nearest traversal (Patwary et al. 2016
-//!   style) plus a priority-queue reference variant, §2.2.2.
+//!   style) plus a priority-queue reference variant, §2.2.2; generic
+//!   over the query geometry through the
+//!   [`crate::geometry::predicates::DistanceTo`] distance-lower-bound
+//!   seam (point, sphere, and box queries ship in-tree).
 //! * [`first_hit`] — nearest-intersection ray casting: ordered child
 //!   descent by ray-entry parameter with best-hit pruning, returning
 //!   `Option<RayHit>` instead of a match list (the ArborX 2.0
@@ -33,7 +36,7 @@ pub use batched::{PredicateKind, QueryOptions, QueryOutput, QueryPredicate};
 pub use first_hit::RayHit;
 
 use crate::exec::ExecSpace;
-use crate::geometry::predicates::{FirstHitQuery, SpatialPredicate};
+use crate::geometry::predicates::{self, FirstHitQuery, SpatialPredicate};
 use crate::geometry::Aabb;
 
 /// A tagged reference to a BVH node: leaves have the high bit set.
@@ -192,6 +195,24 @@ impl Bvh {
         F: Fn(u32, u32) + Sync,
     {
         batched::for_each_match(self, space, preds, true, &callback)
+    }
+
+    /// Executes a batch of nearest trait queries — `Nearest<Point>`,
+    /// `Nearest<Sphere>`, `Nearest<Aabb>`, attachments, or any
+    /// user-defined [`crate::geometry::predicates::NearestQuery`] over a
+    /// [`crate::geometry::predicates::DistanceTo`] geometry — returning
+    /// CSR results with squared distances in the caller's order. Result
+    /// counts are known up front (`min(k, n)`, §2.2.2), so this is a
+    /// single-traversal engine: no counting pass, no buffer policy.
+    /// Queries are Morton-ordered by geometry origin when `sort_queries`
+    /// is set (§2.2.3); the whole pipeline monomorphizes per query type.
+    pub fn query_nearest<Q: predicates::NearestQuery + Sync>(
+        &self,
+        space: &ExecSpace,
+        queries: &[Q],
+        sort_queries: bool,
+    ) -> QueryOutput {
+        batched::run_nearest_queries(self, space, queries, sort_queries)
     }
 
     /// Executes a batch of first-hit ray casts, returning one

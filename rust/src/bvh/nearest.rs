@@ -14,23 +14,40 @@
 //! the pruning bound is the distance of the *worst* candidate.
 //!
 //! Traversals are generic over [`NearestQuery`] (the k-NN twin of the
-//! spatial-predicate trait), so attachment wrappers
-//! ([`crate::geometry::predicates::WithData`]) ride along for free.
+//! spatial-predicate trait), whose geometry is anything implementing
+//! [`crate::geometry::predicates::DistanceTo`] — point, sphere, and box
+//! queries ship in-tree — so attachment wrappers
+//! ([`crate::geometry::predicates::WithData`]) and nearest-to-geometry
+//! queries both ride along for free. Internal nodes are pruned with the
+//! geometry's `lower_bound`; leaves are scored with its exact
+//! `distance_squared`.
+//!
+//! **Metric convention:** every distance in this module — heap entries,
+//! pruning bounds, [`Neighbor`] results — is *squared* Euclidean set
+//! distance, `0.0` on overlap, exactly as [`DistanceTo`] defines it.
 
 use super::{is_leaf, ref_index, Bvh, NodeRef};
-use crate::geometry::predicates::NearestQuery;
-use crate::geometry::Point;
+use crate::geometry::predicates::{DistanceTo, NearestQuery};
 
 /// A candidate neighbor: squared distance and original object index.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Neighbor {
-    /// Squared distance from the query point.
+    /// Squared Euclidean set distance from the query geometry to the
+    /// object's box (`0.0` when they touch or overlap — a query sphere
+    /// centered inside a leaf, or a query box overlapping one, is at
+    /// distance zero). Shares the [`DistanceTo`] convention.
     pub distance_squared: f32,
     /// Original (user) object index.
     pub index: u32,
 }
 
 /// Bounded max-heap of the k best candidates seen so far.
+///
+/// Candidate distances are **squared** Euclidean set distances (the
+/// [`DistanceTo`] convention; `0.0` on overlap) — every producer (point,
+/// sphere, and box traversals, the brute oracle, the distributed merge)
+/// must offer the same metric or the prune bound and tie-break break
+/// silently.
 ///
 /// `heap[0]` is the worst retained candidate, so the traversal prune
 /// bound is `O(1)` to read and candidates are replaced in `O(log k)`.
@@ -88,9 +105,10 @@ impl KnnHeap {
         }
     }
 
-    /// Offers a candidate; keeps it only if it improves the k-best set
-    /// under the (distance, index) order — so on a distance tie with the
-    /// current worst candidate, the smaller index wins.
+    /// Offers a candidate (`distance_squared` in the squared
+    /// [`DistanceTo`] metric); keeps it only if it improves the k-best
+    /// set under the (distance, index) order — so on a distance tie with
+    /// the current worst candidate, the smaller index wins.
     #[inline]
     pub fn offer(&mut self, distance_squared: f32, index: u32) {
         if self.k == 0 {
@@ -197,7 +215,7 @@ pub fn nearest_stack_monitored<Q: NearestQuery, M: FnMut(u32)>(
     out: &mut Vec<Neighbor>,
     mut monitor: M,
 ) {
-    let point = &query.point();
+    let geometry = query.geometry();
     let k = query.k();
     out.clear();
     if bvh.n_leaves == 0 || k == 0 {
@@ -205,7 +223,7 @@ pub fn nearest_stack_monitored<Q: NearestQuery, M: FnMut(u32)>(
     }
     scratch.heap.reset(k);
     if is_leaf(bvh.root) {
-        scratch.heap.offer(bvh.leaf_boxes[0].distance_squared(point), bvh.leaf_perm[0]);
+        scratch.heap.offer(geometry.distance_squared(&bvh.leaf_boxes[0]), bvh.leaf_perm[0]);
         scratch.heap.drain_sorted_into(out);
         return;
     }
@@ -220,17 +238,17 @@ pub fn nearest_stack_monitored<Q: NearestQuery, M: FnMut(u32)>(
             continue;
         }
         let nd = &bvh.nodes[ref_index(node)];
-        // Leaves become candidates immediately; internal children are
-        // collected with their box distances.
+        // Leaves become candidates immediately (exact distance); internal
+        // children are collected with their box lower bounds.
         let mut pending: [(NodeRef, f32); 2] = [(0, f32::INFINITY); 2];
         let mut n_pending = 0usize;
         for child in [nd.left, nd.right] {
             let ci = ref_index(child);
             if is_leaf(child) {
-                heap.offer(bvh.leaf_boxes[ci].distance_squared(point), bvh.leaf_perm[ci]);
+                heap.offer(geometry.distance_squared(&bvh.leaf_boxes[ci]), bvh.leaf_perm[ci]);
             } else {
                 monitor(ci as u32);
-                pending[n_pending] = (child, bvh.nodes[ci].bbox.distance_squared(point));
+                pending[n_pending] = (child, geometry.lower_bound(&bvh.nodes[ci].bbox));
                 n_pending += 1;
             }
         }
@@ -255,7 +273,7 @@ pub fn nearest_pq<Q: NearestQuery>(bvh: &Bvh, query: &Q, out: &mut Vec<Neighbor>
     use std::cmp::Reverse;
     use std::collections::BinaryHeap;
 
-    let point = &query.point();
+    let geometry = query.geometry();
     let k = query.k();
 
     /// f32 ordered wrapper (distances are never NaN).
@@ -279,7 +297,7 @@ pub fn nearest_pq<Q: NearestQuery>(bvh: &Bvh, query: &Q, out: &mut Vec<Neighbor>
     }
     let mut best = KnnHeap::new(k);
     if is_leaf(bvh.root) {
-        best.offer(bvh.leaf_boxes[0].distance_squared(point), bvh.leaf_perm[0]);
+        best.offer(geometry.distance_squared(&bvh.leaf_boxes[0]), bvh.leaf_perm[0]);
         best.drain_sorted_into(out);
         return;
     }
@@ -293,9 +311,9 @@ pub fn nearest_pq<Q: NearestQuery>(bvh: &Bvh, query: &Q, out: &mut Vec<Neighbor>
         for child in [nd.left, nd.right] {
             let ci = ref_index(child);
             if is_leaf(child) {
-                best.offer(bvh.leaf_boxes[ci].distance_squared(point), bvh.leaf_perm[ci]);
+                best.offer(geometry.distance_squared(&bvh.leaf_boxes[ci]), bvh.leaf_perm[ci]);
             } else {
-                let d = bvh.nodes[ci].bbox.distance_squared(point);
+                let d = geometry.lower_bound(&bvh.nodes[ci].bbox);
                 if d <= best.bound() {
                     pq.push((Reverse(D(d)), child));
                 }
@@ -310,7 +328,7 @@ mod tests {
     use super::*;
     use crate::exec::ExecSpace;
     use crate::geometry::predicates::{attach, Nearest};
-    use crate::geometry::Aabb;
+    use crate::geometry::{Aabb, Point, Sphere};
 
     fn cloud(n: usize, seed: u64) -> Vec<Point> {
         let mut s = seed.max(1);
@@ -441,6 +459,70 @@ mod tests {
         }
         assert_eq!(h.len(), 129);
         assert_eq!(h.capacity(), cap, "offer loop must not reallocate");
+    }
+
+    #[test]
+    fn sphere_and_box_queries_match_the_brute_oracle() {
+        // The oracle is the shipped one (`BruteForce::nearest_to`, same
+        // crate) — no parallel test-local reimplementation to drift.
+        use crate::baselines::brute::BruteForce;
+        let points = cloud(400, 17);
+        let boxes: Vec<Aabb> = points.iter().map(|p| Aabb::from_point(*p)).collect();
+        let brute = BruteForce::new(&boxes);
+        let bvh = Bvh::build(&ExecSpace::serial(), &boxes);
+        let mut scratch = NearestScratch::new(8);
+        let (mut out_stack, mut out_pq) = (Vec::new(), Vec::new());
+        for (qi, c) in cloud(25, 3).into_iter().enumerate() {
+            for k in [1usize, 4, 8] {
+                let sq = Nearest::new(Sphere::new(c, 0.5 + (qi % 5) as f32), k);
+                let expect = brute.nearest_to(&sq.geometry, k);
+                nearest_stack(&bvh, &sq, &mut scratch, &mut out_stack);
+                nearest_pq(&bvh, &sq, &mut out_pq);
+                assert_eq!(out_stack, expect, "sphere stack k={k}");
+                assert_eq!(out_pq, expect, "sphere pq k={k}");
+
+                let half = Point::splat(0.25 + (qi % 4) as f32);
+                let bq = Nearest::new(Aabb::new(c - half, c + half), k);
+                let expect = brute.nearest_to(&bq.geometry, k);
+                nearest_stack(&bvh, &bq, &mut scratch, &mut out_stack);
+                nearest_pq(&bvh, &bq, &mut out_pq);
+                assert_eq!(out_stack, expect, "box stack k={k}");
+                assert_eq!(out_pq, expect, "box pq k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn geometry_overlapping_leaves_scores_them_at_zero() {
+        // A query sphere/box covering several leaves must report them all
+        // at squared distance 0.0, tie-broken by ascending index — the
+        // query-contains-leaf degenerate case.
+        let points: Vec<Point> =
+            (0..10).map(|i| Point::new(i as f32, 0.0, 0.0)).collect();
+        let boxes: Vec<Aabb> = points.iter().map(|p| Aabb::from_point(*p)).collect();
+        let bvh = Bvh::build(&ExecSpace::serial(), &boxes);
+        let mut scratch = NearestScratch::new(3);
+        let mut out = Vec::new();
+        // Sphere of radius 2.5 around x = 4 covers points 2..=6 (5 ties).
+        let sq = Nearest::new(Sphere::new(Point::new(4.0, 0.0, 0.0), 2.5), 3);
+        nearest_stack(&bvh, &sq, &mut scratch, &mut out);
+        assert_eq!(
+            out,
+            vec![
+                Neighbor { distance_squared: 0.0, index: 2 },
+                Neighbor { distance_squared: 0.0, index: 3 },
+                Neighbor { distance_squared: 0.0, index: 4 },
+            ]
+        );
+        // Box covering x in [3, 7] ties points 3..=7 the same way.
+        let bq = Nearest::new(
+            Aabb::new(Point::new(3.0, -1.0, -1.0), Point::new(7.0, 1.0, 1.0)),
+            3,
+        );
+        nearest_stack(&bvh, &bq, &mut scratch, &mut out);
+        let idx: Vec<u32> = out.iter().map(|n| n.index).collect();
+        assert_eq!(idx, vec![3, 4, 5]);
+        assert!(out.iter().all(|n| n.distance_squared == 0.0));
     }
 
     #[test]

@@ -156,6 +156,12 @@ pub fn access_matrix(bvh: &Bvh, queries: &[QueryPredicate], sort_queries: bool) 
             QueryPredicate::Nearest(n) => {
                 nearest_stack_monitored(bvh, n, &mut scratch, &mut knn, |node| row.push(node));
             }
+            QueryPredicate::NearestSphere(n) => {
+                nearest_stack_monitored(bvh, n, &mut scratch, &mut knn, |node| row.push(node));
+            }
+            QueryPredicate::NearestBox(n) => {
+                nearest_stack_monitored(bvh, n, &mut scratch, &mut knn, |node| row.push(node));
+            }
             QueryPredicate::FirstHit(r) => {
                 let _ = first_hit_monitored(bvh, &FirstHit(*r), &mut fh_stack, |node| {
                     row.push(node)

@@ -20,7 +20,8 @@ use crate::bvh::traversal::for_each_spatial;
 use crate::bvh::{nearest, Bvh, QueryPredicate};
 use crate::exec::ExecSpace;
 use crate::geometry::predicates::{
-    FirstHit, IntersectsBox, IntersectsRay, IntersectsSphere, Nearest, Spatial, SpatialPredicate,
+    DistanceTo, FirstHit, IntersectsBox, IntersectsRay, IntersectsSphere, Nearest, Spatial,
+    SpatialPredicate,
 };
 use crate::geometry::{Aabb, Point, Ray};
 
@@ -141,8 +142,9 @@ impl DistributedTree {
 
     /// Wire-level entry point: executes one open-family predicate. All
     /// spatial kinds — ray and attachment queries included — go through
-    /// the two-phase forward/merge path; nearest goes through the
-    /// closest-rank-first refinement; first-hit through the
+    /// the two-phase forward/merge path; the nearest family (point,
+    /// sphere, and box geometries) through the bound-ordered rank walk
+    /// ([`DistributedTree::nearest_to`]); first-hit through the
     /// entry-ordered rank walk ([`DistributedTree::first_hit`]). The
     /// enum is matched *once per query*, selecting the monomorphized
     /// forward/merge instance, so the distributed layer accepts
@@ -156,7 +158,19 @@ impl DistributedTree {
                 (indices, Vec::new(), stats)
             }
             QueryPredicate::Nearest(n) => {
-                let (neighbors, stats) = self.nearest(&n.point, n.k);
+                let (neighbors, stats) = self.nearest_to(&n.geometry, n.k);
+                let indices = neighbors.iter().map(|nb| nb.index).collect();
+                let distances = neighbors.iter().map(|nb| nb.distance_squared).collect();
+                (indices, distances, stats)
+            }
+            QueryPredicate::NearestSphere(n) => {
+                let (neighbors, stats) = self.nearest_to(&n.geometry, n.k);
+                let indices = neighbors.iter().map(|nb| nb.index).collect();
+                let distances = neighbors.iter().map(|nb| nb.distance_squared).collect();
+                (indices, distances, stats)
+            }
+            QueryPredicate::NearestBox(n) => {
+                let (neighbors, stats) = self.nearest_to(&n.geometry, n.k);
                 let indices = neighbors.iter().map(|nb| nb.index).collect();
                 let distances = neighbors.iter().map(|nb| nb.distance_squared).collect();
                 (indices, distances, stats)
@@ -214,21 +228,37 @@ impl DistributedTree {
         (best, stats)
     }
 
-    /// Distributed k-NN: phase 1 queries the *closest* rank to seed the
-    /// bound, phase 2 refines on every rank that could still beat it.
+    /// Distributed k-NN around a point — the point specialization of
+    /// [`DistributedTree::nearest_to`].
     pub fn nearest(&self, point: &Point, k: usize) -> (Vec<Neighbor>, DistStats) {
+        self.nearest_to(point, k)
+    }
+
+    /// Distributed k-NN around any [`DistanceTo`] geometry (point,
+    /// sphere, box, or user-defined): ranks are visited in ascending
+    /// order of the geometry's *lower bound* against their scene box —
+    /// the "closest rank first" forwarding heuristic, generalized — so
+    /// the first rank seeds the tightest possible bound and the walk
+    /// stops at the first rank whose whole shard provably cannot improve
+    /// the k-best set (its bound exceeds the current worst retained
+    /// distance). Equal-bound ranks are still visited, keeping the
+    /// (distance, global index) tie-break exact.
+    pub fn nearest_to<G: DistanceTo + Copy>(
+        &self,
+        geometry: &G,
+        k: usize,
+    ) -> (Vec<Neighbor>, DistStats) {
         let mut out = Vec::new();
         if self.is_empty() || k == 0 {
             return (out, DistStats::default());
         }
-        // Rank order by scene-box distance (the "closest rank first"
-        // forwarding heuristic).
+        // Bound-ordered rank walk: ascending scene-box lower bound.
         let mut rank_dist: Vec<(usize, f32)> = self
             .ranks
             .iter()
             .enumerate()
             .filter(|(_, s)| !s.bvh.is_empty())
-            .map(|(i, s)| (i, s.bvh.scene_box().distance_squared(point)))
+            .map(|(i, s)| (i, geometry.lower_bound(&s.bvh.scene_box())))
             .collect();
         rank_dist.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
 
@@ -242,7 +272,12 @@ impl DistributedTree {
             }
             contacted += 1;
             let shard = &self.ranks[ri];
-            nearest::nearest_stack(&shard.bvh, &Nearest::new(*point, k), &mut scratch, &mut local);
+            nearest::nearest_stack(
+                &shard.bvh,
+                &Nearest::new(*geometry, k),
+                &mut scratch,
+                &mut local,
+            );
             for nb in &local {
                 heap.offer(nb.distance_squared, shard.global[nb.index as usize]);
             }

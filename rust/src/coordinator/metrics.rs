@@ -3,13 +3,23 @@
 //! buffer policy.
 //!
 //! The histograms use power-of-two buckets with lock-free recording
-//! (batcher worker threads record concurrently). The adaptive policy
-//! ([`Metrics::suggest_buffer`]) picks a per-kind
+//! (batcher worker threads record concurrently). One histogram exists
+//! per [`PredicateKind`] — the nearest-to-point/sphere/box lanes and the
+//! first-hit lane record result counts just like the spatial kinds, so
+//! per-kind tail behavior is observable for every wire tag. The adaptive
+//! policy ([`Metrics::suggest_buffer`]) picks a per-kind
 //! `QueryOptions::buffer_size` from a high quantile of the running
 //! histogram, with one bucket of headroom and a hard cap — the
 //! §3.2 hollow-case pathology (a few monster queries must not inflate
 //! every query's slot allocation, and a mis-sized static buffer must not
 //! force mass second-pass fallbacks) is the motivating failure.
+//!
+//! The histograms are *fixed* (never decay): under a non-stationary
+//! workload an upshifted tail is absorbed quickly (the 0.999 quantile
+//! jumps as soon as new-regime samples pass ~0.1% of history) but a
+//! downshift never shrinks the buffer back — see the ROADMAP's "decaying
+//! histograms" item and the pinned regression in
+//! `rust/tests/service_and_distributed.rs`.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;

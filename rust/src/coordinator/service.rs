@@ -4,17 +4,21 @@
 //! Clients submit individual [`QueryPredicate`]s — the *open tagged wire
 //! format*: a kind tag ([`PredicateKind`]) plus a serializable payload,
 //! covering sphere/box/ray regions, attachment queries (payload echoed
-//! back with the results, ArborX's `attach`), k-NN, and first-hit ray
-//! casts (`TAG_FIRST_HIT` on the wire; at most one result, the box-entry
+//! back with the results, ArborX's `attach`), the k-NN family —
+//! nearest-to-point (`TAG_NEAREST`), nearest-to-sphere
+//! (`TAG_NEAREST_SPHERE`), and nearest-to-box (`TAG_NEAREST_BOX`), each
+//! returning squared distances in `distances` — and first-hit ray casts
+//! (`TAG_FIRST_HIT` on the wire; at most one result, the box-entry
 //! parameter returned in `distances`). A coordinator thread coalesces
 //! submissions into batches bounded by `max_batch` and `batch_timeout`,
 //! then **sub-batches each flushed batch by kind**: every kind's queries
 //! are extracted into a typed vector and dispatched *once* onto the
-//! monomorphized engines ([`Bvh::query_spatial`] / [`Bvh::query`] /
-//! [`Bvh::query_first_hit`]), so the per-node hot loop never pays enum
-//! dispatch no matter how mixed the client traffic is (the §2.2
-//! flexible-interface claim, served). [`super::wire`] supplies a
-//! byte-level tag + payload encoding of the same family for
+//! monomorphized engines ([`Bvh::query_spatial`] /
+//! [`Bvh::query_nearest`] / [`Bvh::query_first_hit`]), so the per-node
+//! hot loop never pays enum dispatch no matter how mixed the client
+//! traffic is (the §2.2 flexible-interface claim, served). Every lane
+//! feeds its kind's result-count histogram in [`Metrics`]. [`super::wire`]
+//! supplies a byte-level tag + payload encoding of the same family for
 //! out-of-process clients ([`SearchService::submit_encoded`]).
 //!
 //! The 1P/2P strategy choice is governed by [`BufferPolicy`]. The
@@ -38,9 +42,10 @@ use super::metrics::{Metrics, SubBatchPass};
 use crate::bvh::{Bvh, PredicateKind, QueryOptions, QueryPredicate};
 use crate::exec::ExecSpace;
 use crate::geometry::predicates::{
-    attach, FirstHit, IntersectsBox, IntersectsRay, IntersectsSphere, Spatial, SpatialPredicate,
-    WithData,
+    attach, FirstHit, IntersectsBox, IntersectsRay, IntersectsSphere, Nearest, NearestQuery,
+    Spatial, SpatialPredicate, WithData,
 };
+use crate::geometry::{Aabb, Sphere};
 
 /// How spatial sub-batches choose between the 1P and 2P strategies.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -352,18 +357,61 @@ pub fn execute_sub_batched(
                 echo_payloads(members, &typed, &mut results);
             }
             PredicateKind::Nearest => {
-                // Nearest result sizes are bounded by k up front (§2.2.2);
-                // the 1P/2P distinction does not apply.
-                let typed: Vec<QueryPredicate> =
-                    members.iter().map(|&i| preds[i as usize]).collect();
-                let opts = QueryOptions { buffer_size: None, sort_queries };
-                let out = bvh.query(space, &typed, &opts);
-                let h = metrics.result_histogram(kind);
-                for (j, &i) in members.iter().enumerate() {
-                    h.record((out.offsets[j + 1] - out.offsets[j]) as u64);
-                    results[i as usize].indices = out.results_for(j).to_vec();
-                    results[i as usize].distances = out.distances_for(j).to_vec();
-                }
+                let typed: Vec<Nearest> = members
+                    .iter()
+                    .map(|&i| match &preds[i as usize] {
+                        QueryPredicate::Nearest(n) => *n,
+                        _ => unreachable!("grouped by kind"),
+                    })
+                    .collect();
+                nearest_sub_batch(
+                    bvh,
+                    space,
+                    &typed,
+                    members,
+                    kind,
+                    sort_queries,
+                    metrics,
+                    results,
+                );
+            }
+            PredicateKind::NearestSphere => {
+                let typed: Vec<Nearest<Sphere>> = members
+                    .iter()
+                    .map(|&i| match &preds[i as usize] {
+                        QueryPredicate::NearestSphere(n) => *n,
+                        _ => unreachable!("grouped by kind"),
+                    })
+                    .collect();
+                nearest_sub_batch(
+                    bvh,
+                    space,
+                    &typed,
+                    members,
+                    kind,
+                    sort_queries,
+                    metrics,
+                    results,
+                );
+            }
+            PredicateKind::NearestBox => {
+                let typed: Vec<Nearest<Aabb>> = members
+                    .iter()
+                    .map(|&i| match &preds[i as usize] {
+                        QueryPredicate::NearestBox(n) => *n,
+                        _ => unreachable!("grouped by kind"),
+                    })
+                    .collect();
+                nearest_sub_batch(
+                    bvh,
+                    space,
+                    &typed,
+                    members,
+                    kind,
+                    sort_queries,
+                    metrics,
+                    results,
+                );
             }
             PredicateKind::FirstHit => {
                 // First-hit output is fixed width (at most one result per
@@ -428,6 +476,32 @@ fn spatial_sub_batch<P: SpatialPredicate + Sync>(
     metrics.record_sub_batch(kind, &counts, out.overflow_queries as u64, pass);
     for (j, &i) in members.iter().enumerate() {
         results[i as usize].indices = out.results_for(j).to_vec();
+    }
+}
+
+/// Runs one kind-homogeneous nearest sub-batch on the monomorphized
+/// single-pass CSR engine ([`Bvh::query_nearest`] — result sizes are
+/// bounded by `k` up front, §2.2.2, so the 1P/2P buffer policy does not
+/// apply), records the kind's result-count histogram, and scatters
+/// indices plus squared distances back to caller order. One lane per
+/// nearest geometry (point / sphere / box), one monomorphization each.
+#[allow(clippy::too_many_arguments)]
+fn nearest_sub_batch<Q: NearestQuery + Sync>(
+    bvh: &Bvh,
+    space: &ExecSpace,
+    typed: &[Q],
+    members: &[u32],
+    kind: PredicateKind,
+    sort_queries: bool,
+    metrics: &Metrics,
+    results: &mut [SubBatchResult],
+) {
+    let out = bvh.query_nearest(space, typed, sort_queries);
+    let h = metrics.result_histogram(kind);
+    for (j, &i) in members.iter().enumerate() {
+        h.record((out.offsets[j + 1] - out.offsets[j]) as u64);
+        results[i as usize].indices = out.results_for(j).to_vec();
+        results[i as usize].distances = out.distances_for(j).to_vec();
     }
 }
 
@@ -497,6 +571,23 @@ mod tests {
         let r = svc.query(QueryPredicate::nearest(Point::new(9.2, 0.0, 0.0), 2));
         assert_eq!(r.indices, vec![9, 10]);
         assert_eq!(r.distances.len(), 2);
+        // Nearest-to-geometry lanes: points 9 and 10 lie inside the query
+        // ball, so both are zero-distance ties kept in index order.
+        let r = svc.query(QueryPredicate::nearest_sphere(
+            Sphere::new(Point::new(9.2, 0.0, 0.0), 1.0),
+            2,
+        ));
+        assert_eq!(r.indices, vec![9, 10]);
+        assert_eq!(r.distances, vec![0.0, 0.0]);
+        let r = svc.query(QueryPredicate::nearest_box(
+            Aabb::new(Point::new(2.5, -1.0, -1.0), Point::new(5.5, 1.0, 1.0)),
+            3,
+        ));
+        assert_eq!(r.indices, vec![3, 4, 5]);
+        assert_eq!(r.distances, vec![0.0, 0.0, 0.0]);
+        // The per-kind histograms saw the new lanes.
+        assert_eq!(svc.metrics().result_histogram(PredicateKind::NearestSphere).samples(), 1);
+        assert_eq!(svc.metrics().result_histogram(PredicateKind::NearestBox).samples(), 1);
     }
 
     #[test]

@@ -8,11 +8,13 @@
 //!
 //! | tag | payload |
 //! |-----|---------|
-//! | `TAG_SPHERE`    | center `3xf32`, radius `f32` |
-//! | `TAG_BOX`       | min `3xf32`, max `3xf32` |
-//! | `TAG_RAY`       | origin `3xf32`, direction `3xf32`, `t_max f32` |
-//! | `TAG_NEAREST`   | point `3xf32`, k `u32` |
-//! | `TAG_FIRST_HIT` | origin `3xf32`, direction `3xf32`, `t_max f32` |
+//! | `TAG_SPHERE`         | center `3xf32`, radius `f32` |
+//! | `TAG_BOX`            | min `3xf32`, max `3xf32` |
+//! | `TAG_RAY`            | origin `3xf32`, direction `3xf32`, `t_max f32` |
+//! | `TAG_NEAREST`        | point `3xf32`, k `u32` |
+//! | `TAG_FIRST_HIT`      | origin `3xf32`, direction `3xf32`, `t_max f32` |
+//! | `TAG_NEAREST_SPHERE` | center `3xf32`, radius `f32`, k `u32` |
+//! | `TAG_NEAREST_BOX`    | min `3xf32`, max `3xf32`, k `u32` |
 //! | spatial tag \| `TAG_ATTACH` | spatial payload, then data `u64` |
 //!
 //! Decoding is streaming ([`decode`] returns the bytes consumed), so a
@@ -22,7 +24,9 @@
 //! gate rejects non-finite coordinates everywhere, negative or NaN
 //! sphere radii, inverted boxes (`min > max`), zero- or NaN-direction
 //! rays, negative or NaN `t_max` (`+∞` stays legal — it is the encoding
-//! of an unbounded ray), and `k == 0` or oversized nearest queries.
+//! of an unbounded ray), and `k == 0` or oversized nearest queries (the
+//! nearest-to-sphere and nearest-to-box payloads run both their
+//! geometry's gate and the `k` gate).
 
 use crate::bvh::QueryPredicate;
 use crate::geometry::predicates::{Nearest, Spatial};
@@ -34,10 +38,14 @@ pub const TAG_SPHERE: u8 = 1;
 pub const TAG_BOX: u8 = 2;
 /// Kind tag: ray intersection.
 pub const TAG_RAY: u8 = 3;
-/// Kind tag: k-nearest neighbors.
+/// Kind tag: k-nearest neighbors (around a point).
 pub const TAG_NEAREST: u8 = 4;
 /// Kind tag: first-hit (nearest-intersection) ray cast.
 pub const TAG_FIRST_HIT: u8 = 5;
+/// Kind tag: k-nearest neighbors around a sphere.
+pub const TAG_NEAREST_SPHERE: u8 = 6;
+/// Kind tag: k-nearest neighbors around a box.
+pub const TAG_NEAREST_BOX: u8 = 7;
 /// Attachment flag, OR-ed onto a spatial tag.
 pub const TAG_ATTACH: u8 = 0x80;
 
@@ -54,7 +62,19 @@ pub fn encode(pred: &QueryPredicate, out: &mut Vec<u8>) {
         QueryPredicate::Attach(s, d) => encode_spatial(s, Some(*d), out),
         QueryPredicate::Nearest(n) => {
             out.push(TAG_NEAREST);
-            put_point(out, &n.point);
+            put_point(out, &n.geometry);
+            out.extend_from_slice(&(n.k as u32).to_le_bytes());
+        }
+        QueryPredicate::NearestSphere(n) => {
+            out.push(TAG_NEAREST_SPHERE);
+            put_point(out, &n.geometry.center);
+            put_f32(out, n.geometry.radius);
+            out.extend_from_slice(&(n.k as u32).to_le_bytes());
+        }
+        QueryPredicate::NearestBox(n) => {
+            out.push(TAG_NEAREST_BOX);
+            put_point(out, &n.geometry.min);
+            put_point(out, &n.geometry.max);
             out.extend_from_slice(&(n.k as u32).to_le_bytes());
         }
         QueryPredicate::FirstHit(r) => {
@@ -106,6 +126,13 @@ fn finite(p: &Point) -> bool {
     p[0].is_finite() && p[1].is_finite() && p[2].is_finite()
 }
 
+/// The nearest-family `k` gate: non-zero and small enough that the
+/// up-front heap reservation stays bounded ([`MAX_NEAREST_K`]).
+#[inline]
+fn valid_k(k: u32) -> bool {
+    k != 0 && k <= MAX_NEAREST_K
+}
+
 /// Rays must have a finite origin, a finite non-zero direction, and a
 /// non-negative extent. `t_max >= 0.0` is false for NaN and true for
 /// `+∞`, so unbounded rays stay legal and NaN extents do not.
@@ -153,11 +180,31 @@ pub fn decode(bytes: &[u8]) -> Option<(QueryPredicate, usize)> {
         TAG_NEAREST if !attached => {
             let point = cur.point()?;
             let k = cur.u32()?;
-            if !finite(&point) || k == 0 || k > MAX_NEAREST_K {
+            if !finite(&point) || !valid_k(k) {
                 return None;
             }
             let nearest = Nearest::new(point, k as usize);
             return Some((QueryPredicate::Nearest(nearest), cur.pos));
+        }
+        TAG_NEAREST_SPHERE if !attached => {
+            let center = cur.point()?;
+            let radius = cur.f32()?;
+            let k = cur.u32()?;
+            if !finite(&center) || !radius.is_finite() || radius < 0.0 || !valid_k(k) {
+                return None;
+            }
+            let nearest = Nearest::new(Sphere::new(center, radius), k as usize);
+            return Some((QueryPredicate::NearestSphere(nearest), cur.pos));
+        }
+        TAG_NEAREST_BOX if !attached => {
+            let min = cur.point()?;
+            let max = cur.point()?;
+            let k = cur.u32()?;
+            if !finite(&min) || !finite(&max) || (0..3).any(|d| min[d] > max[d]) || !valid_k(k) {
+                return None;
+            }
+            let nearest = Nearest::new(Aabb::new(min, max), k as usize);
+            return Some((QueryPredicate::NearestBox(nearest), cur.pos));
         }
         TAG_FIRST_HIT if !attached => {
             let origin = cur.point()?;
@@ -255,6 +302,10 @@ mod tests {
             QueryPredicate::attach(Spatial::IntersectsRay(ray), u64::MAX),
             QueryPredicate::attach(Spatial::IntersectsBox(Aabb::from_point(Point::origin())), 9),
             QueryPredicate::nearest(Point::new(-3.0, 0.0, 1.5), 17),
+            QueryPredicate::nearest_sphere(Sphere::new(Point::new(0.5, -1.0, 2.0), 3.25), 9),
+            QueryPredicate::nearest_sphere(Sphere::new(Point::origin(), 0.0), 1),
+            QueryPredicate::nearest_box(Aabb::new(Point::splat(-1.0), Point::splat(4.0)), 12),
+            QueryPredicate::nearest_box(Aabb::from_point(Point::splat(2.0)), 3),
             QueryPredicate::first_hit(ray),
             QueryPredicate::first_hit(segment),
         ]
@@ -297,6 +348,14 @@ mod tests {
         assert!(
             decode(&[TAG_FIRST_HIT | TAG_ATTACH, 0, 0, 0, 0]).is_none(),
             "attached first-hit"
+        );
+        assert!(
+            decode(&[TAG_NEAREST_SPHERE | TAG_ATTACH, 0, 0, 0, 0]).is_none(),
+            "attached nearest-sphere"
+        );
+        assert!(
+            decode(&[TAG_NEAREST_BOX | TAG_ATTACH, 0, 0, 0, 0]).is_none(),
+            "attached nearest-box"
         );
         let mut bytes = Vec::new();
         encode(&family()[0], &mut bytes);
@@ -360,16 +419,64 @@ mod tests {
             ("negative-t_max first-hit", QueryPredicate::first_hit(Ray::segment(o, x, -1.0))),
             ("k == 0 nearest", QueryPredicate::nearest(o, 0)),
             ("NaN nearest point", QueryPredicate::nearest(Point::new(0.0, 0.0, f32::NAN), 3)),
+            (
+                "k == 0 nearest-sphere",
+                QueryPredicate::nearest_sphere(Sphere::new(o, 1.0), 0),
+            ),
+            (
+                "negative-radius nearest-sphere",
+                QueryPredicate::nearest_sphere(Sphere::new(o, -1.0), 3),
+            ),
+            (
+                "NaN-radius nearest-sphere",
+                QueryPredicate::nearest_sphere(Sphere::new(o, f32::NAN), 3),
+            ),
+            (
+                "NaN-center nearest-sphere",
+                QueryPredicate::nearest_sphere(Sphere::new(Point::new(f32::NAN, 0.0, 0.0), 1.0), 3),
+            ),
+            (
+                "infinite-center nearest-sphere",
+                QueryPredicate::nearest_sphere(
+                    Sphere::new(Point::splat(f32::INFINITY), 1.0),
+                    3,
+                ),
+            ),
+            (
+                "k == 0 nearest-box",
+                QueryPredicate::nearest_box(Aabb::new(o, Point::splat(1.0)), 0),
+            ),
+            (
+                "inverted nearest-box",
+                QueryPredicate::nearest_box(Aabb::new(Point::splat(1.0), Point::splat(-1.0)), 3),
+            ),
+            (
+                "NaN-corner nearest-box",
+                QueryPredicate::nearest_box(
+                    Aabb::new(Point::new(0.0, f32::NAN, 0.0), Point::splat(1.0)),
+                    3,
+                ),
+            ),
+            (
+                "infinite-corner nearest-box",
+                QueryPredicate::nearest_box(
+                    Aabb::new(o, Point::new(1.0, f32::INFINITY, 1.0)),
+                    3,
+                ),
+            ),
         ];
         for (label, pred) in bad {
             assert!(decode(&encoded(&pred)).is_none(), "{label} must be rejected");
         }
         // Degenerate-but-legal edges: a zero-radius sphere, a zero-extent
-        // box, and an unbounded (+inf) ray all stay accepted.
+        // box, an unbounded (+inf) ray, and their nearest twins all stay
+        // accepted.
         for pred in [
             QueryPredicate::intersects_sphere(o, 0.0),
             QueryPredicate::intersects_box(Aabb::from_point(o)),
             QueryPredicate::first_hit(Ray::new(o, x)),
+            QueryPredicate::nearest_sphere(Sphere::new(o, 0.0), 1),
+            QueryPredicate::nearest_box(Aabb::from_point(o), 1),
         ] {
             assert!(decode(&encoded(&pred)).is_some(), "{pred:?} must stay legal");
         }
@@ -397,6 +504,19 @@ mod tests {
         bytes.truncate(bytes.len() - 4);
         bytes.extend_from_slice(&u32::MAX.to_le_bytes());
         assert!(decode(&bytes).is_none(), "u32::MAX k is malformed");
+        // The nearest-to-geometry tags share the same k gate.
+        for pred in [
+            QueryPredicate::nearest_sphere(
+                Sphere::new(Point::origin(), 1.0),
+                MAX_NEAREST_K as usize + 1,
+            ),
+            QueryPredicate::nearest_box(
+                Aabb::new(Point::origin(), Point::splat(1.0)),
+                MAX_NEAREST_K as usize + 1,
+            ),
+        ] {
+            assert!(decode(&encoded(&pred)).is_none(), "{pred:?} beyond the cap");
+        }
     }
 
     #[test]

@@ -138,6 +138,24 @@ impl Aabb {
         self.distance_squared(p).sqrt()
     }
 
+    /// Squared distance between two boxes (0 when they overlap or touch):
+    /// the sum of the squared per-axis gaps. This is the exact set
+    /// distance between the boxes, and — because a parent box's gaps
+    /// never exceed a contained child's — also the lower bound the
+    /// nearest-to-box traversal prunes with
+    /// ([`crate::geometry::predicates::DistanceTo`]).
+    #[inline]
+    pub fn distance_squared_box(&self, other: &Aabb) -> f32 {
+        let mut d2 = 0.0f32;
+        for i in 0..3 {
+            let gap = (other.min[i] - self.max[i])
+                .max(self.min[i] - other.max[i])
+                .max(0.0);
+            d2 += gap * gap;
+        }
+        d2
+    }
+
     /// Surface area of the box; used by the SAH quality metric in
     /// [`crate::bvh::stats`].
     #[inline]
@@ -214,6 +232,29 @@ mod tests {
         // Degenerate (point) box behaves like a point.
         let p = Aabb::from_point(Point::new(1.0, 1.0, 1.0));
         assert_eq!(p.distance_squared(&Point::origin()), 3.0);
+    }
+
+    #[test]
+    fn box_to_box_distance_is_squared_and_zero_on_overlap() {
+        let a = Aabb::new(Point::origin(), Point::splat(1.0));
+        // Overlapping boxes are at (squared) distance zero — the
+        // convention pin of the k-NN metric seam.
+        let overlap = Aabb::new(Point::splat(0.5), Point::splat(2.0));
+        assert_eq!(a.distance_squared_box(&overlap), 0.0);
+        assert_eq!(overlap.distance_squared_box(&a), 0.0);
+        // A contained box is also at distance zero.
+        let inner = Aabb::new(Point::splat(0.25), Point::splat(0.75));
+        assert_eq!(a.distance_squared_box(&inner), 0.0);
+        // Touching boxes (shared face) are at distance zero.
+        let touching = Aabb::new(Point::new(1.0, 0.0, 0.0), Point::new(2.0, 1.0, 1.0));
+        assert_eq!(a.distance_squared_box(&touching), 0.0);
+        // Separated along x by 2 and y by 3: squared distance 4 + 9.
+        let far = Aabb::new(Point::new(3.0, 4.0, 0.0), Point::new(4.0, 5.0, 1.0));
+        assert_eq!(a.distance_squared_box(&far), 4.0 + 9.0);
+        assert_eq!(far.distance_squared_box(&a), 4.0 + 9.0);
+        // Degenerate (point) boxes reduce to the point distance.
+        let p = Aabb::from_point(Point::new(2.0, 3.0, 0.5));
+        assert_eq!(a.distance_squared_box(&p), a.distance_squared(&Point::new(2.0, 3.0, 0.5)));
     }
 
     #[test]

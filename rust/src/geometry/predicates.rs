@@ -20,6 +20,13 @@
 //! dispatching *once per query* to the concrete kinds above. The service
 //! additionally sub-batches by kind tag so whole batches execute on the
 //! monomorphized engines (see [`crate::coordinator::service`]).
+//!
+//! The k-NN path has its own seam: [`DistanceTo`] supplies the
+//! distance-lower-bound primitive (§2.2.2) the nearest traversals prune
+//! with, implemented for [`Point`], [`Sphere`], and [`Aabb`] query
+//! geometries, and [`NearestQuery`] / [`Nearest`] are generic over it —
+//! nearest-to-geometry queries run through every layer the point path
+//! owns. All distances are *squared* (see the [`DistanceTo`] docs).
 
 use super::{Aabb, Point, Ray, Sphere};
 
@@ -166,38 +173,118 @@ impl SpatialPredicate for Spatial {
     }
 }
 
-/// A nearest query: what point are the `k` closest objects sought around?
-/// The trait twin of [`SpatialPredicate`] for the k-NN traversals, so
-/// attachments ([`WithData`]) work for nearest queries too.
+/// The distance-to-geometry seam of the k-NN path (paper §2.2.2): the
+/// ordered nearest traversal is built on one primitive — a cheap lower
+/// bound on the distance from the query geometry to an AABB — plus the
+/// exact distance at the leaves. ArborX 2.0 supports nearest-to-geometry
+/// queries; implementing this trait for a geometry opens every k-NN
+/// entry point (stack/pq traversals, the batched engine, the service
+/// lanes, the distributed rank walk) to it.
+///
+/// **Metric convention: every distance is *squared* Euclidean set
+/// distance, `0.0` when the geometry and the box touch or overlap.**
+/// The [`crate::bvh::nearest::KnnHeap`] bound, the
+/// [`crate::bvh::nearest::Neighbor::distance_squared`] results, and the
+/// wire-format `distances` all share this one convention — mixing a
+/// squared point metric with unsquared sphere/box metrics would silently
+/// corrupt the pruning bound and the (distance, index) tie-break.
+pub trait DistanceTo {
+    /// Lower bound on the squared distance from the query geometry to any
+    /// point of `bbox`. Must be monotone under containment: for every box
+    /// `c` contained in `b`, `lower_bound(b) <= lower_bound(c)` — this is
+    /// what makes subtree pruning sound.
+    fn lower_bound(&self, bbox: &Aabb) -> f32;
+
+    /// Exact squared distance from the query geometry to a leaf box. For
+    /// the shipped geometries (point, sphere, box) the box lower bound is
+    /// already exact, which the default reflects; a geometry with a loose
+    /// box bound (e.g. a triangle) overrides this.
+    #[inline]
+    fn distance_squared(&self, bbox: &Aabb) -> f32 {
+        self.lower_bound(bbox)
+    }
+
+    /// A representative point of the geometry, used for Morton-code query
+    /// ordering (§2.2.3) and distributed rank forwarding.
+    fn origin(&self) -> Point;
+}
+
+impl DistanceTo for Point {
+    #[inline]
+    fn lower_bound(&self, bbox: &Aabb) -> f32 {
+        bbox.distance_squared(self)
+    }
+
+    #[inline]
+    fn origin(&self) -> Point {
+        *self
+    }
+}
+
+impl DistanceTo for Sphere {
+    #[inline]
+    fn lower_bound(&self, bbox: &Aabb) -> f32 {
+        self.distance_squared_box(bbox)
+    }
+
+    #[inline]
+    fn origin(&self) -> Point {
+        self.center
+    }
+}
+
+impl DistanceTo for Aabb {
+    #[inline]
+    fn lower_bound(&self, bbox: &Aabb) -> f32 {
+        self.distance_squared_box(bbox)
+    }
+
+    #[inline]
+    fn origin(&self) -> Point {
+        self.centroid()
+    }
+}
+
+/// A nearest query: what geometry are the `k` closest objects sought
+/// around? The trait twin of [`SpatialPredicate`] for the k-NN
+/// traversals, generic over the query geometry through [`DistanceTo`],
+/// so attachments ([`WithData`]) work for nearest queries too.
 pub trait NearestQuery {
-    /// Query location.
-    fn point(&self) -> Point;
+    /// The query geometry (point, sphere, box, or user-defined).
+    type Geometry: DistanceTo;
+
+    /// The geometry the `k` closest objects are sought around.
+    fn geometry(&self) -> &Self::Geometry;
 
     /// Number of neighbors requested.
     fn k(&self) -> usize;
 }
 
-/// A nearest predicate: the `k` closest objects to `point`.
+/// A nearest predicate: the `k` closest objects to `geometry` (a
+/// [`Point`] by default; any [`DistanceTo`] geometry works — the crate
+/// ships [`Sphere`] and [`Aabb`] alongside).
 #[derive(Clone, Copy, Debug, PartialEq)]
-pub struct Nearest {
-    /// Query location.
-    pub point: Point,
+pub struct Nearest<G = Point> {
+    /// The query geometry.
+    pub geometry: G,
     /// Number of neighbors requested.
     pub k: usize,
 }
 
-impl Nearest {
-    /// Creates a k-NN predicate around `point`.
+impl<G> Nearest<G> {
+    /// Creates a k-NN predicate around `geometry`.
     #[inline]
-    pub const fn new(point: Point, k: usize) -> Nearest {
-        Nearest { point, k }
+    pub const fn new(geometry: G, k: usize) -> Nearest<G> {
+        Nearest { geometry, k }
     }
 }
 
-impl NearestQuery for Nearest {
+impl<G: DistanceTo> NearestQuery for Nearest<G> {
+    type Geometry = G;
+
     #[inline]
-    fn point(&self) -> Point {
-        self.point
+    fn geometry(&self) -> &G {
+        &self.geometry
     }
 
     #[inline]
@@ -207,9 +294,11 @@ impl NearestQuery for Nearest {
 }
 
 impl<Q: NearestQuery, T> NearestQuery for WithData<Q, T> {
+    type Geometry = Q::Geometry;
+
     #[inline]
-    fn point(&self) -> Point {
-        self.pred.point()
+    fn geometry(&self) -> &Q::Geometry {
+        self.pred.geometry()
     }
 
     #[inline]
@@ -311,11 +400,58 @@ mod tests {
         assert!(p.test(&unit));
         assert_eq!(p.data, 42);
         assert_eq!(p.origin(), Point::splat(0.5));
-        // Nearest attachments expose the inner point/k.
+        // Nearest attachments expose the inner geometry/k.
         let nq = attach(Nearest::new(Point::splat(1.0), 7), "label");
-        assert_eq!(nq.point(), Point::splat(1.0));
+        assert_eq!(*nq.geometry(), Point::splat(1.0));
         assert_eq!(nq.k(), 7);
         assert_eq!(nq.data, "label");
+    }
+
+    #[test]
+    fn distance_to_shares_one_squared_convention() {
+        let unit = Aabb::new(Point::origin(), Point::splat(1.0));
+        // Point: squared point-to-box distance. (`Point` and `Aabb` keep
+        // inherent `distance_squared` methods with other signatures, so
+        // the trait's exact-leaf method is called via UFCS here — generic
+        // code, which is all the traversals are, never hits the clash.)
+        let p = Point::new(3.0, 0.5, 0.5);
+        assert_eq!(p.lower_bound(&unit), 4.0);
+        assert_eq!(DistanceTo::distance_squared(&p, &unit), 4.0);
+        assert_eq!(Point::splat(0.5).lower_bound(&unit), 0.0);
+        // Sphere inside the box: distance zero (the convention pin).
+        let inside = Sphere::new(Point::splat(0.5), 0.1);
+        assert_eq!(inside.lower_bound(&unit), 0.0);
+        assert_eq!(inside.distance_squared(&unit), 0.0);
+        // Sphere surface 2 short of the box along x: squared gap 4.
+        let s = Sphere::new(Point::new(4.0, 0.5, 0.5), 1.0);
+        assert_eq!(s.lower_bound(&unit), 4.0);
+        // Overlapping boxes: distance zero (the convention pin).
+        let q = Aabb::new(Point::splat(0.5), Point::splat(3.0));
+        assert_eq!(q.lower_bound(&unit), 0.0);
+        assert_eq!(DistanceTo::distance_squared(&q, &unit), 0.0);
+        // Separated boxes: squared per-axis gap sum.
+        let far = Aabb::new(Point::new(3.0, 0.0, 0.0), Point::new(4.0, 1.0, 1.0));
+        assert_eq!(far.lower_bound(&unit), 4.0);
+        // Origins: point itself, sphere center, box centroid.
+        assert_eq!(p.origin(), p);
+        assert_eq!(s.origin(), s.center);
+        assert_eq!(far.origin(), Point::new(3.5, 0.5, 0.5));
+    }
+
+    #[test]
+    fn lower_bound_is_monotone_under_containment() {
+        // The soundness contract of the seam: a parent box never reports
+        // a larger bound than a box it contains.
+        let child = Aabb::new(Point::splat(2.0), Point::splat(3.0));
+        let parent = Aabb::new(Point::splat(1.0), Point::splat(5.0));
+        let queries: (Point, Sphere, Aabb) = (
+            Point::new(-1.0, 0.0, 0.5),
+            Sphere::new(Point::new(-1.0, 0.0, 0.5), 0.75),
+            Aabb::new(Point::new(-2.0, -1.0, 0.0), Point::new(-1.0, 0.5, 1.0)),
+        );
+        assert!(queries.0.lower_bound(&parent) <= queries.0.lower_bound(&child));
+        assert!(queries.1.lower_bound(&parent) <= queries.1.lower_bound(&child));
+        assert!(queries.2.lower_bound(&parent) <= queries.2.lower_bound(&child));
     }
 
     #[test]

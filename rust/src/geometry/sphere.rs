@@ -39,6 +39,25 @@ impl Sphere {
         let r = Point::splat(self.radius);
         Aabb::new(self.center - r, self.center + r)
     }
+
+    /// Squared distance from the sphere (as a solid ball) to the box: 0
+    /// when they intersect, else the squared Euclidean gap between the
+    /// sphere surface and the box — `max(0, dist(center, box) - radius)²`.
+    /// Exact, and monotone under box containment, so it doubles as the
+    /// traversal lower bound of
+    /// [`crate::geometry::predicates::DistanceTo`]. The overlap test runs
+    /// on squared distances, so the `sqrt` is only paid for boxes the
+    /// ball does not reach (in a k-NN descent, the minority).
+    #[inline]
+    pub fn distance_squared_box(&self, b: &Aabb) -> f32 {
+        let d2 = b.distance_squared(&self.center);
+        if d2 <= self.radius * self.radius {
+            0.0
+        } else {
+            let gap = d2.sqrt() - self.radius;
+            gap * gap
+        }
+    }
 }
 
 #[cfg(test)]
@@ -60,6 +79,23 @@ mod tests {
         let s = Sphere::new(Point::origin(), 1.0);
         assert!(s.contains_point(&Point::new(1.0, 0.0, 0.0)));
         assert!(!s.contains_point(&Point::new(1.0001, 0.0, 0.0)));
+    }
+
+    #[test]
+    fn sphere_to_box_distance_is_squared_and_zero_inside() {
+        let b = Aabb::new(Point::origin(), Point::splat(2.0));
+        // A sphere whose center lies inside the box is at distance zero —
+        // the convention pin of the k-NN metric seam (even a zero-radius
+        // sphere: the center itself is a point of the box).
+        assert_eq!(Sphere::new(Point::splat(1.0), 0.0).distance_squared_box(&b), 0.0);
+        assert_eq!(Sphere::new(Point::splat(1.0), 5.0).distance_squared_box(&b), 0.0);
+        // Center outside but surface reaching the box: still zero.
+        assert_eq!(Sphere::new(Point::new(4.0, 1.0, 1.0), 2.0).distance_squared_box(&b), 0.0);
+        // Surface 1 short of the box: squared gap is 1.
+        assert_eq!(Sphere::new(Point::new(5.0, 1.0, 1.0), 2.0).distance_squared_box(&b), 1.0);
+        // Zero-radius sphere degenerates to the point distance (squared).
+        let p = Point::new(5.0, 1.0, 1.0);
+        assert_eq!(Sphere::new(p, 0.0).distance_squared_box(&b), b.distance_squared(&p));
     }
 
     #[test]

@@ -25,7 +25,9 @@
 //!   the predicate traits (monomorphized hot loops);
 //!   [`bvh::Bvh::query_with_callback`] streams matches to a callback
 //!   with no CSR materialization, [`bvh::Bvh::query_first_hit`] returns
-//!   fixed-width `Option<RayHit>` results.
+//!   fixed-width `Option<RayHit>` results, and
+//!   [`bvh::Bvh::query_nearest`] runs k-NN batches around any
+//!   [`geometry::predicates::DistanceTo`] geometry (point, sphere, box).
 //! * [`baselines`] — the comparison libraries of the paper's evaluation,
 //!   re-implemented: a nanoflann-style k-d tree, a Boost-style STR-packed
 //!   R-tree, and a brute-force oracle.
@@ -89,8 +91,8 @@ pub mod prelude {
     pub use crate::data::shapes::{PointCloud, Shape};
     pub use crate::exec::ExecSpace;
     pub use crate::geometry::predicates::{
-        attach, FirstHit, FirstHitQuery, IntersectsBox, IntersectsRay, IntersectsSphere, Nearest,
-        NearestQuery, Spatial, SpatialPredicate, WithData,
+        attach, DistanceTo, FirstHit, FirstHitQuery, IntersectsBox, IntersectsRay,
+        IntersectsSphere, Nearest, NearestQuery, Spatial, SpatialPredicate, WithData,
     };
     pub use crate::geometry::{Aabb, Point, Ray, Sphere, Triangle};
 }

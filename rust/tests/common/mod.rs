@@ -1,0 +1,191 @@
+//! The shared differential-test harness.
+//!
+//! Every differential suite in `rust/tests/` used to hand-roll the same
+//! scaffolding: the builder × exec-space engine grid, deterministic
+//! scene/cloud generators, oracle plumbing, and result-sorting helpers.
+//! They live here once now — `predicate_differential`,
+//! `first_hit_differential`, `service_and_distributed`, `wire_fuzz`, and
+//! `nearest_geometry_differential` all `mod common;` this file.
+//!
+//! Each integration test compiles as its own crate, so any one suite
+//! only uses a subset of these helpers; the `dead_code` allow keeps the
+//! unused remainder warning-free per crate.
+#![allow(dead_code)]
+
+use arbor::baselines::brute::BruteForce;
+use arbor::bvh::nearest::Neighbor;
+use arbor::bvh::{Bvh, QueryOutput, QueryPredicate};
+use arbor::data::rng::Rng;
+use arbor::data::shapes::{PointCloud, Shape};
+use arbor::exec::ExecSpace;
+use arbor::geometry::predicates::{FirstHit, Spatial};
+use arbor::geometry::{Aabb, Point, Ray, Sphere};
+
+/// The two workload shapes every differential suite sweeps: balanced
+/// (filled) and imbalanced (hollow) per-query work.
+pub const SHAPES: [Shape; 2] = [Shape::FilledCube, Shape::HollowCube];
+
+/// The builder × exec-space engine grid: every suite checks Karras and
+/// Apetrei construction under serial and threaded execution. The label
+/// names the combination for assertion messages.
+pub fn engines(boxes: &[Aabb]) -> Vec<(String, Bvh, ExecSpace)> {
+    let mut out = Vec::new();
+    for (space_name, space) in [("serial", ExecSpace::serial()), ("mt", ExecSpace::with_threads(4))]
+    {
+        out.push((
+            format!("karras/{space_name}"),
+            Bvh::build(&space, boxes),
+            space.clone(),
+        ));
+        out.push((
+            format!("apetrei/{space_name}"),
+            Bvh::build_apetrei(&space, boxes),
+            space.clone(),
+        ));
+    }
+    out
+}
+
+/// A deterministic cloud plus its boxes and brute-force oracle — the
+/// standard scene of the differential suites.
+pub fn scene(shape: Shape, n: usize, seed: u64) -> (PointCloud, Vec<Aabb>, BruteForce) {
+    let cloud = PointCloud::generate(shape, n, seed);
+    let boxes = cloud.boxes();
+    let brute = BruteForce::new(&boxes);
+    (cloud, boxes, brute)
+}
+
+/// Finite-extent boxes around the cloud points: random (non-axis) rays
+/// and geometry queries genuinely overlap these, unlike the measure-zero
+/// point boxes.
+pub fn inflate(cloud: &PointCloud, half: f32) -> Vec<Aabb> {
+    cloud
+        .points
+        .iter()
+        .map(|p| Aabb::new(*p - Point::splat(half), *p + Point::splat(half)))
+        .collect()
+}
+
+/// A uniform point in `[-scale, scale]^3`.
+pub fn random_point(rng: &mut Rng, scale: f32) -> Point {
+    Point::new(
+        rng.uniform(-scale, scale),
+        rng.uniform(-scale, scale),
+        rng.uniform(-scale, scale),
+    )
+}
+
+/// Sorts a result row for unordered (spatial) comparisons.
+pub fn sorted(mut v: Vec<u32>) -> Vec<u32> {
+    v.sort();
+    v
+}
+
+/// Zips parallel index/squared-distance rows back into `Neighbor`s, for
+/// full index-level equality against a k-NN oracle.
+pub fn neighbors_from(indices: &[u32], distances: &[f32]) -> Vec<Neighbor> {
+    indices
+        .iter()
+        .zip(distances)
+        .map(|(&index, &distance_squared)| Neighbor { distance_squared, index })
+        .collect()
+}
+
+/// [`neighbors_from`] for query `qi`'s CSR row of a batched output.
+pub fn neighbors_for(out: &QueryOutput, qi: usize) -> Vec<Neighbor> {
+    neighbors_from(out.results_for(qi), out.distances_for(qi))
+}
+
+/// Random rays and segments plus axis-parallel rays aimed exactly at
+/// existing (zero-extent) points, so both hit-rich and grazing cases are
+/// always present.
+pub fn ray_set(cloud: &PointCloud, seed: u64) -> Vec<FirstHit> {
+    let mut rng = Rng::new(seed);
+    let mut rays = Vec::new();
+    for _ in 0..40 {
+        let origin = random_point(&mut rng, 2.0 * cloud.a);
+        let dir = Point::new(
+            rng.uniform(-1.0, 1.0),
+            rng.uniform(-1.0, 1.0),
+            rng.uniform(-1.0, 1.0),
+        );
+        if dir.norm() < 1e-3 {
+            continue;
+        }
+        if rays.len() % 2 == 0 {
+            rays.push(FirstHit(Ray::new(origin, dir)));
+        } else {
+            rays.push(FirstHit(Ray::segment(origin, dir, rng.uniform(0.5, 4.0))));
+        }
+    }
+    // Axis rays straight through existing points: the direction has exact
+    // zero components, so the slab test is exact along the other axes and
+    // the targeted zero-extent leaf box is a guaranteed hit.
+    for i in (0..cloud.points.len()).step_by(101) {
+        let p = cloud.points[i];
+        rays.push(FirstHit(Ray::new(
+            Point::new(p[0], p[1], p[2] - 2.0 * cloud.a),
+            Point::new(0.0, 0.0, 1.0),
+        )));
+    }
+    rays
+}
+
+/// One random well-formed predicate of any wire kind, for round-trip and
+/// service fuzzing. `scale` bounds the coordinates; every kind tag is
+/// reachable.
+pub fn random_predicate(rng: &mut Rng, scale: f32) -> QueryPredicate {
+    let center = random_point(rng, scale);
+    match rng.below(10) {
+        0 => QueryPredicate::intersects_sphere(center, rng.uniform(0.0, scale)),
+        1 => QueryPredicate::intersects_box(random_box(rng, center, scale)),
+        2 => QueryPredicate::intersects_ray(random_ray(rng, center)),
+        3 => QueryPredicate::attach(
+            Spatial::IntersectsSphere(Sphere::new(center, rng.uniform(0.0, scale))),
+            rng.next_u64(),
+        ),
+        4 => QueryPredicate::attach(
+            Spatial::IntersectsBox(random_box(rng, center, scale)),
+            rng.next_u64(),
+        ),
+        5 => QueryPredicate::attach(
+            Spatial::IntersectsRay(random_ray(rng, center)),
+            rng.next_u64(),
+        ),
+        6 => QueryPredicate::nearest(center, 1 + rng.below(32)),
+        7 => QueryPredicate::nearest_sphere(
+            Sphere::new(center, rng.uniform(0.0, scale)),
+            1 + rng.below(32),
+        ),
+        8 => QueryPredicate::nearest_box(random_box(rng, center, scale), 1 + rng.below(32)),
+        _ => QueryPredicate::first_hit(random_ray(rng, center)),
+    }
+}
+
+/// A random well-formed (possibly zero-extent) box around `center`.
+fn random_box(rng: &mut Rng, center: Point, scale: f32) -> Aabb {
+    let half = Point::new(
+        rng.uniform(0.0, scale),
+        rng.uniform(0.0, scale),
+        rng.uniform(0.0, scale),
+    );
+    Aabb::new(center - half, center + half)
+}
+
+/// A random ray from `origin`: unbounded or a finite segment, never
+/// zero-direction.
+fn random_ray(rng: &mut Rng, origin: Point) -> Ray {
+    let mut dir = Point::new(
+        rng.uniform(-1.0, 1.0),
+        rng.uniform(-1.0, 1.0),
+        rng.uniform(-1.0, 1.0),
+    );
+    if dir.norm() < 1e-3 {
+        dir = Point::new(1.0, 0.0, 0.0);
+    }
+    if rng.below(2) == 0 {
+        Ray::new(origin, dir)
+    } else {
+        Ray::segment(origin, dir, rng.uniform(0.1, 10.0))
+    }
+}

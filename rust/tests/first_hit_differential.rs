@@ -11,6 +11,8 @@
 //! acceptance: ordered descent must examine strictly fewer internal
 //! nodes than the all-hits traversal it replaces.
 
+mod common;
+
 use std::sync::Arc;
 
 use arbor::baselines::brute::BruteForce;
@@ -26,75 +28,7 @@ use arbor::exec::ExecSpace;
 use arbor::geometry::predicates::{FirstHit, IntersectsRay};
 use arbor::geometry::{Aabb, Point, Ray};
 
-const SHAPES: [Shape; 2] = [Shape::FilledCube, Shape::HollowCube];
-
-/// Every (builder, space) engine combination under test.
-fn engines(boxes: &[Aabb]) -> Vec<(String, Bvh, ExecSpace)> {
-    let mut out = Vec::new();
-    for (space_name, space) in [("serial", ExecSpace::serial()), ("mt", ExecSpace::with_threads(4))]
-    {
-        out.push((
-            format!("karras/{space_name}"),
-            Bvh::build(&space, boxes),
-            space.clone(),
-        ));
-        out.push((
-            format!("apetrei/{space_name}"),
-            Bvh::build_apetrei(&space, boxes),
-            space.clone(),
-        ));
-    }
-    out
-}
-
-/// Finite-extent boxes around the cloud points: random (non-axis) rays
-/// can genuinely hit these, unlike the measure-zero point boxes.
-fn inflate(cloud: &PointCloud, half: f32) -> Vec<Aabb> {
-    cloud
-        .points
-        .iter()
-        .map(|p| Aabb::new(*p - Point::splat(half), *p + Point::splat(half)))
-        .collect()
-}
-
-/// Random rays and segments plus axis-parallel rays aimed exactly at
-/// existing (zero-extent) points, so both hit-rich and grazing cases are
-/// always present.
-fn ray_set(cloud: &PointCloud, seed: u64) -> Vec<FirstHit> {
-    let mut rng = Rng::new(seed);
-    let mut rays = Vec::new();
-    for _ in 0..40 {
-        let origin = Point::new(
-            rng.uniform(-2.0 * cloud.a, 2.0 * cloud.a),
-            rng.uniform(-2.0 * cloud.a, 2.0 * cloud.a),
-            rng.uniform(-2.0 * cloud.a, 2.0 * cloud.a),
-        );
-        let dir = Point::new(
-            rng.uniform(-1.0, 1.0),
-            rng.uniform(-1.0, 1.0),
-            rng.uniform(-1.0, 1.0),
-        );
-        if dir.norm() < 1e-3 {
-            continue;
-        }
-        if rays.len() % 2 == 0 {
-            rays.push(FirstHit(Ray::new(origin, dir)));
-        } else {
-            rays.push(FirstHit(Ray::segment(origin, dir, rng.uniform(0.5, 4.0))));
-        }
-    }
-    // Axis rays straight through existing points: the direction has exact
-    // zero components, so the slab test is exact along the other axes and
-    // the targeted zero-extent leaf box is a guaranteed hit.
-    for i in (0..cloud.points.len()).step_by(101) {
-        let p = cloud.points[i];
-        rays.push(FirstHit(Ray::new(
-            Point::new(p[0], p[1], p[2] - 2.0 * cloud.a),
-            Point::new(0.0, 0.0, 1.0),
-        )));
-    }
-    rays
-}
+use common::{engines, inflate, ray_set, SHAPES};
 
 #[test]
 fn first_hit_matches_brute_force_everywhere() {

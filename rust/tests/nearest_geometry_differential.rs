@@ -1,0 +1,291 @@
+//! Differential tests for the nearest-to-geometry (k-NN) subsystem.
+//!
+//! The brute-force oracle (`BruteForce::nearest_to`, scoring every box
+//! with the exact squared `DistanceTo` leaf metric and the shared
+//! (distance, index) tie-break) is compared against every entry point
+//! the query family owns — the stack and priority-queue traversals, the
+//! Morton-ordered batched engine (`Bvh::query_nearest`, sorted and
+//! unsorted), the CSR facade (2P and tight 1P), the service wire path
+//! (byte-encoded `TAG_NEAREST`/`TAG_NEAREST_SPHERE`/`TAG_NEAREST_BOX`
+//! submissions), and the distributed bound-ordered rank walk — for
+//! point, sphere, and box query geometries over the shared harness's
+//! Karras + Apetrei × serial + threaded engine grid. Every comparison is
+//! full `Neighbor` (index-level) equality, so distance-tie determinism
+//! is part of the contract; coincident-center and query-contains-leaf
+//! degenerate cases are pinned explicitly.
+
+mod common;
+
+use std::sync::Arc;
+
+use arbor::baselines::brute::BruteForce;
+use arbor::bvh::nearest::{nearest_pq, nearest_stack, NearestScratch, Neighbor};
+use arbor::bvh::{Bvh, QueryOptions, QueryPredicate};
+use arbor::coordinator::distributed::{DistributedTree, Partition};
+use arbor::coordinator::service::{SearchService, ServiceConfig};
+use arbor::coordinator::wire;
+use arbor::data::rng::Rng;
+use arbor::data::shapes::{PointCloud, Shape};
+use arbor::exec::ExecSpace;
+use arbor::geometry::predicates::Nearest;
+use arbor::geometry::{Aabb, Point, Sphere};
+
+use common::{engines, inflate, neighbors_for, neighbors_from, random_point, scene, SHAPES};
+
+/// The k values every suite sweeps: singleton, mid, and a k that often
+/// exceeds the number of zero-distance ties.
+const KS: [usize; 3] = [1, 5, 12];
+
+/// Deterministic query geometries for one cloud: random points, spheres
+/// (zero radius included), and boxes (degenerate point boxes included),
+/// plus coincident-center cases aimed exactly at existing data sites.
+fn query_sets(
+    cloud: &PointCloud,
+    seed: u64,
+) -> (Vec<Point>, Vec<Sphere>, Vec<Aabb>) {
+    let mut rng = Rng::new(seed);
+    let mut points = Vec::new();
+    let mut spheres = Vec::new();
+    let mut boxes = Vec::new();
+    for i in 0..25 {
+        let c = random_point(&mut rng, 1.2 * cloud.a);
+        points.push(c);
+        // Every fifth sphere is zero-radius (degenerates to the point
+        // metric); radii large enough to swallow leaves are included.
+        let r = if i % 5 == 0 { 0.0 } else { rng.uniform(0.1, 0.4 * cloud.a) };
+        spheres.push(Sphere::new(c, r));
+        // Every fifth box is a degenerate point box.
+        if i % 5 == 0 {
+            boxes.push(Aabb::from_point(c));
+        } else {
+            let half = Point::new(
+                rng.uniform(0.1, 0.3 * cloud.a),
+                rng.uniform(0.1, 0.3 * cloud.a),
+                rng.uniform(0.1, 0.3 * cloud.a),
+            );
+            boxes.push(Aabb::new(c - half, c + half));
+        }
+    }
+    // Coincident centers: queries sitting exactly on data sites, so the
+    // nearest distance is exactly 0 and (with duplicated sites) ties are
+    // unavoidable.
+    for i in (0..cloud.points.len()).step_by(97) {
+        let p = cloud.points[i];
+        points.push(p);
+        spheres.push(Sphere::new(p, 0.5));
+        boxes.push(Aabb::new(p - Point::splat(0.25), p + Point::splat(0.25)));
+    }
+    (points, spheres, boxes)
+}
+
+/// Checks stack, pq, and the batched engine against the oracle for one
+/// typed query set, with full Neighbor equality.
+fn check_typed<G>(
+    label: &str,
+    bvh: &Bvh,
+    space: &ExecSpace,
+    brute: &BruteForce,
+    geometries: &[G],
+    k: usize,
+) where
+    G: arbor::geometry::predicates::DistanceTo + Copy + Sync,
+{
+    let queries: Vec<Nearest<G>> = geometries.iter().map(|g| Nearest::new(*g, k)).collect();
+    let want: Vec<Vec<Neighbor>> =
+        geometries.iter().map(|g| brute.nearest_to(g, k)).collect();
+    let mut scratch = NearestScratch::new(k);
+    let (mut out_stack, mut out_pq) = (Vec::new(), Vec::new());
+    for (qi, q) in queries.iter().enumerate() {
+        nearest_stack(bvh, q, &mut scratch, &mut out_stack);
+        assert_eq!(out_stack, want[qi], "{label} stack query {qi} k={k}");
+        nearest_pq(bvh, q, &mut out_pq);
+        assert_eq!(out_pq, want[qi], "{label} pq query {qi} k={k}");
+    }
+    for sort in [false, true] {
+        let out = bvh.query_nearest(space, &queries, sort);
+        for (qi, w) in want.iter().enumerate() {
+            let got = neighbors_for(&out, qi);
+            assert_eq!(&got, w, "{label} batched sort={sort} query {qi} k={k}");
+        }
+    }
+}
+
+#[test]
+fn nearest_geometry_matches_brute_force_everywhere() {
+    for (si, shape) in SHAPES.iter().enumerate() {
+        let (cloud, _, _) = scene(*shape, 1500, 500 + si as u64);
+        // Two leaf geometries: zero-extent point boxes and inflated boxes
+        // (queries genuinely overlap the latter, exercising the
+        // zero-distance tie paths).
+        for (variant, boxes) in [("points", cloud.boxes()), ("solid", inflate(&cloud, 0.6))] {
+            let brute = BruteForce::new(&boxes);
+            let (points, spheres, regions) = query_sets(&cloud, 41 + si as u64);
+            for (name, bvh, space) in engines(&boxes) {
+                for k in KS {
+                    let label = format!("{shape:?}/{variant}/{name}");
+                    check_typed(&format!("{label}/point"), &bvh, &space, &brute, &points, k);
+                    check_typed(&format!("{label}/sphere"), &bvh, &space, &brute, &spheres, k);
+                    check_typed(&format!("{label}/box"), &bvh, &space, &brute, &regions, k);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn facade_agrees_with_oracle_under_both_strategies() {
+    let (cloud, _, _) = scene(Shape::FilledCube, 2000, 11);
+    let boxes = inflate(&cloud, 0.5);
+    let brute = BruteForce::new(&boxes);
+    let space = ExecSpace::with_threads(4);
+    let bvh = Bvh::build(&space, &boxes);
+    let (points, spheres, regions) = query_sets(&cloud, 23);
+    let k = 7;
+    // One mixed facade batch interleaving all three geometries.
+    let mut preds = Vec::new();
+    let mut want: Vec<Vec<Neighbor>> = Vec::new();
+    for ((p, s), b) in points.iter().zip(&spheres).zip(&regions) {
+        preds.push(QueryPredicate::nearest(*p, k));
+        want.push(brute.nearest_to(p, k));
+        preds.push(QueryPredicate::nearest_sphere(*s, k));
+        want.push(brute.nearest_to(s, k));
+        preds.push(QueryPredicate::nearest_box(*b, k));
+        want.push(brute.nearest_to(b, k));
+    }
+    for (opt_name, opts) in [
+        ("2p", QueryOptions { buffer_size: None, sort_queries: true }),
+        ("1p-tight", QueryOptions { buffer_size: Some(2), sort_queries: false }),
+        ("1p-roomy", QueryOptions { buffer_size: Some(16), sort_queries: true }),
+    ] {
+        let out = bvh.query(&space, &preds, &opts);
+        for (qi, w) in want.iter().enumerate() {
+            assert_eq!(&neighbors_for(&out, qi), w, "{opt_name} query {qi}");
+        }
+    }
+}
+
+#[test]
+fn wire_service_and_distributed_agree_with_oracle() {
+    let (cloud, _, _) = scene(Shape::FilledCube, 2500, 19);
+    let boxes = inflate(&cloud, 0.6);
+    let brute = BruteForce::new(&boxes);
+    let space = ExecSpace::with_threads(2);
+    let bvh = Arc::new(Bvh::build(&space, &boxes));
+    let (points, spheres, regions) = query_sets(&cloud, 67);
+    let k = 6;
+    let mut preds = Vec::new();
+    let mut want: Vec<Vec<Neighbor>> = Vec::new();
+    for ((p, s), b) in points.iter().zip(&spheres).zip(&regions) {
+        preds.push(QueryPredicate::nearest(*p, k));
+        want.push(brute.nearest_to(p, k));
+        preds.push(QueryPredicate::nearest_sphere(*s, k));
+        want.push(brute.nearest_to(s, k));
+        preds.push(QueryPredicate::nearest_box(*b, k));
+        want.push(brute.nearest_to(b, k));
+    }
+
+    // Service wire path: every query byte-encoded and submitted through
+    // the batcher (small max_batch forces kind sub-splits).
+    let svc = SearchService::start(
+        Arc::clone(&bvh),
+        ServiceConfig { max_batch: 32, threads: 2, ..Default::default() },
+    );
+    let pendings: Vec<_> = preds
+        .iter()
+        .map(|p| {
+            let mut bytes = Vec::new();
+            wire::encode(p, &mut bytes);
+            svc.submit_encoded(&bytes).expect("well-formed nearest encoding")
+        })
+        .collect();
+    for (qi, pending) in pendings.into_iter().enumerate() {
+        let r = pending.wait();
+        assert_eq!(neighbors_from(&r.indices, &r.distances), want[qi], "wire query {qi}");
+    }
+
+    // Distributed bound-ordered rank walk, both partitions, both the
+    // typed and the wire entry points.
+    for partition in [Partition::Block, Partition::MortonBlock] {
+        let dt = DistributedTree::build(&space, &boxes, 5, partition);
+        for ((p, s), b) in points.iter().zip(&spheres).zip(&regions) {
+            let (got, stats) = dt.nearest_to(p, k);
+            assert_eq!(got, brute.nearest_to(p, k), "{partition:?} point");
+            assert!(stats.ranks_contacted >= 1 && stats.ranks_contacted <= 5);
+            let (got, _) = dt.nearest_to(s, k);
+            assert_eq!(got, brute.nearest_to(s, k), "{partition:?} sphere");
+            let (got, _) = dt.nearest_to(b, k);
+            assert_eq!(got, brute.nearest_to(b, k), "{partition:?} box");
+        }
+        for (qi, pred) in preds.iter().enumerate() {
+            let (idx, dist, _) = dt.query_predicate(pred);
+            assert_eq!(neighbors_from(&idx, &dist), want[qi], "{partition:?} wire query {qi}");
+        }
+    }
+}
+
+#[test]
+fn coincident_and_containment_ties_are_deterministic() {
+    // Duplicated sites + queries that contain whole leaf clusters: every
+    // entry point must break the resulting exact distance ties toward the
+    // smaller original index, matching the oracle bit-for-bit.
+    let mut cloud_points: Vec<Point> = (0..60)
+        .map(|i| Point::new((i % 10) as f32, ((i / 10) % 3) as f32, 0.0))
+        .collect();
+    let dups = cloud_points.clone();
+    cloud_points.extend(dups); // every site appears as i and i + 60
+    let boxes: Vec<Aabb> = cloud_points.iter().map(|p| Aabb::from_point(*p)).collect();
+    let brute = BruteForce::new(&boxes);
+
+    // A sphere centered exactly on a duplicated site, containing several
+    // leaves; a box containing the whole y = 0 grid row (10 sites × 4
+    // copies = 40 zero-distance leaves).
+    let on_site = Sphere::new(Point::new(4.0, 1.0, 0.0), 1.0);
+    let row = Aabb::new(Point::new(-0.5, -0.25, -0.25), Point::new(9.5, 0.25, 0.25));
+    let queries = [
+        QueryPredicate::nearest(Point::new(4.0, 1.0, 0.0), 4),
+        QueryPredicate::nearest_sphere(on_site, 5),
+        QueryPredicate::nearest_box(row, 7),
+        // k larger than the tie set: order must stay deterministic past
+        // the zero-distance block.
+        QueryPredicate::nearest_box(row, 25),
+    ];
+    for (name, bvh, espace) in engines(&boxes) {
+        let out = bvh.query(&espace, &queries, &QueryOptions::default());
+        for (qi, pred) in queries.iter().enumerate() {
+            let want = match pred {
+                QueryPredicate::Nearest(n) => brute.nearest_to(&n.geometry, n.k),
+                QueryPredicate::NearestSphere(n) => brute.nearest_to(&n.geometry, n.k),
+                QueryPredicate::NearestBox(n) => brute.nearest_to(&n.geometry, n.k),
+                _ => unreachable!(),
+            };
+            assert_eq!(neighbors_for(&out, qi), want, "{name} query {qi}");
+        }
+    }
+    // Pin the exact zero block: the 7 smallest indices among the 40
+    // zero-distance leaves of the y = 0 row are simply 0..=6.
+    let nn = brute.nearest_to(&row, 7);
+    assert!(nn.iter().all(|n| n.distance_squared == 0.0));
+    let idx: Vec<u32> = nn.iter().map(|n| n.index).collect();
+    assert_eq!(idx, vec![0, 1, 2, 3, 4, 5, 6]);
+}
+
+#[test]
+fn k_edge_cases_across_geometries() {
+    let (_, boxes, brute) = scene(Shape::FilledCube, 40, 3);
+    let space = ExecSpace::serial();
+    let bvh = Bvh::build(&space, &boxes);
+    let q = Sphere::new(Point::origin(), 2.0);
+    // k = 0 yields nothing; k > n yields all n, sorted.
+    let out = bvh.query_nearest(&space, &[Nearest::new(q, 0)], true);
+    assert_eq!(out.total(), 0);
+    let out = bvh.query_nearest(&space, &[Nearest::new(q, 100)], true);
+    assert_eq!(out.results_for(0).len(), 40);
+    let want = brute.nearest_to(&q, 100);
+    assert_eq!(out.results_for(0).len(), want.len());
+    let d = out.distances_for(0);
+    assert!(d.windows(2).all(|w| w[0] <= w[1]), "sorted by distance");
+    // Empty tree: no results for any geometry.
+    let empty = Bvh::build(&space, &[]);
+    let out = empty.query_nearest(&space, &[Nearest::new(q, 5)], true);
+    assert_eq!(out.total(), 0);
+}

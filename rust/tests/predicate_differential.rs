@@ -1,46 +1,29 @@
 //! Differential property tests for the trait-based query layer.
 //!
 //! Randomized filled/hollow workloads are run through every engine
-//! combination — Karras and Apetrei builds, serial and threaded spaces,
-//! CSR (2P and tight-buffer 1P) and callback execution — and compared
-//! against the `BruteForce` oracle for every predicate kind: sphere, box,
-//! ray (unbounded and segment), and `WithData` attachments. This is the
-//! acceptance harness of the trait refactor: the generic engines, the
-//! enum facade, and the callback path must all report the same match
-//! sets.
+//! combination — the shared harness's builder × exec-space grid
+//! (`common::engines`), CSR (2P and tight-buffer 1P) and callback
+//! execution — and compared against the `BruteForce` oracle for every
+//! predicate kind: sphere, box, ray (unbounded and segment), and
+//! `WithData` attachments. This is the acceptance harness of the trait
+//! refactor: the generic engines, the enum facade, and the callback path
+//! must all report the same match sets.
+
+mod common;
 
 use std::sync::Mutex;
 
 use arbor::baselines::brute::BruteForce;
 use arbor::bvh::{Bvh, QueryOptions, QueryPredicate};
 use arbor::data::rng::Rng;
-use arbor::data::shapes::{PointCloud, Shape};
+use arbor::data::shapes::Shape;
 use arbor::exec::ExecSpace;
 use arbor::geometry::predicates::{
     attach, IntersectsBox, IntersectsRay, IntersectsSphere, SpatialPredicate, WithData,
 };
 use arbor::geometry::{Aabb, Point, Ray, Sphere};
 
-const SHAPES: [Shape; 2] = [Shape::FilledCube, Shape::HollowCube];
-
-/// Every (builder, space) engine combination under test.
-fn engines(boxes: &[Aabb]) -> Vec<(String, Bvh, ExecSpace)> {
-    let mut out = Vec::new();
-    for (space_name, space) in [("serial", ExecSpace::serial()), ("mt", ExecSpace::with_threads(4))]
-    {
-        out.push((
-            format!("karras/{space_name}"),
-            Bvh::build(&space, boxes),
-            space.clone(),
-        ));
-        out.push((
-            format!("apetrei/{space_name}"),
-            Bvh::build_apetrei(&space, boxes),
-            space.clone(),
-        ));
-    }
-    out
-}
+use common::{engines, random_point, scene, SHAPES};
 
 /// Checks one predicate batch on one engine against brute force, for 2P,
 /// tight 1P, and callback execution.
@@ -85,28 +68,18 @@ fn check_batch<P: SpatialPredicate + Sync>(
 #[test]
 fn sphere_and_box_predicates_match_brute_force_everywhere() {
     for (si, shape) in SHAPES.iter().enumerate() {
-        let cloud = PointCloud::generate(*shape, 2000, 100 + si as u64);
-        let boxes = cloud.boxes();
-        let brute = BruteForce::new(&boxes);
+        let (cloud, boxes, brute) = scene(*shape, 2000, 100 + si as u64);
         let mut rng = Rng::new(7 + si as u64);
 
         let spheres: Vec<IntersectsSphere> = (0..40)
             .map(|_| {
-                let c = Point::new(
-                    rng.uniform(-cloud.a, cloud.a),
-                    rng.uniform(-cloud.a, cloud.a),
-                    rng.uniform(-cloud.a, cloud.a),
-                );
+                let c = random_point(&mut rng, cloud.a);
                 IntersectsSphere(Sphere::new(c, rng.uniform(0.5, 4.0)))
             })
             .collect();
         let regions: Vec<IntersectsBox> = (0..40)
             .map(|_| {
-                let c = Point::new(
-                    rng.uniform(-cloud.a, cloud.a),
-                    rng.uniform(-cloud.a, cloud.a),
-                    rng.uniform(-cloud.a, cloud.a),
-                );
+                let c = random_point(&mut rng, cloud.a);
                 let half = Point::new(
                     rng.uniform(0.2, 3.0),
                     rng.uniform(0.2, 3.0),
@@ -126,20 +99,14 @@ fn sphere_and_box_predicates_match_brute_force_everywhere() {
 #[test]
 fn ray_predicates_match_brute_force_everywhere() {
     for (si, shape) in SHAPES.iter().enumerate() {
-        let cloud = PointCloud::generate(*shape, 1500, 300 + si as u64);
-        let boxes = cloud.boxes();
-        let brute = BruteForce::new(&boxes);
+        let (cloud, boxes, brute) = scene(*shape, 1500, 300 + si as u64);
         let mut rng = Rng::new(17 + si as u64);
 
         let mut rays: Vec<IntersectsRay> = Vec::new();
         // Random rays and segments (consistency: hit sets must agree even
         // when grazing) ...
         for _ in 0..30 {
-            let origin = Point::new(
-                rng.uniform(-cloud.a, cloud.a),
-                rng.uniform(-cloud.a, cloud.a),
-                rng.uniform(-cloud.a, cloud.a),
-            );
+            let origin = random_point(&mut rng, cloud.a);
             let dir = Point::new(
                 rng.uniform(-1.0, 1.0),
                 rng.uniform(-1.0, 1.0),
@@ -178,18 +145,12 @@ fn ray_predicates_match_brute_force_everywhere() {
 
 #[test]
 fn attachment_predicates_are_transparent_and_carry_data() {
-    let cloud = PointCloud::generate(Shape::FilledSphere, 1200, 5);
-    let boxes = cloud.boxes();
-    let brute = BruteForce::new(&boxes);
+    let (cloud, boxes, brute) = scene(Shape::FilledSphere, 1200, 5);
     let mut rng = Rng::new(23);
 
     let tagged: Vec<WithData<IntersectsSphere, u64>> = (0..50)
         .map(|i| {
-            let c = Point::new(
-                rng.uniform(-cloud.a, cloud.a),
-                rng.uniform(-cloud.a, cloud.a),
-                rng.uniform(-cloud.a, cloud.a),
-            );
+            let c = random_point(&mut rng, cloud.a);
             attach(IntersectsSphere(Sphere::new(c, rng.uniform(0.5, 3.0))), i * i)
         })
         .collect();
@@ -212,19 +173,11 @@ fn facade_and_generic_engines_agree_on_workloads() {
     // The compatibility acceptance: the enum facade (service wire format)
     // and the generic trait path return identical CSR output.
     let space = ExecSpace::with_threads(4);
-    let cloud = PointCloud::generate(Shape::FilledCube, 3000, 77);
-    let boxes = cloud.boxes();
+    let (cloud, boxes, _brute) = scene(Shape::FilledCube, 3000, 77);
     let bvh = Bvh::build(&space, &boxes);
     let mut rng = Rng::new(99);
-    let centers: Vec<Point> = (0..200)
-        .map(|_| {
-            Point::new(
-                rng.uniform(-cloud.a, cloud.a),
-                rng.uniform(-cloud.a, cloud.a),
-                rng.uniform(-cloud.a, cloud.a),
-            )
-        })
-        .collect();
+    let centers: Vec<Point> =
+        (0..200).map(|_| random_point(&mut rng, cloud.a)).collect();
     let facade: Vec<QueryPredicate> =
         centers.iter().map(|c| QueryPredicate::intersects_sphere(*c, 2.7)).collect();
     let typed: Vec<IntersectsSphere> =

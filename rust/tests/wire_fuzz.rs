@@ -1,0 +1,137 @@
+//! Property-style fuzz tests for the byte-level wire codec.
+//!
+//! The wire is untrusted input, so beyond the deterministic unit tests
+//! in `coordinator/wire.rs` this suite drives the codec with randomized
+//! inputs: encode→decode round-trip identity over predicates of every
+//! kind (via the shared harness's `random_predicate`), and adversarial
+//! buffers — truncations, single-bit flips, random garbage, and bad tag
+//! bytes — on which `decode`/`decode_batch` must return `None` or a
+//! well-formed predicate, never panic, and never report consuming more
+//! bytes than exist (no over-read).
+
+mod common;
+
+use arbor::bvh::QueryPredicate;
+use arbor::coordinator::wire::{decode, decode_batch, encode, encode_batch, TAG_ATTACH};
+use arbor::data::rng::Rng;
+
+use common::random_predicate;
+
+/// Encodes one predicate into a fresh buffer.
+fn encoded(pred: &QueryPredicate) -> Vec<u8> {
+    let mut bytes = Vec::new();
+    encode(pred, &mut bytes);
+    bytes
+}
+
+#[test]
+fn random_predicates_of_every_kind_round_trip() {
+    let mut rng = Rng::new(0xF00D);
+    let mut kinds_seen = std::collections::HashSet::new();
+    for i in 0..2000 {
+        let pred = random_predicate(&mut rng, 50.0);
+        kinds_seen.insert(pred.kind().name());
+        let bytes = encoded(&pred);
+        let (decoded, used) = decode(&bytes)
+            .unwrap_or_else(|| panic!("round {i}: {pred:?} failed to decode"));
+        assert_eq!(used, bytes.len(), "round {i}: {pred:?} under-consumed");
+        assert_eq!(decoded, pred, "round {i}");
+    }
+    // The generator really exercises the whole family (10 kind tags).
+    assert_eq!(kinds_seen.len(), arbor::bvh::PredicateKind::COUNT, "{kinds_seen:?}");
+}
+
+#[test]
+fn random_batches_round_trip_back_to_back() {
+    let mut rng = Rng::new(0xBA7C);
+    for _ in 0..50 {
+        let preds: Vec<QueryPredicate> =
+            (0..1 + rng.below(40)).map(|_| random_predicate(&mut rng, 20.0)).collect();
+        let mut bytes = Vec::new();
+        encode_batch(&preds, &mut bytes);
+        assert_eq!(decode_batch(&bytes).expect("batch decodes"), preds);
+    }
+}
+
+#[test]
+fn truncations_never_panic_or_over_read() {
+    let mut rng = Rng::new(0x7A11);
+    for _ in 0..200 {
+        let pred = random_predicate(&mut rng, 30.0);
+        let bytes = encoded(&pred);
+        // Every strict prefix of a single predicate is malformed.
+        for cut in 0..bytes.len() {
+            assert!(decode(&bytes[..cut]).is_none(), "{pred:?} truncated at {cut}");
+        }
+        // A batch with a truncated tail poisons the whole batch.
+        let mut batch = bytes.clone();
+        batch.extend_from_slice(&bytes[..bytes.len() - 1]);
+        assert!(decode_batch(&batch).is_none(), "{pred:?} truncated batch tail");
+    }
+}
+
+#[test]
+fn bit_flips_never_panic_or_over_read() {
+    let mut rng = Rng::new(0xB17F);
+    for _ in 0..300 {
+        let pred = random_predicate(&mut rng, 30.0);
+        let mut bytes = encoded(&pred);
+        let byte = rng.below(bytes.len());
+        let bit = rng.below(8);
+        bytes[byte] ^= 1 << bit;
+        // A flipped buffer may decode to a *different valid* predicate
+        // (flipping a payload bit changes a coordinate) or be rejected —
+        // but it must never panic and never claim bytes it does not have.
+        match decode(&bytes) {
+            Some((decoded, used)) => {
+                assert!(used <= bytes.len(), "{pred:?} over-read after bit flip");
+                // Whatever decoded must re-encode to something decodable
+                // (decoded predicates are always well-formed).
+                let re = encoded(&decoded);
+                assert!(decode(&re).is_some(), "{decoded:?} must stay decodable");
+            }
+            None => {}
+        }
+        // decode_batch on the same buffer obeys the same contract.
+        let _ = decode_batch(&bytes);
+    }
+}
+
+#[test]
+fn random_garbage_never_panics() {
+    let mut rng = Rng::new(0x6A5B);
+    for _ in 0..500 {
+        let len = rng.below(64);
+        let bytes: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+        if let Some((decoded, used)) = decode(&bytes) {
+            assert!(used <= bytes.len(), "over-read on garbage");
+            assert!(decode(&encoded(&decoded)).is_some());
+        }
+        let _ = decode_batch(&bytes);
+    }
+}
+
+#[test]
+fn bad_tags_are_rejected_with_any_payload() {
+    // Valid plain tags are 1..=7; valid attach tags are 0x81..=0x83.
+    // Everything else must be rejected no matter how much payload
+    // follows.
+    let payload = [0u8; 64];
+    let valid_plain: std::ops::RangeInclusive<u8> = 1..=7;
+    let valid_attach = [0x81u8, 0x82, 0x83];
+    for tag in 0u8..=255 {
+        if valid_plain.contains(&tag) || valid_attach.contains(&tag) {
+            continue;
+        }
+        let mut bytes = vec![tag];
+        bytes.extend_from_slice(&payload);
+        assert!(decode(&bytes).is_none(), "tag {tag:#04x} must be rejected");
+    }
+    // Attach-flagged nearest/first-hit tags specifically (the guard in
+    // the decoder's match arms).
+    for tag in [4u8, 5, 6, 7] {
+        let mut bytes = vec![tag | TAG_ATTACH];
+        bytes.extend_from_slice(&payload);
+        assert!(decode(&bytes).is_none(), "attached tag {tag} must be rejected");
+    }
+}
