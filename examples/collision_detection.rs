@@ -203,11 +203,14 @@ fn main() {
     let pendings: Vec<_> = rays[..probe]
         .iter()
         .enumerate()
-        .map(|(i, r)| svc.submit(QueryPredicate::attach(Spatial::IntersectsRay(r.0), i as u64)))
+        .map(|(i, r)| {
+            svc.submit(QueryPredicate::attach(Spatial::IntersectsRay(r.0), i as u64))
+                .expect("service running")
+        })
         .collect();
     let mut service_mismatches = 0usize;
     for (i, pending) in pendings.into_iter().enumerate() {
-        let result = pending.wait();
+        let result = pending.wait().expect("service answered");
         assert_eq!(result.data, Some(i as u64), "payload echoed");
         let mut first = f32::INFINITY;
         for &obj in &result.indices {

@@ -86,7 +86,7 @@ fn main() {
                     ),
                     _ => QueryPredicate::nearest(*p, 10),
                 };
-                let r = svc.query(pred);
+                let r = svc.query(pred).expect("service running");
                 if i % 5 == 3 {
                     assert_eq!(r.data, Some(i as u64), "attachment payload echoed");
                 }

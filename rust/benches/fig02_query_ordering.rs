@@ -7,7 +7,7 @@
 //! for visual comparison, plus the wall-time effect of ordering on a
 //! larger batch.
 
-use arbor::bench_util::{f, reps, time_median, Table};
+use arbor::bench_util::{f, reps, size, time_median, Table};
 use arbor::bvh::{stats, Bvh, QueryOptions, QueryPredicate};
 use arbor::data::shapes::{PointCloud, Shape};
 use arbor::exec::ExecSpace;
@@ -45,9 +45,10 @@ fn main() {
 
     // Wall-time effect on a large parallel batch (the practical payoff).
     let space = ExecSpace::default_parallel();
-    let big = PointCloud::generate(Shape::FilledCube, 1_000_000, 5);
+    let m = size(1_000_000, 5_000);
+    let big = PointCloud::generate(Shape::FilledCube, m, 5);
     let bvh = Bvh::build(&space, &big.boxes());
-    let probes: Vec<QueryPredicate> = PointCloud::generate(Shape::FilledSphere, 1_000_000, 6)
+    let probes: Vec<QueryPredicate> = PointCloud::generate(Shape::FilledSphere, m, 6)
         .points
         .iter()
         .map(|p| QueryPredicate::nearest(*p, 10))

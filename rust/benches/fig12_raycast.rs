@@ -18,7 +18,7 @@
 //! `bench_out/fig12_raycast_first_hit.csv` and `BENCH_raycast.json`.
 
 use arbor::baselines::brute::BruteForce;
-use arbor::bench_util::{f, reps, time_median, write_json_snapshot, JsonValue, Table};
+use arbor::bench_util::{f, reps, size, time_median, write_json_snapshot, JsonValue, Table};
 use arbor::bvh::first_hit::first_hit_monitored;
 use arbor::bvh::traversal::for_each_spatial_monitored;
 use arbor::bvh::{Bvh, QueryOptions};
@@ -30,8 +30,8 @@ use arbor::geometry::{Aabb, Point, Ray};
 
 fn main() {
     let space = ExecSpace::default_parallel();
-    let n = 100_000;
-    let n_rays = 10_000;
+    let n = size(100_000, 2_000);
+    let n_rays = size(10_000, 400);
     let half = 0.5f32; // finite leaf extent: generic rays really hit
 
     let cloud = PointCloud::generate(Shape::FilledCube, n, 42);

@@ -18,7 +18,7 @@
 //! `BENCH_nearest_geometry.json`.
 
 use arbor::baselines::brute::BruteForce;
-use arbor::bench_util::{f, reps, time_median, write_json_snapshot, JsonValue, Table};
+use arbor::bench_util::{f, reps, size, time_median, write_json_snapshot, JsonValue, Table};
 use arbor::bvh::nearest::Neighbor;
 use arbor::bvh::Bvh;
 use arbor::data::rng::Rng;
@@ -29,8 +29,8 @@ use arbor::geometry::{Aabb, Point, Sphere};
 
 fn main() {
     let space = ExecSpace::default_parallel();
-    let n = 100_000;
-    let n_queries = 10_000;
+    let n = size(100_000, 2_000);
+    let n_queries = size(10_000, 400);
     let k = 10;
     let half = 0.5f32; // finite leaf extent: geometry queries really overlap
 

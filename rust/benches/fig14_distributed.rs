@@ -1,0 +1,174 @@
+//! Figure 14 (ours): distributed execution modes.
+//!
+//! One mixed wire workload (spheres, boxes, rays, nearest, first-hit)
+//! over a Morton-partitioned 8-rank `DistributedTree`, executed three
+//! ways:
+//!
+//! * **per_query** — the old shape: one `query_predicate` call per
+//!   predicate, single-threaded forward/merge walks;
+//! * **batch_serial** — the streaming batched engine
+//!   (`query_batch`) on a serial space: batched phase-1 forwarding +
+//!   streaming merge, still one thread;
+//! * **batch_threaded** — the same engine with rank-level parallelism
+//!   on a pool sized to the machine.
+//!
+//! A spatial-only sweep is reported alongside the mixed one, since the
+//! spatial path is the zero-materialization streaming rewrite (matches
+//! go traversal → callback → per-query accumulator, no per-rank
+//! vectors; `streamed_results` counts them). Batched answers are
+//! cross-checked against the per-query walk on a subsample. Results go
+//! to `bench_out/fig14_distributed.csv` and `BENCH_distributed.json`.
+
+use arbor::bench_util::{f, reps, size, time_median, write_json_snapshot, JsonValue, Table};
+use arbor::bvh::QueryPredicate;
+use arbor::coordinator::distributed::{DistributedTree, Partition};
+use arbor::data::rng::Rng;
+use arbor::data::shapes::{PointCloud, Shape};
+use arbor::exec::ExecSpace;
+use arbor::geometry::predicates::Spatial;
+use arbor::geometry::{Aabb, Point, Ray, Sphere};
+
+fn mixed_batch(centers: &[Point], radius: f32) -> Vec<QueryPredicate> {
+    let half = Point::splat(radius);
+    centers
+        .iter()
+        .enumerate()
+        .map(|(i, p)| match i % 6 {
+            0 => QueryPredicate::intersects_sphere(*p, radius),
+            1 => QueryPredicate::intersects_box(Aabb::new(*p - half, *p + half)),
+            2 => QueryPredicate::intersects_ray(Ray::new(*p, Point::new(0.3, 1.0, -0.2))),
+            3 => QueryPredicate::attach(
+                Spatial::IntersectsSphere(Sphere::new(*p, radius)),
+                i as u64,
+            ),
+            4 => QueryPredicate::nearest(*p, 10),
+            _ => QueryPredicate::first_hit(Ray::new(
+                Point::new(p[0], p[1], p[2] - 10.0),
+                Point::new(0.0, 0.0, 1.0),
+            )),
+        })
+        .collect()
+}
+
+fn main() {
+    let threads = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(2);
+    let n = size(200_000, 4_000);
+    let n_queries = size(20_000, 600);
+    let n_ranks = 8;
+    let radius = 1.0f32;
+    let half = 0.5f32;
+
+    let serial = ExecSpace::serial();
+    let pool = ExecSpace::with_threads(threads);
+    let cloud = PointCloud::generate(Shape::FilledCube, n, 42);
+    let boxes: Vec<Aabb> = cloud
+        .points
+        .iter()
+        .map(|p| Aabb::new(*p - Point::splat(half), *p + Point::splat(half)))
+        .collect();
+    let dt = DistributedTree::build(&pool, &boxes, n_ranks, Partition::MortonBlock);
+
+    let mut rng = Rng::new(7);
+    let centers: Vec<Point> = (0..n_queries)
+        .map(|_| {
+            Point::new(
+                rng.uniform(-cloud.a, cloud.a),
+                rng.uniform(-cloud.a, cloud.a),
+                rng.uniform(-cloud.a, cloud.a),
+            )
+        })
+        .collect();
+    let spatial: Vec<QueryPredicate> =
+        centers.iter().map(|p| QueryPredicate::intersects_sphere(*p, radius)).collect();
+    let mixed = mixed_batch(&centers, radius);
+    let r = reps();
+
+    let mut tab = Table::new(
+        "fig14_distributed",
+        &["workload", "mode", "time_s", "queries_per_s"],
+    );
+    let mut json: Vec<(&str, JsonValue)> = vec![
+        ("n_boxes", JsonValue::Int(n as u64)),
+        ("n_queries", JsonValue::Int(n_queries as u64)),
+        ("n_ranks", JsonValue::Int(n_ranks as u64)),
+        ("threads", JsonValue::Int(threads as u64)),
+    ];
+
+    for (workload, preds) in [("spatial", &spatial), ("mixed", &mixed)] {
+        // Per-query loop: the pre-batching execution shape.
+        let t_per_query = time_median(r, || {
+            for p in preds {
+                std::hint::black_box(dt.query_predicate(p));
+            }
+        });
+        // Streaming batched engine, serial and rank-parallel.
+        let t_batch_serial = time_median(r, || {
+            std::hint::black_box(dt.query_batch(&serial, preds));
+        });
+        let t_batch_threaded = time_median(r, || {
+            std::hint::black_box(dt.query_batch(&pool, preds));
+        });
+
+        // Cross-check: the batch rows equal the per-query walk.
+        let (out, stats) = dt.query_batch(&pool, preds);
+        let probe = 200.min(preds.len());
+        for (qi, p) in preds[..probe].iter().enumerate() {
+            let (want_idx, _, _) = dt.query_predicate(p);
+            assert_eq!(out.results_for(qi), &want_idx[..], "{workload} query {qi}");
+        }
+
+        for (mode, t) in [
+            ("per_query", t_per_query),
+            ("batch_serial", t_batch_serial),
+            ("batch_threaded", t_batch_threaded),
+        ] {
+            tab.row(&[
+                workload.to_string(),
+                mode.to_string(),
+                f(t),
+                f(preds.len() as f64 / t),
+            ]);
+        }
+        println!(
+            "{workload}: ranks={} forwarded={} streamed={} workers={} results={}",
+            stats.ranks_contacted,
+            stats.forwarded_queries,
+            stats.streamed_results,
+            stats.worker_threads,
+            stats.results,
+        );
+        let keys: [(&str, f64); 3] = match workload {
+            "spatial" => [
+                ("spatial_per_query_s", t_per_query),
+                ("spatial_batch_serial_s", t_batch_serial),
+                ("spatial_batch_threaded_s", t_batch_threaded),
+            ],
+            _ => [
+                ("mixed_per_query_s", t_per_query),
+                ("mixed_batch_serial_s", t_batch_serial),
+                ("mixed_batch_threaded_s", t_batch_threaded),
+            ],
+        };
+        for (k, v) in keys {
+            json.push((k, JsonValue::Num(v)));
+        }
+        if workload == "spatial" {
+            let streamed = stats.streamed_results as u64;
+            let forwarded = stats.forwarded_queries as u64;
+            json.push(("spatial_streamed_results", JsonValue::Int(streamed)));
+            json.push(("spatial_forwarded_queries", JsonValue::Int(forwarded)));
+            json.push((
+                "spatial_batch_speedup_vs_per_query",
+                JsonValue::Num(t_per_query / t_batch_threaded),
+            ));
+        } else {
+            json.push((
+                "mixed_batch_speedup_vs_per_query",
+                JsonValue::Num(t_per_query / t_batch_threaded),
+            ));
+        }
+    }
+
+    tab.write_csv();
+    write_json_snapshot("BENCH_distributed.json", &json);
+}

@@ -17,7 +17,7 @@
 
 use std::sync::atomic::{AtomicU32, Ordering};
 
-use arbor::bench_util::{f, reps, time_median, write_json_snapshot, JsonValue, Table};
+use arbor::bench_util::{f, reps, size, time_median, write_json_snapshot, JsonValue, Table};
 use arbor::bvh::build::build_karras_profiled;
 use arbor::bvh::{Bvh, QueryOptions, QueryPredicate};
 use arbor::coordinator::metrics::Metrics;
@@ -42,7 +42,7 @@ fn ray_towards(p: &Point, center: &Point) -> Ray {
 
 fn main() {
     let cores = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
-    let m = 1_000_000;
+    let m = size(1_000_000, 5_000);
     let w = Workload::generate(Case::Filled, m, m, 42);
     let boxes = w.sources.boxes();
     let r = reps();

@@ -13,8 +13,31 @@
 //! * `ARBOR_BENCH_REPS=n` — timed repetitions per measurement (default 1 so
 //!   a full `cargo bench` fits small CI machines; raise to 3–5 for
 //!   noise-sensitive studies — the tables report the median).
+//! * `QUICK=1` — CI bench-smoke mode: every bench shrinks to tiny
+//!   problem sizes ([`quick`], [`size`], and [`problem_sizes`] all
+//!   honor it) so the binaries compile *and execute* end to end in
+//!   seconds, still emitting their CSV/JSON snapshots.
 
 use std::time::Instant;
+
+/// `true` when `QUICK=1` (the CI bench-smoke contract) or
+/// `ARBOR_BENCH_QUICK=1` (the prefixed alias, safer in environments
+/// where the generic name could collide). Numbers produced under it
+/// are execution proofs, not measurements.
+pub fn quick() -> bool {
+    std::env::var("QUICK").as_deref() == Ok("1")
+        || std::env::var("ARBOR_BENCH_QUICK").as_deref() == Ok("1")
+}
+
+/// `full` normally; `tiny` under `QUICK=1` — how benches with explicit
+/// problem sizes participate in the smoke run.
+pub fn size(full: usize, tiny: usize) -> usize {
+    if quick() {
+        tiny
+    } else {
+        full
+    }
+}
 
 /// Times one invocation of `f` in seconds.
 pub fn time_once<F: FnOnce()>(f: F) -> f64 {
@@ -37,9 +60,12 @@ pub fn reps() -> usize {
 }
 
 /// The paper's problem-size sweep m = 10^4..10^7 (§3.2), truncated to
-/// 10^6 unless `ARBOR_BENCH_FULL=1`.
+/// 10^6 unless `ARBOR_BENCH_FULL=1`, and collapsed to one tiny size
+/// under `QUICK=1` (the bench-smoke mode).
 pub fn problem_sizes() -> Vec<usize> {
-    if std::env::var("ARBOR_BENCH_FULL").as_deref() == Ok("1") {
+    if quick() {
+        vec![2_000]
+    } else if std::env::var("ARBOR_BENCH_FULL").as_deref() == Ok("1") {
         vec![10_000, 100_000, 1_000_000, 10_000_000]
     } else {
         vec![10_000, 100_000, 1_000_000]

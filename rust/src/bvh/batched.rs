@@ -367,7 +367,11 @@ pub fn run_spatial_queries<P: SpatialPredicate + Sync>(
 /// storage — the zero-materialization entry point behind
 /// [`Bvh::query_with_callback`]. `callback(query_idx, object_idx)` runs
 /// concurrently from worker threads; query indices refer to the caller's
-/// order even when Morton ordering is enabled.
+/// order even when Morton ordering is enabled. The distributed layer's
+/// rank executions are built on this: each rank streams its local
+/// matches straight into per-query global accumulators, so no per-rank
+/// result vector ever exists
+/// ([`crate::coordinator::distributed::DistributedTree::query_batch`]).
 pub fn for_each_match<P, F>(
     bvh: &Bvh,
     space: &ExecSpace,

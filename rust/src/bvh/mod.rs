@@ -186,9 +186,12 @@ impl Bvh {
     /// storage — no counting pass, no offsets, no result array. Search is
     /// memory bound (§2), so cutting the result-write traffic is the
     /// fastest path when the caller can consume matches in place
-    /// (collision response, reductions, filters). The callback runs
-    /// concurrently from worker threads; query indices always refer to
-    /// the caller's order (Morton execution ordering stays internal).
+    /// (collision response, reductions, filters — and the distributed
+    /// layer's rank executions, which stream local matches straight into
+    /// per-query global accumulators instead of building per-rank result
+    /// vectors). The callback runs concurrently from worker threads;
+    /// query indices always refer to the caller's order (Morton
+    /// execution ordering stays internal).
     pub fn query_with_callback<P, F>(&self, space: &ExecSpace, preds: &[P], callback: F)
     where
         P: SpatialPredicate + Sync,

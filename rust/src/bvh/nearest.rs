@@ -213,24 +213,76 @@ pub fn nearest_stack_monitored<Q: NearestQuery, M: FnMut(u32)>(
     query: &Q,
     scratch: &mut NearestScratch,
     out: &mut Vec<Neighbor>,
+    monitor: M,
+) {
+    out.clear();
+    if bvh.n_leaves == 0 || query.k() == 0 {
+        return;
+    }
+    scratch.heap.reset(query.k());
+    nearest_core(bvh, query, &mut scratch.stack, &mut scratch.heap, |i| i, monitor);
+    scratch.heap.drain_sorted_into(out);
+}
+
+/// Runs the stack traversal offering candidates into a caller-owned
+/// [`KnnHeap`] — neither resetting nor draining it — with every object
+/// index passed through `map_index` first. This is the distributed rank
+/// walk's seam: the heap arrives holding the k-best candidates of the
+/// ranks already visited (as *global* indices, hence the mapping), so
+/// this rank's traversal prunes against the running global bound from
+/// its first node instead of rediscovering locally-best candidates that
+/// other ranks have already beaten.
+pub fn nearest_into_heap<Q: NearestQuery, F: Fn(u32) -> u32>(
+    bvh: &Bvh,
+    query: &Q,
+    stack: &mut Vec<(NodeRef, f32)>,
+    heap: &mut KnnHeap,
+    map_index: F,
+) {
+    nearest_into_heap_monitored(bvh, query, stack, heap, map_index, |_| {});
+}
+
+/// [`nearest_into_heap`] with a `monitor` callback on every internal
+/// node whose box distance is evaluated — the probe the seeded-bound
+/// pruning tests use.
+pub fn nearest_into_heap_monitored<Q: NearestQuery, F: Fn(u32) -> u32, M: FnMut(u32)>(
+    bvh: &Bvh,
+    query: &Q,
+    stack: &mut Vec<(NodeRef, f32)>,
+    heap: &mut KnnHeap,
+    map_index: F,
+    monitor: M,
+) {
+    nearest_core(bvh, query, stack, heap, map_index, monitor);
+}
+
+/// The one stack traversal behind [`nearest_stack_monitored`] and
+/// [`nearest_into_heap`]: offers candidates into `heap` (which may
+/// already hold candidates — its bound prunes from the root down) with
+/// object indices passed through `map_index`.
+fn nearest_core<Q: NearestQuery, F: Fn(u32) -> u32, M: FnMut(u32)>(
+    bvh: &Bvh,
+    query: &Q,
+    stack: &mut Vec<(NodeRef, f32)>,
+    heap: &mut KnnHeap,
+    map_index: F,
     mut monitor: M,
 ) {
     let geometry = query.geometry();
-    let k = query.k();
-    out.clear();
-    if bvh.n_leaves == 0 || k == 0 {
+    if bvh.n_leaves == 0 || heap.k == 0 {
         return;
     }
-    scratch.heap.reset(k);
     if is_leaf(bvh.root) {
-        scratch.heap.offer(geometry.distance_squared(&bvh.leaf_boxes[0]), bvh.leaf_perm[0]);
-        scratch.heap.drain_sorted_into(out);
+        heap.offer(geometry.distance_squared(&bvh.leaf_boxes[0]), map_index(bvh.leaf_perm[0]));
         return;
     }
-    let stack = &mut scratch.stack;
-    let heap = &mut scratch.heap;
     stack.clear();
-    stack.push((bvh.root, 0.0));
+    monitor(0);
+    let root_dist = geometry.lower_bound(&bvh.nodes[ref_index(bvh.root)].bbox);
+    if root_dist > heap.bound() {
+        return; // the whole tree is behind the seeded bound
+    }
+    stack.push((bvh.root, root_dist));
     while let Some((node, dist)) = stack.pop() {
         // Prune: the node (and its whole subtree) cannot beat the current
         // k-th best.
@@ -245,7 +297,8 @@ pub fn nearest_stack_monitored<Q: NearestQuery, M: FnMut(u32)>(
         for child in [nd.left, nd.right] {
             let ci = ref_index(child);
             if is_leaf(child) {
-                heap.offer(geometry.distance_squared(&bvh.leaf_boxes[ci]), bvh.leaf_perm[ci]);
+                let d = geometry.distance_squared(&bvh.leaf_boxes[ci]);
+                heap.offer(d, map_index(bvh.leaf_perm[ci]));
             } else {
                 monitor(ci as u32);
                 pending[n_pending] = (child, geometry.lower_bound(&bvh.nodes[ci].bbox));
@@ -264,7 +317,6 @@ pub fn nearest_stack_monitored<Q: NearestQuery, M: FnMut(u32)>(
             }
         }
     }
-    heap.drain_sorted_into(out);
 }
 
 /// Best-first k-NN traversal with a true priority queue (reference
@@ -536,6 +588,50 @@ mod tests {
         nearest_stack(&bvh, &Nearest::new(q, 5), &mut scratch, &mut plain);
         nearest_stack(&bvh, &attach(Nearest::new(q, 5), 7u8), &mut scratch, &mut tagged);
         assert_eq!(plain, tagged);
+    }
+
+    #[test]
+    fn seeded_heap_prunes_an_already_beaten_tree() {
+        // Regression for the distributed rank walk: a traversal seeded
+        // with a tight global bound must prune a far-away tree at the
+        // root instead of re-running the full unbounded search. Cluster
+        // around x = 100; query at the origin.
+        let boxes: Vec<Aabb> = (0..64)
+            .map(|i| Aabb::from_point(Point::new(100.0 + (i % 8) as f32, (i / 8) as f32, 0.0)))
+            .collect();
+        let bvh = Bvh::build(&ExecSpace::serial(), &boxes);
+        let q = Nearest::new(Point::origin(), 2);
+        let mut stack = Vec::new();
+
+        // Unseeded: the traversal must do real work (visit internal nodes).
+        let mut fresh = KnnHeap::new(2);
+        let mut visited = 0usize;
+        nearest_into_heap_monitored(&bvh, &q, &mut stack, &mut fresh, |i| i, |_| visited += 1);
+        assert!(visited > 1, "unseeded traversal explores the tree");
+        assert_eq!(fresh.len(), 2);
+
+        // Seeded with two candidates at distance 1 (squared): the whole
+        // cluster is ~100 away, so only the root's bound is evaluated.
+        let mut seeded = KnnHeap::new(2);
+        seeded.offer(1.0, 1000);
+        seeded.offer(1.0, 1001);
+        let mut visited = 0usize;
+        nearest_into_heap_monitored(&bvh, &q, &mut stack, &mut seeded, |i| i, |_| visited += 1);
+        assert_eq!(visited, 1, "seeded traversal prunes at the root");
+        let mut out = Vec::new();
+        seeded.drain_sorted_into(&mut out);
+        let idx: Vec<u32> = out.iter().map(|n| n.index).collect();
+        assert_eq!(idx, vec![1000, 1001], "seeded candidates survive untouched");
+
+        // A seeded heap still absorbs genuinely closer leaves, mapped
+        // through `map_index` (the global-index translation).
+        let mut improving = KnnHeap::new(2);
+        improving.offer(1e6, 7);
+        improving.offer(1e6, 8);
+        nearest_into_heap(&bvh, &q, &mut stack, &mut improving, |local| local + 500);
+        improving.drain_sorted_into(&mut out);
+        assert!(out.iter().all(|n| n.index >= 500 && n.index < 564));
+        assert!(out.iter().all(|n| n.distance_squared < 1e6));
     }
 
     #[test]

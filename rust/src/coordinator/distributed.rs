@@ -1,29 +1,57 @@
-//! Simulated distributed search — the paper's §4 outlook, implemented.
+//! Simulated distributed search — the paper's §4 outlook, implemented
+//! as a **streaming two-phase engine**.
 //!
 //! "The second [direction] is implementing the distributed search
 //! algorithms using MPI ... it is likely that the data that one searches
 //! for may not belong to the same node." We simulate the MPI layer
-//! in-process: the object set is partitioned into `R` rank shards, each
-//! rank builds its own BVH, and a *top tree* is built over the rank scene
-//! boxes (this is exactly the design ArborX later shipped as
-//! `DistributedTree`). Queries run in two phases:
+//! in-process: the object set is partitioned into `R` rank shards —
+//! exactly `min(n_ranks, n)` of them, sizes differing by at most one —
+//! each rank builds its own BVH, and a *top tree* is built over the rank
+//! scene boxes (the design ArborX later shipped as `DistributedTree`;
+//! the batching/forwarding shape below follows its exascale evolution,
+//! arXiv:2409.10743). Queries run in two phases:
 //!
-//! 1. **forward** — traverse the top tree to find candidate ranks whose
-//!    scene box satisfies the predicate (or can beat the current k-NN
-//!    bound);
-//! 2. **merge** — execute on each candidate rank's local tree and merge
-//!    local results back to global indices.
+//! 1. **forward** — the *whole batch* traverses the top tree at once,
+//!    producing per-rank sub-batches of query ids: for spatial kinds the
+//!    candidate ranks are those whose scene box satisfies the predicate;
+//!    for the nearest and first-hit families the forward runs in two
+//!    waves (closest rank first to seed a bound, then every rank whose
+//!    scene-box lower bound / entry parameter can still beat it).
+//! 2. **execute + merge** — each rank's sub-batch runs through the
+//!    existing monomorphized engines, **rank-parallel** on the caller's
+//!    [`ExecSpace`] ([`ExecSpace::parallel_tasks`]): spatial kinds
+//!    stream through [`Bvh::query_with_callback`] directly into
+//!    per-query global-index accumulators (no per-rank result vector is
+//!    ever materialized), nearest kinds through [`Bvh::query_nearest`]
+//!    into per-query bounded heaps holding global indices, first-hit
+//!    through [`Bvh::query_first_hit`] into per-query `(t, index)`
+//!    offers. The merge back to caller-order CSR keeps the established
+//!    (distance, global index) / (entry, global index) tie-breaks, so
+//!    batched answers are bit-for-bit the single-tree answers.
+//!
+//! [`DistributedTree::query_batch`] is the batch entry point;
+//! [`DistributedTree::query_predicate`] executes one wire predicate
+//! (the per-query forward/merge walk, which for the nearest family
+//! *seeds* each visited rank's traversal with the running global bound
+//! via [`nearest::nearest_into_heap`], so already-beaten subtrees prune
+//! immediately); [`DistributedTree::spatial`] is the single-query
+//! streaming wrapper over the same core the batch uses.
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 use crate::bvh::first_hit::{self, RayHit};
-use crate::bvh::nearest::{KnnHeap, Neighbor, NearestScratch};
+use crate::bvh::nearest::{self, KnnHeap, Neighbor};
 use crate::bvh::traversal::for_each_spatial;
-use crate::bvh::{nearest, Bvh, QueryPredicate};
+use crate::bvh::{Bvh, QueryOutput, QueryPredicate};
+use crate::exec::scan::{exclusive_scan, SendPtr};
 use crate::exec::ExecSpace;
 use crate::geometry::predicates::{
     DistanceTo, FirstHit, IntersectsBox, IntersectsRay, IntersectsSphere, Nearest, Spatial,
     SpatialPredicate,
 };
-use crate::geometry::{Aabb, Point, Ray};
+use crate::geometry::{Aabb, Point, Ray, Sphere};
 
 /// One rank's shard: a local tree plus the map back to global indices.
 struct RankShard {
@@ -50,8 +78,69 @@ pub enum Partition {
     MortonBlock,
 }
 
+/// Per-query merge slot of a streaming batch: where phase-2 rank
+/// executions deposit results. Spatial matches stream straight from the
+/// traversal callback into the slot (never through a per-rank result
+/// vector); nearest candidates merge through a bounded heap keyed on
+/// *global* indices; first-hit candidates through the `(t, index)`
+/// offer. Each variant's merge is order-independent (a unique minimum /
+/// k-minimum under a strict total order, or a final sort), so the
+/// nondeterministic rank-task schedule cannot leak into answers.
+enum QuerySlot {
+    Spatial(Mutex<Vec<u32>>),
+    Nearest(Mutex<KnnHeap>),
+    FirstHit(Mutex<Option<RayHit>>),
+}
+
+/// Shared accounting of one streaming execution (batch or single-query).
+struct BatchAgg {
+    /// Which ranks executed at least one sub-batch.
+    executed: Vec<AtomicBool>,
+    /// Total (query, rank) pairs forwarded to a rank engine.
+    forwarded: AtomicUsize,
+    /// Matches streamed through the spatial callback path.
+    streamed: AtomicUsize,
+    /// Distinct threads that executed rank sub-batches.
+    threads: Mutex<HashSet<std::thread::ThreadId>>,
+}
+
+impl BatchAgg {
+    fn new(n_ranks: usize) -> BatchAgg {
+        BatchAgg {
+            executed: (0..n_ranks).map(|_| AtomicBool::new(false)).collect(),
+            forwarded: AtomicUsize::new(0),
+            streamed: AtomicUsize::new(0),
+            threads: Mutex::new(HashSet::new()),
+        }
+    }
+
+    /// Records one rank sub-batch execution of `queries` queries.
+    fn note_rank(&self, rank: usize, queries: usize) {
+        self.executed[rank].store(true, Ordering::Relaxed);
+        self.forwarded.fetch_add(queries, Ordering::Relaxed);
+        self.threads.lock().unwrap().insert(std::thread::current().id());
+    }
+
+    fn stats(&self, results: usize) -> DistStats {
+        DistStats {
+            ranks_contacted: self.executed.iter().filter(|b| b.load(Ordering::Relaxed)).count(),
+            results,
+            forwarded_queries: self.forwarded.load(Ordering::Relaxed),
+            streamed_results: self.streamed.load(Ordering::Relaxed),
+            worker_threads: self.threads.lock().unwrap().len(),
+        }
+    }
+}
+
 impl DistributedTree {
     /// Partitions `boxes` over `n_ranks` ranks and builds all trees.
+    ///
+    /// Exactly `min(n_ranks, n)` ranks are created, all non-empty, with
+    /// sizes differing by at most one (the first `n % r` ranks take one
+    /// extra object). The ceiling-division chunking this replaces could
+    /// silently create *fewer* ranks than requested — `n = 6, n_ranks =
+    /// 4` yielded 3 shards of `{2, 2, 2}` while `n_ranks()` claimed
+    /// otherwise.
     pub fn build(
         space: &ExecSpace,
         boxes: &[Aabb],
@@ -74,9 +163,14 @@ impl DistributedTree {
                 perm
             }
         };
-        let shard_size = n.div_ceil(n_ranks.max(1)).max(1);
-        let mut ranks = Vec::new();
-        for chunk in order.chunks(shard_size) {
+        // Balanced remainder distribution: r = min(n_ranks, n) non-empty
+        // shards, the first `n % r` one object larger.
+        let r = n_ranks.min(n);
+        let (base, extra) = if r > 0 { (n / r, n % r) } else { (0, 0) };
+        let mut ranks = Vec::with_capacity(r);
+        let mut start = 0usize;
+        for i in 0..r {
+            let size = base + usize::from(i < extra);
             // Store each shard in ascending *global* order. The partition
             // only decides which objects a rank owns; re-sorting inside
             // the shard costs nothing (the local build re-sorts by Morton
@@ -85,7 +179,8 @@ impl DistributedTree {
             // tie-breaks of the local traversals agree with the global
             // ones, and merged answers match the single-tree oracle even
             // when ties are truncated inside a shard.
-            let mut chunk: Vec<u32> = chunk.to_vec();
+            let mut chunk: Vec<u32> = order[start..start + size].to_vec();
+            start += size;
             chunk.sort_unstable();
             let local_boxes: Vec<Aabb> = chunk.iter().map(|&g| boxes[g as usize]).collect();
             let bvh = Bvh::build(space, &local_boxes);
@@ -100,6 +195,11 @@ impl DistributedTree {
     /// Number of ranks.
     pub fn n_ranks(&self) -> usize {
         self.ranks.len()
+    }
+
+    /// Number of objects owned by `rank`.
+    pub fn rank_len(&self, rank: usize) -> usize {
+        self.ranks[rank].global.len()
     }
 
     /// Total number of indexed objects.
@@ -124,20 +224,447 @@ impl DistributedTree {
     }
 
     /// Distributed spatial query: global indices of all matches
-    /// (ascending). Communication cost stats are returned alongside.
-    pub fn spatial<P: SpatialPredicate>(&self, pred: &P) -> (Vec<u32>, DistStats) {
-        let ranks = self.candidate_ranks(pred);
-        let mut out = Vec::new();
-        let mut stack = Vec::new();
-        for &r in &ranks {
-            let shard = &self.ranks[r as usize];
-            for_each_spatial(&shard.bvh, pred, &mut stack, |local| {
-                out.push(shard.global[local as usize]);
+    /// (ascending), with communication stats. A thin single-query
+    /// wrapper over the same streaming core [`DistributedTree::
+    /// query_batch`] runs on — matches stream from the rank traversals
+    /// straight into the output, never through per-rank vectors.
+    pub fn spatial<P: SpatialPredicate + Sync + Copy>(&self, pred: &P) -> (Vec<u32>, DistStats) {
+        let slots = [QuerySlot::Spatial(Mutex::new(Vec::new()))];
+        let agg = BatchAgg::new(self.ranks.len());
+        self.stream_spatial_batch(&ExecSpace::serial(), &[(0, *pred)], &slots, &agg);
+        let [slot] = slots;
+        let mut out = match slot {
+            QuerySlot::Spatial(m) => m.into_inner().unwrap(),
+            _ => unreachable!(),
+        };
+        out.sort_unstable();
+        let stats = agg.stats(out.len());
+        (out, stats)
+    }
+
+    /// Executes a whole wire batch through the streaming two-phase
+    /// engine (see the module docs): batched phase-1 forwarding over the
+    /// top tree, rank-parallel phase-2 execution on `space` through the
+    /// monomorphized engines, and a caller-order CSR merge. Results are
+    /// bit-for-bit the per-query [`DistributedTree::query_predicate`]
+    /// answers (indices, distances, tie-breaks); `distances` carries
+    /// squared distances for nearest kinds and box-entry parameters for
+    /// first-hit (allocated only when the batch contains such kinds,
+    /// like the facade engines). The returned [`DistStats`] aggregates
+    /// the whole batch.
+    pub fn query_batch(
+        &self,
+        space: &ExecSpace,
+        preds: &[QueryPredicate],
+    ) -> (QueryOutput, DistStats) {
+        let slots: Vec<QuerySlot> = preds
+            .iter()
+            .map(|p| match p {
+                QueryPredicate::Spatial(_) | QueryPredicate::Attach(..) => {
+                    QuerySlot::Spatial(Mutex::new(Vec::new()))
+                }
+                QueryPredicate::Nearest(n) => QuerySlot::Nearest(Mutex::new(KnnHeap::new(n.k))),
+                QueryPredicate::NearestSphere(n) => {
+                    QuerySlot::Nearest(Mutex::new(KnnHeap::new(n.k)))
+                }
+                QueryPredicate::NearestBox(n) => QuerySlot::Nearest(Mutex::new(KnnHeap::new(n.k))),
+                QueryPredicate::FirstHit(_) => QuerySlot::FirstHit(Mutex::new(None)),
+            })
+            .collect();
+        let agg = BatchAgg::new(self.ranks.len());
+
+        // Classify the batch into typed per-kind sub-batches (attachment
+        // wrappers execute exactly like their inner predicate; payload
+        // echoing is the service layer's job).
+        let mut spheres: Vec<(u32, IntersectsSphere)> = Vec::new();
+        let mut regions: Vec<(u32, IntersectsBox)> = Vec::new();
+        let mut rays: Vec<(u32, IntersectsRay)> = Vec::new();
+        let mut near_points: Vec<(u32, Nearest)> = Vec::new();
+        let mut near_spheres: Vec<(u32, Nearest<Sphere>)> = Vec::new();
+        let mut near_boxes: Vec<(u32, Nearest<Aabb>)> = Vec::new();
+        let mut casts: Vec<(u32, Ray)> = Vec::new();
+        for (i, p) in preds.iter().enumerate() {
+            let i = i as u32;
+            match p {
+                QueryPredicate::Spatial(s) | QueryPredicate::Attach(s, _) => match s {
+                    Spatial::IntersectsSphere(sp) => spheres.push((i, IntersectsSphere(*sp))),
+                    Spatial::IntersectsBox(b) => regions.push((i, IntersectsBox(*b))),
+                    Spatial::IntersectsRay(r) => rays.push((i, IntersectsRay(*r))),
+                },
+                QueryPredicate::Nearest(n) => near_points.push((i, *n)),
+                QueryPredicate::NearestSphere(n) => near_spheres.push((i, *n)),
+                QueryPredicate::NearestBox(n) => near_boxes.push((i, *n)),
+                QueryPredicate::FirstHit(r) => casts.push((i, *r)),
+            }
+        }
+
+        self.stream_spatial_batch(space, &spheres, &slots, &agg);
+        self.stream_spatial_batch(space, &regions, &slots, &agg);
+        self.stream_spatial_batch(space, &rays, &slots, &agg);
+        self.nearest_batch(space, &near_points, &slots, &agg);
+        self.nearest_batch(space, &near_spheres, &slots, &agg);
+        self.nearest_batch(space, &near_boxes, &slots, &agg);
+        self.first_hit_batch(space, &casts, &slots, &agg);
+
+        // Merge to caller-order CSR.
+        let n_q = preds.len();
+        let want_dist = preds.iter().any(|p| {
+            matches!(
+                p,
+                QueryPredicate::Nearest(_)
+                    | QueryPredicate::NearestSphere(_)
+                    | QueryPredicate::NearestBox(_)
+                    | QueryPredicate::FirstHit(_)
+            )
+        });
+        let mut counts = vec![0u32; n_q];
+        for (i, slot) in slots.iter().enumerate() {
+            counts[i] = match slot {
+                QuerySlot::Spatial(m) => m.lock().unwrap().len() as u32,
+                QuerySlot::Nearest(m) => m.lock().unwrap().len() as u32,
+                QuerySlot::FirstHit(m) => m.lock().unwrap().is_some() as u32,
+            };
+        }
+        let offsets = exclusive_scan(space, &counts);
+        let total = offsets[n_q] as usize;
+        let mut indices = vec![0u32; total];
+        let mut distances = vec![0.0f32; if want_dist { total } else { 0 }];
+        {
+            let ip = SendPtr(indices.as_mut_ptr());
+            let dp = SendPtr(distances.as_mut_ptr());
+            let offsets_ref = &offsets;
+            let slots_ref = &slots;
+            space.parallel_for_chunks(n_q, |b, e| {
+                let mut knn: Vec<Neighbor> = Vec::new();
+                for i in b..e {
+                    let base = offsets_ref[i] as usize;
+                    match &slots_ref[i] {
+                        QuerySlot::Spatial(m) => {
+                            let mut row = m.lock().unwrap();
+                            row.sort_unstable();
+                            for (j, &g) in row.iter().enumerate() {
+                                // SAFETY: [base, base + counts[i]) is owned
+                                // by query i.
+                                unsafe { ip.write(base + j, g) };
+                            }
+                        }
+                        QuerySlot::Nearest(m) => {
+                            m.lock().unwrap().drain_sorted_into(&mut knn);
+                            for (j, nb) in knn.iter().enumerate() {
+                                unsafe {
+                                    ip.write(base + j, nb.index);
+                                    if want_dist {
+                                        dp.write(base + j, nb.distance_squared);
+                                    }
+                                }
+                            }
+                        }
+                        QuerySlot::FirstHit(m) => {
+                            if let Some(h) = *m.lock().unwrap() {
+                                unsafe {
+                                    ip.write(base, h.index);
+                                    if want_dist {
+                                        dp.write(base, h.t);
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
             });
         }
-        out.sort();
-        let stats = DistStats { ranks_contacted: ranks.len(), results: out.len() };
+        let out = QueryOutput { offsets, indices, distances, overflow_queries: 0 };
+        let stats = agg.stats(total);
         (out, stats)
+    }
+
+    /// The spatial streaming core shared by [`DistributedTree::spatial`]
+    /// and [`DistributedTree::query_batch`]: batched phase-1 forward
+    /// over the top tree, then rank-parallel phase-2 execution streaming
+    /// every match through [`Bvh::query_with_callback`] into the
+    /// per-query slots — no per-rank result vector exists anywhere on
+    /// this path.
+    fn stream_spatial_batch<P: SpatialPredicate + Sync + Copy>(
+        &self,
+        space: &ExecSpace,
+        items: &[(u32, P)],
+        slots: &[QuerySlot],
+        agg: &BatchAgg,
+    ) {
+        if items.is_empty() || self.ranks.is_empty() {
+            return;
+        }
+        // Phase 1: forward the whole sub-batch through the top tree.
+        let mut cand: Vec<Vec<u32>> = vec![Vec::new(); items.len()];
+        {
+            let cp = SendPtr(cand.as_mut_ptr());
+            space.parallel_for_chunks(items.len(), |b, e| {
+                let mut stack = Vec::with_capacity(32);
+                for i in b..e {
+                    let mut ranks = Vec::new();
+                    for_each_spatial(&self.top, &items[i].1, &mut stack, |r| ranks.push(r));
+                    // SAFETY: one writer per item index.
+                    unsafe { cp.write(i, ranks) };
+                }
+            });
+        }
+        let mut per_rank: Vec<Vec<u32>> = vec![Vec::new(); self.ranks.len()];
+        for (pos, ranks) in cand.iter().enumerate() {
+            for &r in ranks {
+                per_rank[r as usize].push(pos as u32);
+            }
+        }
+        // Phase 2: one task per candidate rank, claimed dynamically by
+        // the pool; the local engines run serially inside their task.
+        let tasks: Vec<(usize, Vec<u32>)> =
+            per_rank.into_iter().enumerate().filter(|(_, v)| !v.is_empty()).collect();
+        space.parallel_tasks(tasks.len(), |t| {
+            // The local engines run serially inside their task (a serial
+            // space is pool-free, so constructing one per task is free).
+            let serial = ExecSpace::serial();
+            let (rank, positions) = &tasks[t];
+            agg.note_rank(*rank, positions.len());
+            let shard = &self.ranks[*rank];
+            let typed: Vec<P> = positions.iter().map(|&p| items[p as usize].1).collect();
+            // Task-local match counter, flushed once per rank task: a
+            // shared per-match atomic would make the rank-parallel tasks
+            // ping-pong one cache line on the hottest loop of the engine.
+            let streamed = AtomicUsize::new(0);
+            shard.bvh.query_with_callback(&serial, &typed, |qi, obj| {
+                let qid = items[positions[qi as usize] as usize].0 as usize;
+                match &slots[qid] {
+                    QuerySlot::Spatial(m) => m.lock().unwrap().push(shard.global[obj as usize]),
+                    _ => unreachable!("spatial query routed to a non-spatial slot"),
+                }
+                streamed.fetch_add(1, Ordering::Relaxed);
+            });
+            agg.streamed.fetch_add(streamed.into_inner(), Ordering::Relaxed);
+        });
+    }
+
+    /// Batched nearest execution in two forwarding waves. Wave A runs
+    /// every query on its *closest* rank (smallest scene-box lower
+    /// bound) to seed the per-query global bound; wave B forwards each
+    /// query to every remaining rank whose lower bound can still beat
+    /// (or tie) that bound. Both waves execute rank-parallel through
+    /// [`Bvh::query_nearest`] and merge through the per-query heaps, so
+    /// the exclusion is exact: a skipped rank's every object is strictly
+    /// farther than the k-th retained candidate.
+    fn nearest_batch<G: DistanceTo + Copy + Sync>(
+        &self,
+        space: &ExecSpace,
+        items: &[(u32, Nearest<G>)],
+        slots: &[QuerySlot],
+        agg: &BatchAgg,
+    ) {
+        if items.is_empty() {
+            return;
+        }
+        let nonempty: Vec<usize> =
+            (0..self.ranks.len()).filter(|&r| !self.ranks[r].bvh.is_empty()).collect();
+        if nonempty.is_empty() {
+            return;
+        }
+        // Wave A: each query's closest rank (ties to the smaller rank
+        // index, like the sequential walk's stable bound sort).
+        let mut primary: Vec<u32> = vec![0; items.len()];
+        {
+            let pp = SendPtr(primary.as_mut_ptr());
+            space.parallel_for_chunks(items.len(), |b, e| {
+                for i in b..e {
+                    let g = &items[i].1.geometry;
+                    let mut best_r = nonempty[0];
+                    let mut best_d = g.lower_bound(&self.ranks[best_r].bvh.scene_box());
+                    for &r in &nonempty[1..] {
+                        let d = g.lower_bound(&self.ranks[r].bvh.scene_box());
+                        if d < best_d {
+                            best_d = d;
+                            best_r = r;
+                        }
+                    }
+                    // SAFETY: one writer per item index.
+                    unsafe { pp.write(i, best_r as u32) };
+                }
+            });
+        }
+        let mut per_rank: Vec<Vec<u32>> = vec![Vec::new(); self.ranks.len()];
+        for (i, (_, n)) in items.iter().enumerate() {
+            if n.k > 0 {
+                per_rank[primary[i] as usize].push(i as u32);
+            }
+        }
+        self.run_nearest_tasks(space, items, slots, agg, per_rank);
+
+        // Wave B: every other rank that can still improve the seeded
+        // bound (inclusive on ties so the global (distance, index)
+        // tie-break stays exact).
+        let mut per_rank: Vec<Vec<u32>> = vec![Vec::new(); self.ranks.len()];
+        for (i, (qid, n)) in items.iter().enumerate() {
+            if n.k == 0 {
+                continue;
+            }
+            let bound = match &slots[*qid as usize] {
+                QuerySlot::Nearest(m) => m.lock().unwrap().bound(),
+                _ => unreachable!("nearest query routed to a non-nearest slot"),
+            };
+            for &r in &nonempty {
+                if r as u32 == primary[i] {
+                    continue;
+                }
+                if n.geometry.lower_bound(&self.ranks[r].bvh.scene_box()) <= bound {
+                    per_rank[r].push(i as u32);
+                }
+            }
+        }
+        self.run_nearest_tasks(space, items, slots, agg, per_rank);
+    }
+
+    /// Runs one wave of per-rank nearest sub-batches (rank-parallel) and
+    /// merges each rank's local k-best into the per-query global heaps.
+    fn run_nearest_tasks<G: DistanceTo + Copy + Sync>(
+        &self,
+        space: &ExecSpace,
+        items: &[(u32, Nearest<G>)],
+        slots: &[QuerySlot],
+        agg: &BatchAgg,
+        per_rank: Vec<Vec<u32>>,
+    ) {
+        let tasks: Vec<(usize, Vec<u32>)> =
+            per_rank.into_iter().enumerate().filter(|(_, v)| !v.is_empty()).collect();
+        space.parallel_tasks(tasks.len(), |t| {
+            let serial = ExecSpace::serial();
+            let (rank, positions) = &tasks[t];
+            agg.note_rank(*rank, positions.len());
+            let shard = &self.ranks[*rank];
+            let typed: Vec<Nearest<G>> = positions.iter().map(|&p| items[p as usize].1).collect();
+            let out = shard.bvh.query_nearest(&serial, &typed, true);
+            for (j, &p) in positions.iter().enumerate() {
+                let qid = items[p as usize].0 as usize;
+                let heap = match &slots[qid] {
+                    QuerySlot::Nearest(m) => m,
+                    _ => unreachable!("nearest query routed to a non-nearest slot"),
+                };
+                let mut heap = heap.lock().unwrap();
+                for (idx, d) in out.results_for(j).iter().zip(out.distances_for(j)) {
+                    heap.offer(*d, shard.global[*idx as usize]);
+                }
+            }
+        });
+    }
+
+    /// Batched first-hit execution, the ray analogue of
+    /// [`DistributedTree::nearest_batch`]: wave A casts every ray on the
+    /// rank it enters first (seeding the best-hit bound), wave B on
+    /// every remaining rank whose scene-box entry does not lie strictly
+    /// behind it. Rank sub-batches run through [`Bvh::query_first_hit`];
+    /// merging uses the exact `(t, global index)` offer.
+    fn first_hit_batch(
+        &self,
+        space: &ExecSpace,
+        items: &[(u32, Ray)],
+        slots: &[QuerySlot],
+        agg: &BatchAgg,
+    ) {
+        if items.is_empty() {
+            return;
+        }
+        let nonempty: Vec<usize> =
+            (0..self.ranks.len()).filter(|&r| !self.ranks[r].bvh.is_empty()).collect();
+        if nonempty.is_empty() {
+            return;
+        }
+        // Wave A: the earliest-entered rank per ray (`MISS` sentinel
+        // when the ray misses every rank's scene box).
+        const MISS: u32 = u32::MAX;
+        let mut primary: Vec<u32> = vec![MISS; items.len()];
+        {
+            let pp = SendPtr(primary.as_mut_ptr());
+            space.parallel_for_chunks(items.len(), |b, e| {
+                for i in b..e {
+                    let ray = &items[i].1;
+                    let mut best: Option<(f32, usize)> = None;
+                    for &r in &nonempty {
+                        if let Some(t) = ray.box_entry(&self.ranks[r].bvh.scene_box()) {
+                            if best.map_or(true, |(bt, _)| t < bt) {
+                                best = Some((t, r));
+                            }
+                        }
+                    }
+                    if let Some((_, r)) = best {
+                        // SAFETY: one writer per item index.
+                        unsafe { pp.write(i, r as u32) };
+                    }
+                }
+            });
+        }
+        let mut per_rank: Vec<Vec<u32>> = vec![Vec::new(); self.ranks.len()];
+        for (i, _) in items.iter().enumerate() {
+            if primary[i] != MISS {
+                per_rank[primary[i] as usize].push(i as u32);
+            }
+        }
+        self.run_first_hit_tasks(space, items, slots, agg, per_rank);
+
+        // Wave B: ranks entered at or before the seeded best hit (equal
+        // entries stay in so the (t, index) tie-break is exact; strictly
+        // later entries provably cannot improve it).
+        let mut per_rank: Vec<Vec<u32>> = vec![Vec::new(); self.ranks.len()];
+        for (i, (qid, ray)) in items.iter().enumerate() {
+            if primary[i] == MISS {
+                continue;
+            }
+            let bound = match &slots[*qid as usize] {
+                QuerySlot::FirstHit(m) => m.lock().unwrap().map_or(f32::INFINITY, |h| h.t),
+                _ => unreachable!("first-hit query routed to a non-first-hit slot"),
+            };
+            for &r in &nonempty {
+                if r as u32 == primary[i] {
+                    continue;
+                }
+                if let Some(t) = ray.box_entry(&self.ranks[r].bvh.scene_box()) {
+                    if t <= bound {
+                        per_rank[r].push(i as u32);
+                    }
+                }
+            }
+        }
+        self.run_first_hit_tasks(space, items, slots, agg, per_rank);
+    }
+
+    /// Runs one wave of per-rank first-hit sub-batches (rank-parallel)
+    /// and offers each rank's local best hit into the per-query slots.
+    fn run_first_hit_tasks(
+        &self,
+        space: &ExecSpace,
+        items: &[(u32, Ray)],
+        slots: &[QuerySlot],
+        agg: &BatchAgg,
+        per_rank: Vec<Vec<u32>>,
+    ) {
+        let tasks: Vec<(usize, Vec<u32>)> =
+            per_rank.into_iter().enumerate().filter(|(_, v)| !v.is_empty()).collect();
+        space.parallel_tasks(tasks.len(), |t| {
+            let serial = ExecSpace::serial();
+            let (rank, positions) = &tasks[t];
+            agg.note_rank(*rank, positions.len());
+            let shard = &self.ranks[*rank];
+            let typed: Vec<FirstHit> =
+                positions.iter().map(|&p| FirstHit(items[p as usize].1)).collect();
+            let hits = shard.bvh.query_first_hit(&serial, &typed, true);
+            for (j, &p) in positions.iter().enumerate() {
+                if let Some(h) = hits[j] {
+                    let qid = items[p as usize].0 as usize;
+                    match &slots[qid] {
+                        QuerySlot::FirstHit(m) => first_hit::offer_hit(
+                            &mut m.lock().unwrap(),
+                            h.t,
+                            shard.global[h.index as usize],
+                        ),
+                        _ => unreachable!("first-hit query routed to a non-first-hit slot"),
+                    }
+                }
+            }
+        });
     }
 
     /// Wire-level entry point: executes one open-family predicate. All
@@ -210,7 +737,10 @@ impl DistributedTree {
             .filter(|(_, s)| !s.bvh.is_empty())
             .filter_map(|(i, s)| ray.box_entry(&s.bvh.scene_box()).map(|t| (i, t)))
             .collect();
-        rank_entry.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        // `total_cmp`, not `partial_cmp(..).unwrap()`: entry parameters
+        // are finite for well-formed rays, but a NaN-poisoned ray from a
+        // buggy caller must degrade to a wrong order, never a panic.
+        rank_entry.sort_by(|a, b| a.1.total_cmp(&b.1));
         let mut best: Option<RayHit> = None;
         let mut stack = Vec::new();
         let mut contacted = 0usize;
@@ -224,7 +754,13 @@ impl DistributedTree {
                 first_hit::offer_hit(&mut best, local.t, shard.global[local.index as usize]);
             }
         }
-        let stats = DistStats { ranks_contacted: contacted, results: best.is_some() as usize };
+        let stats = DistStats {
+            ranks_contacted: contacted,
+            results: best.is_some() as usize,
+            forwarded_queries: contacted,
+            streamed_results: 0,
+            worker_threads: 1,
+        };
         (best, stats)
     }
 
@@ -243,6 +779,12 @@ impl DistributedTree {
     /// the k-best set (its bound exceeds the current worst retained
     /// distance). Equal-bound ranks are still visited, keeping the
     /// (distance, global index) tie-break exact.
+    ///
+    /// Every visited rank's local traversal runs *seeded* with the
+    /// running global heap ([`nearest::nearest_into_heap`]): the bound
+    /// established by earlier ranks prunes this rank's subtrees from the
+    /// root down, instead of re-running a full unbounded search whose
+    /// locally-best candidates are already globally beaten.
     pub fn nearest_to<G: DistanceTo + Copy>(
         &self,
         geometry: &G,
@@ -252,7 +794,8 @@ impl DistributedTree {
         if self.is_empty() || k == 0 {
             return (out, DistStats::default());
         }
-        // Bound-ordered rank walk: ascending scene-box lower bound.
+        // Bound-ordered rank walk: ascending scene-box lower bound
+        // (`total_cmp` so NaN geometry cannot panic the sort).
         let mut rank_dist: Vec<(usize, f32)> = self
             .ranks
             .iter()
@@ -260,11 +803,10 @@ impl DistributedTree {
             .filter(|(_, s)| !s.bvh.is_empty())
             .map(|(i, s)| (i, geometry.lower_bound(&s.bvh.scene_box())))
             .collect();
-        rank_dist.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        rank_dist.sort_by(|a, b| a.1.total_cmp(&b.1));
 
         let mut heap = KnnHeap::new(k);
-        let mut scratch = NearestScratch::new(k);
-        let mut local = Vec::new();
+        let mut stack = Vec::new();
         let mut contacted = 0usize;
         for (ri, d) in rank_dist {
             if d > heap.bound() {
@@ -272,35 +814,50 @@ impl DistributedTree {
             }
             contacted += 1;
             let shard = &self.ranks[ri];
-            nearest::nearest_stack(
+            nearest::nearest_into_heap(
                 &shard.bvh,
                 &Nearest::new(*geometry, k),
-                &mut scratch,
-                &mut local,
+                &mut stack,
+                &mut heap,
+                |local| shard.global[local as usize],
             );
-            for nb in &local {
-                heap.offer(nb.distance_squared, shard.global[nb.index as usize]);
-            }
         }
         heap.drain_sorted_into(&mut out);
-        let stats = DistStats { ranks_contacted: contacted, results: out.len() };
+        let stats = DistStats {
+            ranks_contacted: contacted,
+            results: out.len(),
+            forwarded_queries: contacted,
+            streamed_results: 0,
+            worker_threads: 1,
+        };
         (out, stats)
     }
 }
 
-/// Communication statistics of one distributed query.
+/// Communication statistics of one distributed execution (a single
+/// query, or one whole [`DistributedTree::query_batch`]).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct DistStats {
-    /// Ranks whose local tree was queried.
+    /// Distinct ranks whose local tree was queried.
     pub ranks_contacted: usize,
     /// Total results returned.
     pub results: usize,
+    /// Total (query, rank) pairs forwarded to a rank engine — the
+    /// simulated communication volume of phase 1.
+    pub forwarded_queries: usize,
+    /// Matches that streamed through the spatial callback path straight
+    /// into per-query accumulators (no per-rank result vector).
+    pub streamed_results: usize,
+    /// Distinct threads that executed rank sub-batches (1 on the
+    /// single-query walks and under [`ExecSpace::serial`]).
+    pub worker_threads: usize,
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::baselines::brute::BruteForce;
+    use crate::bvh::QueryOptions;
     use crate::data::rng::Rng;
     use crate::geometry::predicates::{IntersectsRay, Spatial};
     use crate::geometry::{Ray, Sphere};
@@ -338,8 +895,41 @@ mod tests {
                 let (got, stats) = dt.spatial(&pred);
                 assert_eq!(got, brute.spatial(&pred), "{partition:?}");
                 assert!(stats.ranks_contacted <= 7);
+                assert_eq!(stats.streamed_results, got.len());
             }
         }
+    }
+
+    #[test]
+    fn build_distributes_the_remainder_evenly() {
+        // Regression: `shard_size = n.div_ceil(n_ranks)` created 3 shards
+        // of {2, 2, 2} for n = 6, n_ranks = 4 — `n_ranks()` lied and the
+        // shards were unbalanced. Now: exactly min(n_ranks, n) non-empty
+        // shards, sizes differing by at most one.
+        let space = ExecSpace::serial();
+        let boxes = cloud(6, 11);
+        let brute = BruteForce::new(&boxes);
+        for partition in [Partition::Block, Partition::MortonBlock] {
+            let dt = DistributedTree::build(&space, &boxes, 4, partition);
+            assert_eq!(dt.n_ranks(), 4, "{partition:?}");
+            assert_eq!(dt.len(), 6);
+            let mut sizes: Vec<usize> = (0..4).map(|r| dt.rank_len(r)).collect();
+            sizes.sort_unstable();
+            assert_eq!(sizes, vec![1, 1, 2, 2], "{partition:?}");
+            // Answers still match the oracle across the new layout.
+            let pred = Spatial::IntersectsSphere(Sphere::new(Point::origin(), 20.0));
+            let (got, stats) = dt.spatial(&pred);
+            assert_eq!(got, brute.spatial(&pred));
+            assert_eq!(stats.ranks_contacted, 4);
+        }
+        // More ranks than objects: one object per rank, no empty ranks.
+        let dt = DistributedTree::build(&space, &cloud(3, 5), 5, Partition::Block);
+        assert_eq!(dt.n_ranks(), 3);
+        assert!((0..3).all(|r| dt.rank_len(r) == 1));
+        // Balanced split when the remainder is zero.
+        let dt = DistributedTree::build(&space, &cloud(12, 5), 4, Partition::Block);
+        assert_eq!(dt.n_ranks(), 4);
+        assert!((0..4).all(|r| dt.rank_len(r) == 3));
     }
 
     #[test]
@@ -493,6 +1083,124 @@ mod tests {
     }
 
     #[test]
+    fn query_batch_matches_per_query_execution() {
+        // The streaming batched engine is bit-for-bit the per-query
+        // forward/merge walk, across partitions and exec spaces.
+        let boxes = cloud(1200, 47);
+        let brute = BruteForce::new(&boxes);
+        let mut rng = Rng::new(53);
+        let mut preds = Vec::new();
+        for i in 0..120 {
+            let p = Point::new(
+                rng.uniform(-8.0, 8.0),
+                rng.uniform(-8.0, 8.0),
+                rng.uniform(-8.0, 8.0),
+            );
+            preds.push(match i % 6 {
+                0 => QueryPredicate::intersects_sphere(p, 2.0),
+                1 => QueryPredicate::intersects_box(Aabb::new(p, p + Point::splat(2.0))),
+                2 => QueryPredicate::attach(
+                    Spatial::IntersectsRay(Ray::new(p, Point::new(0.2, 1.0, -0.4))),
+                    i as u64,
+                ),
+                3 => QueryPredicate::nearest(p, 1 + i % 7),
+                4 => QueryPredicate::nearest_sphere(Sphere::new(p, 1.5), 4),
+                _ => QueryPredicate::first_hit(Ray::new(p, Point::new(0.0, 0.0, 1.0))),
+            });
+        }
+        for partition in [Partition::Block, Partition::MortonBlock] {
+            for space in [ExecSpace::serial(), ExecSpace::with_threads(4)] {
+                let dt = DistributedTree::build(&space, &boxes, 6, partition);
+                let (out, stats) = dt.query_batch(&space, &preds);
+                assert_eq!(out.offsets.len(), preds.len() + 1);
+                let mut spatial_total = 0usize;
+                for (i, p) in preds.iter().enumerate() {
+                    let (want_idx, want_dist, _) = dt.query_predicate(p);
+                    assert_eq!(out.results_for(i), &want_idx[..], "{partition:?} query {i}");
+                    match p {
+                        QueryPredicate::Spatial(s) | QueryPredicate::Attach(s, _) => {
+                            spatial_total += want_idx.len();
+                            assert_eq!(out.results_for(i), &brute.spatial(s)[..]);
+                        }
+                        _ => {
+                            assert_eq!(
+                                out.distances_for(i),
+                                &want_dist[..],
+                                "{partition:?} distances {i}"
+                            );
+                        }
+                    }
+                }
+                // Spatial matches streamed through the callback path —
+                // never via per-rank result vectors.
+                assert_eq!(stats.streamed_results, spatial_total, "{partition:?}");
+                assert_eq!(stats.results, out.total());
+                assert!(stats.forwarded_queries >= stats.ranks_contacted);
+            }
+        }
+    }
+
+    #[test]
+    fn query_batch_runs_ranks_on_multiple_workers() {
+        // Rank-level parallelism: a threaded space spreads rank
+        // sub-batches across pool workers (the per-query path never
+        // touched a thread). Dynamic claiming means a single run could
+        // in principle land on one worker; retry a few heavy rounds.
+        let space = ExecSpace::with_threads(4);
+        let boxes = cloud(16_000, 3);
+        let dt = DistributedTree::build(&space, &boxes, 12, Partition::MortonBlock);
+        let mut rng = Rng::new(8);
+        let preds: Vec<QueryPredicate> = (0..1500)
+            .map(|_| {
+                let p = Point::new(
+                    rng.uniform(-8.0, 8.0),
+                    rng.uniform(-8.0, 8.0),
+                    rng.uniform(-8.0, 8.0),
+                );
+                QueryPredicate::intersects_sphere(p, 3.0)
+            })
+            .collect();
+        let mut workers = 0usize;
+        for _ in 0..5 {
+            let (_, stats) = dt.query_batch(&space, &preds);
+            workers = workers.max(stats.worker_threads);
+            if workers >= 2 {
+                break;
+            }
+        }
+        assert!(workers >= 2, "rank sub-batches stayed on one worker");
+        // Serial execution reports a single worker and identical answers.
+        let serial = ExecSpace::serial();
+        let (a, sa) = dt.query_batch(&serial, &preds);
+        let (b, _) = dt.query_batch(&space, &preds);
+        assert_eq!(sa.worker_threads, 1);
+        assert_eq!(a.offsets, b.offsets);
+        assert_eq!(a.indices, b.indices);
+    }
+
+    #[test]
+    fn empty_batches_and_empty_trees() {
+        let space = ExecSpace::serial();
+        let dt = DistributedTree::build(&space, &cloud(100, 2), 4, Partition::Block);
+        let (out, stats) = dt.query_batch(&space, &[]);
+        assert_eq!(out.offsets, vec![0]);
+        assert!(out.indices.is_empty());
+        assert_eq!(stats, DistStats::default());
+        // An empty tree answers every kind with nothing.
+        let empty = DistributedTree::build(&space, &[], 4, Partition::Block);
+        assert_eq!(empty.n_ranks(), 0);
+        let preds = [
+            QueryPredicate::intersects_sphere(Point::origin(), 5.0),
+            QueryPredicate::nearest(Point::origin(), 3),
+            QueryPredicate::first_hit(Ray::new(Point::origin(), Point::new(1.0, 0.0, 0.0))),
+        ];
+        let (out, stats) = empty.query_batch(&space, &preds);
+        assert_eq!(out.total(), 0);
+        assert_eq!(stats.ranks_contacted, 0);
+        assert_eq!(stats.forwarded_queries, 0);
+    }
+
+    #[test]
     fn within_shard_ties_are_global_index_order_under_morton_partition() {
         // Regression: shards used to store objects in Morton order, so
         // the local traversals' (distance, index) tie-break ran on
@@ -587,6 +1295,13 @@ mod tests {
         assert_eq!(hit, None);
         assert_eq!(stats.ranks_contacted, 0);
         assert_eq!(stats.results, 0);
+        // The batched engine prunes the far rank too: its scene-box
+        // entry lies strictly behind the wave-A hit.
+        let space = ExecSpace::serial();
+        let (out, bstats) = dt.query_batch(&space, &[QueryPredicate::first_hit(ray)]);
+        assert_eq!(out.results_for(0), &[0]);
+        assert_eq!(out.distances_for(0), &[1.0]);
+        assert_eq!(bstats.ranks_contacted, 1, "wave B must skip the far rank");
     }
 
     #[test]
@@ -606,5 +1321,47 @@ mod tests {
         assert!(dt.is_empty());
         let (nn, _) = dt.nearest(&Point::origin(), 5);
         assert!(nn.is_empty());
+    }
+
+    #[test]
+    fn batch_rows_agree_with_the_single_tree_facade() {
+        // One more cross-check: the distributed batch equals the plain
+        // single-tree facade engine on the same predicates (CSR layout
+        // included), which is what the service's two backends promise.
+        let space = ExecSpace::with_threads(2);
+        let boxes = cloud(900, 61);
+        let bvh = Bvh::build(&space, &boxes);
+        let dt = DistributedTree::build(&space, &boxes, 5, Partition::MortonBlock);
+        let mut rng = Rng::new(21);
+        let preds: Vec<QueryPredicate> = (0..90)
+            .map(|i| {
+                let p = Point::new(
+                    rng.uniform(-8.0, 8.0),
+                    rng.uniform(-8.0, 8.0),
+                    rng.uniform(-8.0, 8.0),
+                );
+                match i % 3 {
+                    0 => QueryPredicate::intersects_sphere(p, 2.5),
+                    1 => QueryPredicate::nearest(p, 6),
+                    _ => QueryPredicate::first_hit(Ray::new(p, Point::new(1.0, 0.0, 0.0))),
+                }
+            })
+            .collect();
+        let single = bvh.query(&space, &preds, &QueryOptions::default());
+        let (dist, _) = dt.query_batch(&space, &preds);
+        assert_eq!(dist.offsets, single.offsets);
+        for (i, p) in preds.iter().enumerate() {
+            match p {
+                QueryPredicate::Spatial(_) | QueryPredicate::Attach(..) => {
+                    let mut want = single.results_for(i).to_vec();
+                    want.sort_unstable();
+                    assert_eq!(dist.results_for(i), &want[..], "query {i}");
+                }
+                _ => {
+                    assert_eq!(dist.results_for(i), single.results_for(i), "query {i}");
+                    assert_eq!(dist.distances_for(i), single.distances_for(i), "query {i}");
+                }
+            }
+        }
     }
 }

@@ -154,6 +154,14 @@ pub struct Metrics {
     first_hit_casts: AtomicU64,
     /// First-hit casts that found an object.
     first_hit_hits: AtomicU64,
+    /// Batches executed through the distributed backend.
+    distributed_batches: AtomicU64,
+    /// (query, rank) forwarding pairs executed by the distributed
+    /// backend — the simulated communication volume.
+    forwarded_queries: AtomicU64,
+    /// Matches streamed through the distributed spatial callback path
+    /// (straight into per-query accumulators, no per-rank vectors).
+    streamed_results: AtomicU64,
     /// Per-request latencies in microseconds (bounded reservoir).
     latencies_us: Mutex<Vec<u64>>,
 }
@@ -172,6 +180,9 @@ impl Default for Metrics {
             overflowed_queries: AtomicU64::new(0),
             first_hit_casts: AtomicU64::new(0),
             first_hit_hits: AtomicU64::new(0),
+            distributed_batches: AtomicU64::new(0),
+            forwarded_queries: AtomicU64::new(0),
+            streamed_results: AtomicU64::new(0),
             latencies_us: Mutex::new(Vec::new()),
         }
     }
@@ -289,6 +300,31 @@ impl Metrics {
         self.first_hit_hits.load(Ordering::Relaxed)
     }
 
+    /// Records one batch executed by the distributed backend: its
+    /// phase-1 communication volume (`forwarded` (query, rank) pairs)
+    /// and the matches streamed through the spatial callback path.
+    pub fn record_distributed(&self, forwarded: u64, streamed: u64) {
+        self.distributed_batches.fetch_add(1, Ordering::Relaxed);
+        self.forwarded_queries.fetch_add(forwarded, Ordering::Relaxed);
+        self.streamed_results.fetch_add(streamed, Ordering::Relaxed);
+    }
+
+    /// Batches executed through the distributed backend.
+    pub fn distributed_batches(&self) -> u64 {
+        self.distributed_batches.load(Ordering::Relaxed)
+    }
+
+    /// (query, rank) forwarding pairs executed by the distributed
+    /// backend.
+    pub fn forwarded_queries(&self) -> u64 {
+        self.forwarded_queries.load(Ordering::Relaxed)
+    }
+
+    /// Matches streamed through the distributed spatial callback path.
+    pub fn streamed_results(&self) -> u64 {
+        self.streamed_results.load(Ordering::Relaxed)
+    }
+
     /// Requests per second since service start.
     pub fn throughput(&self) -> f64 {
         let secs = self.started.elapsed().as_secs_f64();
@@ -316,7 +352,7 @@ impl Metrics {
         format!(
             "requests={} batches={} results={} throughput={:.0}/s \
              p50={}us p95={}us p99={}us passes(1p/fallback/2p)={}/{}/{} \
-             first_hit={}/{}",
+             first_hit={}/{} dist(batches/forwarded/streamed)={}/{}/{}",
             self.requests(),
             self.batches(),
             self.results(),
@@ -329,6 +365,9 @@ impl Metrics {
             self.two_pass_batches(),
             self.first_hit_hits(),
             self.first_hit_casts(),
+            self.distributed_batches(),
+            self.forwarded_queries(),
+            self.streamed_results(),
         )
     }
 }
@@ -372,6 +411,18 @@ mod tests {
         assert_eq!(m.first_hit_casts(), 15);
         assert_eq!(m.first_hit_hits(), 7);
         assert!(m.summary().contains("first_hit=7/15"));
+    }
+
+    #[test]
+    fn distributed_counters_accumulate() {
+        let m = Metrics::default();
+        assert_eq!(m.distributed_batches(), 0);
+        m.record_distributed(12, 340);
+        m.record_distributed(3, 0);
+        assert_eq!(m.distributed_batches(), 2);
+        assert_eq!(m.forwarded_queries(), 15);
+        assert_eq!(m.streamed_results(), 340);
+        assert!(m.summary().contains("dist(batches/forwarded/streamed)=2/15/340"));
     }
 
     #[test]

@@ -21,8 +21,13 @@
 //! * [`distributed`] — the paper's §4 outlook ("implementing the
 //!   distributed search algorithms using MPI"): a simulated multi-rank
 //!   distributed tree — per-rank BVHs plus a top-level tree over rank
-//!   scene boxes, with two-phase forward/merge query execution carrying
-//!   every wire kind.
+//!   scene boxes, with a *streaming batched* two-phase engine
+//!   (`DistributedTree::query_batch`): batched phase-1 forwarding over
+//!   the top tree, rank-parallel phase-2 execution through the
+//!   monomorphized engines (spatial matches stream through
+//!   `query_with_callback` with no per-rank result vectors), and a
+//!   caller-order CSR merge. The service can be started over either
+//!   backend (`service::Backend`); the wire protocol is identical.
 
 pub mod distributed;
 pub mod metrics;

@@ -31,13 +31,30 @@
 //! fast single-pass path while staying safe on §3.2 hollow-style
 //! workloads, where a static buffer is either mis-sized (mass fallback
 //! second passes) or prohibitively large.
+//!
+//! The executor behind the coordinator loop is a [`Backend`]: a single
+//! local tree ([`SearchService::start`], batches through
+//! [`execute_sub_batched`]) or a simulated multi-rank distributed tree
+//! ([`SearchService::start_distributed`], batches through the streaming
+//! two-phase [`DistributedTree::query_batch`] with rank-level
+//! parallelism on the service's worker threads). The wire protocol and
+//! client API are identical either way.
+//!
+//! The client API is `Result`-based: [`SearchService::submit`] returns
+//! [`SubmitError::Stopped`] once the service stops (requests accepted
+//! earlier are still drained and answered — shutdown is
+//! drain-then-exit), and [`Pending::wait`] returns
+//! [`WaitError::ServiceDropped`] if the coordinator died without
+//! answering. No panic is reachable from the public API under
+//! shutdown-with-in-flight-queries.
 
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use super::distributed::DistributedTree;
 use super::metrics::{Metrics, SubBatchPass};
 use crate::bvh::{Bvh, PredicateKind, QueryOptions, QueryPredicate};
 use crate::exec::ExecSpace;
@@ -122,14 +139,96 @@ struct Request {
     enqueued: Instant,
 }
 
+/// Why a submission was refused. The service API is `Result`-based so a
+/// shutdown race (or garbage bytes on the wire front door) degrades to
+/// an error the caller handles, never a panic.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The service has been stopped (or is shutting down and no longer
+    /// accepts work). Requests accepted *before* the stop are still
+    /// drained and answered.
+    Stopped,
+    /// [`SearchService::submit_encoded`] could not decode the bytes as
+    /// exactly one well-formed wire predicate.
+    Malformed,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Stopped => write!(f, "service stopped"),
+            SubmitError::Malformed => write!(f, "malformed encoded predicate"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Why a pending result will never arrive.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WaitError {
+    /// The service dropped the response channel without answering —
+    /// only possible when the coordinator thread died abnormally (a
+    /// clean shutdown drains every accepted request first).
+    ServiceDropped,
+}
+
+impl std::fmt::Display for WaitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WaitError::ServiceDropped => write!(f, "service dropped the response channel"),
+        }
+    }
+}
+
+impl std::error::Error for WaitError {}
+
+/// Why [`SearchService::query`] (submit + wait) failed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QueryError {
+    /// The submission was refused ([`SubmitError::Stopped`]).
+    Stopped,
+    /// The result never arrived ([`WaitError::ServiceDropped`]).
+    ServiceDropped,
+}
+
+impl std::fmt::Display for QueryError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            QueryError::Stopped => write!(f, "service stopped"),
+            QueryError::ServiceDropped => write!(f, "service dropped the response channel"),
+        }
+    }
+}
+
+impl std::error::Error for QueryError {}
+
 /// A handle on a pending query result.
 pub struct Pending(Receiver<QueryResult>);
 
 impl Pending {
-    /// Blocks until the result arrives.
-    pub fn wait(self) -> QueryResult {
-        self.0.recv().expect("service dropped the response channel")
+    /// Blocks until the result arrives. Returns
+    /// [`WaitError::ServiceDropped`] (instead of panicking) if the
+    /// coordinator died without answering; a clean
+    /// [`SearchService::shutdown`] drains accepted requests first, so
+    /// handles obtained before the stop still resolve `Ok`.
+    pub fn wait(self) -> Result<QueryResult, WaitError> {
+        self.0.recv().map_err(|_| WaitError::ServiceDropped)
     }
+}
+
+/// What a [`SearchService`] executes batches against: one local tree,
+/// or a simulated multi-rank distributed tree. The wire protocol, the
+/// batcher, and the client API are identical either way — only the
+/// executor behind the coordinator loop changes.
+pub enum Backend {
+    /// A single local BVH; batches run through the per-kind
+    /// sub-batcher ([`execute_sub_batched`]).
+    Single(Arc<Bvh>),
+    /// A distributed tree; batches run through the streaming two-phase
+    /// engine ([`DistributedTree::query_batch`]) with rank-level
+    /// parallelism on the service's worker threads.
+    Distributed(Arc<DistributedTree>),
 }
 
 /// The running search service (see module docs).
@@ -144,6 +243,18 @@ impl SearchService {
     /// Starts a service over a built tree. The tree is shared (`Arc`) so
     /// the caller can keep issuing direct batched queries too.
     pub fn start(bvh: Arc<Bvh>, config: ServiceConfig) -> SearchService {
+        SearchService::start_backend(Backend::Single(bvh), config)
+    }
+
+    /// Starts a service over a distributed tree: the same wire protocol
+    /// and batcher, with each coalesced batch executed by the streaming
+    /// two-phase distributed engine.
+    pub fn start_distributed(tree: Arc<DistributedTree>, config: ServiceConfig) -> SearchService {
+        SearchService::start_backend(Backend::Distributed(tree), config)
+    }
+
+    /// Starts a service over any [`Backend`].
+    pub fn start_backend(backend: Backend, config: ServiceConfig) -> SearchService {
         let (tx, rx) = channel::<Request>();
         let metrics = Arc::new(Metrics::default());
         let stopping = Arc::new(AtomicBool::new(false));
@@ -151,7 +262,7 @@ impl SearchService {
         let stop_flag = Arc::clone(&stopping);
         let worker = std::thread::spawn(move || {
             let space = ExecSpace::with_threads(config.threads);
-            coordinator_loop(&bvh, &space, &config, rx, &m, &stop_flag);
+            coordinator_loop(&backend, &space, &config, rx, &m, &stop_flag);
         });
         SearchService {
             tx: Mutex::new(Some(tx)),
@@ -161,30 +272,35 @@ impl SearchService {
         }
     }
 
-    /// Submits a query; returns a handle to await the result.
-    pub fn submit(&self, pred: QueryPredicate) -> Pending {
+    /// Submits a query; returns a handle to await the result, or
+    /// [`SubmitError::Stopped`] when the service no longer accepts work
+    /// (it used to panic here).
+    pub fn submit(&self, pred: QueryPredicate) -> Result<Pending, SubmitError> {
         let (resp_tx, resp_rx) = channel();
         let guard = self.tx.lock().unwrap();
-        let tx = guard.as_ref().expect("service stopped");
+        let tx = guard.as_ref().ok_or(SubmitError::Stopped)?;
         tx.send(Request { pred, resp: resp_tx, enqueued: Instant::now() })
-            .expect("coordinator thread died");
-        Pending(resp_rx)
+            .map_err(|_| SubmitError::Stopped)?;
+        Ok(Pending(resp_rx))
     }
 
     /// Decodes one byte-encoded predicate (see [`super::wire`]) and
-    /// submits it. Returns `None` when `bytes` is not exactly one
-    /// well-formed encoded predicate.
-    pub fn submit_encoded(&self, bytes: &[u8]) -> Option<Pending> {
-        let (pred, used) = super::wire::decode(bytes)?;
+    /// submits it. [`SubmitError::Malformed`] when `bytes` is not
+    /// exactly one well-formed encoded predicate,
+    /// [`SubmitError::Stopped`] when the service no longer accepts
+    /// work.
+    pub fn submit_encoded(&self, bytes: &[u8]) -> Result<Pending, SubmitError> {
+        let (pred, used) = super::wire::decode(bytes).ok_or(SubmitError::Malformed)?;
         if used != bytes.len() {
-            return None;
+            return Err(SubmitError::Malformed);
         }
-        Some(self.submit(pred))
+        self.submit(pred)
     }
 
     /// Convenience: submit and wait.
-    pub fn query(&self, pred: QueryPredicate) -> QueryResult {
-        self.submit(pred).wait()
+    pub fn query(&self, pred: QueryPredicate) -> Result<QueryResult, QueryError> {
+        let pending = self.submit(pred).map_err(|_| QueryError::Stopped)?;
+        pending.wait().map_err(|_| QueryError::ServiceDropped)
     }
 
     /// Service metrics.
@@ -209,14 +325,18 @@ impl Drop for SearchService {
 }
 
 /// The batching loop: wait for the first request, then gather until
-/// `max_batch` or `batch_timeout`, execute sub-batched by kind, respond.
+/// `max_batch` or `batch_timeout`, execute against the backend,
+/// respond. Shutdown is **drain-then-exit** and panic-free: the loop
+/// keeps answering every request already accepted (the channel closing
+/// — not an unwrap — is the exit signal), and once `stopping` is set it
+/// stops waiting out the batch timeout so queued work flushes promptly.
 fn coordinator_loop(
-    bvh: &Bvh,
+    backend: &Backend,
     space: &ExecSpace,
     config: &ServiceConfig,
     rx: Receiver<Request>,
     metrics: &Metrics,
-    _stopping: &AtomicBool,
+    stopping: &AtomicBool,
 ) {
     loop {
         // Block for the batch's first request (or exit when closed).
@@ -227,6 +347,15 @@ fn coordinator_loop(
         let deadline = Instant::now() + config.batch_timeout;
         let mut batch = vec![first];
         while batch.len() < config.max_batch {
+            if stopping.load(Ordering::Acquire) {
+                // Shutting down: drain whatever is already queued
+                // without waiting for more company.
+                match rx.try_recv() {
+                    Ok(r) => batch.push(r),
+                    Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+                }
+                continue;
+            }
             let now = Instant::now();
             if now >= deadline {
                 break;
@@ -238,16 +367,19 @@ fn coordinator_loop(
             }
         }
 
-        // Execute the coalesced batch, sub-batched by predicate kind.
+        // Execute the coalesced batch against the backend.
         let preds: Vec<QueryPredicate> = batch.iter().map(|r| r.pred).collect();
-        let responses = execute_sub_batched(
-            bvh,
-            space,
-            &preds,
-            config.buffer_policy,
-            config.sort_queries,
-            metrics,
-        );
+        let responses = match backend {
+            Backend::Single(bvh) => execute_sub_batched(
+                bvh,
+                space,
+                &preds,
+                config.buffer_policy,
+                config.sort_queries,
+                metrics,
+            ),
+            Backend::Distributed(tree) => execute_distributed(tree, space, &preds, metrics),
+        };
 
         // Respond and account.
         let done = Instant::now();
@@ -266,6 +398,51 @@ fn coordinator_loop(
         }
         metrics.record_batch(&latencies, total);
     }
+}
+
+/// Executes one coalesced wire batch on the distributed backend: the
+/// whole batch goes through [`DistributedTree::query_batch`] (batched
+/// phase-1 forwarding, rank-parallel streaming phase 2 on the service's
+/// worker threads) and the caller-order CSR is scattered into per-query
+/// results. Attachment payloads are echoed here, like the single-tree
+/// lanes; per-kind result-count histograms, first-hit hit ratios, and
+/// the distributed forwarding counters all feed [`Metrics`]. Public so
+/// benchmarks and tests can measure the distributed executor without a
+/// running service.
+pub fn execute_distributed(
+    tree: &DistributedTree,
+    space: &ExecSpace,
+    preds: &[QueryPredicate],
+    metrics: &Metrics,
+) -> Vec<SubBatchResult> {
+    let (out, stats) = tree.query_batch(space, preds);
+    metrics.record_distributed(stats.forwarded_queries as u64, stats.streamed_results as u64);
+    let mut fh_casts = 0u64;
+    let mut fh_hits = 0u64;
+    let responses: Vec<SubBatchResult> = preds
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let indices = out.results_for(i).to_vec();
+            metrics.result_histogram(p.kind()).record(indices.len() as u64);
+            let distances = match p.kind() {
+                PredicateKind::Nearest
+                | PredicateKind::NearestSphere
+                | PredicateKind::NearestBox
+                | PredicateKind::FirstHit => out.distances_for(i).to_vec(),
+                _ => Vec::new(),
+            };
+            if p.kind() == PredicateKind::FirstHit {
+                fh_casts += 1;
+                fh_hits += !indices.is_empty() as u64;
+            }
+            SubBatchResult { indices, distances, data: p.data() }
+        })
+        .collect();
+    if fh_casts > 0 {
+        metrics.record_first_hit(fh_casts, fh_hits);
+    }
+    responses
 }
 
 /// Executes one coalesced wire batch sub-batched by [`PredicateKind`]:
@@ -519,12 +696,17 @@ fn echo_payloads<P, T: Copy + Into<u64>>(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::distributed::Partition;
     use crate::geometry::{Aabb, Point, Ray, Sphere};
 
-    fn service(n: usize, max_batch: usize) -> (SearchService, Vec<Point>) {
-        let points: Vec<Point> =
-            (0..n).map(|i| Point::new(i as f32, 0.0, 0.0)).collect();
+    fn line_points(n: usize) -> (Vec<Point>, Vec<Aabb>) {
+        let points: Vec<Point> = (0..n).map(|i| Point::new(i as f32, 0.0, 0.0)).collect();
         let boxes: Vec<Aabb> = points.iter().map(|p| Aabb::from_point(*p)).collect();
+        (points, boxes)
+    }
+
+    fn service(n: usize, max_batch: usize) -> (SearchService, Vec<Point>) {
+        let (points, boxes) = line_points(n);
         let bvh = Arc::new(Bvh::build(&ExecSpace::serial(), &boxes));
         let config = ServiceConfig {
             max_batch,
@@ -538,7 +720,9 @@ mod tests {
     #[test]
     fn single_query_round_trip() {
         let (svc, _) = service(100, 16);
-        let r = svc.query(QueryPredicate::intersects_sphere(Point::new(5.0, 0.0, 0.0), 1.5));
+        let r = svc
+            .query(QueryPredicate::intersects_sphere(Point::new(5.0, 0.0, 0.0), 1.5))
+            .expect("service running");
         let mut got = r.indices.clone();
         got.sort();
         assert_eq!(got, vec![4, 5, 6]);
@@ -549,37 +733,38 @@ mod tests {
     #[test]
     fn every_wire_kind_round_trips() {
         let (svc, _) = service(100, 16);
+        let q = |pred: QueryPredicate| svc.query(pred).expect("service running");
         let ray = Ray::new(Point::new(-1.0, 0.0, 0.0), Point::new(1.0, 0.0, 0.0));
-        let r = svc.query(QueryPredicate::intersects_ray(ray));
+        let r = q(QueryPredicate::intersects_ray(ray));
         assert_eq!(r.indices.len(), 100, "axis ray hits the whole line");
-        let r = svc.query(QueryPredicate::intersects_box(Aabb::new(
+        let r = q(QueryPredicate::intersects_box(Aabb::new(
             Point::new(2.5, -1.0, -1.0),
             Point::new(5.5, 1.0, 1.0),
         )));
         let mut got = r.indices;
         got.sort();
         assert_eq!(got, vec![3, 4, 5]);
-        let r = svc.query(QueryPredicate::attach(
+        let r = q(QueryPredicate::attach(
             Spatial::IntersectsSphere(Sphere::new(Point::new(7.0, 0.0, 0.0), 0.5)),
             0xBEEF,
         ));
         assert_eq!(r.indices, vec![7]);
         assert_eq!(r.data, Some(0xBEEF), "payload echoed");
-        let r = svc.query(QueryPredicate::attach(Spatial::IntersectsRay(ray), 7));
+        let r = q(QueryPredicate::attach(Spatial::IntersectsRay(ray), 7));
         assert_eq!(r.indices.len(), 100);
         assert_eq!(r.data, Some(7));
-        let r = svc.query(QueryPredicate::nearest(Point::new(9.2, 0.0, 0.0), 2));
+        let r = q(QueryPredicate::nearest(Point::new(9.2, 0.0, 0.0), 2));
         assert_eq!(r.indices, vec![9, 10]);
         assert_eq!(r.distances.len(), 2);
         // Nearest-to-geometry lanes: points 9 and 10 lie inside the query
         // ball, so both are zero-distance ties kept in index order.
-        let r = svc.query(QueryPredicate::nearest_sphere(
+        let r = q(QueryPredicate::nearest_sphere(
             Sphere::new(Point::new(9.2, 0.0, 0.0), 1.0),
             2,
         ));
         assert_eq!(r.indices, vec![9, 10]);
         assert_eq!(r.distances, vec![0.0, 0.0]);
-        let r = svc.query(QueryPredicate::nearest_box(
+        let r = q(QueryPredicate::nearest_box(
             Aabb::new(Point::new(2.5, -1.0, -1.0), Point::new(5.5, 1.0, 1.0)),
             3,
         ));
@@ -594,15 +779,17 @@ mod tests {
     fn first_hit_round_trips_through_the_service() {
         let (svc, _) = service(100, 16);
         let ray = Ray::new(Point::new(-1.0, 0.0, 0.0), Point::new(1.0, 0.0, 0.0));
-        let r = svc.query(QueryPredicate::first_hit(ray));
+        let r = svc.query(QueryPredicate::first_hit(ray)).expect("service running");
         assert_eq!(r.indices, vec![0], "nearest point on the line");
         assert_eq!(r.distances.len(), 1);
         assert!((r.distances[0] - 1.0).abs() < 1e-6, "entry at t = 1");
         assert_eq!(r.data, None);
-        let miss = svc.query(QueryPredicate::first_hit(Ray::new(
-            Point::new(0.0, 5.0, 0.0),
-            Point::new(1.0, 0.0, 0.0),
-        )));
+        let miss = svc
+            .query(QueryPredicate::first_hit(Ray::new(
+                Point::new(0.0, 5.0, 0.0),
+                Point::new(1.0, 0.0, 0.0),
+            )))
+            .expect("service running");
         assert!(miss.indices.is_empty());
         assert!(miss.distances.is_empty());
         assert_eq!(svc.metrics().first_hit_casts(), 2);
@@ -610,7 +797,7 @@ mod tests {
         // The byte-level front door carries the same query.
         let mut bytes = Vec::new();
         super::super::wire::encode(&QueryPredicate::first_hit(ray), &mut bytes);
-        let r = svc.submit_encoded(&bytes).expect("decodes").wait();
+        let r = svc.submit_encoded(&bytes).expect("decodes").wait().expect("answered");
         assert_eq!(r.indices, vec![0]);
     }
 
@@ -623,13 +810,19 @@ mod tests {
         );
         let mut bytes = Vec::new();
         super::super::wire::encode(&pred, &mut bytes);
-        let r = svc.submit_encoded(&bytes).expect("decodes").wait();
+        let r = svc.submit_encoded(&bytes).expect("decodes").wait().expect("answered");
         let mut got = r.indices;
         got.sort();
         assert_eq!(got, vec![4, 5, 6]);
         assert_eq!(r.data, Some(42));
-        assert!(svc.submit_encoded(&bytes[..3]).is_none(), "truncated");
-        assert!(svc.submit_encoded(&[0xFF; 16]).is_none(), "bad tag");
+        assert!(
+            matches!(svc.submit_encoded(&bytes[..3]), Err(SubmitError::Malformed)),
+            "truncated"
+        );
+        assert!(
+            matches!(svc.submit_encoded(&[0xFF; 16]), Err(SubmitError::Malformed)),
+            "bad tag"
+        );
     }
 
     #[test]
@@ -642,7 +835,8 @@ mod tests {
             handles.push(std::thread::spawn(move || {
                 for i in 0..20 {
                     let center = Point::new((t * 20 + i) as f32, 0.0, 0.0);
-                    let r = svc.query(QueryPredicate::nearest(center, 1));
+                    let r =
+                        svc.query(QueryPredicate::nearest(center, 1)).expect("service running");
                     assert_eq!(r.indices, vec![t * 20 + i]);
                     assert_eq!(r.distances, vec![0.0]);
                 }
@@ -660,10 +854,13 @@ mod tests {
     fn batching_respects_max_batch() {
         let (svc, _) = service(100, 4);
         let pendings: Vec<Pending> = (0..16)
-            .map(|i| svc.submit(QueryPredicate::nearest(Point::new(i as f32, 0.0, 0.0), 1)))
+            .map(|i| {
+                svc.submit(QueryPredicate::nearest(Point::new(i as f32, 0.0, 0.0), 1))
+                    .expect("service running")
+            })
             .collect();
         for (i, p) in pendings.into_iter().enumerate() {
-            assert_eq!(p.wait().indices, vec![i as u32]);
+            assert_eq!(p.wait().expect("answered").indices, vec![i as u32]);
         }
         assert!(svc.metrics().batches() >= 4, "max_batch=4 over 16 requests");
     }
@@ -671,8 +868,109 @@ mod tests {
     #[test]
     fn shutdown_is_idempotent() {
         let (svc, _) = service(10, 4);
-        svc.query(QueryPredicate::nearest(Point::origin(), 1));
+        svc.query(QueryPredicate::nearest(Point::origin(), 1)).expect("service running");
         svc.shutdown();
         svc.shutdown();
+    }
+
+    #[test]
+    fn submit_after_shutdown_returns_stopped_instead_of_panicking() {
+        let (svc, _) = service(10, 4);
+        svc.shutdown();
+        assert_eq!(
+            svc.submit(QueryPredicate::nearest(Point::origin(), 1)).err(),
+            Some(SubmitError::Stopped)
+        );
+        assert_eq!(
+            svc.query(QueryPredicate::nearest(Point::origin(), 1)).err(),
+            Some(QueryError::Stopped)
+        );
+        // The encoded front door degrades the same way (well-formed
+        // bytes, stopped service).
+        let mut bytes = Vec::new();
+        super::super::wire::encode(&QueryPredicate::nearest(Point::origin(), 1), &mut bytes);
+        assert_eq!(svc.submit_encoded(&bytes).err(), Some(SubmitError::Stopped));
+    }
+
+    #[test]
+    fn shutdown_drains_in_flight_queries() {
+        // Requests accepted before the stop are still answered: shutdown
+        // is drain-then-exit, so every Pending resolves Ok.
+        let (svc, _) = service(500, 8);
+        let pendings: Vec<Pending> = (0..64)
+            .map(|i| {
+                svc.submit(QueryPredicate::nearest(Point::new((i % 500) as f32, 0.0, 0.0), 1))
+                    .expect("service running")
+            })
+            .collect();
+        svc.shutdown();
+        for (i, p) in pendings.into_iter().enumerate() {
+            let r = p.wait().expect("accepted request must be drained");
+            assert_eq!(r.indices, vec![(i % 500) as u32]);
+        }
+    }
+
+    #[test]
+    fn wait_reports_a_dropped_service_instead_of_panicking() {
+        // ServiceDropped is only reachable when the coordinator dies
+        // without responding; simulate the dropped response channel
+        // directly.
+        let (_tx, rx) = channel::<QueryResult>();
+        drop(_tx);
+        assert_eq!(Pending(rx).wait().err(), Some(WaitError::ServiceDropped));
+    }
+
+    #[test]
+    fn distributed_backend_round_trips_every_kind() {
+        // The Backend seam: the same wire protocol served over a
+        // DistributedTree returns exactly the direct per-query
+        // distributed answers (payloads echoed, distances included).
+        let (_, boxes) = line_points(200);
+        let tree = Arc::new(DistributedTree::build(
+            &ExecSpace::serial(),
+            &boxes,
+            5,
+            Partition::MortonBlock,
+        ));
+        let svc = SearchService::start_distributed(
+            Arc::clone(&tree),
+            ServiceConfig {
+                max_batch: 16,
+                batch_timeout: Duration::from_millis(1),
+                threads: 2,
+                ..Default::default()
+            },
+        );
+        let ray = Ray::new(Point::new(-1.0, 0.0, 0.0), Point::new(1.0, 0.0, 0.0));
+        let preds = [
+            QueryPredicate::intersects_sphere(Point::new(5.0, 0.0, 0.0), 1.5),
+            QueryPredicate::intersects_box(Aabb::new(
+                Point::new(2.5, -1.0, -1.0),
+                Point::new(5.5, 1.0, 1.0),
+            )),
+            QueryPredicate::attach(Spatial::IntersectsRay(ray), 77),
+            QueryPredicate::nearest(Point::new(9.2, 0.0, 0.0), 3),
+            QueryPredicate::nearest_sphere(Sphere::new(Point::new(9.2, 0.0, 0.0), 1.0), 2),
+            QueryPredicate::nearest_box(
+                Aabb::new(Point::new(2.5, -1.0, -1.0), Point::new(5.5, 1.0, 1.0)),
+                3,
+            ),
+            QueryPredicate::first_hit(ray),
+        ];
+        for pred in &preds {
+            let r = svc.query(*pred).expect("service running");
+            let (want_idx, want_dist, _) = tree.query_predicate(pred);
+            assert_eq!(r.indices, want_idx, "{pred:?}");
+            if !want_dist.is_empty() {
+                assert_eq!(r.distances, want_dist, "{pred:?}");
+            }
+            assert_eq!(r.data, pred.data(), "{pred:?}");
+        }
+        assert!(svc.metrics().distributed_batches() >= 1);
+        assert!(svc.metrics().forwarded_queries() >= 1);
+        assert!(svc.metrics().streamed_results() >= 1, "spatial kinds streamed");
+        assert_eq!(svc.metrics().first_hit_casts(), 1);
+        assert_eq!(svc.metrics().first_hit_hits(), 1);
+        assert_eq!(svc.metrics().requests(), preds.len() as u64);
     }
 }

@@ -100,6 +100,30 @@ impl ExecSpace {
         });
     }
 
+    /// Runs `f(i)` for each `i` in `0..n` where every index is one
+    /// *coarse task*, claimed individually by the workers. Unlike
+    /// [`ExecSpace::parallel_for`] — whose chunking is tuned for
+    /// fine-grained iterations and runs any range below its grain floor
+    /// entirely on the caller — this dispatch has no grain floor, so a
+    /// handful of heavy tasks (one per distributed rank, say) still
+    /// spreads across the pool.
+    pub fn parallel_tasks<F>(&self, n: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        if n == 0 {
+            return;
+        }
+        match &self.pool {
+            None => {
+                for i in 0..n {
+                    f(i);
+                }
+            }
+            Some(pool) => pool.run_tasks(n, &f),
+        }
+    }
+
     /// Parallel reduction: `map_chunk` folds a contiguous range into a
     /// partial value; partials are combined with `join` (which must be
     /// associative and commutative, e.g. box union, sum, min, max).
@@ -196,9 +220,22 @@ mod tests {
     }
 
     #[test]
+    fn parallel_tasks_visits_every_index_once() {
+        for space in [ExecSpace::serial(), ExecSpace::with_threads(4)] {
+            let n = 23; // far below the chunked dispatch's grain floor
+            let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+            space.parallel_tasks(n, |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        }
+    }
+
+    #[test]
     fn zero_length_ranges_are_noops() {
         let space = ExecSpace::with_threads(2);
         space.parallel_for(0, |_| panic!("must not run"));
+        space.parallel_tasks(0, |_| panic!("must not run"));
         let r = space.parallel_reduce(0, 42i32, |_, _| panic!("must not run"), |a, _b| a);
         assert_eq!(r, 42);
     }

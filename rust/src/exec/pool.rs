@@ -118,6 +118,33 @@ impl ThreadPool {
         let threads = self.threads();
         let target_chunks = threads * OVERSUBSCRIBE;
         let grain = (n.div_ceil(target_chunks)).max(MIN_GRAIN.min(n));
+        self.dispatch(n, grain, f);
+    }
+
+    /// Runs `f(i)` once per index in `0..n` with every index its own
+    /// claimable chunk (grain 1, no [`MIN_GRAIN`] floor) — the dispatch
+    /// behind [`crate::exec::ExecSpace::parallel_tasks`]. Each index is
+    /// expected to be a *coarse* unit of work (a distributed rank's
+    /// sub-batch, a shard rebuild), so tasks spread across workers even
+    /// when `n` is far below the chunked dispatch's grain floor, under
+    /// which [`ThreadPool::run_chunked`] would run the whole range on the
+    /// caller.
+    pub fn run_tasks(&self, n: usize, f: &(dyn Fn(usize) + Sync)) {
+        self.dispatch(n, 1, &|_w, b, e| {
+            for i in b..e {
+                f(i);
+            }
+        });
+    }
+
+    /// Shared dispatch core of [`ThreadPool::run_chunked_worker`] and
+    /// [`ThreadPool::run_tasks`]: partitions `0..n` into `grain`-sized
+    /// chunks claimed dynamically by the workers (and the caller).
+    fn dispatch(&self, n: usize, grain: usize, f: &(dyn Fn(usize, usize, usize) + Sync)) {
+        if n == 0 {
+            return;
+        }
+        let threads = self.threads();
         let chunks = n.div_ceil(grain);
 
         // Small dispatch: not worth waking workers.
@@ -195,6 +222,34 @@ mod tests {
             }
         });
         assert!(owner.iter().all(|o| o.load(Ordering::Relaxed) < 4));
+    }
+
+    #[test]
+    fn coarse_tasks_cover_the_range_and_spread_across_workers() {
+        let pool = ThreadPool::new(4);
+        // Coverage: every index runs exactly once.
+        let n = 37;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        pool.run_tasks(n, &|i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        // Parallelism: 8 sleepy tasks on 4 workers land on >= 2 distinct
+        // threads (a single thread would have to run them back to back
+        // while the other three sit on an open dispatch).
+        let ids = std::sync::Mutex::new(std::collections::HashSet::new());
+        pool.run_tasks(8, &|_i| {
+            std::thread::sleep(std::time::Duration::from_millis(25));
+            ids.lock().unwrap().insert(std::thread::current().id());
+        });
+        assert!(ids.lock().unwrap().len() >= 2, "tasks did not spread");
+        // Degenerate sizes.
+        pool.run_tasks(0, &|_| panic!("must not run"));
+        let one = AtomicUsize::new(0);
+        pool.run_tasks(1, &|i| {
+            one.fetch_add(i + 1, Ordering::Relaxed);
+        });
+        assert_eq!(one.load(Ordering::Relaxed), 1);
     }
 
     #[test]

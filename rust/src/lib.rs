@@ -41,7 +41,12 @@
 //!   batcher speaking the open tagged predicate family (sphere/box/ray,
 //!   attachments, nearest) with per-kind monomorphized sub-batching and
 //!   adaptive 1P buffers, a byte-level wire codec, per-kind metrics, and
-//!   a simulated multi-rank distributed tree carrying the same kinds.
+//!   a simulated multi-rank distributed tree carrying the same kinds
+//!   through a streaming batched two-phase engine
+//!   (`DistributedTree::query_batch`: batched top-tree forwarding,
+//!   rank-parallel execution, callback-streamed spatial merges). The
+//!   service runs over either backend
+//!   ([`coordinator::service::Backend`]) behind one wire protocol.
 //!
 //! ## Quick start
 //!
@@ -87,7 +92,10 @@ pub mod runtime;
 pub mod prelude {
     pub use crate::baselines::{brute::BruteForce, kdtree::KdTree, rtree::RTree};
     pub use crate::bvh::{Bvh, PredicateKind, QueryOptions, QueryOutput, QueryPredicate, RayHit};
-    pub use crate::coordinator::service::{BufferPolicy, SearchService, ServiceConfig};
+    pub use crate::coordinator::distributed::{DistributedTree, Partition};
+    pub use crate::coordinator::service::{
+        Backend, BufferPolicy, QueryError, SearchService, ServiceConfig, SubmitError, WaitError,
+    };
     pub use crate::data::shapes::{PointCloud, Shape};
     pub use crate::exec::ExecSpace;
     pub use crate::geometry::predicates::{

@@ -206,7 +206,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> CliResult {
         handles.push(std::thread::spawn(move || {
             let mut total = 0usize;
             for pred in preds {
-                total += svc.query(pred).indices.len();
+                total += svc.query(pred).expect("service running").indices.len();
             }
             total
         }));

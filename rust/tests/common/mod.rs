@@ -15,6 +15,7 @@
 use arbor::baselines::brute::BruteForce;
 use arbor::bvh::nearest::Neighbor;
 use arbor::bvh::{Bvh, QueryOutput, QueryPredicate};
+use arbor::coordinator::distributed::Partition;
 use arbor::data::rng::Rng;
 use arbor::data::shapes::{PointCloud, Shape};
 use arbor::exec::ExecSpace;
@@ -24,6 +25,9 @@ use arbor::geometry::{Aabb, Point, Ray, Sphere};
 /// The two workload shapes every differential suite sweeps: balanced
 /// (filled) and imbalanced (hollow) per-query work.
 pub const SHAPES: [Shape; 2] = [Shape::FilledCube, Shape::HollowCube];
+
+/// Both distributed partitions, for the distributed differential grids.
+pub const PARTITIONS: [Partition; 2] = [Partition::Block, Partition::MortonBlock];
 
 /// The builder × exec-space engine grid: every suite checks Karras and
 /// Apetrei construction under serial and threaded execution. The label
@@ -159,6 +163,68 @@ pub fn random_predicate(rng: &mut Rng, scale: f32) -> QueryPredicate {
         ),
         8 => QueryPredicate::nearest_box(random_box(rng, center, scale), 1 + rng.below(32)),
         _ => QueryPredicate::first_hit(random_ray(rng, center)),
+    }
+}
+
+/// A deterministic wire batch cycling through **all 10 kinds**, one
+/// predicate per anchor point: sphere / box / ray, the three attach
+/// variants, nearest point / sphere / box, first-hit. The first-hit
+/// rays are axis-parallel shots from below the anchor, so they hit
+/// real extents on inflated scenes.
+pub fn wire_batch(points: &[Point], radius: f32, k: usize) -> Vec<QueryPredicate> {
+    let half = Point::splat(radius);
+    points
+        .iter()
+        .enumerate()
+        .map(|(i, p)| match i % 10 {
+            0 => QueryPredicate::intersects_sphere(*p, radius),
+            1 => QueryPredicate::intersects_box(Aabb::new(*p - half, *p + half)),
+            2 => QueryPredicate::intersects_ray(Ray::new(*p, Point::new(0.3, 1.0, -0.2))),
+            3 => QueryPredicate::attach(
+                Spatial::IntersectsSphere(Sphere::new(*p, radius)),
+                i as u64,
+            ),
+            4 => QueryPredicate::attach(
+                Spatial::IntersectsBox(Aabb::new(*p - half, *p + half)),
+                i as u64,
+            ),
+            5 => QueryPredicate::attach(
+                Spatial::IntersectsRay(Ray::new(*p, Point::new(-1.0, 0.4, 0.1))),
+                i as u64,
+            ),
+            6 => QueryPredicate::nearest(*p, k),
+            7 => QueryPredicate::nearest_sphere(Sphere::new(*p, radius), k),
+            8 => QueryPredicate::nearest_box(Aabb::new(*p - half, *p + half), k),
+            _ => QueryPredicate::first_hit(Ray::new(
+                Point::new(p[0], p[1], p[2] - 5.0),
+                Point::new(0.0, 0.0, 1.0),
+            )),
+        })
+        .collect()
+}
+
+/// Brute-force oracle for one wire predicate of any kind: (indices,
+/// distances) with the same conventions as the tree entry points
+/// (ascending indices for spatial kinds; (distance, index)-sorted with
+/// squared distances for nearest; the entry parameter for first-hit).
+pub fn brute_one(brute: &BruteForce, pred: &QueryPredicate) -> (Vec<u32>, Vec<f32>) {
+    fn split(neighbors: Vec<Neighbor>) -> (Vec<u32>, Vec<f32>) {
+        (
+            neighbors.iter().map(|n| n.index).collect(),
+            neighbors.iter().map(|n| n.distance_squared).collect(),
+        )
+    }
+    match pred {
+        QueryPredicate::Spatial(s) | QueryPredicate::Attach(s, _) => {
+            (brute.spatial(s), Vec::new())
+        }
+        QueryPredicate::Nearest(n) => split(brute.nearest_to(&n.geometry, n.k)),
+        QueryPredicate::NearestSphere(n) => split(brute.nearest_to(&n.geometry, n.k)),
+        QueryPredicate::NearestBox(n) => split(brute.nearest_to(&n.geometry, n.k)),
+        QueryPredicate::FirstHit(r) => match brute.first_hit(r) {
+            Some(h) => (vec![h.index], vec![h.t]),
+            None => (Vec::new(), Vec::new()),
+        },
     }
 }
 

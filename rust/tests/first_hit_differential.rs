@@ -124,7 +124,7 @@ fn first_hit_matches_brute_force_through_wire_and_distributed() {
         })
         .collect();
     for (qi, pending) in pendings.into_iter().enumerate() {
-        let result = pending.wait();
+        let result = pending.wait().expect("service answered");
         match &want[qi] {
             Some(h) => {
                 assert_eq!(result.indices, vec![h.index], "wire ray {qi}");

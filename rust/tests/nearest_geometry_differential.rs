@@ -199,7 +199,7 @@ fn wire_service_and_distributed_agree_with_oracle() {
         })
         .collect();
     for (qi, pending) in pendings.into_iter().enumerate() {
-        let r = pending.wait();
+        let r = pending.wait().expect("service answered");
         assert_eq!(neighbors_from(&r.indices, &r.distances), want[qi], "wire query {qi}");
     }
 

@@ -12,7 +12,9 @@ use std::sync::Arc;
 use arbor::bvh::{Bvh, PredicateKind, QueryOptions, QueryPredicate};
 use arbor::coordinator::distributed::{DistributedTree, Partition};
 use arbor::coordinator::metrics::{ADAPTIVE_MAX_BUFFER, ADAPTIVE_MIN_SAMPLES, Metrics};
-use arbor::coordinator::service::{execute_sub_batched, BufferPolicy, SearchService, ServiceConfig};
+use arbor::coordinator::service::{
+    execute_sub_batched, BufferPolicy, QueryError, SearchService, ServiceConfig, SubmitError,
+};
 use arbor::data::shapes::Shape;
 use arbor::data::workloads::{spatial_radius, Case, Workload};
 use arbor::exec::ExecSpace;
@@ -32,9 +34,10 @@ fn service_results_equal_direct_batched_queries() {
 
     let svc = SearchService::start(Arc::clone(&bvh), ServiceConfig::default());
     // Submit everything first so the batcher can coalesce, then await.
-    let pendings: Vec<_> = w.spatial.iter().map(|p| svc.submit(*p)).collect();
+    let pendings: Vec<_> =
+        w.spatial.iter().map(|p| svc.submit(*p).expect("service running")).collect();
     for (qi, pending) in pendings.into_iter().enumerate() {
-        let mut got = pending.wait().indices;
+        let mut got = pending.wait().expect("answered").indices;
         got.sort();
         let mut want = direct.results_for(qi).to_vec();
         want.sort();
@@ -93,8 +96,10 @@ fn service_handles_hollow_imbalance() {
             ..Default::default()
         },
     );
-    let pendings: Vec<_> = w.spatial.iter().map(|p| static_svc.submit(*p)).collect();
-    let total: usize = pendings.into_iter().map(|p| p.wait().indices.len()).sum();
+    let pendings: Vec<_> =
+        w.spatial.iter().map(|p| static_svc.submit(*p).expect("service running")).collect();
+    let total: usize =
+        pendings.into_iter().map(|p| p.wait().expect("answered").indices.len()).sum();
     // n != m here, so the calibration doesn't hold; require progress,
     // consistency with metrics, and the §3.2 second-pass signature.
     assert_eq!(static_svc.metrics().results(), total as u64);
@@ -106,9 +111,10 @@ fn service_handles_hollow_imbalance() {
         Arc::clone(&bvh),
         ServiceConfig { max_batch: 128, ..Default::default() },
     );
-    let pendings: Vec<_> = w.spatial.iter().map(|p| adaptive_svc.submit(*p)).collect();
+    let pendings: Vec<_> =
+        w.spatial.iter().map(|p| adaptive_svc.submit(*p).expect("service running")).collect();
     for (qi, pending) in pendings.into_iter().enumerate() {
-        let mut got = pending.wait().indices;
+        let mut got = pending.wait().expect("answered").indices;
         got.sort();
         let mut want = direct.results_for(qi).to_vec();
         want.sort();
@@ -225,9 +231,12 @@ fn service_differential_every_wire_kind_under_concurrency() {
             // Strided slices keep each thread's stream mixed-kind.
             let pendings: Vec<_> = (t..preds.len())
                 .step_by(submitters)
-                .map(|i| (i, svc.submit(preds[i])))
+                .map(|i| (i, svc.submit(preds[i]).expect("service running")))
                 .collect();
-            pendings.into_iter().map(|(i, p)| (i, p.wait())).collect::<Vec<_>>()
+            pendings
+                .into_iter()
+                .map(|(i, p)| (i, p.wait().expect("answered")))
+                .collect::<Vec<_>>()
         }));
     }
     let mut seen = 0usize;
@@ -286,8 +295,9 @@ fn adaptive_buffer_regression_hollow_style() {
     assert_eq!(max_count, 601, "the monster spans [1748, 2348]");
 
     let run = |svc: &SearchService| -> usize {
-        let pendings: Vec<_> = preds.iter().map(|p| svc.submit(*p)).collect();
-        pendings.into_iter().map(|p| p.wait().indices.len()).sum()
+        let pendings: Vec<_> =
+            preds.iter().map(|p| svc.submit(*p).expect("service running")).collect();
+        pendings.into_iter().map(|p| p.wait().expect("answered").indices.len()).sum()
     };
 
     // The static mis-sized buffer takes the fallback second pass.
@@ -346,7 +356,73 @@ fn distributed_rank_counts_scale() {
         let dt = DistributedTree::build(&space, &boxes, ranks, Partition::MortonBlock);
         assert_eq!(dt.n_ranks(), ranks.min(5000));
         assert_eq!(dt.len(), 5000);
+        // Balanced: shard sizes differ by at most one, none empty.
+        let sizes: Vec<usize> = (0..dt.n_ranks()).map(|r| dt.rank_len(r)).collect();
+        let (min, max) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+        assert!(*min >= 1 && max - min <= 1, "unbalanced shards {sizes:?}");
     }
+    // The exact acceptance shape: 6 objects over 4 requested ranks must
+    // give 4 ranks (the ceiling-division chunking used to give 3).
+    let dt = DistributedTree::build(&space, &boxes[..6], 4, Partition::Block);
+    assert_eq!(dt.n_ranks(), 4);
+}
+
+#[test]
+fn service_shutdown_with_in_flight_queries_is_panic_free() {
+    // Regression for the satellite bugfix: submit used to
+    // `expect("service stopped")` and wait used to panic when the
+    // service dropped the channel. Now shutdown drains accepted work,
+    // answers it, and refuses new work with an error.
+    let space = ExecSpace::serial();
+    let (_cloud, boxes, _brute) = scene(Shape::FilledCube, 2000, 91);
+    let bvh = Arc::new(Bvh::build(&space, &boxes));
+    let svc = Arc::new(SearchService::start(
+        Arc::clone(&bvh),
+        ServiceConfig { max_batch: 32, ..Default::default() },
+    ));
+    // A racing submitter thread: every submission either succeeds (and
+    // must then be answered) or reports Stopped — never a panic.
+    let racer = {
+        let svc = Arc::clone(&svc);
+        std::thread::spawn(move || {
+            let mut answered = 0usize;
+            let mut stopped = 0usize;
+            for i in 0..5000 {
+                match svc.submit(QueryPredicate::nearest(
+                    Point::new((i % 100) as f32 * 0.1, 0.0, 0.0),
+                    2,
+                )) {
+                    Ok(p) => {
+                        p.wait().expect("accepted request must be drained");
+                        answered += 1;
+                    }
+                    Err(SubmitError::Stopped) => {
+                        stopped += 1;
+                        break;
+                    }
+                    Err(e) => panic!("unexpected submit error {e:?}"),
+                }
+            }
+            (answered, stopped)
+        })
+    };
+    // Let the racer get at least one answer, then pull the rug.
+    let t0 = std::time::Instant::now();
+    while svc.metrics().requests() == 0 && t0.elapsed().as_secs() < 10 {
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+    svc.shutdown();
+    let (answered, _stopped) = racer.join().expect("no panic anywhere in the race");
+    assert!(answered >= 1, "some requests were served before the stop");
+    // After shutdown every entry point reports an error, not a panic.
+    assert_eq!(
+        svc.submit(QueryPredicate::nearest(Point::origin(), 1)).err(),
+        Some(SubmitError::Stopped)
+    );
+    assert_eq!(
+        svc.query(QueryPredicate::nearest(Point::origin(), 1)).err(),
+        Some(QueryError::Stopped)
+    );
 }
 
 #[test]
