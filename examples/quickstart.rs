@@ -51,6 +51,22 @@ fn main() {
         out.distances_for(0)
     );
 
+    // 5b. Traversal modes: the build already collapsed the binary tree
+    //     into a 4-wide layer (SoA child boxes, u8-quantized against the
+    //     parent box), and queries default to testing four children per
+    //     step with SIMD. Quantized boxes only ever *inflate*
+    //     (conservative snapping — at most ~1/128th of the parent extent
+    //     per side) and leaves are always re-tested with exact scalar
+    //     math, so every mode returns bit-identical results; targets
+    //     without SSE/NEON (or ARBOR_FORCE_SCALAR=1) take a per-lane
+    //     scalar fallback over the same quantized nodes.
+    println!("traversal mode: {:?}", bvh.traversal_mode());
+    let mut binary = bvh.clone();
+    binary.set_traversal_mode(TraversalMode::Binary);
+    let bin_out = binary.query(&space, &nearest, &QueryOptions::default());
+    assert_eq!(bin_out.results_for(0), out.results_for(0), "wide == binary");
+    assert_eq!(bin_out.distances_for(0), out.distances_for(0));
+
     // 6. The 1P buffered strategy: provide a per-query buffer estimate to
     //    skip the counting pass (falls back automatically on overflow).
     let opts = QueryOptions { buffer_size: Some(32), sort_queries: true };

@@ -6,7 +6,7 @@
 
 use arbor::baselines::{kdtree::KdTree, rtree::RTree};
 use arbor::bench_util::{f, problem_sizes, reps, time_median, Table};
-use arbor::bvh::{Bvh, QueryOptions, QueryPredicate};
+use arbor::bvh::{Bvh, QueryOptions, QueryPredicate, TraversalMode};
 use arbor::data::workloads::{Case, Workload, K};
 use arbor::exec::ExecSpace;
 use arbor::geometry::predicates::Spatial;
@@ -44,6 +44,14 @@ pub fn run_comparison(case: Case, fig: &str) -> Vec<Timings> {
     let mut spatial_tab = Table::new(
         &format!("{fig}c_spatial_speedup_vs_kdtree"),
         &["m", "arborx_1p", "arborx_2p", "boost_rtree", "nanoflann_kdtree"],
+    );
+    // Binary-vs-wide: the same built tree with its traversal forced back
+    // to the binary reference walk, against the default (wide) mode used
+    // by every row above. Results are bit-identical; this isolates what
+    // the 4-wide quantized node tests buy on the serial hot path.
+    let mut wide_tab = Table::new(
+        &format!("{fig}d_wide_traversal_speedup_vs_binary"),
+        &["m", "spatial_2p", "knn"],
     );
 
     for m in problem_sizes() {
@@ -112,6 +120,21 @@ pub fn run_comparison(case: Case, fig: &str) -> Vec<Timings> {
             }
         });
 
+        // --- binary-vs-wide traversal --------------------------------
+        let mut bvh_binary = bvh.clone();
+        bvh_binary.set_traversal_mode(TraversalMode::Binary);
+        let knn_binary = time_median(r, || {
+            std::hint::black_box(bvh_binary.query(&serial, &w.nearest, &QueryOptions::default()));
+        });
+        let spatial_binary = time_median(r, || {
+            std::hint::black_box(bvh_binary.query(&serial, &w.spatial, &opts_2p));
+        });
+        wide_tab.row(&[
+            m.to_string(),
+            f(spatial_binary / spatial_bvh_2p),
+            f(knn_binary / knn_bvh),
+        ]);
+
         build_tab.row(&[
             m.to_string(),
             f(build_kd / build_bvh),
@@ -144,5 +167,6 @@ pub fn run_comparison(case: Case, fig: &str) -> Vec<Timings> {
     build_tab.write_csv();
     knn_tab.write_csv();
     spatial_tab.write_csv();
+    wide_tab.write_csv();
     all
 }

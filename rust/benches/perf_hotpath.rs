@@ -19,13 +19,13 @@ use std::sync::atomic::{AtomicU32, Ordering};
 
 use arbor::bench_util::{f, reps, size, time_median, write_json_snapshot, JsonValue, Table};
 use arbor::bvh::build::build_karras_profiled;
-use arbor::bvh::{Bvh, QueryOptions, QueryPredicate};
+use arbor::bvh::{Bvh, QueryOptions, QueryPredicate, TraversalMode};
 use arbor::coordinator::metrics::Metrics;
 use arbor::coordinator::service::{execute_sub_batched, BufferPolicy};
 use arbor::data::workloads::{Case, Workload};
 use arbor::exec::ExecSpace;
 use arbor::geometry::predicates::{
-    attach, IntersectsBox, IntersectsRay, IntersectsSphere, Spatial, WithData,
+    attach, FirstHit, IntersectsBox, IntersectsRay, IntersectsSphere, Spatial, WithData,
 };
 use arbor::geometry::{Aabb, Point, Ray, Sphere};
 
@@ -292,6 +292,68 @@ fn main() {
             ("subbatch_ray_s", JsonValue::Num(t_ray)),
             ("subbatch_attach_sphere_s", JsonValue::Num(t_attach)),
             ("subbatch_nearest_s", JsonValue::Num(t_nearest)),
+        ],
+    );
+
+    // --- traversal modes: binary vs 4-wide quantized -------------------
+    // The same built tree (the collapse pass always runs) driven through
+    // each traversal mode: the binary reference walk, the 4-wide SIMD
+    // walk over quantized SoA child boxes, and the forced scalar
+    // fallback of the wide walk. All three return bit-identical results
+    // (the differential suites prove it); this measures what the width
+    // and the quantized footprint buy on the query hot path.
+    let fh_rays: Vec<FirstHit> =
+        targets.iter().map(|p| FirstHit(ray_towards(p, &center))).collect();
+    let mut mode_rows: Vec<(&str, f64, f64, f64)> = Vec::new();
+    let mut tab = Table::new(
+        "perf_traversal_modes",
+        &["mode", "spatial_s", "nearest_s", "first_hit_s"],
+    );
+    for (mode_name, mode) in [
+        ("binary", TraversalMode::Binary),
+        ("wide_simd", TraversalMode::WideSimd),
+        ("wide_scalar", TraversalMode::WideScalar),
+    ] {
+        let mut tree = bvh.clone();
+        tree.set_traversal_mode(mode);
+        let spatial = time_median(r, || {
+            std::hint::black_box(tree.query(&space, &w.spatial, &opts));
+        });
+        let nearest = time_median(r, || {
+            std::hint::black_box(tree.query(&space, &w.nearest, &opts));
+        });
+        let first_hit = time_median(r, || {
+            std::hint::black_box(tree.query_first_hit(&space, &fh_rays, true));
+        });
+        tab.row(&[mode_name.to_string(), f(spatial), f(nearest), f(first_hit)]);
+        mode_rows.push((mode_name, spatial, nearest, first_hit));
+    }
+    tab.write_csv();
+
+    let (_, bin_sp, bin_nn, bin_fh) = mode_rows[0];
+    let (_, simd_sp, simd_nn, simd_fh) = mode_rows[1];
+    let (_, sc_sp, sc_nn, sc_fh) = mode_rows[2];
+    write_json_snapshot(
+        "BENCH_wide_bvh.json",
+        &[
+            ("workload", JsonValue::Str("filled".into())),
+            ("m", JsonValue::Int(m as u64)),
+            ("spatial_queries", JsonValue::Int(w.spatial.len() as u64)),
+            ("nearest_queries", JsonValue::Int(w.nearest.len() as u64)),
+            ("first_hit_queries", JsonValue::Int(fh_rays.len() as u64)),
+            ("threads", JsonValue::Int(cores as u64)),
+            ("binary_spatial_s", JsonValue::Num(bin_sp)),
+            ("binary_nearest_s", JsonValue::Num(bin_nn)),
+            ("binary_first_hit_s", JsonValue::Num(bin_fh)),
+            ("wide_simd_spatial_s", JsonValue::Num(simd_sp)),
+            ("wide_simd_nearest_s", JsonValue::Num(simd_nn)),
+            ("wide_simd_first_hit_s", JsonValue::Num(simd_fh)),
+            ("wide_scalar_spatial_s", JsonValue::Num(sc_sp)),
+            ("wide_scalar_nearest_s", JsonValue::Num(sc_nn)),
+            ("wide_scalar_first_hit_s", JsonValue::Num(sc_fh)),
+            ("wide_spatial_speedup_vs_binary", JsonValue::Num(bin_sp / simd_sp)),
+            ("wide_nearest_speedup_vs_binary", JsonValue::Num(bin_nn / simd_nn)),
+            ("wide_first_hit_speedup_vs_binary", JsonValue::Num(bin_fh / simd_fh)),
         ],
     );
 }

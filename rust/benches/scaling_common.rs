@@ -8,7 +8,7 @@
 //! core*, not the 16-thread figure itself.
 
 use arbor::bench_util::{f, problem_sizes, reps, thread_counts, time_median, Table};
-use arbor::bvh::{Bvh, QueryOptions};
+use arbor::bvh::{Bvh, QueryOptions, TraversalMode};
 use arbor::data::workloads::{Case, Workload};
 use arbor::exec::ExecSpace;
 
@@ -22,6 +22,13 @@ pub fn run_scaling(case: Case, fig: &str) {
     let mut tab = Table::new(
         &format!("{fig}_scaling_speedup"),
         &["m", "threads", "construction", "spatial", "nearest"],
+    );
+    // Binary-vs-wide at every thread count: whether the 4-wide quantized
+    // traversal's advantage survives (or grows) under threading, where
+    // memory bandwidth rather than instruction throughput can dominate.
+    let mut wide_tab = Table::new(
+        &format!("{fig}_wide_vs_binary"),
+        &["m", "threads", "spatial", "nearest"],
     );
     for &m in &table_sizes {
         let w = Workload::generate(case, m, m, 42);
@@ -47,9 +54,33 @@ pub fn run_scaling(case: Case, fig: &str) {
                 f(s0 / spatial),
                 f(n0 / nearest),
             ]);
+
+            let mut bvh_binary = bvh.clone();
+            bvh_binary.set_traversal_mode(TraversalMode::Binary);
+            let spatial_bin = time_median(r, || {
+                std::hint::black_box(bvh_binary.query(
+                    &space,
+                    &w.spatial,
+                    &QueryOptions::default(),
+                ));
+            });
+            let nearest_bin = time_median(r, || {
+                std::hint::black_box(bvh_binary.query(
+                    &space,
+                    &w.nearest,
+                    &QueryOptions::default(),
+                ));
+            });
+            wide_tab.row(&[
+                m.to_string(),
+                t.to_string(),
+                f(spatial_bin / spatial),
+                f(nearest_bin / nearest),
+            ]);
         }
     }
     tab.write_csv();
+    wide_tab.write_csv();
     println!(
         "(hardware: {} cores available; paper used 36-core CADES nodes)",
         std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)

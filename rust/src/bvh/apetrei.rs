@@ -40,14 +40,7 @@ fn split_level(codes: &[u32], i: usize) -> i32 {
 pub fn build_apetrei(space: &ExecSpace, boxes: &[Aabb]) -> Bvh {
     let n = boxes.len();
     if n == 0 {
-        return Bvh {
-            n_leaves: 0,
-            nodes: Vec::new(),
-            leaf_boxes: Vec::new(),
-            leaf_perm: Vec::new(),
-            scene: Aabb::empty(),
-            root: 0,
-        };
+        return Bvh::from_parts(0, Vec::new(), Vec::new(), Vec::new(), Aabb::empty(), 0);
     }
     let scene = compute_scene_box(space, boxes);
     let mut codes = vec![0u32; n];
@@ -69,14 +62,7 @@ pub fn build_apetrei(space: &ExecSpace, boxes: &[Aabb]) -> Bvh {
     }
 
     if n == 1 {
-        return Bvh {
-            n_leaves: 1,
-            nodes: Vec::new(),
-            leaf_boxes,
-            leaf_perm: perm,
-            scene,
-            root: leaf_ref(0),
-        };
+        return Bvh::from_parts(1, Vec::new(), leaf_boxes, perm, scene, leaf_ref(0));
     }
 
     let n_internal = n - 1;
@@ -159,14 +145,8 @@ pub fn build_apetrei(space: &ExecSpace, boxes: &[Aabb]) -> Bvh {
         });
     }
 
-    let bvh = Bvh {
-        n_leaves: n,
-        nodes,
-        leaf_boxes,
-        leaf_perm: perm,
-        scene,
-        root: root_slot.load(Ordering::Acquire),
-    };
+    let bvh =
+        Bvh::from_parts(n, nodes, leaf_boxes, perm, scene, root_slot.load(Ordering::Acquire));
     debug_assert_eq!(bvh.validate(), Ok(()));
     bvh
 }

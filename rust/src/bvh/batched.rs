@@ -37,9 +37,12 @@
 //!   batch by [`PredicateKind`], dispatching *once per sub-batch* (see
 //!   [`crate::coordinator::service::execute_sub_batched`]).
 
-use super::first_hit::{first_hit, RayHit};
-use super::nearest::{nearest_stack, NearestScratch, Neighbor};
-use super::traversal::{count_spatial, for_each_spatial};
+use super::first_hit::RayHit;
+use super::nearest::{NearestScratch, Neighbor};
+// Mode-dispatched traversal entry points (same signatures as the binary
+// ones in `traversal`/`nearest`/`first_hit`): every batched engine runs
+// through the tree's `TraversalMode`.
+use super::wide::{count_spatial, first_hit, for_each_spatial, nearest_stack};
 use super::{Bvh, NodeRef};
 use crate::exec::scan::{exclusive_scan, SendPtr};
 use crate::exec::{sort, ExecSpace};

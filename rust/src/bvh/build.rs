@@ -74,14 +74,7 @@ pub fn build_karras_profiled(space: &ExecSpace, boxes: &[Aabb]) -> (Bvh, BuildPr
     prof.permute = t.elapsed().as_secs_f64();
 
     if n == 1 {
-        let bvh = Bvh {
-            n_leaves: 1,
-            nodes: Vec::new(),
-            leaf_boxes,
-            leaf_perm: perm,
-            scene,
-            root: leaf_ref(0),
-        };
+        let bvh = Bvh::from_parts(1, Vec::new(), leaf_boxes, perm, scene, leaf_ref(0));
         return (bvh, prof);
     }
 
@@ -93,14 +86,7 @@ pub fn build_karras_profiled(space: &ExecSpace, boxes: &[Aabb]) -> (Bvh, BuildPr
     refit(space, n, &mut nodes, &leaf_parent, &internal_parent, &leaf_boxes);
     prof.refit = t.elapsed().as_secs_f64();
 
-    let bvh = Bvh {
-        n_leaves: n,
-        nodes,
-        leaf_boxes,
-        leaf_perm: perm,
-        scene,
-        root: internal_ref(0),
-    };
+    let bvh = Bvh::from_parts(n, nodes, leaf_boxes, perm, scene, internal_ref(0));
     (bvh, prof)
 }
 
@@ -108,14 +94,7 @@ pub fn build_karras_profiled(space: &ExecSpace, boxes: &[Aabb]) -> (Bvh, BuildPr
 pub fn build_karras(space: &ExecSpace, boxes: &[Aabb]) -> Bvh {
     let n = boxes.len();
     if n == 0 {
-        return Bvh {
-            n_leaves: 0,
-            nodes: Vec::new(),
-            leaf_boxes: Vec::new(),
-            leaf_perm: Vec::new(),
-            scene: Aabb::empty(),
-            root: 0,
-        };
+        return Bvh::from_parts(0, Vec::new(), Vec::new(), Vec::new(), Aabb::empty(), 0);
     }
 
     // Step 2: scene bounding box (parallel union reduction).
@@ -139,14 +118,7 @@ pub fn build_karras(space: &ExecSpace, boxes: &[Aabb]) -> Bvh {
     }
 
     if n == 1 {
-        return Bvh {
-            n_leaves: 1,
-            nodes: Vec::new(),
-            leaf_boxes,
-            leaf_perm: perm,
-            scene,
-            root: leaf_ref(0),
-        };
+        return Bvh::from_parts(1, Vec::new(), leaf_boxes, perm, scene, leaf_ref(0));
     }
 
     // Step 5: emit the hierarchy — all internal nodes in parallel.
@@ -155,14 +127,7 @@ pub fn build_karras(space: &ExecSpace, boxes: &[Aabb]) -> Bvh {
     // Step 6: bottom-up refit.
     refit(space, n, &mut nodes, &leaf_parent, &internal_parent, &leaf_boxes);
 
-    let bvh = Bvh {
-        n_leaves: n,
-        nodes,
-        leaf_boxes,
-        leaf_perm: perm,
-        scene,
-        root: internal_ref(0),
-    };
+    let bvh = Bvh::from_parts(n, nodes, leaf_boxes, perm, scene, internal_ref(0));
     debug_assert_eq!(bvh.validate(), Ok(()));
     bvh
 }

@@ -23,6 +23,15 @@
 //!   [`QueryPredicate`] enum facade ([`Bvh::query`]) for mixed batches.
 //! * [`stats`] — hierarchy quality metrics (SAH) and the node-access
 //!   matrix used to reproduce Figure 2.
+//! * [`wide`] — the 4-wide traversal layer: a post-build collapse of the
+//!   binary tree into SoA child groups with u8-quantized boxes
+//!   (conservative inflation only), tested four lanes per predicate
+//!   evaluation through [`crate::geometry::simd`]. The binary tree stays
+//!   the build product and source of truth; every query entry point
+//!   routes through the tree's [`TraversalMode`] (wide SIMD by default,
+//!   `ARBOR_FORCE_SCALAR=1` for the per-lane fallback,
+//!   `ARBOR_TRAVERSAL=binary` for the reference loops), with results
+//!   bit-for-bit identical across all three modes.
 
 pub mod apetrei;
 pub mod batched;
@@ -31,9 +40,11 @@ pub mod first_hit;
 pub mod nearest;
 pub mod stats;
 pub mod traversal;
+pub mod wide;
 
 pub use batched::{PredicateKind, QueryOptions, QueryOutput, QueryPredicate};
 pub use first_hit::RayHit;
+pub use wide::TraversalMode;
 
 use crate::exec::ExecSpace;
 use crate::geometry::predicates::{self, FirstHitQuery, SpatialPredicate};
@@ -109,9 +120,51 @@ pub struct Bvh {
     pub(crate) scene: Aabb,
     /// Tagged reference to the root node.
     pub(crate) root: NodeRef,
+    /// The collapsed 4-wide view of the tree (derived, query-only).
+    pub(crate) wide: wide::WideBvh,
+    /// Which node-test loop queries on this tree run through.
+    pub(crate) mode: TraversalMode,
 }
 
 impl Bvh {
+    /// Assembles a tree from builder output, deriving the wide layer
+    /// (collapse pass) and stamping the process default
+    /// [`TraversalMode`]. All builders funnel through here so the two
+    /// views can never diverge.
+    pub(crate) fn from_parts(
+        n_leaves: usize,
+        nodes: Vec<InternalNode>,
+        leaf_boxes: Vec<Aabb>,
+        leaf_perm: Vec<u32>,
+        scene: Aabb,
+        root: NodeRef,
+    ) -> Bvh {
+        let wide = wide::WideBvh::collapse(&nodes, &leaf_boxes, root);
+        Bvh {
+            n_leaves,
+            nodes,
+            leaf_boxes,
+            leaf_perm,
+            scene,
+            root,
+            wide,
+            mode: wide::default_mode(),
+        }
+    }
+
+    /// The traversal mode queries on this tree run through.
+    #[inline]
+    pub fn traversal_mode(&self) -> TraversalMode {
+        self.mode
+    }
+
+    /// Overrides the traversal mode for this tree (the process default
+    /// comes from `ARBOR_TRAVERSAL` / `ARBOR_FORCE_SCALAR`). Results are
+    /// identical in every mode; only the node-test loop changes.
+    #[inline]
+    pub fn set_traversal_mode(&mut self, mode: TraversalMode) {
+        self.mode = mode;
+    }
     /// Builds the hierarchy with the Karras 2012 algorithm — the paper's
     /// default construction.
     pub fn build(space: &ExecSpace, boxes: &[Aabb]) -> Bvh {
@@ -292,6 +345,68 @@ impl Bvh {
                 return Err(format!("permutation repeats {p}"));
             }
             perm_seen[p as usize] = true;
+        }
+        self.validate_wide()
+    }
+
+    /// Checks the derived wide layer against the binary tree: every leaf
+    /// reachable exactly once, lane counts in 2..=4, children at larger
+    /// indices than their parent (the collapse invariant that makes one
+    /// reverse pass topological), and every quantized lane box containing
+    /// its subtree's exact leaf-box union (the conservative-inflation
+    /// guarantee the bit-for-bit result equality rests on).
+    fn validate_wide(&self) -> Result<(), String> {
+        if self.n_leaves < 2 {
+            if !self.wide.nodes.is_empty() {
+                return Err("wide layer must be empty for trees under two leaves".into());
+            }
+            return Ok(());
+        }
+        let w = &self.wide.nodes;
+        if w.is_empty() {
+            return Err("missing wide layer".into());
+        }
+        let mut leaf_seen = vec![false; self.n_leaves];
+        // Exact subtree unions, computable in one reverse pass because
+        // children always have larger indices than their parent.
+        let mut content = vec![Aabb::empty(); w.len()];
+        for wi in (0..w.len()).rev() {
+            let node = &w[wi];
+            if !(2..=4).contains(&node.count) {
+                return Err(format!("wide node {wi} has lane count {}", node.count));
+            }
+            let mut union = Aabb::empty();
+            for l in 0..node.count as usize {
+                let c = node.children[l];
+                let cb = if is_leaf(c) {
+                    let i = ref_index(c);
+                    if leaf_seen[i] {
+                        return Err(format!("leaf {i} reached twice in wide tree"));
+                    }
+                    leaf_seen[i] = true;
+                    self.leaf_boxes[i]
+                } else {
+                    let ci = ref_index(c);
+                    if ci <= wi {
+                        return Err(format!("wide node {wi} child index {ci} not above parent"));
+                    }
+                    if ci >= w.len() {
+                        return Err(format!("wide node {wi} child index {ci} out of range"));
+                    }
+                    content[ci]
+                };
+                if !node.child_box(l).contains_box(&cb) {
+                    return Err(format!("wide node {wi} lane {l} does not contain its subtree"));
+                }
+                union.expand(&cb);
+            }
+            content[wi] = union;
+        }
+        if !leaf_seen.iter().all(|&s| s) {
+            return Err("not all leaves reachable in wide tree".into());
+        }
+        if content[0] != self.nodes[ref_index(self.root)].bbox {
+            return Err("wide root content diverges from the binary root box".into());
         }
         Ok(())
     }

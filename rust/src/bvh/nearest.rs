@@ -151,6 +151,12 @@ impl KnnHeap {
         }
     }
 
+    /// The heap's capacity bound `k` (the number of neighbors kept).
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
     /// Number of candidates currently held.
     #[inline]
     pub fn len(&self) -> usize {

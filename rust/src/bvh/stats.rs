@@ -15,9 +15,13 @@ use super::batched::{query_order, query_order_spatial, QueryPredicate};
 use super::first_hit::first_hit_monitored;
 use super::nearest::{nearest_stack_monitored, NearestScratch};
 use super::traversal::for_each_spatial_monitored;
+use super::wide::{
+    first_hit_wide_monitored, for_each_spatial_wide_monitored, nearest_wide_monitored,
+    TraversalMode,
+};
 use super::{is_leaf, ref_index, Bvh};
 use crate::exec::ExecSpace;
-use crate::geometry::predicates::{FirstHit, SpatialPredicate};
+use crate::geometry::predicates::{FirstHit, FirstHitQuery, NearestQuery, SpatialPredicate};
 
 /// SAH-style cost of the hierarchy: `sum over internal nodes of
 /// SA(node)/SA(root)` (lower is better). A standard proxy for expected
@@ -135,6 +139,99 @@ fn jaccard(a: &[u32], b: &[u32]) -> f64 {
     }
     let union = a.len() + b.len() - inter;
     inter as f64 / union as f64
+}
+
+/// Node-test count of one spatial query under the tree's current
+/// [`TraversalMode`]. In binary mode this counts internal-node box tests
+/// (the Figure-2/7 unit); in the wide modes it counts *child-group*
+/// tests — one per 4-wide node whose lane boxes are evaluated (plus the
+/// root gate) — so binary-versus-wide access-rate comparisons divide
+/// comparable units: each wide access tests up to four subtree boxes in
+/// one evaluation.
+pub fn spatial_accesses<P: SpatialPredicate>(
+    bvh: &Bvh,
+    pred: &P,
+    stack: &mut Vec<u32>,
+) -> usize {
+    let mut n = 0usize;
+    match bvh.traversal_mode() {
+        TraversalMode::Binary => {
+            for_each_spatial_monitored(bvh, pred, stack, |_| {}, |_| n += 1)
+        }
+        TraversalMode::WideSimd => {
+            for_each_spatial_wide_monitored::<true, _, _, _>(bvh, pred, stack, |_| {}, |_| n += 1)
+        }
+        TraversalMode::WideScalar => {
+            for_each_spatial_wide_monitored::<false, _, _, _>(bvh, pred, stack, |_| {}, |_| n += 1)
+        }
+    }
+    n
+}
+
+/// [`spatial_accesses`] for a nearest query: binary mode counts internal
+/// lower-bound evaluations, wide modes count child-group lower-bound
+/// evaluations. Results land in `out` exactly as the query entry points
+/// produce them.
+pub fn nearest_accesses<Q: NearestQuery>(
+    bvh: &Bvh,
+    query: &Q,
+    scratch: &mut NearestScratch,
+    out: &mut Vec<super::nearest::Neighbor>,
+) -> usize {
+    let mut n = 0usize;
+    match bvh.traversal_mode() {
+        TraversalMode::Binary => {
+            nearest_stack_monitored(bvh, query, scratch, out, |_| n += 1);
+        }
+        mode => {
+            out.clear();
+            if bvh.n_leaves == 0 || query.k() == 0 {
+                return 0;
+            }
+            scratch.heap.reset(query.k());
+            if mode == TraversalMode::WideSimd {
+                nearest_wide_monitored::<true, _, _, _>(
+                    bvh,
+                    query,
+                    &mut scratch.stack,
+                    &mut scratch.heap,
+                    |i| i,
+                    |_| n += 1,
+                );
+            } else {
+                nearest_wide_monitored::<false, _, _, _>(
+                    bvh,
+                    query,
+                    &mut scratch.stack,
+                    &mut scratch.heap,
+                    |i| i,
+                    |_| n += 1,
+                );
+            }
+            scratch.heap.drain_sorted_into(out);
+        }
+    }
+    n
+}
+
+/// [`spatial_accesses`] for a first-hit ray cast: slab-test counts per
+/// node (binary) or per child group (wide).
+pub fn first_hit_accesses<Q: FirstHitQuery>(
+    bvh: &Bvh,
+    query: &Q,
+    stack: &mut Vec<(u32, f32)>,
+) -> (Option<super::first_hit::RayHit>, usize) {
+    let mut n = 0usize;
+    let hit = match bvh.traversal_mode() {
+        TraversalMode::Binary => first_hit_monitored(bvh, query, stack, |_| n += 1),
+        TraversalMode::WideSimd => {
+            first_hit_wide_monitored::<true, _, _>(bvh, query, stack, |_| n += 1)
+        }
+        TraversalMode::WideScalar => {
+            first_hit_wide_monitored::<false, _, _>(bvh, query, stack, |_| n += 1)
+        }
+    };
+    (hit, n)
 }
 
 /// Runs the facade batch serially in the given execution order (sorted or
@@ -281,6 +378,44 @@ mod tests {
             let a = access_matrix_spatial(&bvh, &typed, sorted);
             let b = access_matrix(&bvh, &facade, sorted);
             assert_eq!(a.rows, b.rows, "sorted={sorted}");
+        }
+    }
+
+    #[test]
+    fn wide_access_counts_are_comparable_and_lane_independent() {
+        use crate::geometry::predicates::{IntersectsSphere, Nearest};
+        use crate::geometry::{Ray, Sphere};
+        let points = random_cloud(500, 13);
+        let mut bvh = build(&points);
+        let centers = random_cloud(40, 99);
+        let mut stack = Vec::new();
+        let mut fh_stack = Vec::new();
+        let mut scratch = NearestScratch::new(8);
+        let mut knn = Vec::new();
+        let mut totals = [[0usize; 3]; 3]; // [query kind][mode]
+        let modes =
+            [TraversalMode::Binary, TraversalMode::WideSimd, TraversalMode::WideScalar];
+        for c in &centers {
+            let sphere = IntersectsSphere(Sphere::new(*c, 0.15));
+            let near = Nearest::new(*c, 5);
+            let ray = FirstHit(Ray::new(*c, Point::new(0.7, -0.2, 0.4)));
+            for (mi, mode) in modes.into_iter().enumerate() {
+                bvh.set_traversal_mode(mode);
+                totals[0][mi] += spatial_accesses(&bvh, &sphere, &mut stack);
+                totals[1][mi] += nearest_accesses(&bvh, &near, &mut scratch, &mut knn);
+                totals[2][mi] += first_hit_accesses(&bvh, &ray, &mut fh_stack).1;
+            }
+        }
+        for (kind, t) in totals.iter().enumerate() {
+            let [binary, simd, scalar] = *t;
+            assert!(binary > 0 && simd > 0, "kind {kind} must do work");
+            // The SIMD and forced-scalar loops walk identical node
+            // sequences, so their group-test counts match exactly.
+            assert_eq!(simd, scalar, "kind {kind}");
+            // A 4-wide group test covers at least two binary node tests,
+            // so wide accesses come out below binary accesses — the
+            // figure-7-style rate comparison stays on comparable axes.
+            assert!(simd < binary, "kind {kind}: wide {simd} vs binary {binary}");
         }
     }
 

@@ -1,0 +1,788 @@
+//! The wide (4-ary) traversal layer: SoA child groups with quantized
+//! boxes, tested four lanes at a time.
+//!
+//! The binary LBVH stays the build product and the sole source of truth —
+//! builders, `validate()`, and the reference traversals are untouched.
+//! This module derives a second, query-only view from it in a post-build
+//! collapse pass ([`WideBvh::collapse`]): each wide node gathers up to
+//! four binary subtrees (greedily expanding the largest-surface-area
+//! child, so big boxes split first) and stores their AABBs transposed
+//! into x/y/z min/max lanes, u8-quantized against the node's parent box.
+//! One predicate evaluation — [`SpatialPredicate::test_wide`],
+//! [`DistanceTo::lower_bound_wide`], or [`Ray::box_entry_wide`] — then
+//! covers the whole child group through the [`crate::geometry::simd`]
+//! abstraction.
+//!
+//! **Quantization error is conservative inflation only.** A child's
+//! quantized bounds are snapped *outward* onto the 255-step grid of the
+//! parent box (verified slot by slot at build time), so every dequantized
+//! lane box *contains* the true child box; the error per axis is at most
+//! two grid steps (~1/128 of the parent extent). Traversal therefore
+//! visits a superset of the binary tree's subtrees — never fewer — and
+//! because leaves are always scored with the exact scalar predicate on
+//! the exact leaf boxes, and the (distance, index) / (t, index) winners
+//! are order-independent minima, results are bit-for-bit identical to the
+//! binary traversals. (User-defined predicates keep this property iff
+//! `test` is monotone under box containment, which the trait already
+//! requires for binary pruning.)
+//!
+//! **Mode selection.** Every built [`Bvh`] carries a [`TraversalMode`],
+//! defaulted from the environment once per process: `ARBOR_FORCE_SCALAR=1`
+//! or `ARBOR_TRAVERSAL=wide-scalar` forces the per-lane scalar fallback
+//! (the CI job that keeps the non-SIMD path green), `ARBOR_TRAVERSAL=
+//! binary` selects the reference binary traversals, anything else uses
+//! wide SIMD. [`Bvh::set_traversal_mode`] overrides it per tree. The
+//! dispatchers in this module ([`for_each_spatial`], [`count_spatial`],
+//! [`nearest_stack`], [`nearest_into_heap`], [`first_hit`]) share names
+//! and signatures with the binary entry points so the batched and
+//! distributed engines route through the mode with an import swap.
+//!
+//! The scalar fallback is also taken per *target*: [`crate::geometry::
+//! simd`] compiles to SSE2/NEON only on x86-64/AArch64, every other
+//! architecture runs the same lane loop in scalar code.
+
+use std::sync::OnceLock;
+
+use super::first_hit::{offer_hit, RayHit};
+use super::nearest::{KnnHeap, NearestScratch, Neighbor};
+use super::{first_hit as fh, nearest, traversal};
+use super::{internal_ref, is_leaf, ref_index, Bvh, InternalNode, NodeRef};
+use crate::geometry::predicates::{DistanceTo, FirstHitQuery, NearestQuery, SpatialPredicate};
+use crate::geometry::simd::{BoxSoA4, F32x4};
+use crate::geometry::{Aabb, Point};
+
+/// Which node-test loop a tree's queries run through.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraversalMode {
+    /// The binary reference traversals (§2.2.1–2.2.2 verbatim).
+    Binary,
+    /// 4-wide child-group tests through the SIMD abstraction (default).
+    WideSimd,
+    /// 4-wide traversal with per-lane scalar tests on the same
+    /// dequantized boxes — the forced fallback (`ARBOR_FORCE_SCALAR=1`),
+    /// bit-identical to [`TraversalMode::WideSimd`].
+    WideScalar,
+}
+
+/// Process-wide default [`TraversalMode`], read from the environment once
+/// (`ARBOR_FORCE_SCALAR`, `ARBOR_TRAVERSAL`; see the module docs).
+pub(crate) fn default_mode() -> TraversalMode {
+    static MODE: OnceLock<TraversalMode> = OnceLock::new();
+    *MODE.get_or_init(|| {
+        if std::env::var_os("ARBOR_FORCE_SCALAR").is_some_and(|v| v == "1") {
+            return TraversalMode::WideScalar;
+        }
+        match std::env::var("ARBOR_TRAVERSAL").as_deref() {
+            Ok("binary") => TraversalMode::Binary,
+            Ok("wide-scalar") => TraversalMode::WideScalar,
+            _ => TraversalMode::WideSimd,
+        }
+    })
+}
+
+/// Sentinel for an unused child slot (lanes `>= count`). Never
+/// dereferenced — all traversal loops are bounded by `count`.
+pub(crate) const EMPTY_CHILD: NodeRef = u32::MAX;
+
+/// One 4-wide node: up to four children whose AABBs are stored SoA,
+/// u8-quantized against the node's parent binary box (`origin` +
+/// `q * scale` per axis). 68 bytes versus 112 for four unquantized boxes
+/// plus refs — node bandwidth is the hot-loop budget (§2).
+#[derive(Clone, Debug)]
+pub(crate) struct WideNode {
+    /// Quantization grid origin: the parent binary node's `bbox.min`.
+    pub(crate) origin: [f32; 3],
+    /// Per-axis grid step, fixed up so `origin + 255 * scale` covers the
+    /// parent's `bbox.max` (0 on degenerate axes).
+    pub(crate) scale: [f32; 3],
+    /// Per-axis, per-lane quantized child minima (snapped down).
+    pub(crate) qmin: [[u8; 4]; 3],
+    /// Per-axis, per-lane quantized child maxima (snapped up). Unused
+    /// lanes hold an inverted box (`qmin = 255, qmax = 0`).
+    pub(crate) qmax: [[u8; 4]; 3],
+    /// Per-lane child: a leaf-tagged [`NodeRef`] or an (untagged) index
+    /// into [`WideBvh::nodes`]; [`EMPTY_CHILD`] for unused lanes.
+    pub(crate) children: [NodeRef; 4],
+    /// Number of used lanes (2..=4; children are packed at the front).
+    pub(crate) count: u8,
+}
+
+impl WideNode {
+    /// Bitmask of the used lanes.
+    #[inline]
+    pub(crate) fn lane_mask(&self) -> u32 {
+        (1u32 << self.count) - 1
+    }
+
+    /// Dequantizes all four child boxes into SoA lanes. Per lane this is
+    /// `origin + q * scale` — the same two operations, in the same
+    /// order, as the scalar [`WideNode::child_box`], so both paths test
+    /// bit-identical boxes.
+    #[inline]
+    pub(crate) fn child_boxes(&self) -> BoxSoA4 {
+        let dequant = |q: &[u8; 4], d: usize| {
+            F32x4::splat(self.origin[d])
+                + F32x4::from_array(q.map(f32::from)) * F32x4::splat(self.scale[d])
+        };
+        BoxSoA4 {
+            min: core::array::from_fn(|d| dequant(&self.qmin[d], d)),
+            max: core::array::from_fn(|d| dequant(&self.qmax[d], d)),
+        }
+    }
+
+    /// Dequantizes lane `l` in scalar form (the forced-fallback path and
+    /// `validate()`).
+    #[inline]
+    pub(crate) fn child_box(&self, l: usize) -> Aabb {
+        let lo = |d: usize| self.origin[d] + f32::from(self.qmin[d][l]) * self.scale[d];
+        let hi = |d: usize| self.origin[d] + f32::from(self.qmax[d][l]) * self.scale[d];
+        Aabb::new(Point::new(lo(0), lo(1), lo(2)), Point::new(hi(0), hi(1), hi(2)))
+    }
+}
+
+/// The next representable `f32` above a positive finite `x`.
+#[inline]
+fn next_up(x: f32) -> f32 {
+    f32::from_bits(x.to_bits() + 1)
+}
+
+/// Grid step for one parent axis `[pmin, pmax]`: `extent / 255`, bumped
+/// upward until `pmin + 255 * scale >= pmax` so the top grid line covers
+/// the parent (float division rounds either way). Degenerate axes get 0.
+fn axis_scale(pmin: f32, pmax: f32) -> f32 {
+    let extent = pmax - pmin;
+    debug_assert!(extent.is_finite(), "non-finite parent extent {pmin}..{pmax}");
+    if extent <= 0.0 {
+        return 0.0;
+    }
+    let mut scale = extent / 255.0;
+    while pmin + 255.0 * scale < pmax {
+        scale = next_up(scale);
+    }
+    scale
+}
+
+/// Quantizes a child interval `[cmin, cmax]` onto the parent grid,
+/// snapping outward: the returned `(qmin, qmax)` dequantize to an
+/// interval *containing* `[cmin, cmax]` (conservative inflation only).
+/// The rounding guesses are verified and fixed up against the exact
+/// dequantization arithmetic, so containment holds bit-for-bit; `qmin=0`
+/// lands on `pmin <= cmin` and `qmax=255` on the fixed-up top line, so
+/// both loops terminate in bounds.
+fn quantize_axis(pmin: f32, scale: f32, cmin: f32, cmax: f32) -> (u8, u8) {
+    if scale == 0.0 {
+        // Degenerate parent axis: every contained child interval is the
+        // single coordinate `pmin`, represented exactly.
+        return (0, 0);
+    }
+    let mut qmin = ((cmin - pmin) / scale).floor().clamp(0.0, 255.0) as u8;
+    while qmin > 0 && pmin + f32::from(qmin) * scale > cmin {
+        qmin -= 1;
+    }
+    let mut qmax = ((cmax - pmin) / scale).ceil().clamp(0.0, 255.0) as u8;
+    while qmax < 255 && pmin + f32::from(qmax) * scale < cmax {
+        qmax += 1;
+    }
+    debug_assert!(pmin + f32::from(qmin) * scale <= cmin);
+    debug_assert!(pmin + f32::from(qmax) * scale >= cmax);
+    (qmin, qmax)
+}
+
+/// The wide view of a [`Bvh`]: the collapse product, empty for trees with
+/// fewer than two leaves (traversal handles those cases directly, as the
+/// binary loops do).
+#[derive(Clone, Debug, Default)]
+pub(crate) struct WideBvh {
+    /// Wide nodes; index 0 is the root, children always have larger
+    /// indices than their parent (work-stack assignment order).
+    pub(crate) nodes: Vec<WideNode>,
+}
+
+impl WideBvh {
+    /// Collapses the binary tree into 4-wide nodes. Each binary internal
+    /// node reached becomes one wide node whose child group is found by
+    /// repeatedly expanding the internal candidate with the largest
+    /// surface area (split big boxes first) until four slots are used or
+    /// only leaves remain; quantization is against the reached node's own
+    /// binary box.
+    pub(crate) fn collapse(nodes: &[InternalNode], leaf_boxes: &[Aabb], root: NodeRef) -> WideBvh {
+        if nodes.is_empty() || is_leaf(root) {
+            return WideBvh::default();
+        }
+        let mut wide: Vec<WideNode> = Vec::with_capacity(nodes.len() / 3 + 1);
+        // (binary internal index, wide parent index, parent lane);
+        // u32::MAX marks the root (no parent slot to patch).
+        let mut work: Vec<(usize, u32, usize)> = vec![(ref_index(root), u32::MAX, 0)];
+        while let Some((bi, parent, slot)) = work.pop() {
+            let wi = wide.len() as u32;
+            if parent != u32::MAX {
+                wide[parent as usize].children[slot] = internal_ref(wi);
+            }
+            // Gather up to four children of binary node `bi`.
+            let mut kids: [NodeRef; 4] = [nodes[bi].left, nodes[bi].right, 0, 0];
+            let mut n_kids = 2usize;
+            while n_kids < 4 {
+                let mut best: Option<usize> = None;
+                let mut best_area = f32::NEG_INFINITY;
+                for (i, &k) in kids[..n_kids].iter().enumerate() {
+                    if !is_leaf(k) {
+                        let area = nodes[ref_index(k)].bbox.surface_area();
+                        if area > best_area {
+                            best_area = area;
+                            best = Some(i);
+                        }
+                    }
+                }
+                let Some(i) = best else { break };
+                let expanded = &nodes[ref_index(kids[i])];
+                kids[i] = expanded.left;
+                kids[n_kids] = expanded.right;
+                n_kids += 1;
+            }
+
+            let pb = &nodes[bi].bbox;
+            let mut node = WideNode {
+                origin: [pb.min[0], pb.min[1], pb.min[2]],
+                scale: core::array::from_fn(|d| axis_scale(pb.min[d], pb.max[d])),
+                qmin: [[255; 4]; 3], // unused lanes stay inverted
+                qmax: [[0; 4]; 3],
+                children: [EMPTY_CHILD; 4],
+                count: n_kids as u8,
+            };
+            for (l, &k) in kids[..n_kids].iter().enumerate() {
+                let kb = if is_leaf(k) {
+                    &leaf_boxes[ref_index(k)]
+                } else {
+                    &nodes[ref_index(k)].bbox
+                };
+                for d in 0..3 {
+                    let (qlo, qhi) =
+                        quantize_axis(pb.min[d], node.scale[d], kb.min[d], kb.max[d]);
+                    node.qmin[d][l] = qlo;
+                    node.qmax[d][l] = qhi;
+                }
+                if is_leaf(k) {
+                    node.children[l] = k;
+                } else {
+                    work.push((ref_index(k), wi, l));
+                }
+            }
+            wide.push(node);
+        }
+        WideBvh { nodes: wide }
+    }
+}
+
+/// The wide spatial traversal: the pop/test-group/push loop of §2.2.1
+/// over 4-wide nodes. Root gating (exact binary root box), leaf tests
+/// (exact scalar `pred.test`), and visit order semantics mirror
+/// [`traversal::for_each_spatial_monitored`]; `monitor` fires once for
+/// the root gate (`0`) and once per wide node whose child group is
+/// tested. With `SIMD = false` every lane is tested with the scalar
+/// `pred.test` on the same dequantized boxes (the forced fallback).
+pub fn for_each_spatial_wide_monitored<
+    const SIMD: bool,
+    P: SpatialPredicate,
+    F: FnMut(u32),
+    M: FnMut(u32),
+>(
+    bvh: &Bvh,
+    pred: &P,
+    stack: &mut Vec<NodeRef>,
+    mut visit: F,
+    mut monitor: M,
+) {
+    if bvh.n_leaves == 0 {
+        return;
+    }
+    if is_leaf(bvh.root) {
+        if pred.test(&bvh.leaf_boxes[0]) {
+            visit(bvh.leaf_perm[0]);
+        }
+        return;
+    }
+    monitor(0);
+    if !pred.test(&bvh.nodes[ref_index(bvh.root)].bbox) {
+        return;
+    }
+    let wide = &bvh.wide.nodes;
+    stack.clear();
+    stack.push(0);
+    while let Some(wi) = stack.pop() {
+        let node = &wide[wi as usize];
+        monitor(wi);
+        let hits = if SIMD {
+            pred.test_wide(&node.child_boxes(), node.lane_mask())
+        } else {
+            let mut m = 0u32;
+            for l in 0..node.count as usize {
+                if pred.test(&node.child_box(l)) {
+                    m |= 1 << l;
+                }
+            }
+            m
+        };
+        for l in 0..node.count as usize {
+            if hits >> l & 1 == 0 {
+                continue;
+            }
+            let c = node.children[l];
+            if is_leaf(c) {
+                let ci = ref_index(c);
+                if pred.test(&bvh.leaf_boxes[ci]) {
+                    visit(bvh.leaf_perm[ci]);
+                }
+            } else {
+                stack.push(c);
+            }
+        }
+    }
+}
+
+/// The wide nearest traversal: §2.2.2's farther-pushed-first descent
+/// generalized to up-to-four pending children (stable descending sort by
+/// lower bound). Root gating, leaf scoring, and prune conditions mirror
+/// [`nearest`]'s `nearest_core`; quantized lane boxes only loosen lower
+/// bounds, so pruning stays sound and the (distance, index) heap winners
+/// are unchanged.
+pub fn nearest_wide_monitored<
+    const SIMD: bool,
+    Q: NearestQuery,
+    F: Fn(u32) -> u32,
+    M: FnMut(u32),
+>(
+    bvh: &Bvh,
+    query: &Q,
+    stack: &mut Vec<(NodeRef, f32)>,
+    heap: &mut KnnHeap,
+    map_index: F,
+    mut monitor: M,
+) {
+    let geometry = query.geometry();
+    if bvh.n_leaves == 0 || heap.k() == 0 {
+        return;
+    }
+    if is_leaf(bvh.root) {
+        heap.offer(geometry.distance_squared(&bvh.leaf_boxes[0]), map_index(bvh.leaf_perm[0]));
+        return;
+    }
+    stack.clear();
+    monitor(0);
+    let root_dist = geometry.lower_bound(&bvh.nodes[ref_index(bvh.root)].bbox);
+    if root_dist > heap.bound() {
+        return; // the whole tree is behind the seeded bound
+    }
+    stack.push((0, root_dist));
+    while let Some((wi, dist)) = stack.pop() {
+        if dist > heap.bound() {
+            continue;
+        }
+        let node = &bvh.wide.nodes[wi as usize];
+        monitor(wi);
+        let dists = if SIMD {
+            geometry.lower_bound_wide(&node.child_boxes())
+        } else {
+            let mut d = [f32::INFINITY; 4];
+            for l in 0..node.count as usize {
+                d[l] = geometry.lower_bound(&node.child_box(l));
+            }
+            d
+        };
+        let mut pending: [(NodeRef, f32); 4] = [(0, f32::INFINITY); 4];
+        let mut n_pending = 0usize;
+        for l in 0..node.count as usize {
+            let c = node.children[l];
+            if is_leaf(c) {
+                let ci = ref_index(c);
+                heap.offer(geometry.distance_squared(&bvh.leaf_boxes[ci]), map_index(bvh.leaf_perm[ci]));
+            } else {
+                pending[n_pending] = (c, dists[l]);
+                n_pending += 1;
+            }
+        }
+        // Push farther children first so the closest is popped first —
+        // the binary swap generalized to a stable descending sort.
+        pending[..n_pending].sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        let bound = heap.bound();
+        for &(c, d) in pending.iter().take(n_pending) {
+            if d <= bound {
+                stack.push((c, d));
+            }
+        }
+    }
+}
+
+/// The wide first-hit traversal: entry-ordered descent over 4-wide
+/// nodes, mirroring [`fh::first_hit_monitored`]. Lane entry parameters
+/// come from the one wide slab test ([`crate::geometry::Ray::
+/// box_entry_wide`]); leaves are re-tested with the exact scalar slab, so
+/// the (t, index) winner is unchanged by the conservative lane boxes.
+pub fn first_hit_wide_monitored<const SIMD: bool, Q: FirstHitQuery, M: FnMut(u32)>(
+    bvh: &Bvh,
+    query: &Q,
+    stack: &mut Vec<(NodeRef, f32)>,
+    mut monitor: M,
+) -> Option<RayHit> {
+    let ray = query.ray();
+    if bvh.n_leaves == 0 {
+        return None;
+    }
+    if is_leaf(bvh.root) {
+        return ray.box_entry(&bvh.leaf_boxes[0]).map(|t| RayHit { index: bvh.leaf_perm[0], t });
+    }
+    monitor(0);
+    let root_entry = ray.box_entry(&bvh.nodes[ref_index(bvh.root)].bbox)?;
+    let mut best: Option<RayHit> = None;
+    stack.clear();
+    stack.push((0, root_entry));
+    while let Some((wi, entry)) = stack.pop() {
+        // Equal entries survive so the index tie-break stays exact.
+        if best.as_ref().is_some_and(|b| entry > b.t) {
+            continue;
+        }
+        let node = &bvh.wide.nodes[wi as usize];
+        monitor(wi);
+        let (entries, hit_mask) = if SIMD {
+            let (e, m) = ray.box_entry_wide(&node.child_boxes());
+            (e, m & node.lane_mask())
+        } else {
+            let mut e = [f32::INFINITY; 4];
+            let mut m = 0u32;
+            for l in 0..node.count as usize {
+                if let Some(t) = ray.box_entry(&node.child_box(l)) {
+                    e[l] = t;
+                    m |= 1 << l;
+                }
+            }
+            (e, m)
+        };
+        let mut pending: [(NodeRef, f32); 4] = [(0, f32::INFINITY); 4];
+        let mut n_pending = 0usize;
+        for l in 0..node.count as usize {
+            if hit_mask >> l & 1 == 0 {
+                continue;
+            }
+            let c = node.children[l];
+            if is_leaf(c) {
+                let ci = ref_index(c);
+                if let Some(t) = ray.box_entry(&bvh.leaf_boxes[ci]) {
+                    offer_hit(&mut best, t, bvh.leaf_perm[ci]);
+                }
+            } else {
+                pending[n_pending] = (c, entries[l]);
+                n_pending += 1;
+            }
+        }
+        // Later-entered children pushed first (stable descending sort),
+        // so the earliest-entered tightens the bound first.
+        pending[..n_pending].sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        for &(c, t) in pending.iter().take(n_pending) {
+            if best.as_ref().map_or(true, |b| t <= b.t) {
+                stack.push((c, t));
+            }
+        }
+    }
+    best
+}
+
+// --- mode dispatchers -------------------------------------------------
+//
+// Same names and signatures as the binary entry points in `traversal`,
+// `nearest`, and `first_hit`, routing on the tree's [`TraversalMode`].
+// The batched and distributed engines import these instead of the binary
+// functions and pick up the wide hot path unchanged.
+
+/// Mode-dispatched [`traversal::for_each_spatial`].
+#[inline]
+pub fn for_each_spatial<P: SpatialPredicate, F: FnMut(u32)>(
+    bvh: &Bvh,
+    pred: &P,
+    stack: &mut Vec<NodeRef>,
+    visit: F,
+) {
+    match bvh.mode {
+        TraversalMode::Binary => traversal::for_each_spatial(bvh, pred, stack, visit),
+        TraversalMode::WideSimd => {
+            for_each_spatial_wide_monitored::<true, _, _, _>(bvh, pred, stack, visit, |_| {})
+        }
+        TraversalMode::WideScalar => {
+            for_each_spatial_wide_monitored::<false, _, _, _>(bvh, pred, stack, visit, |_| {})
+        }
+    }
+}
+
+/// Mode-dispatched [`traversal::count_spatial`].
+#[inline]
+pub fn count_spatial<P: SpatialPredicate>(bvh: &Bvh, pred: &P, stack: &mut Vec<NodeRef>) -> u32 {
+    let mut count = 0u32;
+    for_each_spatial(bvh, pred, stack, |_| count += 1);
+    count
+}
+
+/// Mode-dispatched [`nearest::nearest_stack`].
+#[inline]
+pub fn nearest_stack<Q: NearestQuery>(
+    bvh: &Bvh,
+    query: &Q,
+    scratch: &mut NearestScratch,
+    out: &mut Vec<Neighbor>,
+) {
+    if bvh.mode == TraversalMode::Binary {
+        return nearest::nearest_stack(bvh, query, scratch, out);
+    }
+    out.clear();
+    if bvh.n_leaves == 0 || query.k() == 0 {
+        return;
+    }
+    scratch.heap.reset(query.k());
+    match bvh.mode {
+        TraversalMode::WideSimd => nearest_wide_monitored::<true, _, _, _>(
+            bvh,
+            query,
+            &mut scratch.stack,
+            &mut scratch.heap,
+            |i| i,
+            |_| {},
+        ),
+        _ => nearest_wide_monitored::<false, _, _, _>(
+            bvh,
+            query,
+            &mut scratch.stack,
+            &mut scratch.heap,
+            |i| i,
+            |_| {},
+        ),
+    }
+    scratch.heap.drain_sorted_into(out);
+}
+
+/// Mode-dispatched [`nearest::nearest_into_heap`] (the distributed rank
+/// walk's seeded seam).
+#[inline]
+pub fn nearest_into_heap<Q: NearestQuery, F: Fn(u32) -> u32>(
+    bvh: &Bvh,
+    query: &Q,
+    stack: &mut Vec<(NodeRef, f32)>,
+    heap: &mut KnnHeap,
+    map_index: F,
+) {
+    match bvh.mode {
+        TraversalMode::Binary => nearest::nearest_into_heap(bvh, query, stack, heap, map_index),
+        TraversalMode::WideSimd => {
+            nearest_wide_monitored::<true, _, _, _>(bvh, query, stack, heap, map_index, |_| {})
+        }
+        TraversalMode::WideScalar => {
+            nearest_wide_monitored::<false, _, _, _>(bvh, query, stack, heap, map_index, |_| {})
+        }
+    }
+}
+
+/// Mode-dispatched [`fh::first_hit`].
+#[inline]
+pub fn first_hit<Q: FirstHitQuery>(
+    bvh: &Bvh,
+    query: &Q,
+    stack: &mut Vec<(NodeRef, f32)>,
+) -> Option<RayHit> {
+    match bvh.mode {
+        TraversalMode::Binary => fh::first_hit(bvh, query, stack),
+        TraversalMode::WideSimd => {
+            first_hit_wide_monitored::<true, _, _>(bvh, query, stack, |_| {})
+        }
+        TraversalMode::WideScalar => {
+            first_hit_wide_monitored::<false, _, _>(bvh, query, stack, |_| {})
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::ExecSpace;
+    use crate::geometry::predicates::{FirstHit, IntersectsSphere, Nearest};
+    use crate::geometry::{Ray, Sphere};
+
+    /// Deterministic xorshift for the property tests.
+    struct Rng(u64);
+    impl Rng {
+        fn next_f32(&mut self, lo: f32, hi: f32) -> f32 {
+            self.0 ^= self.0 << 13;
+            self.0 ^= self.0 >> 7;
+            self.0 ^= self.0 << 17;
+            lo + (self.0 >> 11) as f32 / (1u64 << 53) as f32 * (hi - lo)
+        }
+    }
+
+    #[test]
+    fn quantization_snaps_outward_only() {
+        // Property: the dequantized interval contains the child interval,
+        // over random, tiny, huge, and degenerate parent/child pairs.
+        let mut rng = Rng(0x9e3779b97f4a7c15);
+        let mut cases: Vec<(f32, f32, f32, f32)> = Vec::new();
+        for scale_mag in [1.0f32, 1e-30, 1e30, 1e-3] {
+            for _ in 0..200 {
+                let pmin = rng.next_f32(-10.0, 10.0) * scale_mag;
+                let pmax = pmin + rng.next_f32(0.0, 20.0) * scale_mag;
+                let a = rng.next_f32(0.0, 1.0);
+                let b = rng.next_f32(0.0, 1.0);
+                let (lo_t, hi_t) = if a <= b { (a, b) } else { (b, a) };
+                let cmin = pmin + lo_t * (pmax - pmin);
+                let cmax = pmin + hi_t * (pmax - pmin);
+                // Guard against fp overshoot in the test harness itself.
+                let cmin = cmin.max(pmin).min(pmax);
+                let cmax = cmax.max(cmin).min(pmax);
+                cases.push((pmin, pmax, cmin, cmax));
+            }
+        }
+        // Degenerate and exact-boundary edges.
+        cases.push((1.0, 1.0, 1.0, 1.0)); // zero-extent parent
+        cases.push((0.0, 1.0, 0.0, 1.0)); // child == parent
+        cases.push((0.0, 1.0, 0.5, 0.5)); // zero-extent child
+        cases.push((-1e30, 1e30, -1e30, 1e30));
+        for &(pmin, pmax, cmin, cmax) in &cases {
+            let scale = axis_scale(pmin, pmax);
+            if scale > 0.0 {
+                assert!(pmin + 255.0 * scale >= pmax, "grid covers parent {pmin}..{pmax}");
+            }
+            let (qlo, qhi) = quantize_axis(pmin, scale, cmin, cmax);
+            let lo = pmin + f32::from(qlo) * scale;
+            let hi = pmin + f32::from(qhi) * scale;
+            assert!(
+                lo <= cmin && hi >= cmax,
+                "[{lo}, {hi}] must contain [{cmin}, {cmax}] (parent {pmin}..{pmax})"
+            );
+        }
+    }
+
+    fn line_boxes(n: usize) -> Vec<Aabb> {
+        (0..n)
+            .map(|i| Aabb::from_point(Point::new(i as f32, (i % 3) as f32, 0.0)))
+            .collect()
+    }
+
+    #[test]
+    fn collapse_structure_over_small_trees() {
+        let space = ExecSpace::serial();
+        for n in 0..=17usize {
+            let bvh = Bvh::build(&space, &line_boxes(n));
+            // `validate()` checks the wide layer: leaf coverage, child
+            // ordering, lane-box containment.
+            assert_eq!(bvh.validate(), Ok(()), "n = {n}");
+            if n < 2 {
+                assert!(bvh.wide.nodes.is_empty());
+            } else {
+                assert!(!bvh.wide.nodes.is_empty());
+                // A 4-ary collapse needs at most the binary node count
+                // and at least (n - 1) / 3 nodes.
+                assert!(bvh.wide.nodes.len() <= n - 1, "n = {n}");
+                assert!(bvh.wide.nodes.len() >= n.saturating_sub(1).div_ceil(3), "n = {n}");
+                for w in &bvh.wide.nodes {
+                    assert!((2..=4).contains(&(w.count as usize)));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn soa_and_scalar_dequantization_agree() {
+        let space = ExecSpace::serial();
+        let bvh = Bvh::build(&space, &line_boxes(33));
+        for node in &bvh.wide.nodes {
+            let soa = node.child_boxes();
+            for l in 0..node.count as usize {
+                assert_eq!(soa.get(l), node.child_box(l));
+            }
+        }
+    }
+
+    #[test]
+    fn all_modes_agree_on_every_query_kind() {
+        let space = ExecSpace::serial();
+        let mut rng = Rng(7);
+        let boxes: Vec<Aabb> = (0..300)
+            .map(|_| {
+                let c = Point::new(
+                    rng.next_f32(-10.0, 10.0),
+                    rng.next_f32(-10.0, 10.0),
+                    rng.next_f32(-10.0, 10.0),
+                );
+                let h = Point::new(
+                    rng.next_f32(0.0, 0.5),
+                    rng.next_f32(0.0, 0.5),
+                    rng.next_f32(0.0, 0.5),
+                );
+                Aabb::new(c - h, c + h)
+            })
+            .collect();
+        let mut bvh = Bvh::build(&space, &boxes);
+        let mut spatial_stack = Vec::new();
+        let mut scratch = NearestScratch::new(8);
+        let mut hit_stack = Vec::new();
+        for qi in 0..40 {
+            let c = Point::new(
+                rng.next_f32(-12.0, 12.0),
+                rng.next_f32(-12.0, 12.0),
+                rng.next_f32(-12.0, 12.0),
+            );
+            let sphere = IntersectsSphere(Sphere::new(c, rng.next_f32(0.0, 6.0)));
+            let knn = Nearest::new(c, 1 + qi % 8);
+            let ray = FirstHit(Ray::new(c, Point::new(0.3, -1.0, 0.2)));
+
+            let mut results: Vec<(Vec<u32>, Vec<Neighbor>, Option<RayHit>)> = Vec::new();
+            for mode in
+                [TraversalMode::Binary, TraversalMode::WideSimd, TraversalMode::WideScalar]
+            {
+                bvh.set_traversal_mode(mode);
+                let mut found = Vec::new();
+                for_each_spatial(&bvh, &sphere, &mut spatial_stack, |i| found.push(i));
+                found.sort();
+                let mut nn = Vec::new();
+                nearest_stack(&bvh, &knn, &mut scratch, &mut nn);
+                let hit = first_hit(&bvh, &ray, &mut hit_stack);
+                results.push((found, nn, hit));
+            }
+            assert_eq!(results[0], results[1], "binary vs wide-simd, query {qi}");
+            assert_eq!(results[0], results[2], "binary vs wide-scalar, query {qi}");
+        }
+    }
+
+    #[test]
+    fn seeded_heap_prunes_at_the_root_in_wide_mode() {
+        // The wide nearest traversal gates on the exact binary root box,
+        // so the distributed rank walk's prune-at-root behavior (one
+        // monitored node) is preserved in both wide modes.
+        let boxes: Vec<Aabb> = (0..64)
+            .map(|i| Aabb::from_point(Point::new(100.0 + (i % 8) as f32, (i / 8) as f32, 0.0)))
+            .collect();
+        let bvh = Bvh::build(&ExecSpace::serial(), &boxes);
+        let q = Nearest::new(Point::origin(), 2);
+        let mut stack = Vec::new();
+        for simd in [true, false] {
+            let mut seeded = KnnHeap::new(2);
+            seeded.offer(1.0, 1000);
+            seeded.offer(1.0, 1001);
+            let mut visited = 0usize;
+            if simd {
+                nearest_wide_monitored::<true, _, _, _>(
+                    &bvh, &q, &mut stack, &mut seeded, |i| i, |_| visited += 1,
+                );
+            } else {
+                nearest_wide_monitored::<false, _, _, _>(
+                    &bvh, &q, &mut stack, &mut seeded, |i| i, |_| visited += 1,
+                );
+            }
+            assert_eq!(visited, 1, "simd = {simd}");
+        }
+    }
+
+    #[test]
+    fn default_mode_is_consistent_per_process() {
+        // The OnceLock pins one default for the whole process; every
+        // fresh build must carry it.
+        let space = ExecSpace::serial();
+        let a = Bvh::build(&space, &line_boxes(8));
+        let b = Bvh::build_apetrei(&space, &line_boxes(8));
+        assert_eq!(a.traversal_mode(), default_mode());
+        assert_eq!(b.traversal_mode(), default_mode());
+    }
+}

@@ -33,7 +33,7 @@
 //! [`DistributedTree::query_predicate`] executes one wire predicate
 //! (the per-query forward/merge walk, which for the nearest family
 //! *seeds* each visited rank's traversal with the running global bound
-//! via [`nearest::nearest_into_heap`], so already-beaten subtrees prune
+//! via [`crate::bvh::wide::nearest_into_heap`], so already-beaten subtrees prune
 //! immediately); [`DistributedTree::spatial`] is the single-query
 //! streaming wrapper over the same core the batch uses.
 
@@ -42,8 +42,10 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::bvh::first_hit::{self, RayHit};
-use crate::bvh::nearest::{self, KnnHeap, Neighbor};
-use crate::bvh::traversal::for_each_spatial;
+use crate::bvh::nearest::{KnnHeap, Neighbor};
+// Mode-dispatched traversal entry points: rank-local executions run
+// through each shard tree's `TraversalMode`, like the batched engines.
+use crate::bvh::wide::{self, for_each_spatial};
 use crate::bvh::{Bvh, QueryOutput, QueryPredicate};
 use crate::exec::scan::{exclusive_scan, SendPtr};
 use crate::exec::ExecSpace;
@@ -750,7 +752,7 @@ impl DistributedTree {
             }
             contacted += 1;
             let shard = &self.ranks[ri];
-            if let Some(local) = first_hit::first_hit(&shard.bvh, &FirstHit(*ray), &mut stack) {
+            if let Some(local) = wide::first_hit(&shard.bvh, &FirstHit(*ray), &mut stack) {
                 first_hit::offer_hit(&mut best, local.t, shard.global[local.index as usize]);
             }
         }
@@ -781,7 +783,8 @@ impl DistributedTree {
     /// (distance, global index) tie-break exact.
     ///
     /// Every visited rank's local traversal runs *seeded* with the
-    /// running global heap ([`nearest::nearest_into_heap`]): the bound
+    /// running global heap ([`crate::bvh::wide::nearest_into_heap`]): the
+    /// bound
     /// established by earlier ranks prunes this rank's subtrees from the
     /// root down, instead of re-running a full unbounded search whose
     /// locally-best candidates are already globally beaten.
@@ -814,7 +817,7 @@ impl DistributedTree {
             }
             contacted += 1;
             let shard = &self.ranks[ri];
-            nearest::nearest_into_heap(
+            wide::nearest_into_heap(
                 &shard.bvh,
                 &Nearest::new(*geometry, k),
                 &mut stack,

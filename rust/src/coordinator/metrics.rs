@@ -14,12 +14,15 @@
 //! every query's slot allocation, and a mis-sized static buffer must not
 //! force mass second-pass fallbacks) is the motivating failure.
 //!
-//! The histograms are *fixed* (never decay): under a non-stationary
-//! workload an upshifted tail is absorbed quickly (the 0.999 quantile
-//! jumps as soon as new-regime samples pass ~0.1% of history) but a
-//! downshift never shrinks the buffer back — see the ROADMAP's "decaying
-//! histograms" item and the pinned regression in
-//! `rust/tests/service_and_distributed.rs`.
+//! The histograms are *windowed* (two-epoch decay): each histogram keeps
+//! a current and a previous epoch of [`ADAPTIVE_WINDOW`] samples and
+//! rotates when the current epoch fills, so quantiles always reflect the
+//! last one-to-two windows of traffic. An upshifted tail is absorbed
+//! within a fraction of a window (the 0.999 quantile jumps as soon as
+//! new-regime samples pass ~0.1% of the window), and — unlike the fixed
+//! histograms this replaced — a downshift *shrinks the buffer back* once
+//! the heavy epoch rotates out, reclaiming the over-allocation. Both
+//! directions are pinned in `rust/tests/service_and_distributed.rs`.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -42,6 +45,13 @@ pub const ADAPTIVE_QUANTILE: f64 = 0.999;
 /// how heavy the observed tail is (hollow-case safety).
 pub const ADAPTIVE_MAX_BUFFER: usize = 4096;
 
+/// Samples per histogram epoch. A histogram's quantiles are computed
+/// over the current epoch plus the previous one, so the adaptive policy
+/// sees between one and two windows of recent traffic and forgets
+/// anything older — the decay that lets a downshifted workload shrink
+/// its buffer back.
+pub const ADAPTIVE_WINDOW: u64 = 1024;
+
 /// Maximum retained latency samples (reservoir truncates beyond this).
 const MAX_SAMPLES: usize = 1 << 20;
 
@@ -60,20 +70,42 @@ pub enum SubBatchPass {
     TwoPass,
 }
 
-/// A power-of-two result-count histogram with lock-free recording.
+/// A power-of-two result-count histogram with lock-free recording and
+/// two-epoch windowed decay.
 ///
 /// Bucket `0` counts queries with zero results; bucket `i >= 1` counts
 /// queries whose result count `c` satisfies `2^(i-1) <= c < 2^i` (upper
 /// bound `2^i - 1`). Counts at or above `2^32` clamp into the last
 /// bucket.
+///
+/// Recording lands in the *current* epoch; when it reaches
+/// [`ADAPTIVE_WINDOW`] samples it rotates into the *previous* epoch
+/// (whose contents are dropped). Every read-side quantity — `samples`,
+/// `bucket_counts`, `percentile` — spans both epochs, so the histogram
+/// always describes the last one-to-two windows of traffic and an old
+/// regime ages out after at most two rotations. Rotation is performed by
+/// whichever recording thread fills the window; concurrent recorders
+/// during the (rare) rotation may land a sample in the epoch being
+/// retired, which only shortens that sample's lifetime — the counts
+/// stay exact in serial use and approximate only under contention,
+/// which is all a sizing heuristic needs.
 #[derive(Debug)]
 pub struct ResultHistogram {
+    /// Current-epoch buckets (where `record` lands).
     buckets: [AtomicU64; HISTOGRAM_BUCKETS],
+    /// Previous-epoch buckets (read-only until the next rotation).
+    previous: [AtomicU64; HISTOGRAM_BUCKETS],
+    /// Samples recorded into the current epoch since the last rotation.
+    epoch_samples: AtomicU64,
 }
 
 impl Default for ResultHistogram {
     fn default() -> Self {
-        ResultHistogram { buckets: std::array::from_fn(|_| AtomicU64::new(0)) }
+        ResultHistogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            previous: std::array::from_fn(|_| AtomicU64::new(0)),
+            epoch_samples: AtomicU64::new(0),
+        }
     }
 }
 
@@ -97,20 +129,42 @@ impl ResultHistogram {
         }
     }
 
-    /// Records one query's result count (thread-safe, lock-free).
+    /// Records one query's result count (thread-safe, lock-free), rotating
+    /// the epoch when the window fills.
     #[inline]
     pub fn record(&self, count: u64) {
         self.buckets[Self::bucket_of(count)].fetch_add(1, Ordering::Relaxed);
+        // Exactly one recorder observes the window boundary and rotates.
+        if self.epoch_samples.fetch_add(1, Ordering::Relaxed) + 1 == ADAPTIVE_WINDOW {
+            self.rotate();
+        }
     }
 
-    /// Total recorded samples.
+    /// Retires the current epoch into `previous` and starts a fresh one.
+    fn rotate(&self) {
+        for (cur, prev) in self.buckets.iter().zip(&self.previous) {
+            prev.store(cur.swap(0, Ordering::Relaxed), Ordering::Relaxed);
+        }
+        self.epoch_samples.store(0, Ordering::Relaxed);
+    }
+
+    /// Samples in the active window (current plus previous epoch).
     pub fn samples(&self) -> u64 {
-        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+        self.buckets
+            .iter()
+            .zip(&self.previous)
+            .map(|(c, p)| c.load(Ordering::Relaxed) + p.load(Ordering::Relaxed))
+            .sum()
     }
 
-    /// A snapshot of the bucket counts.
+    /// A snapshot of the windowed bucket counts (current plus previous
+    /// epoch).
     pub fn bucket_counts(&self) -> Vec<u64> {
-        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+        self.buckets
+            .iter()
+            .zip(&self.previous)
+            .map(|(c, p)| c.load(Ordering::Relaxed) + p.load(Ordering::Relaxed))
+            .collect()
     }
 
     /// Upper bound of the smallest bucket whose cumulative sample share
@@ -475,7 +529,11 @@ mod tests {
     fn histogram_concurrent_recording() {
         let h = Arc::new(ResultHistogram::default());
         let threads = 8;
-        let per_thread = 1000u64;
+        // Stay inside one epoch (8 * 100 < ADAPTIVE_WINDOW) so the
+        // lock-free counts are exact; rotation behavior has its own
+        // deterministic serial tests below.
+        let per_thread = 100u64;
+        assert!(threads as u64 * per_thread < ADAPTIVE_WINDOW);
         let handles: Vec<_> = (0..threads)
             .map(|t| {
                 let h = Arc::clone(&h);
@@ -496,6 +554,47 @@ mod tests {
         assert_eq!(counts[1], per_thread);
         assert_eq!(counts[2], 2 * per_thread);
         assert_eq!(counts[3], 4 * per_thread);
+    }
+
+    #[test]
+    fn histogram_window_rotates_and_forgets_old_regimes() {
+        let h = ResultHistogram::default();
+        // Fill exactly one epoch with heavy counts: the rotation fires on
+        // the last sample, and the window still holds everything.
+        for _ in 0..ADAPTIVE_WINDOW {
+            h.record(1000); // bucket 10, upper bound 1023
+        }
+        assert_eq!(h.samples(), ADAPTIVE_WINDOW);
+        assert_eq!(h.percentile(0.999), 1023);
+        // Almost one epoch of light traffic: the heavy epoch sits in
+        // `previous`, so the tail is still visible...
+        for _ in 0..ADAPTIVE_WINDOW - 1 {
+            h.record(1);
+        }
+        assert_eq!(h.samples(), 2 * ADAPTIVE_WINDOW - 1, "window holds at most two epochs");
+        assert_eq!(h.percentile(0.999), 1023, "previous epoch still counts");
+        // ...and one more light epoch rotates it out entirely (the next
+        // record retires the heavy epoch, the rest refill the window).
+        for _ in 0..ADAPTIVE_WINDOW + 1 {
+            h.record(1);
+        }
+        assert_eq!(h.samples(), ADAPTIVE_WINDOW, "freshly rotated window");
+        assert_eq!(h.percentile(0.999), 1, "heavy regime aged out");
+        assert_eq!(h.percentile(1.0), 1);
+    }
+
+    #[test]
+    fn windowed_suggestion_shrinks_after_a_downshift() {
+        // The adaptive policy end-to-end: a heavy regime inflates the
+        // buffer, and two windows of light traffic deflate it again —
+        // the decay the fixed histograms lacked (ROADMAP 5a).
+        let m = Metrics::default();
+        let heavy: Vec<u64> = vec![1000; ADAPTIVE_WINDOW as usize];
+        m.record_sub_batch(PredicateKind::Sphere, &heavy, 0, SubBatchPass::TwoPass);
+        assert_eq!(m.suggest_buffer(PredicateKind::Sphere), Some(2047));
+        let light: Vec<u64> = vec![1; 2 * ADAPTIVE_WINDOW as usize];
+        m.record_sub_batch(PredicateKind::Sphere, &light, 0, SubBatchPass::OnePass);
+        assert_eq!(m.suggest_buffer(PredicateKind::Sphere), Some(3));
     }
 
     #[test]

@@ -17,6 +17,7 @@ mod sphere;
 mod triangle;
 pub mod morton;
 pub mod predicates;
+pub mod simd;
 
 pub use aabb::Aabb;
 pub use point::Point;

@@ -28,6 +28,7 @@
 //! nearest-to-geometry queries run through every layer the point path
 //! owns. All distances are *squared* (see the [`DistanceTo`] docs).
 
+use super::simd::{BoxSoA4, F32x4};
 use super::{Aabb, Point, Ray, Sphere};
 
 /// A spatial predicate: does a candidate bounding box satisfy the search
@@ -38,9 +39,42 @@ pub trait SpatialPredicate {
     /// Tests the predicate against a bounding box.
     fn test(&self, bbox: &Aabb) -> bool;
 
+    /// Tests the predicate against four SoA boxes at once — the wide-BVH
+    /// child-group test ([`crate::bvh::wide`]). `lanes` marks the valid
+    /// lanes (bit `i` = lane `i`); the returned mask must be a subset of
+    /// `lanes` and have bit `i` set iff [`SpatialPredicate::test`] passes
+    /// on lane `i`'s box. The default is the scalar loop; the shipped
+    /// kinds override it with one SIMD evaluation covering all lanes.
+    #[inline]
+    fn test_wide(&self, boxes: &BoxSoA4, lanes: u32) -> u32 {
+        let mut mask = 0u32;
+        for l in 0..4 {
+            if lanes >> l & 1 != 0 && self.test(&boxes.get(l)) {
+                mask |= 1 << l;
+            }
+        }
+        mask
+    }
+
     /// A representative point of the search region, used for Morton-code
     /// query ordering (§2.2.3).
     fn origin(&self) -> Point;
+}
+
+/// Four-lane squared point-to-box distance in the SoA layout: the SIMD
+/// twin of [`Aabb::distance_squared`], shared by the sphere test and the
+/// point/sphere lower bounds. Lane values for inverted (unused) boxes are
+/// meaningless and must be masked by the caller.
+#[inline]
+fn point_box_distance_squared_wide(p: &Point, boxes: &BoxSoA4) -> F32x4 {
+    let zero = F32x4::splat(0.0);
+    let mut d2 = zero;
+    for d in 0..3 {
+        let v = F32x4::splat(p[d]);
+        let gap = (boxes.min[d] - v).max((v - boxes.max[d]).max(zero));
+        d2 = d2 + gap * gap;
+    }
+    d2
 }
 
 /// All objects whose box intersects the sphere (radius search).
@@ -51,6 +85,12 @@ impl SpatialPredicate for IntersectsSphere {
     #[inline]
     fn test(&self, bbox: &Aabb) -> bool {
         self.0.intersects_box(bbox)
+    }
+
+    #[inline]
+    fn test_wide(&self, boxes: &BoxSoA4, lanes: u32) -> u32 {
+        let d2 = point_box_distance_squared_wide(&self.0.center, boxes);
+        d2.le(F32x4::splat(self.0.radius * self.0.radius)) & lanes
     }
 
     #[inline]
@@ -70,6 +110,18 @@ impl SpatialPredicate for IntersectsBox {
     }
 
     #[inline]
+    fn test_wide(&self, boxes: &BoxSoA4, lanes: u32) -> u32 {
+        // The closed-interval overlap test of `Aabb::intersects`, six
+        // comparisons ANDed per lane.
+        let mut mask = lanes;
+        for d in 0..3 {
+            mask &= F32x4::splat(self.0.min[d]).le(boxes.max[d]);
+            mask &= boxes.min[d].le(F32x4::splat(self.0.max[d]));
+        }
+        mask
+    }
+
+    #[inline]
     fn origin(&self) -> Point {
         self.0.centroid()
     }
@@ -84,6 +136,11 @@ impl SpatialPredicate for IntersectsRay {
     #[inline]
     fn test(&self, bbox: &Aabb) -> bool {
         self.0.intersects_box(bbox)
+    }
+
+    #[inline]
+    fn test_wide(&self, boxes: &BoxSoA4, lanes: u32) -> u32 {
+        self.0.box_entry_wide(boxes).1 & lanes
     }
 
     #[inline]
@@ -114,6 +171,11 @@ impl<P: SpatialPredicate, T> SpatialPredicate for WithData<P, T> {
     #[inline]
     fn test(&self, bbox: &Aabb) -> bool {
         self.pred.test(bbox)
+    }
+
+    #[inline]
+    fn test_wide(&self, boxes: &BoxSoA4, lanes: u32) -> u32 {
+        self.pred.test_wide(boxes, lanes)
     }
 
     #[inline]
@@ -168,6 +230,15 @@ impl SpatialPredicate for Spatial {
     }
 
     #[inline]
+    fn test_wide(&self, boxes: &BoxSoA4, lanes: u32) -> u32 {
+        match self {
+            Spatial::IntersectsSphere(s) => IntersectsSphere(*s).test_wide(boxes, lanes),
+            Spatial::IntersectsBox(b) => IntersectsBox(*b).test_wide(boxes, lanes),
+            Spatial::IntersectsRay(r) => IntersectsRay(*r).test_wide(boxes, lanes),
+        }
+    }
+
+    #[inline]
     fn origin(&self) -> Point {
         Spatial::origin(self)
     }
@@ -195,6 +266,17 @@ pub trait DistanceTo {
     /// what makes subtree pruning sound.
     fn lower_bound(&self, bbox: &Aabb) -> f32;
 
+    /// Four-lane [`DistanceTo::lower_bound`] over SoA boxes — the
+    /// wide-BVH child-group evaluation ([`crate::bvh::wide`]). Lane `i`
+    /// must equal `lower_bound(boxes.get(i))`; values for unused
+    /// (inverted) lanes are meaningless and the caller masks them by the
+    /// node's child count. The default is the scalar loop; the shipped
+    /// geometries override it with SIMD per-axis gap evaluation.
+    #[inline]
+    fn lower_bound_wide(&self, boxes: &BoxSoA4) -> [f32; 4] {
+        core::array::from_fn(|l| self.lower_bound(&boxes.get(l)))
+    }
+
     /// Exact squared distance from the query geometry to a leaf box. For
     /// the shipped geometries (point, sphere, box) the box lower bound is
     /// already exact, which the default reflects; a geometry with a loose
@@ -216,6 +298,11 @@ impl DistanceTo for Point {
     }
 
     #[inline]
+    fn lower_bound_wide(&self, boxes: &BoxSoA4) -> [f32; 4] {
+        point_box_distance_squared_wide(self, boxes).to_array()
+    }
+
+    #[inline]
     fn origin(&self) -> Point {
         *self
     }
@@ -228,6 +315,23 @@ impl DistanceTo for Sphere {
     }
 
     #[inline]
+    fn lower_bound_wide(&self, boxes: &BoxSoA4) -> [f32; 4] {
+        // SIMD center-to-box distance, then the scalar per-lane radius
+        // rebate of `Sphere::distance_squared_box` (sqrt is cheap at four
+        // lanes and the formula must match the scalar path exactly).
+        let d2 = point_box_distance_squared_wide(&self.center, boxes).to_array();
+        let r2 = self.radius * self.radius;
+        core::array::from_fn(|l| {
+            if d2[l] <= r2 {
+                0.0
+            } else {
+                let d = d2[l].sqrt() - self.radius;
+                d * d
+            }
+        })
+    }
+
+    #[inline]
     fn origin(&self) -> Point {
         self.center
     }
@@ -237,6 +341,20 @@ impl DistanceTo for Aabb {
     #[inline]
     fn lower_bound(&self, bbox: &Aabb) -> f32 {
         self.distance_squared_box(bbox)
+    }
+
+    #[inline]
+    fn lower_bound_wide(&self, boxes: &BoxSoA4) -> [f32; 4] {
+        // The per-axis gap form of `Aabb::distance_squared_box` with the
+        // query box splatted against the four child lanes.
+        let zero = F32x4::splat(0.0);
+        let mut d2 = zero;
+        for d in 0..3 {
+            let gap = (boxes.min[d] - F32x4::splat(self.max[d]))
+                .max((F32x4::splat(self.min[d]) - boxes.max[d]).max(zero));
+            d2 = d2 + gap * gap;
+        }
+        d2.to_array()
     }
 
     #[inline]

@@ -78,6 +78,39 @@ impl Ray {
         Some(t_enter)
     }
 
+    /// Four-lane [`Ray::box_entry`]: slab-tests the ray against four SoA
+    /// boxes at once, returning the per-lane entry parameters and a hit
+    /// mask (bit `i` set iff lane `i` is hit within `[0, t_max]`; entry
+    /// values of missed lanes are meaningless). Per lane this performs
+    /// the same arithmetic as the scalar test — the (near, far) slab
+    /// selection is uniform per axis because `inv_direction` is scalar,
+    /// and [`F32x4::max`]'s NaN-in-self semantics replicate the scalar
+    /// accumulation's NaN-slab tolerance (see
+    /// [`crate::geometry::simd`]). The early exit of the scalar loop is
+    /// equivalent to the final interval check here since the interval
+    /// only ever shrinks.
+    ///
+    /// [`F32x4::max`]: crate::geometry::simd::F32x4::max
+    #[inline]
+    pub fn box_entry_wide(&self, boxes: &crate::geometry::simd::BoxSoA4) -> ([f32; 4], u32) {
+        use crate::geometry::simd::F32x4;
+        let mut t_enter = F32x4::splat(0.0);
+        let mut t_exit = F32x4::splat(self.t_max);
+        for d in 0..3 {
+            let inv = self.inv_direction[d];
+            let (lo, hi) = if inv < 0.0 {
+                (boxes.max[d], boxes.min[d])
+            } else {
+                (boxes.min[d], boxes.max[d])
+            };
+            let o = F32x4::splat(self.origin[d]);
+            let inv = F32x4::splat(inv);
+            t_enter = ((lo - o) * inv).max(t_enter);
+            t_exit = ((hi - o) * inv).min(t_exit);
+        }
+        (t_enter.to_array(), t_enter.le(t_exit))
+    }
+
     /// First intersection parameter with the sphere `(center, radius)`
     /// within `[0, t_max]`, for narrow-phase hit refinement.
     pub fn sphere_entry(&self, center: &Point, radius: f32) -> Option<f32> {
@@ -173,6 +206,37 @@ mod tests {
         assert!((t - 1.0).abs() < 1e-5);
         // Clean miss.
         assert!(ray.sphere_entry(&Point::new(0.0, 5.0, 0.0), 1.0).is_none());
+    }
+
+    #[test]
+    fn wide_slab_agrees_with_scalar() {
+        use crate::geometry::simd::BoxSoA4;
+        let boxes = [
+            unit_box(),
+            Aabb::from_point(Point::new(2.0, 0.5, 0.5)),
+            Aabb::new(Point::new(-3.0, -1.0, -1.0), Point::new(-2.0, 1.0, 1.0)),
+            Aabb::new(Point::new(0.0, 5.0, 0.0), Point::splat(6.0)),
+        ];
+        let soa = BoxSoA4::from_boxes(&boxes);
+        let rays = [
+            Ray::new(Point::new(-1.0, 0.5, 0.5), Point::new(1.0, 0.0, 0.0)),
+            Ray::new(Point::new(5.0, 0.5, 0.5), Point::new(-1.0, 0.0, 0.0)),
+            Ray::segment(Point::new(-1.0, 0.5, 0.5), Point::new(1.0, 0.0, 0.0), 2.0),
+            // Exact-zero components produce NaN slabs on the degenerate
+            // lane; both paths must tolerate them identically.
+            Ray::new(Point::new(2.0, 0.5, -2.0), Point::new(0.0, 0.0, 1.0)),
+            Ray::new(Point::splat(0.5), Point::new(-0.3, 0.9, 0.1)),
+        ];
+        for ray in rays {
+            let (entries, mask) = ray.box_entry_wide(&soa);
+            for (l, b) in boxes.iter().enumerate() {
+                let scalar = ray.box_entry(b);
+                assert_eq!(mask >> l & 1 == 1, scalar.is_some(), "lane {l} of {ray:?}");
+                if let Some(t) = scalar {
+                    assert_eq!(entries[l], t, "lane {l} of {ray:?}");
+                }
+            }
+        }
     }
 
     #[test]

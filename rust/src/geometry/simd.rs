@@ -1,0 +1,306 @@
+//! A minimal 4-lane `f32` SIMD abstraction for the wide-BVH hot loop.
+//!
+//! Modeled on the pathfinder/simd shape: one portable `F32x4` type with
+//! `core::arch` backends (SSE2 on x86-64, NEON on AArch64) behind a plain
+//! `[f32; 4]` scalar fallback, selected at compile time. SSE2 is part of
+//! the x86-64 baseline and NEON of AArch64, so no runtime feature
+//! detection is needed; every other target takes the scalar path.
+//!
+//! **NaN semantics are part of the contract.** [`F32x4::max`] and
+//! [`F32x4::min`] compute per-lane `if self OP other { self } else
+//! { other }` — when `self`'s lane is NaN the comparison is false and
+//! *`other`'s* lane is returned. This is exactly the SSE
+//! `_mm_max_ps`/`_mm_min_ps` behavior, the NEON backend emulates it with
+//! compare+bitselect (NEON's native `vmaxq_f32` would propagate NaN), and
+//! the scalar fallback spells it as the branch. The wide slab test relies
+//! on it: accumulating `t_enter = near.max(t_enter)` ignores NaN slabs
+//! (0 · ±inf on degenerate boxes) exactly like the scalar
+//! [`crate::geometry::Ray::box_entry`] accumulating with `f32::max`.
+//!
+//! [`BoxSoA4`] is the companion layout: four AABBs transposed into
+//! separate x/y/z min/max lanes so one predicate test covers all four
+//! children of a wide node.
+
+use super::{Aabb, Point};
+
+#[cfg(target_arch = "x86_64")]
+use core::arch::x86_64 as arch;
+
+#[cfg(target_arch = "aarch64")]
+use core::arch::aarch64 as arch;
+
+/// Four `f32` lanes, operated on element-wise.
+#[derive(Clone, Copy, Debug)]
+pub struct F32x4(
+    #[cfg(target_arch = "x86_64")] arch::__m128,
+    #[cfg(target_arch = "aarch64")] arch::float32x4_t,
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))] [f32; 4],
+);
+
+impl F32x4 {
+    /// All four lanes set to `v`.
+    #[inline]
+    pub fn splat(v: f32) -> F32x4 {
+        F32x4::from_array([v; 4])
+    }
+
+    /// Lanes from an array, lane `i` = `a[i]`.
+    #[inline]
+    pub fn from_array(a: [f32; 4]) -> F32x4 {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: SSE2 is part of the x86-64 baseline.
+        unsafe {
+            F32x4(arch::_mm_loadu_ps(a.as_ptr()))
+        }
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is part of the AArch64 baseline.
+        unsafe {
+            F32x4(arch::vld1q_f32(a.as_ptr()))
+        }
+        #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+        F32x4(a)
+    }
+
+    /// The four lanes as an array.
+    #[inline]
+    pub fn to_array(self) -> [f32; 4] {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: SSE2 baseline; the output buffer is 16 bytes.
+        unsafe {
+            let mut out = [0.0f32; 4];
+            arch::_mm_storeu_ps(out.as_mut_ptr(), self.0);
+            out
+        }
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON baseline; the output buffer is 16 bytes.
+        unsafe {
+            let mut out = [0.0f32; 4];
+            arch::vst1q_f32(out.as_mut_ptr(), self.0);
+            out
+        }
+        #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+        self.0
+    }
+
+    /// Per-lane `if self > other { self } else { other }`: a NaN in
+    /// `self`'s lane yields `other`'s lane (see the module docs).
+    #[inline]
+    pub fn max(self, other: F32x4) -> F32x4 {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: SSE2 baseline. MAXPS returns the second operand when
+        // the comparison is false or unordered — the contract verbatim.
+        unsafe {
+            F32x4(arch::_mm_max_ps(self.0, other.0))
+        }
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON baseline. vcgtq is false on NaN, so the bitselect
+        // picks `other`'s lane — matching SSE instead of NEON's
+        // NaN-propagating vmaxq.
+        unsafe {
+            F32x4(arch::vbslq_f32(arch::vcgtq_f32(self.0, other.0), self.0, other.0))
+        }
+        #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+        {
+            let (a, b) = (self.0, other.0);
+            F32x4(core::array::from_fn(|i| if a[i] > b[i] { a[i] } else { b[i] }))
+        }
+    }
+
+    /// Per-lane `if self < other { self } else { other }`: a NaN in
+    /// `self`'s lane yields `other`'s lane (see the module docs).
+    #[inline]
+    pub fn min(self, other: F32x4) -> F32x4 {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: SSE2 baseline; MINPS mirrors MAXPS on NaN.
+        unsafe {
+            F32x4(arch::_mm_min_ps(self.0, other.0))
+        }
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON baseline; compare+bitselect as in `max`.
+        unsafe {
+            F32x4(arch::vbslq_f32(arch::vcltq_f32(self.0, other.0), self.0, other.0))
+        }
+        #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+        {
+            let (a, b) = (self.0, other.0);
+            F32x4(core::array::from_fn(|i| if a[i] < b[i] { a[i] } else { b[i] }))
+        }
+    }
+
+    /// Per-lane `self <= other` as a 4-bit mask (bit `i` = lane `i`;
+    /// false on NaN).
+    #[inline]
+    pub fn le(self, other: F32x4) -> u32 {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: SSE2 baseline.
+        unsafe {
+            arch::_mm_movemask_ps(arch::_mm_cmple_ps(self.0, other.0)) as u32
+        }
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON baseline; AND each all-ones compare lane with its
+        // bit weight, then horizontal-add into the mask.
+        unsafe {
+            let bits: [u32; 4] = [1, 2, 4, 8];
+            let weights = arch::vld1q_u32(bits.as_ptr());
+            arch::vaddvq_u32(arch::vandq_u32(arch::vcleq_f32(self.0, other.0), weights))
+        }
+        #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+        {
+            let (a, b) = (self.0, other.0);
+            (0..4).fold(0u32, |m, i| m | (u32::from(a[i] <= b[i]) << i))
+        }
+    }
+}
+
+impl core::ops::Add for F32x4 {
+    type Output = F32x4;
+    #[inline]
+    fn add(self, other: F32x4) -> F32x4 {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: SSE2 baseline.
+        unsafe {
+            F32x4(arch::_mm_add_ps(self.0, other.0))
+        }
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON baseline.
+        unsafe {
+            F32x4(arch::vaddq_f32(self.0, other.0))
+        }
+        #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+        F32x4(core::array::from_fn(|i| self.0[i] + other.0[i]))
+    }
+}
+
+impl core::ops::Sub for F32x4 {
+    type Output = F32x4;
+    #[inline]
+    fn sub(self, other: F32x4) -> F32x4 {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: SSE2 baseline.
+        unsafe {
+            F32x4(arch::_mm_sub_ps(self.0, other.0))
+        }
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON baseline.
+        unsafe {
+            F32x4(arch::vsubq_f32(self.0, other.0))
+        }
+        #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+        F32x4(core::array::from_fn(|i| self.0[i] - other.0[i]))
+    }
+}
+
+impl core::ops::Mul for F32x4 {
+    type Output = F32x4;
+    #[inline]
+    fn mul(self, other: F32x4) -> F32x4 {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: SSE2 baseline.
+        unsafe {
+            F32x4(arch::_mm_mul_ps(self.0, other.0))
+        }
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON baseline.
+        unsafe {
+            F32x4(arch::vmulq_f32(self.0, other.0))
+        }
+        #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+        F32x4(core::array::from_fn(|i| self.0[i] * other.0[i]))
+    }
+}
+
+/// Four AABBs in structure-of-arrays form: `min[axis]` / `max[axis]` hold
+/// one lane per box. This is the dequantized view of a wide node's child
+/// group ([`crate::bvh::wide`]); unused lanes (nodes with fewer than four
+/// children) hold inverted boxes and must be masked off by the caller.
+#[derive(Clone, Copy, Debug)]
+pub struct BoxSoA4 {
+    /// Per-axis minimum corners, one lane per box.
+    pub min: [F32x4; 3],
+    /// Per-axis maximum corners, one lane per box.
+    pub max: [F32x4; 3],
+}
+
+impl BoxSoA4 {
+    /// Transposes four row-form boxes into SoA lanes.
+    #[inline]
+    pub fn from_boxes(boxes: &[Aabb; 4]) -> BoxSoA4 {
+        BoxSoA4 {
+            min: core::array::from_fn(|d| {
+                F32x4::from_array(core::array::from_fn(|l| boxes[l].min[d]))
+            }),
+            max: core::array::from_fn(|d| {
+                F32x4::from_array(core::array::from_fn(|l| boxes[l].max[d]))
+            }),
+        }
+    }
+
+    /// Extracts lane `l` back into row form — the scalar-fallback view.
+    #[inline]
+    pub fn get(&self, l: usize) -> Aabb {
+        let (min, max): ([[f32; 4]; 3], [[f32; 4]; 3]) = (
+            core::array::from_fn(|d| self.min[d].to_array()),
+            core::array::from_fn(|d| self.max[d].to_array()),
+        );
+        Aabb::new(
+            Point::new(min[0][l], min[1][l], min[2][l]),
+            Point::new(max[0][l], max[1][l], max[2][l]),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arithmetic_and_lane_round_trip() {
+        let a = F32x4::from_array([1.0, 2.0, 3.0, 4.0]);
+        let b = F32x4::splat(0.5);
+        assert_eq!((a + b).to_array(), [1.5, 2.5, 3.5, 4.5]);
+        assert_eq!((a - b).to_array(), [0.5, 1.5, 2.5, 3.5]);
+        assert_eq!((a * b).to_array(), [0.5, 1.0, 1.5, 2.0]);
+    }
+
+    #[test]
+    fn min_max_basic() {
+        let a = F32x4::from_array([1.0, 5.0, -2.0, 0.0]);
+        let b = F32x4::from_array([2.0, 3.0, -2.0, -0.0]);
+        assert_eq!(a.max(b).to_array(), [2.0, 5.0, -2.0, -0.0]);
+        assert_eq!(a.min(b).to_array(), [1.0, 3.0, -2.0, -0.0]);
+    }
+
+    #[test]
+    fn nan_in_self_yields_other() {
+        // The slab-test contract: `near.max(acc)` with a NaN slab must
+        // return the accumulator unchanged on every backend.
+        let near = F32x4::from_array([f32::NAN, 1.0, f32::NAN, -3.0]);
+        let acc = F32x4::from_array([0.0, 0.0, 7.0, 0.0]);
+        assert_eq!(near.max(acc).to_array(), [0.0, 1.0, 7.0, 0.0]);
+        assert_eq!(near.min(acc).to_array(), [0.0, 0.0, 7.0, -3.0]);
+    }
+
+    #[test]
+    fn le_mask_bits() {
+        let a = F32x4::from_array([1.0, 4.0, 2.0, f32::NAN]);
+        let b = F32x4::from_array([1.0, 3.0, 5.0, 1.0]);
+        // Lane 0: 1 <= 1 true; lane 1: 4 <= 3 false; lane 2: true;
+        // lane 3: NaN comparisons are false.
+        assert_eq!(a.le(b), 0b0101);
+        assert_eq!(F32x4::splat(0.0).le(F32x4::splat(0.0)), 0b1111);
+    }
+
+    #[test]
+    fn soa_transpose_round_trips() {
+        let boxes = [
+            Aabb::new(Point::new(0.0, 1.0, 2.0), Point::new(3.0, 4.0, 5.0)),
+            Aabb::from_point(Point::splat(-1.0)),
+            Aabb::new(Point::new(-5.0, 0.0, 0.5), Point::new(-4.0, 9.0, 0.5)),
+            Aabb::new(Point::splat(100.0), Point::splat(101.0)),
+        ];
+        let soa = BoxSoA4::from_boxes(&boxes);
+        for (l, b) in boxes.iter().enumerate() {
+            assert_eq!(soa.get(l), *b, "lane {l}");
+        }
+    }
+}

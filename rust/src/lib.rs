@@ -28,6 +28,14 @@
 //!   fixed-width `Option<RayHit>` results, and
 //!   [`bvh::Bvh::query_nearest`] runs k-NN batches around any
 //!   [`geometry::predicates::DistanceTo`] geometry (point, sphere, box).
+//!   Every build also collapses the binary tree into a 4-wide SoA layer
+//!   with u8-quantized child boxes ([`bvh::wide`]): traversal defaults
+//!   to testing four children per step through a small `f32x4`
+//!   SSE/NEON seam with a portable scalar fallback
+//!   ([`bvh::TraversalMode`]; `ARBOR_FORCE_SCALAR=1` forces the
+//!   fallback), and every mode returns bit-identical results because
+//!   quantized boxes only ever inflate and leaves are re-tested with
+//!   exact scalar math.
 //! * [`baselines`] — the comparison libraries of the paper's evaluation,
 //!   re-implemented: a nanoflann-style k-d tree, a Boost-style STR-packed
 //!   R-tree, and a brute-force oracle.
@@ -91,7 +99,9 @@ pub mod runtime;
 /// Convenience re-exports of the most common types.
 pub mod prelude {
     pub use crate::baselines::{brute::BruteForce, kdtree::KdTree, rtree::RTree};
-    pub use crate::bvh::{Bvh, PredicateKind, QueryOptions, QueryOutput, QueryPredicate, RayHit};
+    pub use crate::bvh::{
+        Bvh, PredicateKind, QueryOptions, QueryOutput, QueryPredicate, RayHit, TraversalMode,
+    };
     pub use crate::coordinator::distributed::{DistributedTree, Partition};
     pub use crate::coordinator::service::{
         Backend, BufferPolicy, QueryError, SearchService, ServiceConfig, SubmitError, WaitError,

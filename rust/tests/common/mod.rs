@@ -14,7 +14,7 @@
 
 use arbor::baselines::brute::BruteForce;
 use arbor::bvh::nearest::Neighbor;
-use arbor::bvh::{Bvh, QueryOutput, QueryPredicate};
+use arbor::bvh::{Bvh, QueryOutput, QueryPredicate, TraversalMode};
 use arbor::coordinator::distributed::Partition;
 use arbor::data::rng::Rng;
 use arbor::data::shapes::{PointCloud, Shape};
@@ -29,25 +29,119 @@ pub const SHAPES: [Shape; 2] = [Shape::FilledCube, Shape::HollowCube];
 /// Both distributed partitions, for the distributed differential grids.
 pub const PARTITIONS: [Partition; 2] = [Partition::Block, Partition::MortonBlock];
 
-/// The builder × exec-space engine grid: every suite checks Karras and
-/// Apetrei construction under serial and threaded execution. The label
-/// names the combination for assertion messages.
+/// The builder × exec-space × traversal-mode engine grid: every suite
+/// checks Karras and Apetrei construction under serial and threaded
+/// execution, and each built tree is exercised through all three
+/// traversal modes — the binary reference walk, the 4-wide SIMD walk
+/// over quantized child boxes, and the forced scalar fallback of that
+/// wide walk. The label names the combination for assertion messages.
 pub fn engines(boxes: &[Aabb]) -> Vec<(String, Bvh, ExecSpace)> {
     let mut out = Vec::new();
     for (space_name, space) in [("serial", ExecSpace::serial()), ("mt", ExecSpace::with_threads(4))]
     {
-        out.push((
-            format!("karras/{space_name}"),
-            Bvh::build(&space, boxes),
-            space.clone(),
-        ));
-        out.push((
-            format!("apetrei/{space_name}"),
-            Bvh::build_apetrei(&space, boxes),
-            space.clone(),
-        ));
+        for (builder_name, built) in [
+            ("karras", Bvh::build(&space, boxes)),
+            ("apetrei", Bvh::build_apetrei(&space, boxes)),
+        ] {
+            for (mode_name, mode) in [
+                ("binary", TraversalMode::Binary),
+                ("wide", TraversalMode::WideSimd),
+                ("wide-scalar", TraversalMode::WideScalar),
+            ] {
+                let mut engine = built.clone();
+                engine.set_traversal_mode(mode);
+                out.push((
+                    format!("{builder_name}/{space_name}/{mode_name}"),
+                    engine,
+                    space.clone(),
+                ));
+            }
+        }
     }
     out
+}
+
+/// Adversarial scenes for the wide tree's quantized child boxes: every
+/// degenerate axis, coordinate magnitude, and mixed-extent layout that
+/// stresses the u8 grid's round-trip (zero extents → zero scale, huge
+/// spreads → coarse grids, tiny clusters next to far outliers → child
+/// boxes much smaller than one grid step). Differential suites run
+/// these through the full engine grid against brute force.
+pub fn edge_case_boxes() -> Vec<(&'static str, Vec<Aabb>)> {
+    let mut rng = Rng::new(0xED6E);
+    let mut scenes: Vec<(&'static str, Vec<Aabb>)> = Vec::new();
+
+    // Every box the identical zero-extent point: all quantization scales
+    // collapse to zero and every child is the whole parent.
+    scenes.push((
+        "coincident",
+        (0..64).map(|_| Aabb::from_point(Point::new(1.5, -2.0, 3.25))).collect(),
+    ));
+
+    // Colinear points: two axes have exactly zero extent at every level.
+    scenes.push((
+        "colinear-x",
+        (0..200)
+            .map(|i| Aabb::from_point(Point::new(i as f32 * 0.37, 4.0, -1.0)))
+            .collect(),
+    ));
+
+    // Coplanar thin slabs: one degenerate axis, finite extents elsewhere.
+    scenes.push((
+        "coplanar-z",
+        (0..150)
+            .map(|_| {
+                let c = random_point(&mut rng, 50.0);
+                let hx = rng.uniform(0.1, 2.0);
+                let hy = rng.uniform(0.1, 2.0);
+                Aabb::new(
+                    Point::new(c[0] - hx, c[1] - hy, 7.0),
+                    Point::new(c[0] + hx, c[1] + hy, 7.0),
+                )
+            })
+            .collect(),
+    ));
+
+    // A tight cluster plus far outliers: the root grid step dwarfs the
+    // cluster boxes, so their quantized images round to single cells.
+    let mut spread: Vec<Aabb> = (0..180)
+        .map(|_| {
+            let c = random_point(&mut rng, 0.01);
+            Aabb::new(c - Point::splat(1e-4), c + Point::splat(1e-4))
+        })
+        .collect();
+    spread.push(Aabb::from_point(Point::new(1.0e6, -1.0e6, 5.0e5)));
+    spread.push(Aabb::from_point(Point::new(-7.5e5, 2.0e5, -9.0e5)));
+    scenes.push(("huge-spread", spread));
+
+    // Sub-grid-step extents everywhere: boxes far smaller than one 1/255
+    // slice of any parent, so min/max quantize to adjacent (or equal)
+    // cells and conservative snapping is the whole story.
+    scenes.push((
+        "tiny-extent",
+        (0..160)
+            .map(|_| {
+                let c = random_point(&mut rng, 30.0);
+                Aabb::new(c - Point::splat(1e-6), c + Point::splat(1e-6))
+            })
+            .collect(),
+    ));
+
+    // Mixed degenerate and finite boxes, including duplicates.
+    let mut mixed = Vec::new();
+    for i in 0..120 {
+        let c = random_point(&mut rng, 10.0);
+        match i % 3 {
+            0 => mixed.push(Aabb::from_point(c)),
+            1 => mixed.push(Aabb::new(c - Point::splat(0.8), c + Point::splat(0.8))),
+            _ => {
+                mixed.push(Aabb::from_point(Point::new(0.0, 0.0, 0.0)));
+            }
+        }
+    }
+    scenes.push(("mixed-degenerate", mixed));
+
+    scenes
 }
 
 /// A deterministic cloud plus its boxes and brute-force oracle — the

@@ -28,7 +28,7 @@ use arbor::exec::ExecSpace;
 use arbor::geometry::predicates::{FirstHit, IntersectsRay};
 use arbor::geometry::{Aabb, Point, Ray};
 
-use common::{engines, inflate, ray_set, SHAPES};
+use common::{edge_case_boxes, engines, inflate, ray_set, SHAPES};
 
 #[test]
 fn first_hit_matches_brute_force_everywhere() {
@@ -196,6 +196,56 @@ fn degenerate_first_hit_cases() {
     assert_eq!(bvh.query_first_hit(&space, &[miss], true), vec![None]);
     let out = bvh.query(&space, &[QueryPredicate::first_hit(miss.0)], &QueryOptions::default());
     assert_eq!(out.total(), 0);
+}
+
+#[test]
+fn first_hit_survives_quantization_edge_case_scenes() {
+    // Ordered descent over the wide tree's adversarial scenes: entry
+    // parameters against quantized (inflated) child boxes may only get
+    // smaller than the exact ones, so the (t, index) winner must be
+    // unchanged — including on degenerate axes and huge spreads.
+    for (scene_name, boxes) in edge_case_boxes() {
+        let brute = BruteForce::new(&boxes);
+        let mut world = Aabb::empty();
+        for b in &boxes {
+            world.expand(b);
+        }
+        let span = (world.max - world.min).norm().max(1.0);
+        let mut rng = Rng::new(0xFACE);
+        let mut rays = Vec::new();
+        for i in 0..25 {
+            let target = boxes[(i * 13) % boxes.len()].centroid();
+            // Axis-parallel shot exactly at a leaf: the direction's zero
+            // components make the slab test exact, so even zero-extent
+            // targets are guaranteed hits.
+            rays.push(FirstHit(Ray::new(
+                Point::new(target[0], target[1], target[2] - 0.5 * span),
+                Point::new(0.0, 0.0, 1.0),
+            )));
+            // Oblique ray from a random offset toward the same leaf.
+            let origin = target
+                + Point::new(
+                    rng.uniform(0.1, 0.4) * span,
+                    rng.uniform(-0.3, 0.3) * span,
+                    rng.uniform(-0.3, 0.3) * span,
+                );
+            let dir = target - origin;
+            if dir.norm() > 1e-6 {
+                rays.push(FirstHit(Ray::new(origin, dir)));
+            }
+        }
+        let want: Vec<Option<RayHit>> = rays.iter().map(|r| brute.first_hit(&r.0)).collect();
+        assert!(
+            want.iter().any(|h| h.is_some()),
+            "{scene_name}: no ray hits anything — test workload is vacuous"
+        );
+        for (name, bvh, space) in engines(&boxes) {
+            for sort in [false, true] {
+                let got = bvh.query_first_hit(&space, &rays, sort);
+                assert_eq!(got, want, "{scene_name}/{name} sort={sort}");
+            }
+        }
+    }
 }
 
 #[test]

@@ -30,7 +30,9 @@ use arbor::exec::ExecSpace;
 use arbor::geometry::predicates::Nearest;
 use arbor::geometry::{Aabb, Point, Sphere};
 
-use common::{engines, inflate, neighbors_for, neighbors_from, random_point, scene, SHAPES};
+use common::{
+    edge_case_boxes, engines, inflate, neighbors_for, neighbors_from, random_point, scene, SHAPES,
+};
 
 /// The k values every suite sweeps: singleton, mid, and a k that often
 /// exceeds the number of zero-distance ties.
@@ -219,6 +221,43 @@ fn wire_service_and_distributed_agree_with_oracle() {
         for (qi, pred) in preds.iter().enumerate() {
             let (idx, dist, _) = dt.query_predicate(pred);
             assert_eq!(neighbors_from(&idx, &dist), want[qi], "{partition:?} wire query {qi}");
+        }
+    }
+}
+
+#[test]
+fn nearest_survives_quantization_edge_case_scenes() {
+    // k-NN over the wide tree's adversarial scenes: lower-bound pruning
+    // must stay conservative when child boxes round to single grid cells
+    // (tiny extents), whole degenerate axes (colinear/coplanar), or very
+    // coarse grids (huge spreads). Full Neighbor equality against the
+    // oracle, including the zero-distance ties from coincident anchors.
+    for (scene_name, boxes) in edge_case_boxes() {
+        let brute = BruteForce::new(&boxes);
+        let mut world = Aabb::empty();
+        for b in &boxes {
+            world.expand(b);
+        }
+        let span = (world.max - world.min).norm().max(1.0);
+        let mut rng = Rng::new(0xBEEF);
+        let (mut points, mut spheres, mut regions) = (Vec::new(), Vec::new(), Vec::new());
+        for i in 0..20 {
+            let anchor = boxes[(i * 11) % boxes.len()].centroid();
+            // Exact coincidence (zero-distance ties) and nearby offsets.
+            points.push(anchor);
+            points.push(anchor + Point::splat(rng.uniform(0.0, 0.1) * span));
+            let r = if i % 4 == 0 { 0.0 } else { rng.uniform(0.0, 0.05) * span };
+            spheres.push(Sphere::new(anchor, r));
+            let half = Point::splat(rng.uniform(0.0, 0.04) * span);
+            regions.push(Aabb::new(anchor - half, anchor + half));
+        }
+        for (name, bvh, space) in engines(&boxes) {
+            for k in [1, 4] {
+                let label = format!("{scene_name}/{name}");
+                check_typed(&format!("{label}/point"), &bvh, &space, &brute, &points, k);
+                check_typed(&format!("{label}/sphere"), &bvh, &space, &brute, &spheres, k);
+                check_typed(&format!("{label}/box"), &bvh, &space, &brute, &regions, k);
+            }
         }
     }
 }

@@ -23,7 +23,7 @@ use arbor::geometry::predicates::{
 };
 use arbor::geometry::{Aabb, Point, Ray, Sphere};
 
-use common::{engines, random_point, scene, SHAPES};
+use common::{edge_case_boxes, engines, random_point, scene, SHAPES};
 
 /// Checks one predicate batch on one engine against brute force, for 2P,
 /// tight 1P, and callback execution.
@@ -139,6 +139,43 @@ fn ray_predicates_match_brute_force_everywhere() {
 
         for (name, bvh, space) in engines(&boxes) {
             check_batch(&format!("{shape:?}/{name}/ray"), &bvh, &space, &brute, &rays);
+        }
+    }
+}
+
+#[test]
+fn quantized_child_boxes_survive_degenerate_scenes() {
+    // Adversarial scenes for the wide tree's u8-quantized child boxes:
+    // degenerate (zero-extent) axes, huge coordinate spreads, and
+    // sub-grid-step extents. Every engine in the grid — including both
+    // wide traversal modes — must still match brute force exactly,
+    // because quantization is only ever allowed to inflate.
+    for (scene_name, boxes) in edge_case_boxes() {
+        let brute = BruteForce::new(&boxes);
+        let mut world = Aabb::empty();
+        for b in &boxes {
+            world.expand(b);
+        }
+        let span = (world.max - world.min).norm().max(1.0);
+        let mut rng = Rng::new(0xC0FFEE);
+        let mut spheres = Vec::new();
+        let mut regions = Vec::new();
+        for i in 0..30 {
+            // Anchor queries on actual leaf boxes (zero-radius spheres at
+            // leaf centroids are guaranteed hits), so even the outlier
+            // scenes are non-vacuous.
+            let anchor = boxes[(i * 7) % boxes.len()].centroid();
+            spheres.push(IntersectsSphere(Sphere::new(anchor, rng.uniform(0.0, 0.05) * span)));
+            let half = Point::splat(rng.uniform(0.0, 0.03) * span);
+            regions.push(IntersectsBox(Aabb::new(anchor - half, anchor + half)));
+        }
+        assert!(
+            spheres.iter().any(|s| !brute.spatial(s).is_empty()),
+            "{scene_name}: no sphere hits anything — test workload is vacuous"
+        );
+        for (name, bvh, space) in engines(&boxes) {
+            check_batch(&format!("{scene_name}/{name}/sphere"), &bvh, &space, &brute, &spheres);
+            check_batch(&format!("{scene_name}/{name}/box"), &bvh, &space, &brute, &regions);
         }
     }
 }

@@ -427,18 +427,18 @@ fn service_shutdown_with_in_flight_queries_is_panic_free() {
 
 #[test]
 fn adaptive_buffer_tracks_a_nonstationary_shift() {
-    // Satellite regression: when the result-count distribution shifts
-    // mid-run (small results, then a heavy regime), the Adaptive policy's
-    // *fixed* (never-decaying) histograms must still reach a steady state
+    // When the result-count distribution shifts mid-run (small results,
+    // then a heavy regime), the Adaptive policy must reach a steady state
     // that is not perpetual one-pass-fallback: the 0.999 quantile jumps to
     // the new regime as soon as the post-shift samples exceed ~0.1% of
-    // the history, so at most the first post-shift sub-batches fall back.
+    // the active window, so at most the first post-shift sub-batches fall
+    // back.
     //
-    // Documented limitation (the ROADMAP's "decaying histograms" item):
-    // the reverse shift (heavy -> light) keeps the oversized buffer
-    // forever, because fixed histograms never forget the old tail. That
-    // stays correct and fallback-free — just allocation-wasteful — and is
-    // pinned below too.
+    // The reverse shift (heavy -> light) is pinned below: the windowed
+    // histograms (ROADMAP 5a) retire the heavy epoch after two window
+    // rotations of light traffic, so the buffer *shrinks back* instead of
+    // keeping the oversized allocation forever as the old fixed
+    // histograms did.
     let space = ExecSpace::with_threads(2);
     let points: Vec<Point> = (0..4096).map(|i| Point::new(i as f32, 0.0, 0.0)).collect();
     let boxes: Vec<Aabb> = points.iter().map(|p| Aabb::from_point(*p)).collect();
@@ -489,13 +489,20 @@ fn adaptive_buffer_tracks_a_nonstationary_shift() {
     );
     assert!(metrics.one_pass_batches() >= one_pass_before + 6, "heavy regime runs 1P");
 
-    // The documented fixed-histogram limitation: shifting back down keeps
-    // the (now oversized) buffer — no fallback, no 2P, just headroom a
-    // decaying histogram would reclaim.
-    for _ in 0..3 {
+    // Shift back down: twelve light batches (3072 samples, two-plus full
+    // windows of ADAPTIVE_WINDOW = 1024) rotate the heavy epoch out of
+    // the histogram entirely. Nothing falls back or reverts to 2P on the
+    // way down — light queries fit any buffer — and the suggestion
+    // deflates to the light-regime size instead of keeping the heavy
+    // allocation forever.
+    for _ in 0..12 {
         run(&batch_of(0.4), &metrics);
     }
     assert_eq!(metrics.fallback_batches(), fallback_after_shift);
     let settled = metrics.suggest_buffer(PredicateKind::Sphere).expect("warm");
-    assert!(settled >= 81, "fixed histograms never forget the heavy tail ({settled})");
+    assert!(
+        settled < 64,
+        "windowed histograms must shrink the buffer after a downshift, got {settled}"
+    );
+    assert!(settled >= 1, "suggestion stays usable ({settled})");
 }
