@@ -1,0 +1,172 @@
+//! Figure 15 (ours): dynamic-scene maintenance strategies.
+//!
+//! A moving scene is stepped for `ticks` frames under three motion
+//! magnitudes (accumulating per-box `jitter`, rigid `drift`, and an
+//! oscillating strided `teleport`), and the index is maintained four
+//! ways each tick:
+//!
+//! * **rebuild** — from-scratch `Bvh::build` every tick (the static
+//!   baseline: best tree, full construction cost);
+//! * **refit** — `Bvh::update` every tick (cheapest maintenance, tree
+//!   quality drifts with the motion);
+//! * **hybrid8** — refit, with a full rebuild every 8th tick (the
+//!   fixed-cadence compromise);
+//! * **adaptive** — refit, rebuilding only when `refit_quality`
+//!   crosses `DEFAULT_REBUILD_THRESHOLD` (the service's policy).
+//!
+//! Each tick also runs a fixed sphere-query batch, so the timings price
+//! both maintenance *and* the traversal slowdown a degraded tree
+//! causes — exactly the trade the quality metric arbitrates. The final
+//! refit tree is cross-checked against a fresh rebuild on a probe
+//! batch. Results go to `bench_out/fig15_update.csv` and
+//! `BENCH_update.json`.
+
+use arbor::bench_util::{f, reps, size, time_median, write_json_snapshot, JsonValue, Table};
+use arbor::bvh::stats::DEFAULT_REBUILD_THRESHOLD;
+use arbor::bvh::{Bvh, QueryOptions, QueryPredicate};
+use arbor::data::rng::Rng;
+use arbor::data::shapes::{PointCloud, Shape};
+use arbor::data::workloads::{drift_boxes, jitter_boxes, teleport_boxes};
+use arbor::exec::ExecSpace;
+use arbor::geometry::{Aabb, Point};
+
+const STRATEGIES: [&str; 4] = ["rebuild", "refit", "hybrid8", "adaptive"];
+
+fn main() {
+    let threads = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(2);
+    let n = size(100_000, 2_000);
+    let ticks = size(16, 4);
+    let n_queries = size(2_000, 200);
+    let half = 0.5f32;
+    let space = ExecSpace::with_threads(threads);
+
+    let cloud = PointCloud::generate(Shape::FilledCube, n, 42);
+    let a = cloud.a;
+    let boxes: Vec<Aabb> = cloud
+        .points
+        .iter()
+        .map(|p| Aabb::new(*p - Point::splat(half), *p + Point::splat(half)))
+        .collect();
+    let built = Bvh::build(&space, &boxes);
+
+    let mut rng = Rng::new(7);
+    let queries: Vec<QueryPredicate> = (0..n_queries)
+        .map(|_| {
+            QueryPredicate::intersects_sphere(
+                Point::new(
+                    rng.uniform(-a, a),
+                    rng.uniform(-a, a),
+                    rng.uniform(-a, a),
+                ),
+                1.0,
+            )
+        })
+        .collect();
+    let r = reps();
+
+    let mut tab = Table::new(
+        "fig15_update",
+        &["motion", "strategy", "time_s", "ticks_per_s", "final_quality", "rebuilds"],
+    );
+    let fixed: Vec<(&str, JsonValue)> = vec![
+        ("n_boxes", JsonValue::Int(n as u64)),
+        ("ticks", JsonValue::Int(ticks as u64)),
+        ("n_queries", JsonValue::Int(n_queries as u64)),
+        ("threads", JsonValue::Int(threads as u64)),
+        ("rebuild_threshold", JsonValue::Num(DEFAULT_REBUILD_THRESHOLD)),
+    ];
+    let mut measured: Vec<(String, f64)> = Vec::new();
+
+    for motion in ["jitter", "drift", "teleport"] {
+        // The per-tick box arrays, accumulated frame over frame (each
+        // tick moves the *previous* tick's boxes, as a simulation would).
+        let mut frames: Vec<Vec<Aabb>> = Vec::with_capacity(ticks);
+        let mut cur = boxes.clone();
+        for k in 0..ticks {
+            cur = match motion {
+                "jitter" => jitter_boxes(&cur, 0.02 * a, 100 + k as u64),
+                "drift" => drift_boxes(&cur, Point::new(0.3, -0.15, 0.2)),
+                // Oscillating so the scene stays bounded across ticks;
+                // every jump still shreds the frozen Morton order.
+                _ => teleport_boxes(
+                    &cur,
+                    7,
+                    Point::splat(if k % 2 == 0 { 20.0 * a } else { -20.0 * a }),
+                ),
+            };
+            frames.push(cur.clone());
+        }
+
+        // One strategy pass: maintain + query every tick; returns the
+        // final tree and how many from-scratch rebuilds it paid for.
+        let run = |strategy: &str| -> (Bvh, usize) {
+            let mut t = built.clone();
+            let mut rebuilds = 0usize;
+            for (k, frame) in frames.iter().enumerate() {
+                match strategy {
+                    "rebuild" => {
+                        t = Bvh::build(&space, frame);
+                        rebuilds += 1;
+                    }
+                    "refit" => t.update(&space, frame),
+                    "hybrid8" => {
+                        if (k + 1) % 8 == 0 {
+                            t = Bvh::build(&space, frame);
+                            rebuilds += 1;
+                        } else {
+                            t.update(&space, frame);
+                        }
+                    }
+                    _ => {
+                        t.update(&space, frame);
+                        if t.refit_quality() > DEFAULT_REBUILD_THRESHOLD {
+                            t = Bvh::build(&space, frame);
+                            rebuilds += 1;
+                        }
+                    }
+                }
+                std::hint::black_box(t.query(&space, &queries, &QueryOptions::default()));
+            }
+            (t, rebuilds)
+        };
+
+        for strategy in STRATEGIES {
+            let t_total = time_median(r, || {
+                std::hint::black_box(run(strategy));
+            });
+            let (final_tree, rebuilds) = run(strategy);
+            let quality = final_tree.refit_quality();
+            tab.row(&[
+                motion.to_string(),
+                strategy.to_string(),
+                f(t_total),
+                f(ticks as f64 / t_total),
+                f(quality),
+                rebuilds.to_string(),
+            ]);
+            measured.push((format!("{motion}_{strategy}_s"), t_total));
+            measured.push((format!("{motion}_{strategy}_final_quality"), quality));
+            measured.push((format!("{motion}_{strategy}_rebuilds"), rebuilds as f64));
+        }
+
+        // Cross-check: the always-refit tree answers the probe batch
+        // exactly like a fresh rebuild on the final frame.
+        let (refit_tree, _) = run("refit");
+        let fresh = Bvh::build(&space, frames.last().expect("ticks >= 1"));
+        let probe = &queries[..200.min(queries.len())];
+        let out_r = refit_tree.query(&space, probe, &QueryOptions::default());
+        let out_f = fresh.query(&space, probe, &QueryOptions::default());
+        for qi in 0..probe.len() {
+            let mut got = out_r.results_for(qi).to_vec();
+            let mut want = out_f.results_for(qi).to_vec();
+            got.sort();
+            want.sort();
+            assert_eq!(got, want, "{motion} probe {qi}: refit != rebuild");
+        }
+    }
+
+    tab.write_csv();
+    let mut fields = fixed;
+    fields.extend(measured.iter().map(|(k, v)| (k.as_str(), JsonValue::Num(*v))));
+    write_json_snapshot("BENCH_update.json", &fields);
+}

@@ -22,7 +22,7 @@ use crate::exec::{sort, ExecSpace};
 use crate::geometry::{morton, Aabb};
 
 /// Sentinel for "no parent" (the root).
-const NO_PARENT: u32 = u32::MAX;
+pub(crate) const NO_PARENT: u32 = u32::MAX;
 
 /// Wall-time breakdown of one construction, in seconds — used by the
 /// perf harness (`rust/benches/perf_hotpath.rs`) to find the phase to
@@ -287,7 +287,12 @@ unsafe fn rpar_write(ipar: SendPtr<u32>, lpar: SendPtr<u32>, child: NodeRef, par
 /// a leaf and walks towards the root; at every internal node "only one of
 /// the children's threads is allowed to proceed further" — the second one
 /// to arrive, which is guaranteed to see both children's boxes.
-fn refit(
+///
+/// Termination is the [`NO_PARENT`] sentinel, not a fixed root index, so
+/// the same pass serves both construction (Karras roots at internal 0)
+/// and [`super::Bvh::update`] bulk refits, where parent links are
+/// recomputed for either builder's numbering (Apetrei roots float).
+pub(crate) fn refit(
     space: &ExecSpace,
     n: usize,
     nodes: &mut [InternalNode],
@@ -329,11 +334,11 @@ fn refit(
             // bbox field of this node; left/right were finalized before
             // the dispatch started.
             unsafe { (*np.0.add(node as usize)).bbox = lb.union(&rb) };
-            if node == 0 {
+            let parent = internal_parent[node as usize];
+            if parent == NO_PARENT {
                 break; // root reached
             }
-            node = internal_parent[node as usize];
-            debug_assert_ne!(node, NO_PARENT);
+            node = parent;
         }
     });
 }

@@ -21,8 +21,13 @@
 //!   ([`Bvh::query_spatial`]), with a callback entry point
 //!   ([`Bvh::query_with_callback`]) that skips CSR materialization and a
 //!   [`QueryPredicate`] enum facade ([`Bvh::query`]) for mixed batches.
-//! * [`stats`] — hierarchy quality metrics (SAH) and the node-access
+//! * [`stats`] — hierarchy quality metrics (SAH), the refit-quality
+//!   ratio that drives refit-vs-rebuild decisions, and the node-access
 //!   matrix used to reproduce Figure 2.
+//! * [`update`] — bulk refit for dynamic scenes ([`Bvh::update`]): new
+//!   leaf boxes, same topology; internal boxes recomputed bottom-up and
+//!   the wide layer re-collapsed, with [`Bvh::refit_quality`] measuring
+//!   how far motion has degraded the frozen topology.
 //! * [`wide`] — the 4-wide traversal layer: a post-build collapse of the
 //!   binary tree into SoA child groups with u8-quantized boxes
 //!   (conservative inflation only), tested four lanes per predicate
@@ -40,6 +45,7 @@ pub mod first_hit;
 pub mod nearest;
 pub mod stats;
 pub mod traversal;
+pub mod update;
 pub mod wide;
 
 pub use batched::{PredicateKind, QueryOptions, QueryOutput, QueryPredicate};
@@ -124,6 +130,10 @@ pub struct Bvh {
     pub(crate) wide: wide::WideBvh,
     /// Which node-test loop queries on this tree run through.
     pub(crate) mode: TraversalMode,
+    /// SAH cost at build time — the quality baseline [`Bvh::update`]
+    /// refits are measured against ([`Bvh::refit_quality`]). Frozen
+    /// until the next full rebuild.
+    pub(crate) built_cost: f64,
 }
 
 impl Bvh {
@@ -140,6 +150,7 @@ impl Bvh {
         root: NodeRef,
     ) -> Bvh {
         let wide = wide::WideBvh::collapse(&nodes, &leaf_boxes, root);
+        let built_cost = stats::sah_cost_parts(&nodes, root);
         Bvh {
             n_leaves,
             nodes,
@@ -149,6 +160,7 @@ impl Bvh {
             root,
             wide,
             mode: wide::default_mode(),
+            built_cost,
         }
     }
 

@@ -19,7 +19,7 @@ use super::wide::{
     first_hit_wide_monitored, for_each_spatial_wide_monitored, nearest_wide_monitored,
     TraversalMode,
 };
-use super::{is_leaf, ref_index, Bvh};
+use super::{is_leaf, ref_index, Bvh, InternalNode, NodeRef};
 use crate::exec::ExecSpace;
 use crate::geometry::predicates::{FirstHit, FirstHitQuery, NearestQuery, SpatialPredicate};
 
@@ -30,14 +30,53 @@ pub fn sah_cost(bvh: &Bvh) -> f64 {
     if bvh.len() < 2 {
         return 0.0;
     }
-    let root_sa = bvh.node_box(bvh.root).surface_area() as f64;
+    sah_cost_parts(&bvh.nodes, bvh.root)
+}
+
+/// [`sah_cost`] over raw builder output, before a [`Bvh`] exists —
+/// `from_parts` uses it to freeze the as-built baseline that
+/// [`refit_quality`] later divides by. Normalizing by the *own* root's
+/// surface area makes the cost invariant under rigid translation and
+/// uniform scaling, so a drifting scene scores ~1.0 against its build
+/// while genuinely degraded topology (teleports, shear) scores higher.
+pub(crate) fn sah_cost_parts(nodes: &[InternalNode], root: NodeRef) -> f64 {
+    if nodes.is_empty() || is_leaf(root) {
+        return 0.0;
+    }
+    let root_sa = nodes[ref_index(root)].bbox.surface_area() as f64;
     if root_sa == 0.0 {
         return 0.0;
     }
-    bvh.nodes
+    nodes
         .iter()
         .map(|nd| nd.bbox.surface_area() as f64 / root_sa)
         .sum()
+}
+
+/// Default [`refit_quality`] ratio above which a refit tree should be
+/// rebuilt from scratch. A freshly built (or rigidly drifting) tree
+/// scores ~1.0; 2.0 means "expected traversal cost has doubled against
+/// the as-built baseline", which is where rebuild cost typically
+/// amortizes within a few query batches. `ServiceConfig::
+/// rebuild_threshold` starts here and is tunable per service.
+pub const DEFAULT_REBUILD_THRESHOLD: f64 = 2.0;
+
+/// Quality of the current (possibly refit) boxes relative to the tree's
+/// as-built SAH cost: `sah_cost(now) / sah_cost(at build)`. 1.0 means
+/// "as good as freshly built"; ratios above
+/// [`DEFAULT_REBUILD_THRESHOLD`] mean motion has degraded the frozen
+/// topology enough that a rebuild pays for itself. Degenerate trees
+/// (empty, single leaf, zero-area scenes) report 1.0 — there is nothing
+/// a rebuild could improve.
+pub fn refit_quality(bvh: &Bvh) -> f64 {
+    if bvh.built_cost <= 0.0 {
+        return 1.0;
+    }
+    let current = sah_cost_parts(&bvh.nodes, bvh.root);
+    if current <= 0.0 {
+        return 1.0;
+    }
+    current / bvh.built_cost
 }
 
 /// Depth statistics of the tree (min/max/mean leaf depth).
@@ -323,6 +362,18 @@ mod tests {
         assert!(c > 0.0 && c.is_finite());
         // Root contributes 1.0; internal nodes shrink below it.
         assert!(c >= 1.0);
+    }
+
+    #[test]
+    fn refit_quality_of_a_fresh_tree_is_one() {
+        // built_cost is frozen at from_parts time from the same nodes, so
+        // an untouched tree divides a number by itself.
+        let bvh = build(&random_cloud(400, 11));
+        assert!(bvh.built_cost > 0.0);
+        assert_eq!(refit_quality(&bvh), 1.0);
+        // Degenerate trees have no cost to compare — they report 1.0.
+        let empty = Bvh::build(&ExecSpace::serial(), &[]);
+        assert_eq!(refit_quality(&empty), 1.0);
     }
 
     #[test]

@@ -1,0 +1,282 @@
+//! Bulk refit for dynamic scenes: new leaf boxes, same topology.
+//!
+//! Moving-object workloads (collision ticks, streaming ingest, sliding
+//! windows) change every AABB a little every timestep. Rebuilding from
+//! scratch repeats the whole §2.1 pipeline — scene box, Morton codes,
+//! radix sort, hierarchy emission — when only step 6 actually depends on
+//! the box values. [`Bvh::update`] re-runs exactly that step: the
+//! hierarchy (node ranges, children, leaf permutation) is kept, the new
+//! boxes are permuted into the existing Morton-sorted leaf order, and
+//! the internal boxes are recomputed bottom-up with the same
+//! atomic-flag second-visitor pass construction uses
+//! ([`super::build::refit`]). The parent links construction "dismissed"
+//! (§2.1) are recreated here in one parallel sweep over the internal
+//! nodes — each child has exactly one parent, so the writes are
+//! disjoint.
+//!
+//! Afterwards the wide layer is re-collapsed and re-quantized from the
+//! refit binary tree ([`super::wide::WideBvh::collapse`]), so the
+//! quantized lane boxes stay conservative (outward-only inflation)
+//! around the *moved* leaves and all three [`super::TraversalMode`]s
+//! keep returning bit-identical results — `validate()` checks that
+//! containment on post-update trees exactly as on built ones.
+//!
+//! A refit tree answers queries *correctly* for any motion (internal
+//! boxes are exact unions again), but the topology was chosen for the
+//! *old* Morton order, so quality degrades as objects shear past each
+//! other. [`Bvh::refit_quality`] measures that degradation as the ratio
+//! of the current SAH cost to the cost at build time
+//! ([`super::stats::refit_quality`]); callers rebuild when it crosses a
+//! threshold (see [`super::stats::DEFAULT_REBUILD_THRESHOLD`] and the
+//! service-level policy in `coordinator/service.rs`).
+
+use super::build::{self, NO_PARENT};
+use super::{is_leaf, ref_index, stats, wide, Bvh, InternalNode};
+use crate::exec::scan::SendPtr;
+use crate::exec::ExecSpace;
+use crate::geometry::Aabb;
+
+/// Recreates the parent-link arrays construction discards: one parallel
+/// pass over the internal nodes, each claiming itself as parent of its
+/// two children. Works for either builder's node numbering (the root —
+/// whichever internal index it is — is the only node never claimed, so
+/// it keeps [`NO_PARENT`]).
+fn compute_parents(
+    space: &ExecSpace,
+    nodes: &[InternalNode],
+    n_leaves: usize,
+) -> (Vec<u32>, Vec<u32>) {
+    let n_internal = nodes.len();
+    let mut leaf_parent = vec![NO_PARENT; n_leaves];
+    let mut internal_parent = vec![NO_PARENT; n_internal];
+    let lpar = SendPtr(leaf_parent.as_mut_ptr());
+    let ipar = SendPtr(internal_parent.as_mut_ptr());
+    space.parallel_for(n_internal, |i| {
+        for child in [nodes[i].left, nodes[i].right] {
+            // SAFETY: each child is claimed by exactly one parent, so
+            // every slot has one writer.
+            unsafe {
+                if is_leaf(child) {
+                    lpar.write(ref_index(child), i as u32);
+                } else {
+                    ipar.write(ref_index(child), i as u32);
+                }
+            }
+        }
+    });
+    (leaf_parent, internal_parent)
+}
+
+impl Bvh {
+    /// Bulk refit: replaces every leaf box (`boxes[i]` is object `i`'s
+    /// new AABB, in the same original order as the build input) and
+    /// recomputes all internal boxes bottom-up, **keeping the topology**
+    /// — node ranges, children, and the Morton leaf permutation are
+    /// untouched, so object indices remain stable across updates. The
+    /// wide layer is re-collapsed and re-quantized from the refit tree,
+    /// keeping every [`super::TraversalMode`] valid and conservative.
+    ///
+    /// Costs one parallel parent sweep plus the step-6 refit plus the
+    /// wide collapse — no Morton codes, no sort, no hierarchy emission.
+    /// After any update the tree answers queries exactly (the
+    /// differential suite pins refit == fresh rebuild == brute force for
+    /// every traversal mode); what degrades under large motion is
+    /// traversal *speed*, tracked by [`Bvh::refit_quality`].
+    ///
+    /// # Panics
+    ///
+    /// If `boxes.len() != self.len()` — an update cannot add or remove
+    /// objects (rebuild for that). The service front door
+    /// (`SearchService::update`) checks lengths and returns an error
+    /// instead.
+    pub fn update(&mut self, space: &ExecSpace, boxes: &[Aabb]) {
+        assert_eq!(
+            boxes.len(),
+            self.n_leaves,
+            "update must supply exactly one box per indexed object"
+        );
+        let n = self.n_leaves;
+        if n == 0 {
+            return;
+        }
+        // Permute the new boxes into the existing Morton-sorted leaf
+        // order: leaf slot i holds object leaf_perm[i].
+        {
+            let dst = SendPtr(self.leaf_boxes.as_mut_ptr());
+            let perm = &self.leaf_perm;
+            space.parallel_for(n, |i| {
+                // SAFETY: one writer per index i.
+                unsafe { dst.write(i, boxes[perm[i] as usize]) };
+            });
+        }
+        if n == 1 {
+            self.scene = self.leaf_boxes[0];
+            return;
+        }
+        let (leaf_parent, internal_parent) = compute_parents(space, &self.nodes, n);
+        build::refit(
+            space,
+            n,
+            &mut self.nodes,
+            &leaf_parent,
+            &internal_parent,
+            &self.leaf_boxes,
+        );
+        // The root box is the union of every leaf box — the new scene.
+        self.scene = self.nodes[ref_index(self.root)].bbox;
+        // Re-derive the query-only wide view so its quantization grids
+        // (anchored on the refit binary boxes) stay conservative.
+        self.wide = wide::WideBvh::collapse(&self.nodes, &self.leaf_boxes, self.root);
+        // `built_cost` deliberately stays at its as-built value: it is
+        // the quality baseline refits are measured against.
+    }
+
+    /// SAH cost of the current boxes relative to the cost when the tree
+    /// was built: 1.0 means "as good as freshly built", growing ratios
+    /// mean refits have degraded the fit of the (frozen) topology to the
+    /// (moved) boxes. See [`super::stats::refit_quality`].
+    pub fn refit_quality(&self) -> f64 {
+        stats::refit_quality(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::Point;
+
+    fn cloud(n: usize, seed: u64, scale: f32) -> Vec<Aabb> {
+        let mut s = seed | 1;
+        let mut next = move || {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            (s >> 11) as f32 / (1u64 << 53) as f32 * scale
+        };
+        (0..n)
+            .map(|_| Aabb::from_point(Point::new(next(), next(), next())))
+            .collect()
+    }
+
+    #[test]
+    fn parent_links_match_the_emitted_topology() {
+        for builder in [Bvh::build, Bvh::build_apetrei] {
+            for space in [ExecSpace::serial(), ExecSpace::with_threads(4)] {
+                let boxes = cloud(257, 9, 10.0);
+                let t = builder(&space, &boxes);
+                let (lp, ip) = compute_parents(&space, &t.nodes, t.n_leaves);
+                // Every node's recorded parent really lists it as a child.
+                for (leaf, &p) in lp.iter().enumerate() {
+                    assert_ne!(p, NO_PARENT, "leaf {leaf} unclaimed");
+                    let nd = &t.nodes[p as usize];
+                    let me = super::super::leaf_ref(leaf as u32);
+                    assert!(nd.left == me || nd.right == me);
+                }
+                let mut roots = 0;
+                for (i, &p) in ip.iter().enumerate() {
+                    if p == NO_PARENT {
+                        roots += 1;
+                        assert_eq!(super::super::internal_ref(i as u32), t.root);
+                        continue;
+                    }
+                    let nd = &t.nodes[p as usize];
+                    let me = super::super::internal_ref(i as u32);
+                    assert!(nd.left == me || nd.right == me);
+                }
+                assert_eq!(roots, 1, "exactly one parentless internal node");
+            }
+        }
+    }
+
+    #[test]
+    fn update_refits_boxes_and_scene_for_both_builders() {
+        for builder in [Bvh::build, Bvh::build_apetrei] {
+            for space in [ExecSpace::serial(), ExecSpace::with_threads(4)] {
+                let boxes = cloud(300, 5, 10.0);
+                let mut t = builder(&space, &boxes);
+                // Rigid drift: every box translated the same way.
+                let d = Point::new(3.0, -2.0, 0.5);
+                let moved: Vec<Aabb> =
+                    boxes.iter().map(|b| Aabb::new(b.min + d, b.max + d)).collect();
+                t.update(&space, &moved);
+                assert_eq!(t.validate(), Ok(()));
+                assert_eq!(*t.node_box(t.root), t.scene_box());
+                // The refit tree is exactly the moved scene.
+                let fresh = builder(&space, &moved);
+                assert_eq!(t.scene_box(), fresh.scene_box());
+                // Rigid motion preserves relative geometry: quality ~1
+                // (up to f32 rounding of the translated extents).
+                let q = t.refit_quality();
+                assert!((q - 1.0).abs() < 1e-3, "drift quality {q}");
+            }
+        }
+    }
+
+    #[test]
+    fn update_handles_empty_and_singleton_trees() {
+        let space = ExecSpace::serial();
+        let mut t = Bvh::build(&space, &[]);
+        t.update(&space, &[]);
+        assert_eq!(t.validate(), Ok(()));
+        assert_eq!(t.refit_quality(), 1.0);
+
+        let mut t = Bvh::build(&space, &[Aabb::from_point(Point::splat(1.0))]);
+        let moved = [Aabb::from_point(Point::splat(-4.0))];
+        t.update(&space, &moved);
+        assert_eq!(t.validate(), Ok(()));
+        assert_eq!(t.scene_box(), moved[0]);
+        assert_eq!(t.refit_quality(), 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "exactly one box per indexed object")]
+    fn update_rejects_mismatched_lengths() {
+        let space = ExecSpace::serial();
+        let boxes = cloud(10, 3, 1.0);
+        let mut t = Bvh::build(&space, &boxes);
+        t.update(&space, &boxes[..9]);
+    }
+
+    #[test]
+    fn repeated_updates_stay_valid_and_exact() {
+        let space = ExecSpace::with_threads(4);
+        let boxes = cloud(500, 77, 8.0);
+        let mut t = Bvh::build(&space, &boxes);
+        let mut current = boxes.clone();
+        for tick in 0..5 {
+            let d = Point::new(0.3, 0.1 * tick as f32, -0.2);
+            current = current.iter().map(|b| Aabb::new(b.min + d, b.max + d)).collect();
+            t.update(&space, &current);
+            assert_eq!(t.validate(), Ok(()), "tick {tick}");
+            assert_eq!(*t.node_box(t.root), t.scene_box());
+        }
+    }
+
+    #[test]
+    fn teleport_degrades_quality_but_not_validity() {
+        let space = ExecSpace::serial();
+        let boxes = cloud(400, 21, 10.0);
+        let mut t = Bvh::build(&space, &boxes);
+        // Teleport a quarter of the objects far away: their leaves blow
+        // up ancestor boxes toward scene scale.
+        let far = Point::new(500.0, -400.0, 300.0);
+        let moved: Vec<Aabb> = boxes
+            .iter()
+            .enumerate()
+            .map(|(i, b)| {
+                if i % 4 == 0 {
+                    Aabb::new(b.min + far, b.max + far)
+                } else {
+                    *b
+                }
+            })
+            .collect();
+        t.update(&space, &moved);
+        assert_eq!(t.validate(), Ok(()));
+        assert!(
+            t.refit_quality() > stats::DEFAULT_REBUILD_THRESHOLD,
+            "teleport quality {} must cross the rebuild threshold",
+            t.refit_quality()
+        );
+    }
+}

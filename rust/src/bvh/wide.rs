@@ -26,6 +26,14 @@
 //! `test` is monotone under box containment, which the trait already
 //! requires for binary pruning.)
 //!
+//! **Dynamic scenes.** A bulk refit ([`Bvh::update`]) replaces the wide
+//! view wholesale: after the binary boxes are recomputed bottom-up, the
+//! collapse runs again over the refit tree, so the quantization grids
+//! re-anchor on the *moved* parent boxes and the outward-only containment
+//! guarantee holds for the new geometry exactly as for a fresh build —
+//! even when a leaf has escaped its old parent box entirely. `validate()`
+//! re-checks the per-lane containment on post-update trees.
+//!
 //! **Mode selection.** Every built [`Bvh`] carries a [`TraversalMode`],
 //! defaulted from the environment once per process: `ARBOR_FORCE_SCALAR=1`
 //! or `ARBOR_TRAVERSAL=wide-scalar` forces the per-lane scalar fallback

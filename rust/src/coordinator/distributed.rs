@@ -56,13 +56,20 @@ use crate::geometry::predicates::{
 use crate::geometry::{Aabb, Point, Ray, Sphere};
 
 /// One rank's shard: a local tree plus the map back to global indices.
+/// `Clone` supports the copy-on-write scene updates of the versioned
+/// service backend.
+#[derive(Clone)]
 struct RankShard {
     bvh: Bvh,
     /// `global[local] = global object index`.
     global: Vec<u32>,
 }
 
-/// A distributed tree over `R` simulated ranks.
+/// A distributed tree over `R` simulated ranks. `Clone` is deep (every
+/// rank tree plus the top tree) — the versioned service backend clones
+/// the current snapshot, updates the clone, and publishes it while
+/// readers keep the original.
+#[derive(Clone)]
 pub struct DistributedTree {
     ranks: Vec<RankShard>,
     /// Top-level tree whose "objects" are the rank scene boxes.
@@ -212,6 +219,78 @@ impl DistributedTree {
     /// `true` when no objects are indexed.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Bulk scene update, rank-selective: `boxes[i]` is global object
+    /// `i`'s new AABB (same indexing as the build input; the partition
+    /// is kept, objects do not migrate between ranks). Each rank first
+    /// checks whether any of *its* boxes actually moved — untouched
+    /// ranks are skipped entirely, the simulated analogue of not
+    /// re-communicating with ranks whose scene is unchanged. Changed
+    /// ranks are bulk-refit in place ([`Bvh::update`]); a rank whose
+    /// refit quality exceeds `rebuild_threshold` is rebuilt from scratch
+    /// instead (keeping its traversal mode). If anything changed, the
+    /// top tree is rebuilt over the new rank scene boxes so phase-1
+    /// forwarding stays exact.
+    ///
+    /// Ranks are visited serially — each rank's refit/rebuild already
+    /// parallelizes internally on `space`, so nesting a rank-level
+    /// dispatch on the same pool would only add contention.
+    ///
+    /// # Panics
+    ///
+    /// If `boxes.len() != self.len()` (an update cannot add or remove
+    /// objects). The service front door returns an error instead.
+    pub fn update(
+        &mut self,
+        space: &ExecSpace,
+        boxes: &[Aabb],
+        rebuild_threshold: f64,
+    ) -> DistUpdateStats {
+        assert_eq!(
+            boxes.len(),
+            self.len(),
+            "update must supply exactly one box per indexed object"
+        );
+        let mut stats = DistUpdateStats {
+            refit_ranks: 0,
+            rebuilt_ranks: 0,
+            unchanged_ranks: 0,
+            worst_quality: 1.0,
+        };
+        for shard in &mut self.ranks {
+            let local: Vec<Aabb> = shard.global.iter().map(|&g| boxes[g as usize]).collect();
+            // Compare against the tree's current leaf boxes through the
+            // Morton permutation: leaf slot i holds object leaf_perm[i].
+            let changed = shard
+                .bvh
+                .leaf_boxes
+                .iter()
+                .zip(&shard.bvh.leaf_perm)
+                .any(|(cur, &p)| *cur != local[p as usize]);
+            if !changed {
+                stats.unchanged_ranks += 1;
+                continue;
+            }
+            shard.bvh.update(space, &local);
+            let quality = shard.bvh.refit_quality();
+            if quality > rebuild_threshold {
+                let mode = shard.bvh.traversal_mode();
+                shard.bvh = Bvh::build(space, &local);
+                shard.bvh.set_traversal_mode(mode);
+                stats.rebuilt_ranks += 1;
+            } else {
+                stats.refit_ranks += 1;
+            }
+            if quality > stats.worst_quality {
+                stats.worst_quality = quality;
+            }
+        }
+        if stats.refit_ranks + stats.rebuilt_ranks > 0 {
+            let rank_boxes: Vec<Aabb> = self.ranks.iter().map(|r| r.bvh.scene_box()).collect();
+            self.top = Bvh::build(space, &rank_boxes);
+        }
+        stats
     }
 
     /// Phase-1 forward: the ranks whose scene box satisfies the spatial
@@ -856,6 +935,22 @@ pub struct DistStats {
     pub worker_threads: usize,
 }
 
+/// Per-rank outcome of one [`DistributedTree::update`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DistUpdateStats {
+    /// Ranks whose refit stayed within the rebuild threshold.
+    pub refit_ranks: usize,
+    /// Ranks rebuilt from scratch (refit quality crossed the threshold).
+    pub rebuilt_ranks: usize,
+    /// Ranks skipped because none of their boxes changed — the simulated
+    /// "no re-communication" saving.
+    pub unchanged_ranks: usize,
+    /// The worst refit-quality ratio observed over the changed ranks
+    /// (1.0 when nothing changed) — measured *before* any rebuild, so
+    /// it reports what triggered one.
+    pub worst_quality: f64,
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -901,6 +996,50 @@ mod tests {
                 assert_eq!(stats.streamed_results, got.len());
             }
         }
+    }
+
+    #[test]
+    fn update_refits_only_the_changed_ranks() {
+        let space = ExecSpace::serial();
+        let boxes = cloud(200, 17);
+        let mut dt = DistributedTree::build(&space, &boxes, 4, Partition::MortonBlock);
+        // Rigidly shift only the objects rank 0 owns: the other three
+        // ranks must be skipped, and the top tree must still forward
+        // correctly over the moved rank scene box.
+        let owned = dt.ranks[0].global.clone();
+        let mut moved = boxes.clone();
+        let d = Point::splat(0.5);
+        for &g in &owned {
+            let b = moved[g as usize];
+            moved[g as usize] = Aabb::new(b.min + d, b.max + d);
+        }
+        let stats = dt.update(&space, &moved, 2.0);
+        assert_eq!(stats.unchanged_ranks, 3, "untouched ranks skipped");
+        assert_eq!(stats.refit_ranks, 1, "rigid shift refits, never rebuilds");
+        assert_eq!(stats.rebuilt_ranks, 0);
+        assert!(stats.worst_quality < 1.5, "rigid motion keeps quality ~1");
+        // Every rank tree (and the wide layers) stays valid, and answers
+        // match the brute oracle on the moved scene.
+        for shard in &dt.ranks {
+            assert_eq!(shard.bvh.validate(), Ok(()));
+        }
+        let brute = BruteForce::new(&moved);
+        let mut rng = Rng::new(3);
+        for _ in 0..10 {
+            let q = Point::new(
+                rng.uniform(-8.0, 8.0),
+                rng.uniform(-8.0, 8.0),
+                rng.uniform(-8.0, 8.0),
+            );
+            let pred = Spatial::IntersectsSphere(Sphere::new(q, 3.0));
+            let (got, _) = dt.spatial(&pred);
+            assert_eq!(got, brute.spatial(&pred));
+        }
+        // A second update with identical boxes is a no-op on every rank.
+        let stats = dt.update(&space, &moved, 2.0);
+        assert_eq!(stats.unchanged_ranks, 4);
+        assert_eq!((stats.refit_ranks, stats.rebuilt_ranks), (0, 0));
+        assert_eq!(stats.worst_quality, 1.0);
     }
 
     #[test]

@@ -216,6 +216,14 @@ pub struct Metrics {
     /// Matches streamed through the distributed spatial callback path
     /// (straight into per-query accumulators, no per-rank vectors).
     streamed_results: AtomicU64,
+    /// Scene updates published (each one epoch advance).
+    updates: AtomicU64,
+    /// Ranks bulk-refit by updates (the single backend counts as one
+    /// rank per update).
+    update_refit_ranks: AtomicU64,
+    /// Ranks rebuilt from scratch by updates (refit quality crossed the
+    /// rebuild threshold).
+    update_rebuilt_ranks: AtomicU64,
     /// Per-request latencies in microseconds (bounded reservoir).
     latencies_us: Mutex<Vec<u64>>,
 }
@@ -237,6 +245,9 @@ impl Default for Metrics {
             distributed_batches: AtomicU64::new(0),
             forwarded_queries: AtomicU64::new(0),
             streamed_results: AtomicU64::new(0),
+            updates: AtomicU64::new(0),
+            update_refit_ranks: AtomicU64::new(0),
+            update_rebuilt_ranks: AtomicU64::new(0),
             latencies_us: Mutex::new(Vec::new()),
         }
     }
@@ -379,6 +390,30 @@ impl Metrics {
         self.streamed_results.load(Ordering::Relaxed)
     }
 
+    /// Records one published scene update: `refit_ranks` ranks were
+    /// bulk-refit, `rebuilt_ranks` crossed the quality threshold and
+    /// were rebuilt (the single backend reports 1/0 or 0/1).
+    pub fn record_update(&self, refit_ranks: u64, rebuilt_ranks: u64) {
+        self.updates.fetch_add(1, Ordering::Relaxed);
+        self.update_refit_ranks.fetch_add(refit_ranks, Ordering::Relaxed);
+        self.update_rebuilt_ranks.fetch_add(rebuilt_ranks, Ordering::Relaxed);
+    }
+
+    /// Scene updates published.
+    pub fn updates(&self) -> u64 {
+        self.updates.load(Ordering::Relaxed)
+    }
+
+    /// Ranks bulk-refit across all updates.
+    pub fn update_refit_ranks(&self) -> u64 {
+        self.update_refit_ranks.load(Ordering::Relaxed)
+    }
+
+    /// Ranks rebuilt from scratch across all updates.
+    pub fn update_rebuilt_ranks(&self) -> u64 {
+        self.update_rebuilt_ranks.load(Ordering::Relaxed)
+    }
+
     /// Requests per second since service start.
     pub fn throughput(&self) -> f64 {
         let secs = self.started.elapsed().as_secs_f64();
@@ -406,7 +441,8 @@ impl Metrics {
         format!(
             "requests={} batches={} results={} throughput={:.0}/s \
              p50={}us p95={}us p99={}us passes(1p/fallback/2p)={}/{}/{} \
-             first_hit={}/{} dist(batches/forwarded/streamed)={}/{}/{}",
+             first_hit={}/{} dist(batches/forwarded/streamed)={}/{}/{} \
+             updates={}(refit/rebuilt={}/{})",
             self.requests(),
             self.batches(),
             self.results(),
@@ -422,6 +458,9 @@ impl Metrics {
             self.distributed_batches(),
             self.forwarded_queries(),
             self.streamed_results(),
+            self.updates(),
+            self.update_refit_ranks(),
+            self.update_rebuilt_ranks(),
         )
     }
 }
@@ -477,6 +516,18 @@ mod tests {
         assert_eq!(m.forwarded_queries(), 15);
         assert_eq!(m.streamed_results(), 340);
         assert!(m.summary().contains("dist(batches/forwarded/streamed)=2/15/340"));
+    }
+
+    #[test]
+    fn update_counters_accumulate() {
+        let m = Metrics::default();
+        assert_eq!(m.updates(), 0);
+        m.record_update(1, 0); // single-backend refit
+        m.record_update(5, 3); // distributed: 5 refit, 3 rebuilt
+        assert_eq!(m.updates(), 2);
+        assert_eq!(m.update_refit_ranks(), 6);
+        assert_eq!(m.update_rebuilt_ranks(), 3);
+        assert!(m.summary().contains("updates=2(refit/rebuilt=6/3)"));
     }
 
     #[test]

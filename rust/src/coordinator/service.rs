@@ -47,10 +47,28 @@
 //! [`WaitError::ServiceDropped`] if the coordinator died without
 //! answering. No panic is reachable from the public API under
 //! shutdown-with-in-flight-queries.
+//!
+//! **Dynamic scenes: the versioned backend.** Both backend variants hold
+//! their tree behind [`Versioned`], an epoch-counted `Arc` swap: the
+//! coordinator takes one [`Versioned::snapshot`] per coalesced batch and
+//! executes the whole batch against that pinned tree, so a
+//! [`SearchService::update`] landing mid-flight can never mix two scene
+//! versions inside one query's answer. `update` clones the current
+//! snapshot (queries keep reading it untouched), bulk-refits the clone
+//! ([`Bvh::update`] — topology kept, boxes recomputed, wide layer
+//! re-collapsed), and atomically publishes it as the next epoch; when
+//! the refit-quality ratio ([`Bvh::refit_quality`]) exceeds
+//! [`ServiceConfig::rebuild_threshold`] the clone is rebuilt from
+//! scratch instead (preserving the traversal mode). The distributed
+//! backend refits **only the ranks whose boxes actually changed**
+//! ([`DistributedTree::update`]) and re-builds the top tree over the new
+//! rank scene boxes. Updates are serialized by an internal writer lock;
+//! after [`SearchService::shutdown`] they fail with
+//! [`SubmitError::Stopped`] exactly like submissions.
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -93,6 +111,10 @@ pub struct ServiceConfig {
     pub sort_queries: bool,
     /// Worker threads used to execute each batch.
     pub threads: usize,
+    /// Refit-quality ratio above which [`SearchService::update`] rebuilds
+    /// the tree (or rank) from scratch instead of publishing the refit
+    /// (see [`crate::bvh::stats::refit_quality`]).
+    pub rebuild_threshold: f64,
 }
 
 impl Default for ServiceConfig {
@@ -103,6 +125,7 @@ impl Default for ServiceConfig {
             buffer_policy: BufferPolicy::Adaptive,
             sort_queries: true,
             threads: std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1),
+            rebuild_threshold: crate::bvh::stats::DEFAULT_REBUILD_THRESHOLD,
         }
     }
 }
@@ -148,8 +171,10 @@ pub enum SubmitError {
     /// accepts work). Requests accepted *before* the stop are still
     /// drained and answered.
     Stopped,
-    /// [`SearchService::submit_encoded`] could not decode the bytes as
-    /// exactly one well-formed wire predicate.
+    /// The request payload is invalid: [`SearchService::submit_encoded`]
+    /// could not decode the bytes as exactly one well-formed wire
+    /// predicate, or [`SearchService::update`] was given a box count
+    /// that does not match the indexed object count.
     Malformed,
 }
 
@@ -217,18 +242,86 @@ impl Pending {
     }
 }
 
+/// An epoch-counted, atomically swappable tree: the concurrent-read
+/// story for dynamic scenes. Readers take [`Versioned::snapshot`] — an
+/// `Arc` clone of the current version, pinned for as long as they hold
+/// it — while a writer prepares the next version off to the side and
+/// [`Versioned::publish`]es it in one swap. In-flight readers keep the
+/// old tree until they drop it; new readers see the new one. The
+/// coordinator loop snapshots once per coalesced batch, so every query
+/// in a batch is answered by exactly one scene version.
+///
+/// The `epoch` counter increments on every publish; it exists for
+/// observability (tests pin "the update landed as epoch N", metrics can
+/// report versions served), not for synchronization — the `RwLock`
+/// around the `Arc` swap is what orders publishes against snapshots.
+pub struct Versioned<T> {
+    current: RwLock<Arc<T>>,
+    epoch: AtomicU64,
+}
+
+impl<T> Versioned<T> {
+    /// Wraps a tree as version 0.
+    pub fn new(tree: Arc<T>) -> Versioned<T> {
+        Versioned { current: RwLock::new(tree), epoch: AtomicU64::new(0) }
+    }
+
+    /// The current version, pinned: holders keep this exact tree alive
+    /// (and consistent) across any number of concurrent publishes.
+    pub fn snapshot(&self) -> Arc<T> {
+        Arc::clone(&self.current.read().unwrap())
+    }
+
+    /// The current epoch (0 for the as-started tree, +1 per publish).
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+
+    /// Atomically replaces the current version, returning the new epoch.
+    /// Existing snapshots are untouched.
+    pub fn publish(&self, tree: Arc<T>) -> u64 {
+        let mut cur = self.current.write().unwrap();
+        *cur = tree;
+        self.epoch.fetch_add(1, Ordering::AcqRel) + 1
+    }
+}
+
 /// What a [`SearchService`] executes batches against: one local tree,
 /// or a simulated multi-rank distributed tree. The wire protocol, the
 /// batcher, and the client API are identical either way — only the
-/// executor behind the coordinator loop changes.
+/// executor behind the coordinator loop changes. Either way the tree is
+/// held behind a [`Versioned`] swap so [`SearchService::update`] can
+/// land new scene geometry under live queries.
+#[derive(Clone)]
 pub enum Backend {
     /// A single local BVH; batches run through the per-kind
     /// sub-batcher ([`execute_sub_batched`]).
-    Single(Arc<Bvh>),
+    Single(Arc<Versioned<Bvh>>),
     /// A distributed tree; batches run through the streaming two-phase
     /// engine ([`DistributedTree::query_batch`]) with rank-level
     /// parallelism on the service's worker threads.
-    Distributed(Arc<DistributedTree>),
+    Distributed(Arc<Versioned<DistributedTree>>),
+}
+
+/// What one [`SearchService::update`] did, observable by the caller.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct UpdateReport {
+    /// The epoch the new tree was published as (queries batched from
+    /// this point on see the new scene).
+    pub epoch: u64,
+    /// The refit-quality ratio that drove the decision — for the
+    /// distributed backend, the worst ratio over the changed ranks
+    /// (1.0 when nothing changed).
+    pub quality: f64,
+    /// Ranks whose refit was good enough to publish as-is (the single
+    /// backend counts as one rank).
+    pub refit_ranks: usize,
+    /// Ranks rebuilt from scratch because their refit quality crossed
+    /// [`ServiceConfig::rebuild_threshold`].
+    pub rebuilt_ranks: usize,
+    /// Ranks skipped entirely because none of their boxes changed
+    /// (distributed backend only).
+    pub unchanged_ranks: usize,
 }
 
 /// The running search service (see module docs).
@@ -237,20 +330,27 @@ pub struct SearchService {
     worker: Mutex<Option<JoinHandle<()>>>,
     metrics: Arc<Metrics>,
     stopping: Arc<AtomicBool>,
+    backend: Backend,
+    rebuild_threshold: f64,
+    /// Serializes writers: concurrent `update` calls would otherwise
+    /// clone the same snapshot and silently drop each other's motion.
+    update_lock: Mutex<()>,
 }
 
 impl SearchService {
-    /// Starts a service over a built tree. The tree is shared (`Arc`) so
-    /// the caller can keep issuing direct batched queries too.
+    /// Starts a service over a built tree. The tree is wrapped in a
+    /// fresh [`Versioned`] at epoch 0; the caller's `Arc` stays valid
+    /// for direct batched queries (it simply never advances past the
+    /// version it holds).
     pub fn start(bvh: Arc<Bvh>, config: ServiceConfig) -> SearchService {
-        SearchService::start_backend(Backend::Single(bvh), config)
+        SearchService::start_backend(Backend::Single(Arc::new(Versioned::new(bvh))), config)
     }
 
     /// Starts a service over a distributed tree: the same wire protocol
     /// and batcher, with each coalesced batch executed by the streaming
     /// two-phase distributed engine.
     pub fn start_distributed(tree: Arc<DistributedTree>, config: ServiceConfig) -> SearchService {
-        SearchService::start_backend(Backend::Distributed(tree), config)
+        SearchService::start_backend(Backend::Distributed(Arc::new(Versioned::new(tree))), config)
     }
 
     /// Starts a service over any [`Backend`].
@@ -260,15 +360,20 @@ impl SearchService {
         let stopping = Arc::new(AtomicBool::new(false));
         let m = Arc::clone(&metrics);
         let stop_flag = Arc::clone(&stopping);
+        let rebuild_threshold = config.rebuild_threshold;
+        let loop_backend = backend.clone();
         let worker = std::thread::spawn(move || {
             let space = ExecSpace::with_threads(config.threads);
-            coordinator_loop(&backend, &space, &config, rx, &m, &stop_flag);
+            coordinator_loop(&loop_backend, &space, &config, rx, &m, &stop_flag);
         });
         SearchService {
             tx: Mutex::new(Some(tx)),
             worker: Mutex::new(Some(worker)),
             metrics,
             stopping,
+            backend,
+            rebuild_threshold,
+            update_lock: Mutex::new(()),
         }
     }
 
@@ -306,6 +411,87 @@ impl SearchService {
     /// Service metrics.
     pub fn metrics(&self) -> &Metrics {
         &self.metrics
+    }
+
+    /// The backend's current scene epoch (0 at start, +1 per landed
+    /// [`SearchService::update`]).
+    pub fn epoch(&self) -> u64 {
+        match &self.backend {
+            Backend::Single(vt) => vt.epoch(),
+            Backend::Distributed(vt) => vt.epoch(),
+        }
+    }
+
+    /// Publishes new scene geometry under live queries: `boxes[i]` is
+    /// object `i`'s new AABB, same indexing as the build input. The
+    /// current tree is snapshotted and cloned, the clone is bulk-refit
+    /// ([`Bvh::update`] — topology kept, wide layer re-collapsed), and
+    /// if its refit quality stays within
+    /// [`ServiceConfig::rebuild_threshold`] the refit is published as
+    /// the next epoch; otherwise a from-scratch rebuild is published
+    /// instead (same traversal mode). The distributed backend refits
+    /// only the ranks whose boxes changed and rebuilds the top tree
+    /// ([`DistributedTree::update`]).
+    ///
+    /// Queries batched before the publish are answered wholly by the old
+    /// tree, queries after by the new one — never a mix (the coordinator
+    /// pins one [`Versioned::snapshot`] per batch). Updates are
+    /// serialized by an internal writer lock; concurrent callers land in
+    /// some order, each as its own epoch.
+    ///
+    /// Errors: [`SubmitError::Stopped`] after shutdown (exactly like
+    /// [`SearchService::submit`]), [`SubmitError::Malformed`] when
+    /// `boxes.len()` does not match the indexed object count (an update
+    /// cannot add or remove objects).
+    pub fn update(&self, space: &ExecSpace, boxes: &[Aabb]) -> Result<UpdateReport, SubmitError> {
+        let _writer = self.update_lock.lock().unwrap();
+        if self.stopping.load(Ordering::Acquire) || self.tx.lock().unwrap().is_none() {
+            return Err(SubmitError::Stopped);
+        }
+        match &self.backend {
+            Backend::Single(vt) => {
+                let snap = vt.snapshot();
+                if boxes.len() != snap.len() {
+                    return Err(SubmitError::Malformed);
+                }
+                let mut tree = (*snap).clone();
+                tree.update(space, boxes);
+                let quality = tree.refit_quality();
+                let rebuilt = quality > self.rebuild_threshold;
+                if rebuilt {
+                    let mode = tree.traversal_mode();
+                    tree = Bvh::build(space, boxes);
+                    tree.set_traversal_mode(mode);
+                }
+                let epoch = vt.publish(Arc::new(tree));
+                self.metrics.record_update(!rebuilt as u64, rebuilt as u64);
+                Ok(UpdateReport {
+                    epoch,
+                    quality,
+                    refit_ranks: !rebuilt as usize,
+                    rebuilt_ranks: rebuilt as usize,
+                    unchanged_ranks: 0,
+                })
+            }
+            Backend::Distributed(vt) => {
+                let snap = vt.snapshot();
+                if boxes.len() != snap.len() {
+                    return Err(SubmitError::Malformed);
+                }
+                let mut tree = (*snap).clone();
+                let stats = tree.update(space, boxes, self.rebuild_threshold);
+                let epoch = vt.publish(Arc::new(tree));
+                self.metrics
+                    .record_update(stats.refit_ranks as u64, stats.rebuilt_ranks as u64);
+                Ok(UpdateReport {
+                    epoch,
+                    quality: stats.worst_quality,
+                    refit_ranks: stats.refit_ranks,
+                    rebuilt_ranks: stats.rebuilt_ranks,
+                    unchanged_ranks: stats.unchanged_ranks,
+                })
+            }
+        }
     }
 
     /// Stops the coordinator (drains pending requests first).
@@ -367,18 +553,26 @@ fn coordinator_loop(
             }
         }
 
-        // Execute the coalesced batch against the backend.
+        // Execute the coalesced batch against the backend. One pinned
+        // snapshot per batch: an update publishing mid-batch cannot mix
+        // scene versions inside any query's answer.
         let preds: Vec<QueryPredicate> = batch.iter().map(|r| r.pred).collect();
         let responses = match backend {
-            Backend::Single(bvh) => execute_sub_batched(
-                bvh,
-                space,
-                &preds,
-                config.buffer_policy,
-                config.sort_queries,
-                metrics,
-            ),
-            Backend::Distributed(tree) => execute_distributed(tree, space, &preds, metrics),
+            Backend::Single(vt) => {
+                let bvh = vt.snapshot();
+                execute_sub_batched(
+                    &bvh,
+                    space,
+                    &preds,
+                    config.buffer_policy,
+                    config.sort_queries,
+                    metrics,
+                )
+            }
+            Backend::Distributed(vt) => {
+                let tree = vt.snapshot();
+                execute_distributed(&tree, space, &preds, metrics)
+            }
         };
 
         // Respond and account.
@@ -863,6 +1057,44 @@ mod tests {
             assert_eq!(p.wait().expect("answered").indices, vec![i as u32]);
         }
         assert!(svc.metrics().batches() >= 4, "max_batch=4 over 16 requests");
+    }
+
+    #[test]
+    fn update_publishes_new_scene_versions() {
+        let (svc, _) = service(100, 16);
+        assert_eq!(svc.epoch(), 0);
+        let space = ExecSpace::serial();
+        // Shift the whole line by +0.25: nearest answers move with it.
+        let boxes: Vec<Aabb> = (0..100)
+            .map(|i| Aabb::from_point(Point::new(i as f32 + 0.25, 0.0, 0.0)))
+            .collect();
+        let rep = svc.update(&space, &boxes).expect("service running");
+        assert_eq!(rep.epoch, 1);
+        assert_eq!(svc.epoch(), 1);
+        assert_eq!((rep.refit_ranks, rep.rebuilt_ranks, rep.unchanged_ranks), (1, 0, 0));
+        let r = svc
+            .query(QueryPredicate::nearest(Point::new(5.3, 0.0, 0.0), 1))
+            .expect("service running");
+        assert_eq!(r.indices, vec![5], "query served by the updated scene");
+        assert!((r.distances[0] - 0.0025).abs() < 1e-6, "dist2 to the shifted point");
+        assert_eq!(svc.metrics().updates(), 1);
+        // Wrong cardinality is refused, nothing published.
+        assert_eq!(svc.update(&space, &boxes[..99]).err(), Some(SubmitError::Malformed));
+        assert_eq!(svc.epoch(), 1);
+    }
+
+    #[test]
+    fn update_after_shutdown_returns_stopped() {
+        let (svc, _) = service(10, 4);
+        svc.shutdown();
+        let boxes: Vec<Aabb> =
+            (0..10).map(|i| Aabb::from_point(Point::new(i as f32, 1.0, 0.0))).collect();
+        assert_eq!(
+            svc.update(&ExecSpace::serial(), &boxes).err(),
+            Some(SubmitError::Stopped),
+            "updates ride the same stopped path as submissions"
+        );
+        assert_eq!(svc.metrics().updates(), 0);
     }
 
     #[test]

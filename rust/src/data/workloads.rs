@@ -8,9 +8,10 @@
 //! chosen in such a way that on average there are k neighbors within
 //! radius r in a filled cube shape."
 
+use super::rng::Rng;
 use super::shapes::{PointCloud, Shape};
 use crate::bvh::QueryPredicate;
-use crate::geometry::Point;
+use crate::geometry::{Aabb, Point};
 
 /// The fixed neighbor count of every experiment in the paper.
 pub const K: usize = 10;
@@ -97,6 +98,75 @@ impl Workload {
     }
 }
 
+// ---------------------------------------------------------------------
+// Motion generators for dynamic-scene workloads (collision ticks,
+// streaming ingest). Each maps a scene's boxes to the next tick's boxes,
+// preserving cardinality and indexing — exactly what [`crate::bvh::Bvh::
+// update`] consumes. The four magnitudes span the refit spectrum: rigid
+// `drift` and small `jitter` keep the built topology near-optimal,
+// `collapse` compresses it, and `teleport` shreds the Morton locality
+// the build keyed on — the canonical rebuild trigger.
+// ---------------------------------------------------------------------
+
+/// Rigid translation: every box moved by `delta`. Preserves all relative
+/// geometry, so a refit tree stays exactly as good as its build.
+pub fn drift_boxes(boxes: &[Aabb], delta: Point) -> Vec<Aabb> {
+    boxes.iter().map(|b| Aabb::new(b.min + delta, b.max + delta)).collect()
+}
+
+/// Random per-box displacement: each box's center moves by an
+/// independent uniform offset in `[-magnitude, magnitude]^3` (extents
+/// kept). Deterministic in `seed`. Small magnitudes model frame-to-frame
+/// simulation motion; large ones approach a re-shuffle.
+pub fn jitter_boxes(boxes: &[Aabb], magnitude: f32, seed: u64) -> Vec<Aabb> {
+    let mut rng = Rng::new(seed);
+    boxes
+        .iter()
+        .map(|b| {
+            let d = Point::new(
+                rng.uniform(-magnitude, magnitude),
+                rng.uniform(-magnitude, magnitude),
+                rng.uniform(-magnitude, magnitude),
+            );
+            Aabb::new(b.min + d, b.max + d)
+        })
+        .collect()
+}
+
+/// Teleport: every `stride`-th box (by original index) is translated by
+/// `offset`, the rest stay. Deterministic and index-scattered, so the
+/// moved leaves are spread across the whole Morton order — ancestor
+/// boxes blow up toward scene scale, the worst case for a frozen
+/// topology and the scene that must trip the rebuild threshold.
+pub fn teleport_boxes(boxes: &[Aabb], stride: usize, offset: Point) -> Vec<Aabb> {
+    assert!(stride >= 1);
+    boxes
+        .iter()
+        .enumerate()
+        .map(|(i, b)| {
+            if i % stride == 0 {
+                Aabb::new(b.min + offset, b.max + offset)
+            } else {
+                *b
+            }
+        })
+        .collect()
+}
+
+/// Collapse-to-point: every box's center is lerped a fraction `t` toward
+/// `target` (extents kept). `t = 1.0` stacks the whole scene onto one
+/// spot — maximal overlap, the degenerate density extreme.
+pub fn collapse_boxes(boxes: &[Aabb], target: Point, t: f32) -> Vec<Aabb> {
+    boxes
+        .iter()
+        .map(|b| {
+            let center = (b.min + b.max) * 0.5;
+            let d = (target - center) * t;
+            Aabb::new(b.min + d, b.max + d)
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -138,6 +208,37 @@ mod tests {
         assert!(empty as f64 > 0.5 * w.spatial.len() as f64, "most queries empty");
         let max = (0..w.spatial.len()).map(|q| out.results_for(q).len()).max().unwrap();
         assert!(max as f64 > 5.0 * avg.max(0.5), "imbalance expected, max={max} avg={avg}");
+    }
+
+    #[test]
+    fn motion_generators_preserve_cardinality_and_extents() {
+        let cloud = PointCloud::generate(Shape::FilledCube, 300, 9);
+        let boxes = cloud.boxes();
+        let extent = |b: &crate::geometry::Aabb| b.max - b.min;
+        for (name, moved) in [
+            ("drift", drift_boxes(&boxes, Point::new(1.0, -2.0, 0.5))),
+            ("jitter", jitter_boxes(&boxes, 0.25, 77)),
+            ("teleport", teleport_boxes(&boxes, 4, Point::splat(100.0))),
+            ("collapse", collapse_boxes(&boxes, Point::origin(), 0.5)),
+        ] {
+            assert_eq!(moved.len(), boxes.len(), "{name}");
+            for (old, new) in boxes.iter().zip(&moved) {
+                assert_eq!(extent(old), extent(new), "{name}: extents preserved");
+            }
+        }
+        // Determinism: same seed, same jitter.
+        assert_eq!(jitter_boxes(&boxes, 0.25, 77), jitter_boxes(&boxes, 0.25, 77));
+        // Teleport moves exactly the strided subset.
+        let tele = teleport_boxes(&boxes, 4, Point::splat(100.0));
+        for (i, (old, new)) in boxes.iter().zip(&tele).enumerate() {
+            assert_eq!(i % 4 == 0, old != new, "index {i}");
+        }
+        // Full collapse stacks every center on the target.
+        let flat = collapse_boxes(&boxes, Point::new(3.0, 4.0, 5.0), 1.0);
+        for b in &flat {
+            let c = (b.min + b.max) * 0.5;
+            assert!(c.distance(&Point::new(3.0, 4.0, 5.0)) < 1e-3, "center {c:?}");
+        }
     }
 
     #[test]

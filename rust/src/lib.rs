@@ -35,7 +35,11 @@
 //!   ([`bvh::TraversalMode`]; `ARBOR_FORCE_SCALAR=1` forces the
 //!   fallback), and every mode returns bit-identical results because
 //!   quantized boxes only ever inflate and leaves are re-tested with
-//!   exact scalar math.
+//!   exact scalar math. Dynamic scenes bulk-refit in place
+//!   ([`bvh::Bvh::update`]: topology kept, internal boxes recomputed
+//!   bottom-up, wide layer re-quantized) with
+//!   [`bvh::Bvh::refit_quality`] measuring how far the moved boxes have
+//!   degraded the frozen topology ([`bvh::stats::refit_quality`]).
 //! * [`baselines`] — the comparison libraries of the paper's evaluation,
 //!   re-implemented: a nanoflann-style k-d tree, a Boost-style STR-packed
 //!   R-tree, and a brute-force oracle.
@@ -54,7 +58,12 @@
 //!   (`DistributedTree::query_batch`: batched top-tree forwarding,
 //!   rank-parallel execution, callback-streamed spatial merges). The
 //!   service runs over either backend
-//!   ([`coordinator::service::Backend`]) behind one wire protocol.
+//!   ([`coordinator::service::Backend`]) behind one wire protocol, with
+//!   each backend held in a [`coordinator::service::Versioned`]
+//!   epoch-counted snapshot so `SearchService::update` can publish
+//!   moved scenes under live queries (refit within the quality
+//!   threshold, rebuild past it; the distributed backend refits only
+//!   the ranks whose boxes changed).
 //!
 //! ## Quick start
 //!
@@ -104,7 +113,8 @@ pub mod prelude {
     };
     pub use crate::coordinator::distributed::{DistributedTree, Partition};
     pub use crate::coordinator::service::{
-        Backend, BufferPolicy, QueryError, SearchService, ServiceConfig, SubmitError, WaitError,
+        Backend, BufferPolicy, QueryError, SearchService, ServiceConfig, SubmitError,
+        UpdateReport, Versioned, WaitError,
     };
     pub use crate::data::shapes::{PointCloud, Shape};
     pub use crate::exec::ExecSpace;

@@ -18,6 +18,7 @@ use arbor::bvh::{Bvh, QueryOutput, QueryPredicate, TraversalMode};
 use arbor::coordinator::distributed::Partition;
 use arbor::data::rng::Rng;
 use arbor::data::shapes::{PointCloud, Shape};
+use arbor::data::workloads::{collapse_boxes, drift_boxes, jitter_boxes, teleport_boxes};
 use arbor::exec::ExecSpace;
 use arbor::geometry::predicates::{FirstHit, Spatial};
 use arbor::geometry::{Aabb, Point, Ray, Sphere};
@@ -162,6 +163,22 @@ pub fn inflate(cloud: &PointCloud, half: f32) -> Vec<Aabb> {
         .iter()
         .map(|p| Aabb::new(*p - Point::splat(half), *p + Point::splat(half)))
         .collect()
+}
+
+/// The motion-magnitude sweep for the dynamic-scene (refit) suites:
+/// per-box displacements spanning the whole refit spectrum, from
+/// topology-preserving (small jitter, rigid drift) through degrading
+/// (large jitter, collapse) to topology-shredding (teleport). `extent`
+/// should be the scene's characteristic half-width so magnitudes scale
+/// with the workload.
+pub fn moved_scenes(boxes: &[Aabb], extent: f32, seed: u64) -> Vec<(&'static str, Vec<Aabb>)> {
+    vec![
+        ("jitter-small", jitter_boxes(boxes, 0.02 * extent, seed)),
+        ("jitter-large", jitter_boxes(boxes, 0.5 * extent, seed ^ 0xA5A5)),
+        ("drift", drift_boxes(boxes, Point::new(0.8 * extent, -0.3 * extent, 0.1 * extent))),
+        ("teleport", teleport_boxes(boxes, 7, Point::splat(25.0 * extent))),
+        ("collapse", collapse_boxes(boxes, Point::splat(0.25 * extent), 1.0)),
+    ]
 }
 
 /// A uniform point in `[-scale, scale]^3`.

@@ -1,0 +1,468 @@
+//! The refit-vs-rebuild differential suite for dynamic scenes.
+//!
+//! `Bvh::update` keeps the built topology and replaces every box; these
+//! tests pin that a refit tree answers *exactly* like a tree freshly
+//! rebuilt on the moved boxes — and like the brute-force oracle — for
+//! every builder × exec-space × traversal-mode engine, every wire
+//! predicate kind, and every motion magnitude from frame-to-frame
+//! jitter through teleports that shred the Morton locality. On top of
+//! the equivalence grid: wide-layer conservativeness when leaves escape
+//! their old parent boxes, the quality metric's refit/rebuild decision,
+//! and the service's versioned snapshots under concurrent updates and
+//! shutdown races.
+
+mod common;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use arbor::baselines::brute::BruteForce;
+use arbor::bvh::stats::DEFAULT_REBUILD_THRESHOLD;
+use arbor::bvh::{Bvh, PredicateKind, QueryOptions, QueryPredicate};
+use arbor::coordinator::distributed::{DistributedTree, Partition};
+use arbor::coordinator::service::{SearchService, ServiceConfig, SubmitError};
+use arbor::data::shapes::Shape;
+use arbor::data::workloads::{drift_boxes, jitter_boxes, spatial_radius, teleport_boxes};
+use arbor::exec::ExecSpace;
+use arbor::geometry::{Aabb, Point};
+
+use common::{
+    brute_one, edge_case_boxes, engines, moved_scenes, scene, sorted, wire_batch, PARTITIONS,
+    SHAPES,
+};
+
+/// True for the kinds whose results are fully ordered on the wire
+/// ((distance, index) for the nearest family, (t, index) for first-hit)
+/// and must therefore match bit-for-bit, not just as sets.
+fn ordered(kind: PredicateKind) -> bool {
+    matches!(
+        kind,
+        PredicateKind::Nearest
+            | PredicateKind::NearestSphere
+            | PredicateKind::NearestBox
+            | PredicateKind::FirstHit
+    )
+}
+
+/// Asserts one engine's batched output equals the brute oracle on every
+/// predicate: bit-identical (distances included) for the ordered kinds,
+/// set-identical for the spatial kinds.
+fn assert_matches_brute(
+    out: &arbor::bvh::QueryOutput,
+    preds: &[QueryPredicate],
+    brute: &BruteForce,
+    ctx: &str,
+) {
+    for (qi, pred) in preds.iter().enumerate() {
+        let (want_idx, want_dist) = brute_one(brute, pred);
+        if ordered(pred.kind()) {
+            assert_eq!(out.results_for(qi), &want_idx[..], "{ctx}/q{qi}({:?})", pred.kind());
+            assert_eq!(out.distances_for(qi), &want_dist[..], "{ctx}/q{qi}({:?})", pred.kind());
+        } else {
+            assert_eq!(
+                sorted(out.results_for(qi).to_vec()),
+                sorted(want_idx),
+                "{ctx}/q{qi}({:?})",
+                pred.kind()
+            );
+        }
+    }
+}
+
+#[test]
+fn refit_equals_rebuild_equals_brute_for_every_engine_and_motion() {
+    // The core equivalence grid: for both workload shapes and all five
+    // motion magnitudes, a refit tree (old topology, new boxes) and a
+    // freshly rebuilt tree (new topology, new boxes) must return
+    // identical results — and both must equal brute force — through all
+    // ten wire predicate kinds, for every engine in the grid.
+    let radius = spatial_radius(10);
+    for shape in SHAPES {
+        let (cloud, boxes, _) = scene(shape, 1200, 171);
+        for (motion, moved) in moved_scenes(&boxes, cloud.a, 907) {
+            let brute = BruteForce::new(&moved);
+            // Anchors mix moved-box centroids (hit-rich) with original
+            // cloud points (often empty after teleport/collapse).
+            let mut anchors: Vec<Point> = moved.iter().step_by(9).map(|b| b.centroid()).collect();
+            anchors.extend(cloud.points.iter().step_by(31).copied());
+            let preds = wire_batch(&anchors, radius, 10);
+            for ((label, fresh, space), (label_r, mut refit, _)) in
+                engines(&moved).into_iter().zip(engines(&boxes))
+            {
+                assert_eq!(label, label_r, "engine grids must align");
+                let ctx = format!("{shape:?}/{motion}/{label}");
+                refit.update(&space, &moved);
+                assert_eq!(refit.validate(), Ok(()), "{ctx}");
+                let out_fresh = fresh.query(&space, &preds, &QueryOptions::default());
+                let out_refit = refit.query(&space, &preds, &QueryOptions::default());
+                for (qi, pred) in preds.iter().enumerate() {
+                    if ordered(pred.kind()) {
+                        assert_eq!(
+                            out_refit.results_for(qi),
+                            out_fresh.results_for(qi),
+                            "{ctx}/q{qi} refit vs rebuild"
+                        );
+                        assert_eq!(
+                            out_refit.distances_for(qi),
+                            out_fresh.distances_for(qi),
+                            "{ctx}/q{qi} refit vs rebuild distances"
+                        );
+                    } else {
+                        assert_eq!(
+                            sorted(out_refit.results_for(qi).to_vec()),
+                            sorted(out_fresh.results_for(qi).to_vec()),
+                            "{ctx}/q{qi} refit vs rebuild"
+                        );
+                    }
+                }
+                assert_matches_brute(&out_refit, &preds, &brute, &ctx);
+            }
+        }
+    }
+}
+
+#[test]
+fn repeated_ticks_of_accumulated_motion_stay_exact() {
+    // Refits compound: each tick updates the trees already refit on the
+    // previous tick, never rebuilding. Every engine must stay valid and
+    // brute-exact at every tick.
+    let radius = spatial_radius(10);
+    let (cloud, boxes, _) = scene(Shape::FilledCube, 800, 61);
+    let mut grid = engines(&boxes);
+    let mut current = boxes;
+    for tick in 0..4u64 {
+        current = jitter_boxes(
+            &drift_boxes(&current, Point::new(0.4, -0.2, 0.3)),
+            0.05 * cloud.a,
+            900 + tick,
+        );
+        let brute = BruteForce::new(&current);
+        let anchors: Vec<Point> = current.iter().step_by(11).map(|b| b.centroid()).collect();
+        let preds = wire_batch(&anchors, radius, 10);
+        for (label, engine, space) in &mut grid {
+            engine.update(space, &current);
+            assert_eq!(engine.validate(), Ok(()), "tick {tick}/{label}");
+            let out = engine.query(space, &preds, &QueryOptions::default());
+            assert_matches_brute(&out, &preds, &brute, &format!("tick {tick}/{label}"));
+        }
+    }
+}
+
+#[test]
+fn wide_quantization_stays_conservative_when_leaves_escape_their_old_parents() {
+    // The quantization regression: teleported leaves land far outside
+    // the boxes their frozen ancestors had at build time, so the wide
+    // layer's u8 grids must be re-anchored by the update — stale grids
+    // would silently clip the escaped leaves out of wide traversal.
+    // Every adversarial edge scene is swept, with a span-scaled jump.
+    for (name, boxes) in edge_case_boxes() {
+        let sb = boxes.iter().fold(Aabb::empty(), |a, b| a.union(b));
+        let span = sb.max - sb.min;
+        let jump = Point::new(span[0] + 7.0, span[1] + 3.0, span[2] + 11.0);
+        let moved = teleport_boxes(&boxes, 5, jump);
+        let brute = BruteForce::new(&moved);
+        let anchors: Vec<Point> = moved.iter().step_by(4).map(|b| b.centroid()).collect();
+        let r = 0.05 * span.norm().max(1.0);
+        let preds: Vec<QueryPredicate> = anchors
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                if i % 2 == 0 {
+                    QueryPredicate::intersects_sphere(*p, r)
+                } else {
+                    QueryPredicate::nearest(*p, 5)
+                }
+            })
+            .collect();
+        for (label, mut engine, space) in engines(&boxes) {
+            engine.update(&space, &moved);
+            // validate() re-checks per-lane quantized containment of the
+            // refit child boxes — the conservativeness proof.
+            assert_eq!(engine.validate(), Ok(()), "{name}/{label}");
+            let out = engine.query(&space, &preds, &QueryOptions::default());
+            assert_matches_brute(&out, &preds, &brute, &format!("{name}/{label}"));
+        }
+    }
+}
+
+#[test]
+fn a_single_escaped_leaf_is_found_only_at_its_new_position() {
+    // Focused escape scene: one leaf of a regular grid teleports far
+    // away. After the update every traversal mode must find it at the
+    // new position (exactly it) and no longer at the old one.
+    let boxes: Vec<Aabb> = (0..64)
+        .map(|i| {
+            Aabb::from_point(Point::new(
+                (i % 4) as f32,
+                ((i / 4) % 4) as f32,
+                (i / 16) as f32,
+            ))
+        })
+        .collect();
+    let mut moved = boxes.clone();
+    let jump = Point::new(100.0, 5.0, -3.0);
+    moved[21] = Aabb::new(boxes[21].min + jump, boxes[21].max + jump);
+    let old_center = boxes[21].centroid();
+    let new_center = moved[21].centroid();
+    for (label, mut engine, space) in engines(&boxes) {
+        engine.update(&space, &moved);
+        assert_eq!(engine.validate(), Ok(()), "{label}");
+        let preds = [
+            QueryPredicate::intersects_sphere(new_center, 0.4),
+            QueryPredicate::intersects_sphere(old_center, 0.4),
+            QueryPredicate::nearest(new_center, 1),
+        ];
+        let out = engine.query(&space, &preds, &QueryOptions::default());
+        assert_eq!(out.results_for(0), &[21], "{label}: found at the new position");
+        assert!(!out.results_for(1).contains(&21), "{label}: gone from the old position");
+        assert_eq!(out.results_for(2), &[21], "{label}: nearest to the new position");
+        assert_eq!(out.distances_for(2), &[0.0], "{label}");
+    }
+}
+
+#[test]
+fn quality_metric_separates_teleport_from_small_motion() {
+    // The refit-vs-rebuild decision: small jitter and rigid drift keep
+    // the frozen topology near its as-built SAH cost, while an
+    // index-scattered teleport must push the ratio over the rebuild
+    // threshold. Pinned for both builders.
+    let space = ExecSpace::with_threads(2);
+    let (cloud, boxes, _) = scene(Shape::FilledCube, 2000, 55);
+    for builder in [Bvh::build, Bvh::build_apetrei] {
+        let mut jittered = builder(&space, &boxes);
+        jittered.update(&space, &jitter_boxes(&boxes, 0.02 * cloud.a, 5));
+        let q = jittered.refit_quality();
+        assert!(q < DEFAULT_REBUILD_THRESHOLD, "small jitter quality {q} must stay refit-able");
+
+        let mut drifted = builder(&space, &boxes);
+        drifted.update(&space, &drift_boxes(&boxes, Point::splat(3.5 * cloud.a)));
+        let q = drifted.refit_quality();
+        assert!((q - 1.0).abs() < 1e-3, "rigid drift is SAH-invariant, got {q}");
+
+        let mut teleported = builder(&space, &boxes);
+        teleported.update(&space, &teleport_boxes(&boxes, 7, Point::splat(25.0 * cloud.a)));
+        let q = teleported.refit_quality();
+        assert!(q > DEFAULT_REBUILD_THRESHOLD, "teleport quality {q} must trigger a rebuild");
+    }
+}
+
+#[test]
+fn service_update_refits_on_jitter_and_rebuilds_on_teleport() {
+    // The service-level policy built on the metric: a jitter update
+    // publishes the refit, a teleport update publishes a from-scratch
+    // rebuild — observable through the report, the epoch counter, and
+    // the metrics, and queries answer from the new scene either way.
+    let space = ExecSpace::with_threads(2);
+    let (cloud, boxes, _) = scene(Shape::FilledCube, 1500, 23);
+    let svc =
+        SearchService::start(Arc::new(Bvh::build(&space, &boxes)), ServiceConfig::default());
+    assert_eq!(svc.epoch(), 0);
+
+    let jittered = jitter_boxes(&boxes, 0.02 * cloud.a, 3);
+    let r1 = svc.update(&space, &jittered).expect("update lands");
+    assert_eq!(r1.epoch, 1);
+    assert_eq!((r1.refit_ranks, r1.rebuilt_ranks), (1, 0), "jitter refits: {r1:?}");
+    assert!(r1.quality < DEFAULT_REBUILD_THRESHOLD, "{r1:?}");
+
+    let teleported = teleport_boxes(&boxes, 7, Point::splat(25.0 * cloud.a));
+    let r2 = svc.update(&space, &teleported).expect("update lands");
+    assert_eq!(r2.epoch, 2);
+    assert_eq!((r2.refit_ranks, r2.rebuilt_ranks), (0, 1), "teleport rebuilds: {r2:?}");
+    assert!(r2.quality > DEFAULT_REBUILD_THRESHOLD, "{r2:?}");
+    assert_eq!(svc.epoch(), 2);
+    assert_eq!(svc.metrics().updates(), 2);
+    assert_eq!(svc.metrics().update_refit_ranks(), 1);
+    assert_eq!(svc.metrics().update_rebuilt_ranks(), 1);
+
+    // Queries now see the teleported scene, exactly — all ten wire
+    // kinds, anchored both on moved and on stationary objects.
+    let brute = BruteForce::new(&teleported);
+    let anchors: Vec<Point> =
+        teleported.iter().step_by(75).map(|b| b.centroid()).collect();
+    for pred in wire_batch(&anchors, spatial_radius(10), 5) {
+        let got = svc.query(pred).expect("running");
+        let (want_idx, want_dist) = brute_one(&brute, &pred);
+        if ordered(pred.kind()) {
+            assert_eq!(got.indices, want_idx, "{:?}", pred.kind());
+            assert_eq!(got.distances, want_dist, "{:?}", pred.kind());
+        } else {
+            assert_eq!(sorted(got.indices), sorted(want_idx), "{:?}", pred.kind());
+        }
+    }
+}
+
+#[test]
+fn service_update_length_mismatch_is_malformed_and_publishes_nothing() {
+    let space = ExecSpace::serial();
+    let (_cloud, boxes, _) = scene(Shape::FilledCube, 100, 77);
+    let svc =
+        SearchService::start(Arc::new(Bvh::build(&space, &boxes)), ServiceConfig::default());
+    assert_eq!(svc.update(&space, &boxes[..99]).err(), Some(SubmitError::Malformed));
+    assert_eq!(svc.update(&space, &[]).err(), Some(SubmitError::Malformed));
+    assert_eq!(svc.epoch(), 0, "a rejected update publishes nothing");
+    assert_eq!(svc.metrics().updates(), 0);
+    let ok = svc.update(&space, &drift_boxes(&boxes, Point::splat(2.0))).expect("well-formed");
+    assert_eq!(ok.epoch, 1);
+}
+
+#[test]
+fn concurrent_queries_never_observe_a_torn_scene_version() {
+    // Snapshot consistency: all 256 boxes sit on one of two spots, and
+    // updates flip the whole scene between them. Any query therefore
+    // returns 0 or 256 results — a count in between means the reader
+    // saw a half-updated tree, which the Versioned snapshot-per-batch
+    // design makes impossible (updates mutate a private clone, never
+    // the published tree).
+    let n = 256usize;
+    let at = |p: Point| -> Vec<Aabb> { (0..n).map(|_| Aabb::from_point(p)).collect() };
+    let here = at(Point::origin());
+    let there = at(Point::new(1000.0, 0.0, 0.0));
+    let space = ExecSpace::serial();
+    let svc = Arc::new(SearchService::start(
+        Arc::new(Bvh::build(&space, &here)),
+        ServiceConfig { max_batch: 16, ..Default::default() },
+    ));
+    let stop = Arc::new(AtomicBool::new(false));
+    let readers: Vec<_> = (0..4)
+        .map(|_| {
+            let svc = Arc::clone(&svc);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut answered = 0usize;
+                while !stop.load(Ordering::Relaxed) {
+                    let r = svc
+                        .query(QueryPredicate::intersects_sphere(Point::origin(), 1.0))
+                        .expect("service running");
+                    assert!(
+                        r.indices.is_empty() || r.indices.len() == n,
+                        "torn snapshot: {} of {n} results",
+                        r.indices.len()
+                    );
+                    answered += 1;
+                }
+                answered
+            })
+        })
+        .collect();
+    // Let the readers get queries in flight, then flip the scene under
+    // them, pacing the flips so queries interleave with the publishes.
+    let t0 = Instant::now();
+    while svc.metrics().requests() == 0 && t0.elapsed().as_secs() < 10 {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    for tick in 0..40 {
+        let boxes = if tick % 2 == 0 { &there } else { &here };
+        svc.update(&space, boxes).expect("update lands");
+        std::thread::sleep(Duration::from_micros(200));
+    }
+    stop.store(true, Ordering::Relaxed);
+    let answered: usize = readers.into_iter().map(|h| h.join().expect("no torn read")).sum();
+    assert!(answered > 0, "readers made progress");
+    assert_eq!(svc.epoch(), 40);
+    assert_eq!(svc.metrics().updates(), 40);
+}
+
+#[test]
+fn shutdown_racing_update_ends_in_stopped_not_panic() {
+    // Regression companion to the submit-side shutdown race: an updater
+    // thread hammering `update` while the service shuts down must see
+    // each call either land (with the next epoch) or report Stopped —
+    // never panic, and never a lost epoch.
+    let space = ExecSpace::serial();
+    let (_cloud, boxes, _) = scene(Shape::FilledCube, 500, 11);
+    let svc = Arc::new(SearchService::start(
+        Arc::new(Bvh::build(&space, &boxes)),
+        ServiceConfig::default(),
+    ));
+    let racer = {
+        let svc = Arc::clone(&svc);
+        let boxes = boxes.clone();
+        std::thread::spawn(move || {
+            let space = ExecSpace::serial();
+            let mut landed = 0u64;
+            loop {
+                match svc.update(&space, &jitter_boxes(&boxes, 0.1, landed)) {
+                    Ok(report) => {
+                        assert_eq!(report.epoch, landed + 1, "epochs are gapless");
+                        landed += 1;
+                    }
+                    Err(SubmitError::Stopped) => return landed,
+                    Err(e) => panic!("unexpected update error {e:?}"),
+                }
+            }
+        })
+    };
+    let t0 = Instant::now();
+    while svc.metrics().updates() == 0 && t0.elapsed().as_secs() < 10 {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    svc.shutdown();
+    let landed = racer.join().expect("no panic in the race");
+    assert!(landed >= 1, "at least one update landed before the stop");
+    assert_eq!(svc.epoch(), landed);
+    assert_eq!(svc.update(&space, &boxes).err(), Some(SubmitError::Stopped));
+}
+
+#[test]
+fn distributed_service_update_refits_changed_ranks_and_answers_from_the_new_scene() {
+    let space = ExecSpace::with_threads(2);
+    let radius = spatial_radius(10);
+    for partition in PARTITIONS {
+        let (cloud, boxes, _) = scene(Shape::FilledCube, 2000, 313);
+        let dt = DistributedTree::build(&space, &boxes, 4, partition);
+        let svc = SearchService::start_distributed(Arc::new(dt), ServiceConfig::default());
+
+        // Move only the first quarter of the objects, gently.
+        let mut moved = boxes.clone();
+        for (i, b) in jitter_boxes(&boxes[..500], 0.02 * cloud.a, 9).into_iter().enumerate() {
+            moved[i] = b;
+        }
+        let r1 = svc.update(&space, &moved).expect("update lands");
+        assert_eq!(r1.epoch, 1);
+        assert_eq!(r1.refit_ranks + r1.rebuilt_ranks + r1.unchanged_ranks, 4, "{r1:?}");
+        assert!(r1.refit_ranks >= 1, "{r1:?}");
+        if partition == Partition::Block {
+            // Block shards are contiguous index ranges of 500: exactly
+            // one rank saw motion, the other three are skipped.
+            assert_eq!(r1.unchanged_ranks, 3, "{r1:?}");
+            assert_eq!(r1.rebuilt_ranks, 0, "small jitter must not rebuild: {r1:?}");
+        }
+
+        // Differential vs brute on the moved scene, every wire kind.
+        let brute = BruteForce::new(&moved);
+        let anchors: Vec<Point> = cloud.points.iter().step_by(37).copied().collect();
+        for pred in wire_batch(&anchors, radius, 10) {
+            let got = svc.query(pred).expect("running");
+            let (want_idx, want_dist) = brute_one(&brute, &pred);
+            if ordered(pred.kind()) {
+                assert_eq!(got.indices, want_idx, "{partition:?}/{:?}", pred.kind());
+                assert_eq!(got.distances, want_dist, "{partition:?}/{:?}", pred.kind());
+            } else {
+                assert_eq!(
+                    sorted(got.indices),
+                    sorted(want_idx),
+                    "{partition:?}/{:?}",
+                    pred.kind()
+                );
+            }
+        }
+
+        // A scene-wide teleport shreds the per-rank topologies: at least
+        // one rank crosses the threshold and is rebuilt.
+        let teleported = teleport_boxes(&boxes, 3, Point::splat(40.0 * cloud.a));
+        let r2 = svc.update(&space, &teleported).expect("update lands");
+        assert_eq!(r2.epoch, 2);
+        assert!(r2.rebuilt_ranks >= 1, "teleport must rebuild some rank: {r2:?}");
+        assert!(r2.quality > DEFAULT_REBUILD_THRESHOLD, "{r2:?}");
+        let probe = teleported[0].centroid();
+        let got = svc
+            .query(QueryPredicate::intersects_sphere(probe, radius))
+            .expect("running")
+            .indices;
+        let brute2 = BruteForce::new(&teleported);
+        let (want, _) =
+            brute_one(&brute2, &QueryPredicate::intersects_sphere(probe, radius));
+        assert_eq!(sorted(got), sorted(want), "{partition:?} post-teleport");
+    }
+}
