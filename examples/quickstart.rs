@@ -219,4 +219,34 @@ fn main() {
         "service update -> epoch {} quality {:.3} (refit/rebuilt {}/{})",
         report.epoch, report.quality, report.refit_ranks, report.rebuilt_ranks
     );
+
+    // 11. Workload-adaptive dispatch: *how* parallel work is split is
+    //     itself a policy — `BatchingStrategy`, the Kokkos-ChunkSize
+    //     analogue threaded through every engine. Construction sweeps
+    //     pin large uniform batches; the query engines pin small
+    //     claimable ones (heavy-tailed per-query cost, §3.1); and your
+    //     own batch loops can pass a custom strategy through
+    //     `parallel_for_with`. The classic failure this seam fixes: 65
+    //     heavy-tailed queries under the old fixed 64-iteration floor
+    //     serialized into one chunk plus a straggler — here a
+    //     small-batch strategy splits them across the whole pool.
+    use arbor::bvh::traversal::count_spatial;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    let strategy = BatchingStrategy::new().with_batches_per_thread(4).with_max_batch(8);
+    let batch = &probes.points[..65];
+    let resolved = strategy.resolve(batch.len(), space.concurrency());
+    println!(
+        "custom strategy over {} queries on {} threads: grain {} -> {} claimable batches",
+        batch.len(),
+        space.concurrency(),
+        resolved.grain,
+        resolved.batches
+    );
+    let found = AtomicU64::new(0);
+    space.parallel_for_with(batch.len(), &strategy, |q| {
+        let mut stack = Vec::new();
+        let pred = IntersectsSphere(Sphere::new(batch[q], 2.7));
+        found.fetch_add(count_spatial(&bvh, &pred, &mut stack) as u64, Ordering::Relaxed);
+    });
+    println!("adaptive dispatch counted {} matches", found.load(Ordering::Relaxed));
 }

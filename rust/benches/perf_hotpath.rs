@@ -13,17 +13,24 @@
 //! * per-kind sub-batching over the open wire family: a mixed
 //!   sphere/box/ray/attach/nearest batch through the per-query-dispatch
 //!   facade vs the service's kind-grouped sub-batcher, plus homogeneous
-//!   per-kind timings — appended to the same JSON snapshot.
+//!   per-kind timings — appended to the same JSON snapshot;
+//! * dispatch policy: the same per-query traversal work partitioned by
+//!   the legacy fixed-grain chunking (64-iteration floor) vs the query
+//!   engines' adaptive [`BatchingStrategy`], swept over batch sizes
+//!   straddling the old floor — snapshotted to `BENCH_exec_policy.json`
+//!   together with the grains each engine kind's strategy resolves.
 
-use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 
 use arbor::bench_util::{f, reps, size, time_median, write_json_snapshot, JsonValue, Table};
-use arbor::bvh::build::build_karras_profiled;
+use arbor::bvh::batched::QUERY_BATCHING;
+use arbor::bvh::build::{build_karras_profiled, BUILD_SWEEP};
+use arbor::bvh::traversal::count_spatial;
 use arbor::bvh::{Bvh, QueryOptions, QueryPredicate, TraversalMode};
 use arbor::coordinator::metrics::Metrics;
 use arbor::coordinator::service::{execute_sub_batched, BufferPolicy};
 use arbor::data::workloads::{Case, Workload};
-use arbor::exec::ExecSpace;
+use arbor::exec::{BatchingStrategy, ExecSpace};
 use arbor::geometry::predicates::{
     attach, FirstHit, IntersectsBox, IntersectsRay, IntersectsSphere, Spatial, WithData,
 };
@@ -356,4 +363,102 @@ fn main() {
             ("wide_first_hit_speedup_vs_binary", JsonValue::Num(bin_fh / simd_fh)),
         ],
     );
+
+    // --- dispatch policy: adaptive batching vs the legacy fixed grain --
+    // The BatchingStrategy seam measured end-to-end: identical per-query
+    // traversal work (a binary counting walk per sphere) partitioned by
+    // the legacy hard-coded chunking (64-iteration floor, 8 batches per
+    // thread) vs the query engines' adaptive strategy, over batch sizes
+    // straddling the old floor. Under the legacy grain a 65-query batch
+    // lands in one 64-chunk plus a straggler — the §3.1 hollow-workload
+    // imbalance in miniature — while the adaptive strategy splits it
+    // into claimable units across the whole pool.
+    let legacy = BatchingStrategy::legacy_chunked();
+    let sweep = [48usize, 64, 65, 96, 256, 1024];
+    let mut tab = Table::new(
+        "perf_exec_policy",
+        &[
+            "queries",
+            "legacy_grain",
+            "legacy_batches",
+            "adaptive_grain",
+            "adaptive_batches",
+            "legacy_s",
+            "adaptive_s",
+            "speedup",
+        ],
+    );
+    let mut keys: Vec<String> = Vec::new();
+    let mut vals: Vec<JsonValue> = Vec::new();
+    keys.push("threads".into());
+    vals.push(JsonValue::Int(cores as u64));
+    let (mut legacy_total, mut adaptive_total) = (0.0f64, 0.0f64);
+    for &q in &sweep {
+        let preds = &typed[..q.min(typed.len())];
+        let time_with = |strategy: &BatchingStrategy| {
+            time_median(r, || {
+                let total = AtomicU64::new(0);
+                space.parallel_for_chunks_with(preds.len(), strategy, |b, e| {
+                    let mut stack = Vec::new();
+                    let mut local = 0u64;
+                    for pred in &preds[b..e] {
+                        local += count_spatial(&bvh, pred, &mut stack) as u64;
+                    }
+                    total.fetch_add(local, Ordering::Relaxed);
+                });
+                std::hint::black_box(total.load(Ordering::Relaxed));
+            })
+        };
+        let t_legacy = time_with(&legacy);
+        let t_adaptive = time_with(&QUERY_BATCHING);
+        legacy_total += t_legacy;
+        adaptive_total += t_adaptive;
+        let lr = legacy.resolve(preds.len(), cores);
+        let ar = QUERY_BATCHING.resolve(preds.len(), cores);
+        tab.row(&[
+            preds.len().to_string(),
+            lr.grain.to_string(),
+            lr.batches.to_string(),
+            ar.grain.to_string(),
+            ar.batches.to_string(),
+            f(t_legacy),
+            f(t_adaptive),
+            f(t_legacy / t_adaptive),
+        ]);
+        keys.push(format!("q{q}_legacy_grain"));
+        vals.push(JsonValue::Int(lr.grain as u64));
+        keys.push(format!("q{q}_adaptive_grain"));
+        vals.push(JsonValue::Int(ar.grain as u64));
+        keys.push(format!("q{q}_legacy_s"));
+        vals.push(JsonValue::Num(t_legacy));
+        keys.push(format!("q{q}_adaptive_s"));
+        vals.push(JsonValue::Num(t_adaptive));
+        keys.push(format!("q{q}_speedup"));
+        vals.push(JsonValue::Num(t_legacy / t_adaptive));
+    }
+    tab.write_csv();
+
+    // The grains each engine kind's strategy resolves on this machine —
+    // the record of what the seam actually chooses per kind.
+    let build_grain = BUILD_SWEEP.resolve(m, cores);
+    let query_grain = QUERY_BATCHING.resolve(typed.len(), cores);
+    let task_grain = BatchingStrategy::tasks().resolve(cores * 4, cores);
+    for (key, v) in [
+        ("engine_build_sweep_grain", build_grain.grain as u64),
+        ("engine_build_sweep_batches", build_grain.batches as u64),
+        ("engine_query_grain", query_grain.grain as u64),
+        ("engine_query_batches", query_grain.batches as u64),
+        ("engine_sortscan_pass_grain", task_grain.grain as u64),
+        ("legacy_total_vs_adaptive_total_pct", (100.0 * legacy_total / adaptive_total) as u64),
+    ] {
+        keys.push(key.into());
+        vals.push(JsonValue::Int(v));
+    }
+    keys.push("legacy_total_s".into());
+    vals.push(JsonValue::Num(legacy_total));
+    keys.push("adaptive_total_s".into());
+    vals.push(JsonValue::Num(adaptive_total));
+    let fields: Vec<(&str, JsonValue)> =
+        keys.iter().map(|k| k.as_str()).zip(vals).collect();
+    write_json_snapshot("BENCH_exec_policy.json", &fields);
 }

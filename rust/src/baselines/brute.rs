@@ -86,7 +86,10 @@ impl BruteForce {
     ) -> Vec<u32> {
         let mut counts = vec![0u32; preds.len()];
         let cp = crate::exec::scan::SendPtr(counts.as_mut_ptr());
-        space.parallel_for(preds.len(), |q| {
+        // Each iteration is a full O(n) scan — coarse, uniform work, so
+        // the query engines' small-batch strategy keeps short batches
+        // spread across the pool.
+        space.parallel_for_with(preds.len(), &crate::bvh::batched::QUERY_BATCHING, |q| {
             let c = self.boxes.iter().filter(|b| preds[q].test(b)).count() as u32;
             // SAFETY: one writer per query.
             unsafe { cp.write(q, c) };

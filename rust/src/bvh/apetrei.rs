@@ -16,7 +16,7 @@
 
 use std::sync::atomic::{AtomicI64, AtomicU32, Ordering};
 
-use super::build::compute_scene_box;
+use super::build::{compute_scene_box, BUILD_SWEEP};
 use super::{internal_ref, leaf_ref, Bvh, InternalNode, NodeRef};
 use crate::exec::scan::SendPtr;
 use crate::exec::{sort, ExecSpace};
@@ -47,7 +47,8 @@ pub fn build_apetrei(space: &ExecSpace, boxes: &[Aabb]) -> Bvh {
     let mut perm: Vec<u32> = (0..n as u32).collect();
     {
         let cp = SendPtr(codes.as_mut_ptr());
-        space.parallel_for(n, |i| unsafe {
+        // Construction sweeps share the builders' fine-grained strategy.
+        space.parallel_for_with(n, &BUILD_SWEEP, |i| unsafe {
             // SAFETY: one writer per index.
             cp.write(i, morton::morton32_scene(&boxes[i], &scene));
         });
@@ -58,7 +59,9 @@ pub fn build_apetrei(space: &ExecSpace, boxes: &[Aabb]) -> Bvh {
     {
         let lb = SendPtr(leaf_boxes.as_mut_ptr());
         let perm_ref = &perm;
-        space.parallel_for(n, |i| unsafe { lb.write(i, boxes[perm_ref[i] as usize]) });
+        space.parallel_for_with(n, &BUILD_SWEEP, |i| unsafe {
+            lb.write(i, boxes[perm_ref[i] as usize])
+        });
     }
 
     if n == 1 {
@@ -79,7 +82,7 @@ pub fn build_apetrei(space: &ExecSpace, boxes: &[Aabb]) -> Bvh {
         let ranges_ref = &ranges;
         let root_ref = &root_slot;
 
-        space.parallel_for(n, |leaf| {
+        space.parallel_for_with(n, &BUILD_SWEEP, |leaf| {
             // Current subtree: [first, last] with node reference `node`
             // and bounding box `bb`.
             let mut first = leaf;

@@ -37,6 +37,7 @@
 //!   batch by [`PredicateKind`], dispatching *once per sub-batch* (see
 //!   [`crate::coordinator::service::execute_sub_batched`]).
 
+use super::build::BUILD_SWEEP;
 use super::first_hit::RayHit;
 use super::nearest::{NearestScratch, Neighbor};
 // Mode-dispatched traversal entry points (same signatures as the binary
@@ -45,7 +46,18 @@ use super::nearest::{NearestScratch, Neighbor};
 use super::wide::{count_spatial, first_hit, for_each_spatial, nearest_stack};
 use super::{Bvh, NodeRef};
 use crate::exec::scan::{exclusive_scan, SendPtr};
-use crate::exec::{sort, ExecSpace};
+use crate::exec::{sort, BatchingStrategy, ExecSpace};
+
+/// Strategy for every query-engine dispatch (2P/1P spatial, nearest,
+/// first-hit, callback streaming): per-query cost is heavy-tailed — the
+/// paper's hollow workloads vary by two orders of magnitude per query
+/// (§3.1) — so the minimum batch stays at 1 and batches are capped small.
+/// A batch of 65 queries then still splits into many claimable units and
+/// spreads across the pool, where a 64-iteration floor would serialize
+/// it into one chunk plus a straggler. Oversubscription (4 batches per
+/// thread) lets dynamic claiming drain around monster queries.
+pub const QUERY_BATCHING: BatchingStrategy =
+    BatchingStrategy::new().with_batches_per_thread(4).with_max_batch(64);
 use crate::geometry::predicates::{
     DistanceTo, FirstHit, FirstHitQuery, IntersectsBox, IntersectsRay, IntersectsSphere, Nearest,
     NearestQuery, Spatial, SpatialPredicate,
@@ -315,7 +327,9 @@ fn order_by_origin<Q: Sync>(
     let mut codes = vec![0u32; q];
     {
         let cp = SendPtr(codes.as_mut_ptr());
-        space.parallel_for(q, |i| {
+        // Code assignment is uniform per-iteration work — a construction
+        // sweep, not a heavy-tailed query dispatch.
+        space.parallel_for_with(q, &BUILD_SWEEP, |i| {
             let p = morton::normalize_to_scene(&origin_of(&queries[i]), &scene);
             // SAFETY: one writer per index.
             unsafe { cp.write(i, morton::morton32_unit(&p)) };
@@ -387,7 +401,7 @@ pub fn for_each_match<P, F>(
 {
     let order = query_order_spatial(space, bvh, preds, sort_queries);
     let order_ref = &order;
-    space.parallel_for_chunks(preds.len(), |b, e| {
+    space.parallel_for_chunks_with(preds.len(), &QUERY_BATCHING, |b, e| {
         let mut stack = Vec::with_capacity(64);
         for pos in b..e {
             let orig = order_ref[pos] as usize;
@@ -414,7 +428,7 @@ pub fn run_first_hit_queries<Q: FirstHitQuery + Sync>(
     {
         let op = SendPtr(out.as_mut_ptr());
         let order_ref = &order;
-        space.parallel_for_chunks(queries.len(), |b, e| {
+        space.parallel_for_chunks_with(queries.len(), &QUERY_BATCHING, |b, e| {
             let mut stack: Vec<(NodeRef, f32)> = Vec::with_capacity(64);
             for pos in b..e {
                 let orig = order_ref[pos] as usize;
@@ -458,7 +472,7 @@ pub fn run_nearest_queries<Q: NearestQuery + Sync>(
         let dp = SendPtr(distances.as_mut_ptr());
         let offsets_ref = &offsets;
         let order_ref = &order;
-        space.parallel_for_chunks(q, |b, e| {
+        space.parallel_for_chunks_with(q, &QUERY_BATCHING, |b, e| {
             let mut scratch = NearestScratch::new(16);
             let mut knn: Vec<Neighbor> = Vec::new();
             for pos in b..e {
@@ -494,7 +508,7 @@ fn spatial_2p<P: SpatialPredicate + Sync>(
     // positions so the scan yields caller-order offsets.
     {
         let cp = SendPtr(counts.as_mut_ptr());
-        space.parallel_for_chunks(q, |b, e| {
+        space.parallel_for_chunks_with(q, &QUERY_BATCHING, |b, e| {
             let mut stack = Vec::with_capacity(64);
             for pos in b..e {
                 let orig = order[pos] as usize;
@@ -513,7 +527,7 @@ fn spatial_2p<P: SpatialPredicate + Sync>(
     {
         let ip = SendPtr(indices.as_mut_ptr());
         let offsets_ref = &offsets;
-        space.parallel_for_chunks(q, |b, e| {
+        space.parallel_for_chunks_with(q, &QUERY_BATCHING, |b, e| {
             let mut stack = Vec::with_capacity(64);
             for pos in b..e {
                 let orig = order[pos] as usize;
@@ -552,7 +566,7 @@ fn spatial_1p<P: SpatialPredicate + Sync>(
     {
         let cp = SendPtr(counts.as_mut_ptr());
         let bp = SendPtr(buf.as_mut_ptr());
-        space.parallel_for_chunks(q, |b, e| {
+        space.parallel_for_chunks_with(q, &QUERY_BATCHING, |b, e| {
             let mut stack = Vec::with_capacity(64);
             for pos in b..e {
                 let orig = order[pos] as usize;
@@ -583,7 +597,7 @@ fn spatial_1p<P: SpatialPredicate + Sync>(
         let offsets_ref = &offsets;
         let counts_ref = &counts;
         let buf_ref = &buf;
-        space.parallel_for_chunks(q, |b, e| {
+        space.parallel_for_chunks_with(q, &QUERY_BATCHING, |b, e| {
             let mut stack = Vec::with_capacity(64);
             for pos in b..e {
                 let orig = order[pos] as usize;
@@ -706,7 +720,7 @@ fn run_2p(bvh: &Bvh, space: &ExecSpace, queries: &[QueryPredicate], order: &[u32
     {
         let cp = SendPtr(counts.as_mut_ptr());
         let fp = SendPtr(fh_cache.as_mut_ptr());
-        space.parallel_for_chunks(q, |b, e| {
+        space.parallel_for_chunks_with(q, &QUERY_BATCHING, |b, e| {
             let mut stack = Vec::with_capacity(64);
             let mut fh_stack: Vec<(NodeRef, f32)> = Vec::with_capacity(64);
             for pos in b..e {
@@ -748,7 +762,7 @@ fn run_2p(bvh: &Bvh, space: &ExecSpace, queries: &[QueryPredicate], order: &[u32
         let dp = SendPtr(distances.as_mut_ptr());
         let offsets_ref = &offsets;
         let fh_cache_ref = &fh_cache;
-        space.parallel_for_chunks(q, |b, e| {
+        space.parallel_for_chunks_with(q, &QUERY_BATCHING, |b, e| {
             let mut stack = Vec::with_capacity(64);
             let mut scratch = NearestScratch::new(16);
             let mut knn: Vec<Neighbor> = Vec::new();
@@ -821,7 +835,7 @@ fn run_1p(
         let cp = SendPtr(counts.as_mut_ptr());
         let bp = SendPtr(buf.as_mut_ptr());
         let dp = SendPtr(dbuf.as_mut_ptr());
-        space.parallel_for_chunks(q, |b, e| {
+        space.parallel_for_chunks_with(q, &QUERY_BATCHING, |b, e| {
             let mut stack = Vec::with_capacity(64);
             let mut fh_stack: Vec<(NodeRef, f32)> = Vec::with_capacity(64);
             let mut scratch = NearestScratch::new(16);
@@ -891,7 +905,7 @@ fn run_1p(
         let counts_ref = &counts;
         let buf_ref = &buf;
         let dbuf_ref = &dbuf;
-        space.parallel_for_chunks(q, |b, e| {
+        space.parallel_for_chunks_with(q, &QUERY_BATCHING, |b, e| {
             let mut stack = Vec::with_capacity(64);
             for pos in b..e {
                 let orig = order[pos] as usize;

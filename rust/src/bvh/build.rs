@@ -18,11 +18,20 @@ use std::sync::atomic::{AtomicU32, Ordering};
 
 use super::{internal_ref, is_leaf, leaf_ref, ref_index, Bvh, InternalNode, NodeRef};
 use crate::exec::scan::SendPtr;
-use crate::exec::{sort, ExecSpace};
+use crate::exec::{sort, BatchingStrategy, ExecSpace};
 use crate::geometry::{morton, Aabb};
 
 /// Sentinel for "no parent" (the root).
 pub(crate) const NO_PARENT: u32 = u32::MAX;
+
+/// Strategy for the construction sweeps (Morton assignment, permutation,
+/// hierarchy emission, bottom-up refit — here and in `bvh/apetrei.rs` /
+/// `bvh/update.rs`): per-iteration cost is small and fairly uniform, so
+/// large batches amortize the claim counter and a deep floor keeps tiny
+/// scenes from waking the pool; 8 batches per thread still lets dynamic
+/// claiming absorb the mild imbalance of the refit climbs.
+pub const BUILD_SWEEP: BatchingStrategy =
+    BatchingStrategy::new().with_min_batch(256).with_batches_per_thread(8);
 
 /// Wall-time breakdown of one construction, in seconds — used by the
 /// perf harness (`rust/benches/perf_hotpath.rs`) to find the phase to
@@ -69,7 +78,9 @@ pub fn build_karras_profiled(space: &ExecSpace, boxes: &[Aabb]) -> (Bvh, BuildPr
     {
         let dst = SendPtr(leaf_boxes.as_mut_ptr());
         let perm_ref = &perm;
-        space.parallel_for(n, |i| unsafe { dst.write(i, boxes[perm_ref[i] as usize]) });
+        space.parallel_for_with(n, &BUILD_SWEEP, |i| unsafe {
+            dst.write(i, boxes[perm_ref[i] as usize])
+        });
     }
     prof.permute = t.elapsed().as_secs_f64();
 
@@ -111,7 +122,7 @@ pub fn build_karras(space: &ExecSpace, boxes: &[Aabb]) -> Bvh {
     {
         let dst = SendPtr(leaf_boxes.as_mut_ptr());
         let perm_ref = &perm;
-        space.parallel_for(n, |i| {
+        space.parallel_for_with(n, &BUILD_SWEEP, |i| {
             // SAFETY: one writer per index i.
             unsafe { dst.write(i, boxes[perm_ref[i] as usize]) };
         });
@@ -134,8 +145,9 @@ pub fn build_karras(space: &ExecSpace, boxes: &[Aabb]) -> Bvh {
 
 /// Step 2 of §2.1: union-reduce all box corners.
 pub fn compute_scene_box(space: &ExecSpace, boxes: &[Aabb]) -> Aabb {
-    space.parallel_reduce(
+    space.parallel_reduce_with(
         boxes.len(),
+        &BUILD_SWEEP,
         Aabb::empty(),
         |b, e| {
             let mut acc = Aabb::empty();
@@ -158,7 +170,7 @@ fn assign_morton_codes(space: &ExecSpace, boxes: &[Aabb], scene: &Aabb) -> (Vec<
     let mut perm = vec![0u32; n];
     let cp = SendPtr(codes.as_mut_ptr());
     let pp = SendPtr(perm.as_mut_ptr());
-    space.parallel_for(n, |i| unsafe {
+    space.parallel_for_with(n, &BUILD_SWEEP, |i| unsafe {
         // SAFETY: one writer per index.
         cp.write(i, morton::morton32_scene(&boxes[i], scene));
         pp.write(i, i as u32);
@@ -204,7 +216,7 @@ fn emit_hierarchy(
     let lpar = SendPtr(leaf_parent.as_mut_ptr());
     let ipar = SendPtr(internal_parent.as_mut_ptr());
 
-    space.parallel_for(n_internal, |i| {
+    space.parallel_for_with(n_internal, &BUILD_SWEEP, |i| {
         let ii = i as isize;
         // Direction of the node's range: towards the neighbor with the
         // longer common prefix.
@@ -304,7 +316,7 @@ pub(crate) fn refit(
     let flags: Vec<AtomicU32> = (0..n_internal).map(|_| AtomicU32::new(0)).collect();
     let np = SendPtr(nodes.as_mut_ptr());
 
-    space.parallel_for(n, |leaf| {
+    space.parallel_for_with(n, &BUILD_SWEEP, |leaf| {
         let mut node = leaf_parent[leaf];
         loop {
             // The first thread to arrive stops; the second proceeds.

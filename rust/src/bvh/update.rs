@@ -30,7 +30,7 @@
 //! threshold (see [`super::stats::DEFAULT_REBUILD_THRESHOLD`] and the
 //! service-level policy in `coordinator/service.rs`).
 
-use super::build::{self, NO_PARENT};
+use super::build::{self, BUILD_SWEEP, NO_PARENT};
 use super::{is_leaf, ref_index, stats, wide, Bvh, InternalNode};
 use crate::exec::scan::SendPtr;
 use crate::exec::ExecSpace;
@@ -51,7 +51,9 @@ fn compute_parents(
     let mut internal_parent = vec![NO_PARENT; n_internal];
     let lpar = SendPtr(leaf_parent.as_mut_ptr());
     let ipar = SendPtr(internal_parent.as_mut_ptr());
-    space.parallel_for(n_internal, |i| {
+    // Same fine-grained strategy as the construction sweeps this pass
+    // recreates state for.
+    space.parallel_for_with(n_internal, &BUILD_SWEEP, |i| {
         for child in [nodes[i].left, nodes[i].right] {
             // SAFETY: each child is claimed by exactly one parent, so
             // every slot has one writer.
@@ -104,7 +106,7 @@ impl Bvh {
         {
             let dst = SendPtr(self.leaf_boxes.as_mut_ptr());
             let perm = &self.leaf_perm;
-            space.parallel_for(n, |i| {
+            space.parallel_for_with(n, &BUILD_SWEEP, |i| {
                 // SAFETY: one writer per index i.
                 unsafe { dst.write(i, boxes[perm[i] as usize]) };
             });

@@ -41,6 +41,7 @@ use std::collections::HashSet;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
+use crate::bvh::batched::QUERY_BATCHING;
 use crate::bvh::first_hit::{self, RayHit};
 use crate::bvh::nearest::{KnnHeap, Neighbor};
 // Mode-dispatched traversal entry points: rank-local executions run
@@ -415,7 +416,9 @@ impl DistributedTree {
             let dp = SendPtr(distances.as_mut_ptr());
             let offsets_ref = &offsets;
             let slots_ref = &slots;
-            space.parallel_for_chunks(n_q, |b, e| {
+            // Per-query merge cost tracks the result count — heavy-tailed
+            // like the query engines, so it shares their strategy.
+            space.parallel_for_chunks_with(n_q, &QUERY_BATCHING, |b, e| {
                 let mut knn: Vec<Neighbor> = Vec::new();
                 for i in b..e {
                     let base = offsets_ref[i] as usize;
@@ -479,7 +482,10 @@ impl DistributedTree {
         let mut cand: Vec<Vec<u32>> = vec![Vec::new(); items.len()];
         {
             let cp = SendPtr(cand.as_mut_ptr());
-            space.parallel_for_chunks(items.len(), |b, e| {
+            // Top-tree forwarding is a query dispatch over a (usually
+            // small) batch: small min batch so it spreads like the local
+            // engines do.
+            space.parallel_for_chunks_with(items.len(), &QUERY_BATCHING, |b, e| {
                 let mut stack = Vec::with_capacity(32);
                 for i in b..e {
                     let mut ranks = Vec::new();
@@ -551,7 +557,9 @@ impl DistributedTree {
         let mut primary: Vec<u32> = vec![0; items.len()];
         {
             let pp = SendPtr(primary.as_mut_ptr());
-            space.parallel_for_chunks(items.len(), |b, e| {
+            // Rank-bound scans are uniform per item; small batches still
+            // help because wave batches are usually tiny.
+            space.parallel_for_chunks_with(items.len(), &QUERY_BATCHING, |b, e| {
                 for i in b..e {
                     let g = &items[i].1.geometry;
                     let mut best_r = nonempty[0];
@@ -660,7 +668,8 @@ impl DistributedTree {
         let mut primary: Vec<u32> = vec![MISS; items.len()];
         {
             let pp = SendPtr(primary.as_mut_ptr());
-            space.parallel_for_chunks(items.len(), |b, e| {
+            // Same shape as the nearest wave-A scan above.
+            space.parallel_for_chunks_with(items.len(), &QUERY_BATCHING, |b, e| {
                 for i in b..e {
                     let ray = &items[i].1;
                     let mut best: Option<(f32, usize)> = None;

@@ -52,6 +52,20 @@ pub const ADAPTIVE_MAX_BUFFER: usize = 4096;
 /// its buffer back.
 pub const ADAPTIVE_WINDOW: u64 = 1024;
 
+/// The 2P-vs-1P cost model's flip point (ROADMAP 5a): run TwoPass when
+/// the predicted share of queries that would overflow even the suggested
+/// buffer exceeds this. Rationale: a 1P fallback re-traverses exactly the
+/// overflowing queries — the monsters whose traversals dominate a
+/// sub-batch's cost — while 2P's count pass costs one *cheap* extra
+/// traversal per query (and skips the `q * buffer` slot allocation
+/// entirely). Because the suggested buffer targets the
+/// [`ADAPTIVE_QUANTILE`] (≤ 0.1% overflow), the predicted rate can only
+/// exceed a few percent when the [`ADAPTIVE_MAX_BUFFER`] cap truncates
+/// the suggestion below the observed tail — the hollow §3.2 shape —
+/// which is precisely when mass fallbacks would make 1P the slower and
+/// hungrier strategy.
+pub const TWO_PASS_OVERFLOW_THRESHOLD: f64 = 0.02;
+
 /// Maximum retained latency samples (reservoir truncates beyond this).
 const MAX_SAMPLES: usize = 1 << 20;
 
@@ -196,6 +210,18 @@ pub struct Metrics {
     results: AtomicU64,
     /// Per-kind result-count histograms (adaptive-buffer input).
     result_counts: [ResultHistogram; PredicateKind::COUNT],
+    /// Per-kind histograms of the grain each engine dispatch resolved —
+    /// the dispatch-policy observability of the batching seam. Rides the
+    /// same windowed machinery as the result counts, so a workload shift
+    /// that changes batch sizes shows up (and ages out) the same way.
+    dispatch_grains: [ResultHistogram; PredicateKind::COUNT],
+    /// Per-kind histograms of the number of batches each dispatch split
+    /// into (grain's dual: `batches ≈ work / grain`).
+    dispatch_batches: [ResultHistogram; PredicateKind::COUNT],
+    /// Per-kind pass probes `[1P, 1P-fallback, 2P]` — the *observed*
+    /// pass mix the cost model's overflow prediction is validated
+    /// against (the global probes below survive for the summary line).
+    kind_passes: [[AtomicU64; 3]; PredicateKind::COUNT],
     /// Sub-batches executed 1P without any overflow.
     one_pass_batches: AtomicU64,
     /// Sub-batches executed 1P where the fallback second pass ran.
@@ -236,6 +262,9 @@ impl Default for Metrics {
             batches: AtomicU64::new(0),
             results: AtomicU64::new(0),
             result_counts: std::array::from_fn(|_| ResultHistogram::default()),
+            dispatch_grains: std::array::from_fn(|_| ResultHistogram::default()),
+            dispatch_batches: std::array::from_fn(|_| ResultHistogram::default()),
+            kind_passes: std::array::from_fn(|_| std::array::from_fn(|_| AtomicU64::new(0))),
             one_pass_batches: AtomicU64::new(0),
             fallback_batches: AtomicU64::new(0),
             two_pass_batches: AtomicU64::new(0),
@@ -282,12 +311,43 @@ impl Metrics {
             h.record(c);
         }
         self.overflowed_queries.fetch_add(overflowed, Ordering::Relaxed);
-        let probe = match pass {
-            SubBatchPass::OnePass => &self.one_pass_batches,
-            SubBatchPass::OnePassFallback => &self.fallback_batches,
-            SubBatchPass::TwoPass => &self.two_pass_batches,
+        let (probe, slot) = match pass {
+            SubBatchPass::OnePass => (&self.one_pass_batches, 0),
+            SubBatchPass::OnePassFallback => (&self.fallback_batches, 1),
+            SubBatchPass::TwoPass => (&self.two_pass_batches, 2),
         };
         probe.fetch_add(1, Ordering::Relaxed);
+        self.kind_passes[kind.index()][slot].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Records the batching decision one engine dispatch made for `kind`:
+    /// the grain (iterations per claimable batch) the strategy resolved
+    /// and the number of batches it split the work into.
+    pub fn record_dispatch(&self, kind: PredicateKind, grain: usize, batches: usize) {
+        self.dispatch_grains[kind.index()].record(grain as u64);
+        self.dispatch_batches[kind.index()].record(batches as u64);
+    }
+
+    /// The windowed histogram of grains chosen for `kind`'s dispatches.
+    pub fn dispatch_grain_histogram(&self, kind: PredicateKind) -> &ResultHistogram {
+        &self.dispatch_grains[kind.index()]
+    }
+
+    /// The windowed histogram of batch counts for `kind`'s dispatches.
+    pub fn dispatch_batch_histogram(&self, kind: PredicateKind) -> &ResultHistogram {
+        &self.dispatch_batches[kind.index()]
+    }
+
+    /// `kind`'s observed pass mix as `(one_pass, fallback, two_pass)`
+    /// sub-batch counts — what the cost model's prediction is checked
+    /// against in the regression suite.
+    pub fn kind_pass_counts(&self, kind: PredicateKind) -> (u64, u64, u64) {
+        let p = &self.kind_passes[kind.index()];
+        (
+            p[0].load(Ordering::Relaxed),
+            p[1].load(Ordering::Relaxed),
+            p[2].load(Ordering::Relaxed),
+        )
     }
 
     /// The running result-count histogram of `kind`.
@@ -308,6 +368,49 @@ impl Metrics {
         // One bucket of headroom: 2^i - 1 -> 2^(i+1) - 1.
         let buffer = (2 * p + 1).min(ADAPTIVE_MAX_BUFFER as u64);
         Some(buffer.max(1) as usize)
+    }
+
+    /// The share of `kind`'s windowed samples that would *certainly*
+    /// overflow a 1P buffer of `buffer` slots: a sample in bucket `i ≥ 1`
+    /// is at least `2^(i-1)`, so only buckets whose lower bound already
+    /// exceeds `buffer` count. This is a lower bound on the true overflow
+    /// rate (samples in the buffer's own bucket may straddle it either
+    /// way), which makes the cost model conservative about flipping to
+    /// 2P. Returns `0.0` for an empty histogram.
+    pub fn predicted_overflow_rate(&self, kind: PredicateKind, buffer: usize) -> f64 {
+        let counts = self.result_counts[kind.index()].bucket_counts();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let over: u64 = counts
+            .iter()
+            .enumerate()
+            .skip(1)
+            .filter(|(i, _)| ResultHistogram::upper_bound(i - 1) + 1 > buffer as u64)
+            .map(|(_, c)| c)
+            .sum();
+        over as f64 / total as f64
+    }
+
+    /// The per-kind 2P-vs-1P cost model (ROADMAP 5a): the buffer to run
+    /// 1P with, or `None` to run 2P. Starts from [`Self::suggest_buffer`]
+    /// (so cold kinds still run 2P), then overrides to 2P when the
+    /// predicted overflow rate at that buffer exceeds
+    /// [`TWO_PASS_OVERFLOW_THRESHOLD`] — i.e. when the
+    /// [`ADAPTIVE_MAX_BUFFER`] cap has truncated the quantile suggestion
+    /// below a fat observed tail and 1P would pay mass fallback
+    /// re-traversals of exactly the monster queries that dominate cost,
+    /// instead of 2P's one cheap count pass per query. Kinds with a
+    /// uniform (or merely quantile-heavy) distribution keep their 1P
+    /// buffer: their predicted overflow stays under ~0.1% by
+    /// construction of the [`ADAPTIVE_QUANTILE`] target.
+    pub fn plan_buffer(&self, kind: PredicateKind) -> Option<usize> {
+        let buffer = self.suggest_buffer(kind)?;
+        if self.predicted_overflow_rate(kind, buffer) > TWO_PASS_OVERFLOW_THRESHOLD {
+            return None;
+        }
+        Some(buffer)
     }
 
     /// Total requests served.
@@ -666,5 +769,74 @@ mod tests {
         assert_eq!(m.suggest_buffer(PredicateKind::Ray), Some(ADAPTIVE_MAX_BUFFER));
         assert_eq!(m.fallback_batches(), 1);
         assert_eq!(m.overflowed_queries(), 3);
+    }
+
+    #[test]
+    fn dispatch_policy_histograms_record_per_kind() {
+        let m = Metrics::default();
+        assert_eq!(m.dispatch_grain_histogram(PredicateKind::Box).samples(), 0);
+        // A query engine split 65 items into 22 batches of grain 3.
+        m.record_dispatch(PredicateKind::Box, 3, 22);
+        m.record_dispatch(PredicateKind::Box, 3, 22);
+        // A different kind ran coarser; the histograms stay isolated.
+        m.record_dispatch(PredicateKind::Sphere, 64, 4);
+        let g = m.dispatch_grain_histogram(PredicateKind::Box);
+        assert_eq!(g.samples(), 2);
+        assert_eq!(g.percentile(1.0), ResultHistogram::upper_bound(ResultHistogram::bucket_of(3)));
+        let b = m.dispatch_batch_histogram(PredicateKind::Box);
+        assert_eq!(b.samples(), 2);
+        assert!(b.percentile(1.0) >= 22);
+        assert_eq!(m.dispatch_grain_histogram(PredicateKind::Sphere).samples(), 1);
+        assert_eq!(m.dispatch_batch_histogram(PredicateKind::Sphere).samples(), 1);
+        assert_eq!(m.dispatch_grain_histogram(PredicateKind::Ray).samples(), 0);
+    }
+
+    #[test]
+    fn per_kind_pass_probes_track_the_mix() {
+        let m = Metrics::default();
+        m.record_sub_batch(PredicateKind::Box, &[1, 2], 0, SubBatchPass::OnePass);
+        m.record_sub_batch(PredicateKind::Box, &[9], 1, SubBatchPass::OnePassFallback);
+        m.record_sub_batch(PredicateKind::Sphere, &[4], 0, SubBatchPass::TwoPass);
+        assert_eq!(m.kind_pass_counts(PredicateKind::Box), (1, 1, 0));
+        assert_eq!(m.kind_pass_counts(PredicateKind::Sphere), (0, 0, 1));
+        assert_eq!(m.kind_pass_counts(PredicateKind::Ray), (0, 0, 0));
+        // The global probes still see everything (summary line input).
+        assert_eq!(m.one_pass_batches(), 1);
+        assert_eq!(m.fallback_batches(), 1);
+        assert_eq!(m.two_pass_batches(), 1);
+    }
+
+    #[test]
+    fn cost_model_flips_high_variance_kind_to_two_pass() {
+        let m = Metrics::default();
+        // Uniform kind: 200 queries of ~10 results. The 0.999-quantile
+        // suggestion (bucket 4, ub 15, headroom -> 31) covers everything;
+        // predicted overflow is zero and 1P keeps its buffer.
+        let uniform: Vec<u64> = vec![10; 200];
+        m.record_sub_batch(PredicateKind::Box, &uniform, 0, SubBatchPass::OnePass);
+        assert_eq!(m.suggest_buffer(PredicateKind::Box), Some(31));
+        assert_eq!(m.predicted_overflow_rate(PredicateKind::Box, 31), 0.0);
+        assert_eq!(m.plan_buffer(PredicateKind::Box), Some(31));
+        // High-variance kind: 5% monster queries far above the buffer
+        // cap. The quantile suggestion saturates at ADAPTIVE_MAX_BUFFER,
+        // the predicted overflow rate (5%) exceeds the 2% threshold, and
+        // the cost model overrides to 2P — mass fallbacks would cost
+        // more than the count pass.
+        let mut hollow: Vec<u64> = vec![10; 190];
+        hollow.extend(std::iter::repeat(1 << 20).take(10));
+        m.record_sub_batch(PredicateKind::Sphere, &hollow, 0, SubBatchPass::OnePassFallback);
+        assert_eq!(m.suggest_buffer(PredicateKind::Sphere), Some(ADAPTIVE_MAX_BUFFER));
+        let rate = m.predicted_overflow_rate(PredicateKind::Sphere, ADAPTIVE_MAX_BUFFER);
+        assert!((rate - 0.05).abs() < 1e-9, "rate {rate}");
+        assert_eq!(m.plan_buffer(PredicateKind::Sphere), None, "flips to 2P");
+        // A merely quantile-heavy tail (under the threshold) stays 1P:
+        // 1 monster in 1000 is exactly what the quantile absorbs.
+        let mut mild: Vec<u64> = vec![10; 999];
+        mild.push(1 << 20);
+        m.record_sub_batch(PredicateKind::Ray, &mild, 0, SubBatchPass::OnePass);
+        let planned = m.plan_buffer(PredicateKind::Ray);
+        assert!(planned.is_some(), "0.1% tail stays 1P, got {planned:?}");
+        // Cold kinds still run 2P through the same front door.
+        assert_eq!(m.plan_buffer(PredicateKind::AttachBox), None);
     }
 }

@@ -26,11 +26,18 @@
 //! `QueryOptions` the service used to hold: per-kind result-count
 //! histograms accumulate in [`Metrics`], and each spatial sub-batch
 //! picks its `buffer_size` from a high quantile of the running histogram
-//! (capped, with headroom — see [`Metrics::suggest_buffer`]). Cold kinds
+//! (capped, with headroom — see [`Metrics::suggest_buffer`]), filtered
+//! through the per-kind 2P-vs-1P cost model ([`Metrics::plan_buffer`]):
+//! when the predicted overflow rate at the suggested buffer says 1P
+//! fallback re-traversals would cost more than 2P's count pass — a fat
+//! tail truncated by the buffer cap — the kind flips to 2P. Cold kinds
 //! run 2P until enough samples exist. This keeps the filled case on the
 //! fast single-pass path while staying safe on §3.2 hollow-style
 //! workloads, where a static buffer is either mis-sized (mass fallback
-//! second passes) or prohibitively large.
+//! second passes) or prohibitively large. Every engine dispatch also
+//! reports its resolved grain and batch count into per-kind
+//! dispatch-policy histograms (the [`crate::exec::BatchingStrategy`]
+//! seam made observable).
 //!
 //! The executor behind the coordinator loop is a [`Backend`]: a single
 //! local tree ([`SearchService::start`], batches through
@@ -74,6 +81,7 @@ use std::time::{Duration, Instant};
 
 use super::distributed::DistributedTree;
 use super::metrics::{Metrics, SubBatchPass};
+use crate::bvh::batched::QUERY_BATCHING;
 use crate::bvh::{Bvh, PredicateKind, QueryOptions, QueryPredicate};
 use crate::exec::ExecSpace;
 use crate::geometry::predicates::{
@@ -91,9 +99,12 @@ pub enum BufferPolicy {
     /// static configuration; reproduces the §3.2 pathology when
     /// mis-sized (see the pass-count probes in [`Metrics`]).
     Static(usize),
-    /// Per-kind buffers from the running result-count histograms
-    /// ([`Metrics::suggest_buffer`]); sub-batches run 2P until their
-    /// kind has enough samples.
+    /// Per-kind 1P buffers from the running result-count histograms,
+    /// with the 2P-vs-1P cost model on top ([`Metrics::plan_buffer`]):
+    /// sub-batches run 2P until their kind has enough samples, *and*
+    /// whenever the kind's predicted overflow rate at the suggested
+    /// buffer makes 1P fallback re-traversals costlier than the 2P
+    /// count pass.
     Adaptive,
 }
 
@@ -609,6 +620,15 @@ pub fn execute_distributed(
     preds: &[QueryPredicate],
     metrics: &Metrics,
 ) -> Vec<SubBatchResult> {
+    // The distributed chunk dispatches share [`QUERY_BATCHING`]; report
+    // the batching decision per kind present in the batch.
+    let mut kind_counts = [0usize; PredicateKind::COUNT];
+    for p in preds {
+        kind_counts[p.kind().index()] += 1;
+    }
+    for kind in PredicateKind::ALL {
+        record_engine_dispatch(metrics, kind, kind_counts[kind.index()], space);
+    }
     let (out, stats) = tree.query_batch(space, preds);
     metrics.record_distributed(stats.forwarded_queries as u64, stats.streamed_results as u64);
     let mut fh_casts = 0u64;
@@ -795,6 +815,7 @@ pub fn execute_sub_batched(
                         _ => unreachable!("grouped by kind"),
                     })
                     .collect();
+                record_engine_dispatch(metrics, kind, typed.len(), space);
                 let hits = bvh.query_first_hit(space, &typed, sort_queries);
                 let h = metrics.result_histogram(kind);
                 let mut n_hits = 0u64;
@@ -816,6 +837,19 @@ pub fn execute_sub_batched(
     results
 }
 
+/// Reports the batching decision a query-engine dispatch is about to
+/// make for `n` queries of `kind` into the dispatch-policy histograms:
+/// the engines all partition work with [`QUERY_BATCHING`], so resolving
+/// it against the space's concurrency reproduces the exact grain and
+/// batch count the dispatch uses.
+fn record_engine_dispatch(metrics: &Metrics, kind: PredicateKind, n: usize, space: &ExecSpace) {
+    if n == 0 {
+        return;
+    }
+    let resolved = QUERY_BATCHING.resolve(n, space.concurrency());
+    metrics.record_dispatch(kind, resolved.grain, resolved.batches);
+}
+
 /// Runs one kind-homogeneous spatial sub-batch on the monomorphized CSR
 /// engine, applying the buffer policy and recording histogram samples
 /// plus the pass-count probes; scatters results back to caller order.
@@ -834,9 +868,13 @@ fn spatial_sub_batch<P: SpatialPredicate + Sync>(
     let buffer = match policy {
         BufferPolicy::TwoPass => None,
         BufferPolicy::Static(b) => (b > 0).then_some(b),
-        BufferPolicy::Adaptive => metrics.suggest_buffer(kind),
+        // The cost model: the quantile suggestion, overridden to 2P
+        // when the predicted overflow rate says mass 1P fallbacks
+        // would cost more than the count pass (ROADMAP 5a).
+        BufferPolicy::Adaptive => metrics.plan_buffer(kind),
     };
     let opts = QueryOptions { buffer_size: buffer, sort_queries };
+    record_engine_dispatch(metrics, kind, typed.len(), space);
     let out = bvh.query_spatial(space, typed, &opts);
     let counts: Vec<u64> = out.offsets.windows(2).map(|w| w[1] - w[0]).collect();
     let pass = match buffer {
@@ -867,6 +905,7 @@ fn nearest_sub_batch<Q: NearestQuery + Sync>(
     metrics: &Metrics,
     results: &mut [SubBatchResult],
 ) {
+    record_engine_dispatch(metrics, kind, typed.len(), space);
     let out = bvh.query_nearest(space, typed, sort_queries);
     let h = metrics.result_histogram(kind);
     for (j, &i) in members.iter().enumerate() {
@@ -1150,6 +1189,62 @@ mod tests {
         let (_tx, rx) = channel::<QueryResult>();
         drop(_tx);
         assert_eq!(Pending(rx).wait().err(), Some(WaitError::ServiceDropped));
+    }
+
+    #[test]
+    fn adaptive_cost_model_flips_high_variance_kind_to_two_pass() {
+        // ROADMAP 5a regression: seed one kind's histogram with uniform
+        // counts and another's with a 5% monster tail far above the
+        // buffer cap, then run a mixed Adaptive batch. The uniform kind
+        // must keep its 1P buffer; the high-variance kind must be
+        // planned onto 2P by the cost model.
+        let metrics = Metrics::default();
+        let uniform: Vec<u64> = vec![10; 200];
+        metrics.record_sub_batch(PredicateKind::Box, &uniform, 0, SubBatchPass::OnePass);
+        let mut hollow: Vec<u64> = vec![10; 190];
+        hollow.extend(std::iter::repeat(1u64 << 20).take(10));
+        metrics.record_sub_batch(PredicateKind::Sphere, &hollow, 0, SubBatchPass::OnePassFallback);
+
+        let (_, boxes) = line_points(100);
+        let space = ExecSpace::serial();
+        let bvh = Bvh::build(&space, &boxes);
+        let preds: Vec<QueryPredicate> = (0..8)
+            .flat_map(|i| {
+                let x = i as f32 * 10.0;
+                [
+                    QueryPredicate::intersects_box(Aabb::new(
+                        Point::new(x - 1.5, -1.0, -1.0),
+                        Point::new(x + 1.5, 1.0, 1.0),
+                    )),
+                    QueryPredicate::intersects_sphere(Point::new(x, 0.0, 0.0), 1.5),
+                ]
+            })
+            .collect();
+        let out =
+            execute_sub_batched(&bvh, &space, &preds, BufferPolicy::Adaptive, true, &metrics);
+
+        // Pass probes: the seed contributed (1,0,0)/(0,1,0); the batch
+        // adds one OnePass for the uniform kind and one TwoPass for the
+        // flipped kind.
+        assert_eq!(
+            metrics.kind_pass_counts(PredicateKind::Box),
+            (2, 0, 0),
+            "uniform kind stays 1P"
+        );
+        assert_eq!(
+            metrics.kind_pass_counts(PredicateKind::Sphere),
+            (0, 1, 1),
+            "high-variance kind flips to 2P"
+        );
+        // Both engine dispatches reported their batching decision.
+        assert_eq!(metrics.dispatch_grain_histogram(PredicateKind::Box).samples(), 1);
+        assert_eq!(metrics.dispatch_batch_histogram(PredicateKind::Sphere).samples(), 1);
+        // The strategy choice never changes answers.
+        let want =
+            execute_sub_batched(&bvh, &space, &preds, BufferPolicy::TwoPass, true, &Metrics::default());
+        for (got, want) in out.iter().zip(&want) {
+            assert_eq!(got.indices, want.indices);
+        }
     }
 
     #[test]

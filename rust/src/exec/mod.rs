@@ -9,7 +9,21 @@
 //!
 //! * [`ExecSpace::serial`] — everything inline on the calling thread.
 //! * [`ExecSpace::with_threads`] — a persistent pool of worker threads with
-//!   chunked work claiming (the OpenMP analogue).
+//!   dynamic batch claiming (the OpenMP analogue).
+//!
+//! **How work is partitioned is itself a policy.** Kokkos exposes it as
+//! the `ChunkSize` parameter of its range policies; bevy's `par_iter`
+//! calls it a `BatchingStrategy`. This module follows the same design:
+//! every primitive has a `*_with` variant taking a
+//! [`policy::BatchingStrategy`] — bounds on the batch size plus a
+//! batches-per-thread target, resolved against the concrete work size at
+//! dispatch time — and the plain variants bind per-call-site defaults
+//! ([`policy::BatchingStrategy::legacy_chunked`] for loops,
+//! [`policy::BatchingStrategy::tasks`] for coarse tasks). Hot call sites
+//! pick an explicit strategy: build sweeps want large batches of cheap
+//! iterations, heavy-tailed query batches want small minimum batches so
+//! a batch barely above the default floor still spreads across the pool,
+//! and rank-level distributed work wants one task per index.
 //!
 //! The accelerator backend of the paper (CUDA) is played by the PJRT
 //! runtime in [`crate::runtime`], which executes the AOT-compiled
@@ -20,10 +34,12 @@
 //! threads is a constructor argument — exactly the paper's interface
 //! story.
 
+pub mod policy;
 mod pool;
 pub mod scan;
 pub mod sort;
 
+pub use policy::BatchingStrategy;
 pub use pool::ThreadPool;
 
 use std::sync::Arc;
@@ -74,8 +90,21 @@ impl ExecSpace {
     /// Runs `f(begin, end)` over a partition of `0..n` into contiguous
     /// chunks. Chunks are claimed dynamically by workers (load balancing
     /// for the "hollow" workloads of the paper where per-query work is
-    /// wildly imbalanced, §3.1).
+    /// wildly imbalanced, §3.1). Schedules with the legacy default
+    /// policy; use [`ExecSpace::parallel_for_chunks_with`] to choose.
     pub fn parallel_for_chunks<F>(&self, n: usize, f: F)
+    where
+        F: Fn(usize, usize) + Sync,
+    {
+        self.parallel_for_chunks_with(n, &BatchingStrategy::default(), f);
+    }
+
+    /// [`ExecSpace::parallel_for_chunks`] with an explicit
+    /// [`BatchingStrategy`] governing how `0..n` splits into claimable
+    /// batches. The strategy is a pure scheduling choice: results never
+    /// depend on it (each index is visited exactly once either way).
+    /// On the serial space the whole range runs as one chunk.
+    pub fn parallel_for_chunks_with<F>(&self, n: usize, strategy: &BatchingStrategy, f: F)
     where
         F: Fn(usize, usize) + Sync,
     {
@@ -84,16 +113,25 @@ impl ExecSpace {
         }
         match &self.pool {
             None => f(0, n),
-            Some(pool) => pool.run_chunked(n, &f),
+            Some(pool) => pool.run_with(n, strategy, &|_w, b, e| f(b, e)),
         }
     }
 
-    /// Runs `f(i)` for each `i` in `0..n`, in parallel.
+    /// Runs `f(i)` for each `i` in `0..n`, in parallel, with the legacy
+    /// default policy; use [`ExecSpace::parallel_for_with`] to choose.
     pub fn parallel_for<F>(&self, n: usize, f: F)
     where
         F: Fn(usize) + Sync,
     {
-        self.parallel_for_chunks(n, |b, e| {
+        self.parallel_for_with(n, &BatchingStrategy::default(), f);
+    }
+
+    /// [`ExecSpace::parallel_for`] with an explicit [`BatchingStrategy`].
+    pub fn parallel_for_with<F>(&self, n: usize, strategy: &BatchingStrategy, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        self.parallel_for_chunks_with(n, strategy, |b, e| {
             for i in b..e {
                 f(i);
             }
@@ -101,12 +139,12 @@ impl ExecSpace {
     }
 
     /// Runs `f(i)` for each `i` in `0..n` where every index is one
-    /// *coarse task*, claimed individually by the workers. Unlike
-    /// [`ExecSpace::parallel_for`] — whose chunking is tuned for
-    /// fine-grained iterations and runs any range below its grain floor
-    /// entirely on the caller — this dispatch has no grain floor, so a
-    /// handful of heavy tasks (one per distributed rank, say) still
-    /// spreads across the pool.
+    /// *coarse task*, claimed individually by the workers
+    /// ([`BatchingStrategy::tasks`]). Unlike [`ExecSpace::parallel_for`]
+    /// — whose default chunking is tuned for fine-grained iterations and
+    /// runs any range below its batch floor entirely on the caller —
+    /// this dispatch has no floor, so a handful of heavy tasks (one per
+    /// distributed rank, say) still spreads across the pool.
     pub fn parallel_tasks<F>(&self, n: usize, f: F)
     where
         F: Fn(usize) + Sync,
@@ -127,12 +165,32 @@ impl ExecSpace {
     /// Parallel reduction: `map_chunk` folds a contiguous range into a
     /// partial value; partials are combined with `join` (which must be
     /// associative and commutative, e.g. box union, sum, min, max).
+    /// Schedules with the legacy default policy; use
+    /// [`ExecSpace::parallel_reduce_with`] to choose.
+    pub fn parallel_reduce<T, M, J>(&self, n: usize, identity: T, map_chunk: M, join: J) -> T
+    where
+        T: Send,
+        M: Fn(usize, usize) -> T + Sync,
+        J: Fn(T, T) -> T + Send + Sync,
+    {
+        self.parallel_reduce_with(n, &BatchingStrategy::default(), identity, map_chunk, join)
+    }
+
+    /// [`ExecSpace::parallel_reduce`] with an explicit
+    /// [`BatchingStrategy`] governing the chunk partition.
     ///
     /// Each participating worker folds its chunks into a private slot
     /// (no lock, no sharing — the Kokkos `parallel_reduce` contract); the
     /// at-most-`threads` partials are joined once on the caller after the
     /// dispatch completes.
-    pub fn parallel_reduce<T, M, J>(&self, n: usize, identity: T, map_chunk: M, join: J) -> T
+    pub fn parallel_reduce_with<T, M, J>(
+        &self,
+        n: usize,
+        strategy: &BatchingStrategy,
+        identity: T,
+        map_chunk: M,
+        join: J,
+    ) -> T
     where
         T: Send,
         M: Fn(usize, usize) -> T + Sync,
@@ -150,7 +208,7 @@ impl ExecSpace {
                     let pp = scan::SendPtr(partials.as_mut_ptr());
                     let map_ref = &map_chunk;
                     let join_ref = &join;
-                    pool.run_chunked_worker(n, &|w, b, e| {
+                    pool.run_with(n, strategy, &|w, b, e| {
                         let local = map_ref(b, e);
                         // SAFETY: slot `w` belongs exclusively to the worker
                         // that claimed id `w` for this dispatch.
@@ -191,6 +249,36 @@ mod tests {
     }
 
     #[test]
+    fn strategy_variants_visit_every_index_once() {
+        // The `_with` seam must be behavior-identical to the defaults
+        // for any strategy, on both backends.
+        let strategies = [
+            BatchingStrategy::default(),
+            BatchingStrategy::new().with_batches_per_thread(4),
+            BatchingStrategy::fixed(3),
+            BatchingStrategy::tasks(),
+        ];
+        for space in [ExecSpace::serial(), ExecSpace::with_threads(4)] {
+            for s in &strategies {
+                let n = 1_003;
+                let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+                space.parallel_for_with(n, s, |i| {
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                });
+                assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1), "{s:?}");
+                let total = space.parallel_reduce_with(
+                    n,
+                    s,
+                    0u64,
+                    |b, e| (b..e).map(|i| i as u64).sum::<u64>(),
+                    |a, b| a + b,
+                );
+                assert_eq!(total, (n as u64 - 1) * n as u64 / 2, "{s:?}");
+            }
+        }
+    }
+
+    #[test]
     fn parallel_reduce_sums_correctly() {
         for space in [ExecSpace::serial(), ExecSpace::with_threads(3)] {
             let n = 100_000usize;
@@ -222,7 +310,7 @@ mod tests {
     #[test]
     fn parallel_tasks_visits_every_index_once() {
         for space in [ExecSpace::serial(), ExecSpace::with_threads(4)] {
-            let n = 23; // far below the chunked dispatch's grain floor
+            let n = 23; // far below the chunked default's batch floor
             let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
             space.parallel_tasks(n, |i| {
                 hits[i].fetch_add(1, Ordering::Relaxed);
@@ -236,6 +324,7 @@ mod tests {
         let space = ExecSpace::with_threads(2);
         space.parallel_for(0, |_| panic!("must not run"));
         space.parallel_tasks(0, |_| panic!("must not run"));
+        space.parallel_for_with(0, &BatchingStrategy::tasks(), |_| panic!("must not run"));
         let r = space.parallel_reduce(0, 42i32, |_, _| panic!("must not run"), |a, _b| a);
         assert_eq!(r, 42);
     }

@@ -1,0 +1,239 @@
+//! Dispatch batching policy — the `BatchingStrategy` seam.
+//!
+//! Every parallel primitive in [`crate::exec`] partitions `0..n` into
+//! contiguous *batches* (chunks) that workers claim dynamically. How big
+//! those batches are is a pure scheduling decision: it cannot change any
+//! result (the iteration space is covered exactly once either way), but
+//! it decides whether a heavy-tailed workload spreads or serializes.
+//! Historically the pool hard-coded exactly two grains — a chunked path
+//! with a fixed 64-iteration floor, and a grain-1 task path — so a batch
+//! of 65 hollow-workload queries on 8 threads collapsed into one
+//! 64-query chunk plus a straggler (the §3.1 imbalance pathology).
+//!
+//! [`BatchingStrategy`] replaces both magic grains with an explicit
+//! policy, modelled on Kokkos' `ChunkSize` policy parameter and bevy's
+//! `par_iter` `BatchingStrategy` (see SNIPPETS.md): the caller states
+//! *bounds* on the batch size plus a target number of batches per
+//! thread, and the resolved grain is computed from the actual work size
+//! and thread count at dispatch time. Call sites choose — and comment —
+//! their strategy; the old defaults survive as named constructors so
+//! untouched callers keep byte-identical scheduling.
+
+/// How a dispatch partitions its iteration space into claimable batches.
+///
+/// The resolved batch size ("grain") is
+/// `work_size / (threads * batches_per_thread)` clamped into
+/// `[min_batch, max_batch]`. The unconstrained [`BatchingStrategy::new`]
+/// therefore auto-sizes purely from the work size: one batch per thread
+/// per `batches_per_thread` round, however small that makes each batch.
+///
+/// All constructors and builders are `const fn`, so call sites can pin
+/// their policy as a named constant next to the dispatch it governs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BatchingStrategy {
+    /// Lower bound on the resolved batch size (iterations per chunk).
+    pub min_batch: usize,
+    /// Upper bound on the resolved batch size.
+    pub max_batch: usize,
+    /// Target number of batches each thread claims over a dispatch.
+    /// Values above 1 oversubscribe the pool so dynamic claiming can
+    /// rebalance a heavy tail (OpenMP `schedule(dynamic)` style).
+    pub batches_per_thread: usize,
+}
+
+/// The grain a strategy resolved to for one concrete dispatch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ResolvedBatch {
+    /// Iterations per claimable chunk.
+    pub grain: usize,
+    /// Number of chunks the iteration space splits into.
+    pub batches: usize,
+}
+
+impl BatchingStrategy {
+    /// Unconstrained auto-sizing: batch size is purely
+    /// `work / (threads * batches_per_thread)`, with `batches_per_thread
+    /// = 1` (one batch per thread). Tighten with the builder methods.
+    pub const fn new() -> Self {
+        BatchingStrategy { min_batch: 1, max_batch: usize::MAX, batches_per_thread: 1 }
+    }
+
+    /// Every batch exactly `n` iterations (the last one may be short).
+    /// This is the "old fixed grain" emulation: no adaptation to work
+    /// size or thread count.
+    pub const fn fixed(n: usize) -> Self {
+        assert!(n >= 1, "fixed batch size must be at least 1");
+        BatchingStrategy { min_batch: n, max_batch: n, batches_per_thread: 1 }
+    }
+
+    /// Task semantics: every index is its own claimable batch. For
+    /// *coarse* work units (a distributed rank's sub-batch, a shard
+    /// rebuild) where even two items must be able to run on two threads.
+    pub const fn tasks() -> Self {
+        Self::fixed(1)
+    }
+
+    /// The pool's legacy chunked policy: 8 batches per thread with a
+    /// 64-iteration batch floor — kept as the default for call sites
+    /// that have not chosen an explicit strategy, so pre-policy callers
+    /// schedule exactly as before.
+    pub const fn legacy_chunked() -> Self {
+        BatchingStrategy { min_batch: 64, max_batch: usize::MAX, batches_per_thread: 8 }
+    }
+
+    /// Returns the strategy with `min_batch` replaced.
+    pub const fn with_min_batch(mut self, n: usize) -> Self {
+        assert!(n >= 1, "min_batch must be at least 1");
+        self.min_batch = n;
+        self
+    }
+
+    /// Returns the strategy with `max_batch` replaced.
+    pub const fn with_max_batch(mut self, n: usize) -> Self {
+        assert!(n >= 1, "max_batch must be at least 1");
+        self.max_batch = n;
+        self
+    }
+
+    /// Returns the strategy with `batches_per_thread` replaced.
+    pub const fn with_batches_per_thread(mut self, n: usize) -> Self {
+        assert!(n >= 1, "batches_per_thread must be at least 1");
+        self.batches_per_thread = n;
+        self
+    }
+
+    /// Resolves the batch size for a concrete dispatch of `work_size`
+    /// iterations on `threads` threads. `work_size == 0` resolves to a
+    /// degenerate zero-batch dispatch.
+    ///
+    /// A resolved grain larger than `work_size` simply means one batch
+    /// (covering the whole range), which the pool runs inline on the
+    /// caller — this is how the `min_batch` floor keeps tiny dispatches
+    /// from paying wake-up costs.
+    pub const fn resolve(&self, work_size: usize, threads: usize) -> ResolvedBatch {
+        assert!(
+            self.min_batch <= self.max_batch,
+            "BatchingStrategy bounds inverted (min_batch > max_batch)"
+        );
+        if work_size == 0 {
+            return ResolvedBatch { grain: self.min_batch, batches: 0 };
+        }
+        let threads = if threads == 0 { 1 } else { threads };
+        let target = threads * self.batches_per_thread;
+        let auto = work_size.div_ceil(target);
+        let grain = if auto < self.min_batch {
+            self.min_batch
+        } else if auto > self.max_batch {
+            self.max_batch
+        } else {
+            auto
+        };
+        ResolvedBatch { grain, batches: work_size.div_ceil(grain) }
+    }
+}
+
+impl Default for BatchingStrategy {
+    /// The pool-wide default is [`BatchingStrategy::legacy_chunked`] —
+    /// the pre-policy scheduling — so adopting the seam is behavior
+    /// preserving until a call site opts into an explicit strategy.
+    fn default() -> Self {
+        Self::legacy_chunked()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_reproduces_the_legacy_grain_exactly() {
+        // The pre-policy dispatch computed
+        //   grain = ceil(n / (threads * 8)).max(min(64, n))
+        // which, for n < 64, still yields a single batch — identical to
+        // clamping at a 64 floor. Check equivalence over a sweep.
+        for threads in [2usize, 4, 8, 16] {
+            for n in [1usize, 7, 63, 64, 65, 100, 512, 1 << 12, 100_000, 1_000_003] {
+                let old_grain = n.div_ceil(threads * 8).max(64.min(n));
+                let old_batches = n.div_ceil(old_grain);
+                let r = BatchingStrategy::default().resolve(n, threads);
+                assert_eq!(r.batches, old_batches, "n={n} threads={threads}");
+                // Identical partitioning, not just identical counts: for
+                // n >= 64 the grains match outright; below 64 both give
+                // one batch spanning the range.
+                if n >= 64 {
+                    assert_eq!(r.grain, old_grain, "n={n} threads={threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fixed_and_tasks_pin_the_grain() {
+        for n in [1usize, 10, 64, 65, 1000] {
+            let f = BatchingStrategy::fixed(7).resolve(n, 8);
+            assert_eq!(f.grain, 7);
+            assert_eq!(f.batches, n.div_ceil(7));
+            let t = BatchingStrategy::tasks().resolve(n, 8);
+            assert_eq!(t.grain, 1);
+            assert_eq!(t.batches, n);
+        }
+    }
+
+    #[test]
+    fn unconstrained_auto_sizes_from_work_and_threads() {
+        let s = BatchingStrategy::new().with_batches_per_thread(4);
+        // 65 items on 8 threads: grain ceil(65/32) = 3, 22 batches — the
+        // heavy-tailed case that used to collapse to 64 + 1.
+        let r = s.resolve(65, 8);
+        assert_eq!(r.grain, 3);
+        assert_eq!(r.batches, 22);
+        // Huge work still bounded only by the auto size.
+        let r = s.resolve(1 << 20, 8);
+        assert_eq!(r.grain, (1usize << 20).div_ceil(32));
+    }
+
+    #[test]
+    fn bounds_are_honored_for_every_strategy() {
+        let strategies = [
+            BatchingStrategy::new(),
+            BatchingStrategy::default(),
+            BatchingStrategy::fixed(5),
+            BatchingStrategy::tasks(),
+            // Degenerate bounds: min == max == usize::MAX collapses any
+            // dispatch to a single batch.
+            BatchingStrategy::fixed(usize::MAX),
+            BatchingStrategy::new().with_min_batch(3).with_max_batch(9),
+        ];
+        for s in strategies {
+            for n in [0usize, 1, 2, 63, 64, 65, 129, 4096] {
+                for threads in [1usize, 2, 4, 8] {
+                    let r = s.resolve(n, threads);
+                    assert!(r.grain >= s.min_batch, "{s:?} n={n} t={threads}");
+                    assert!(r.grain <= s.max_batch, "{s:?} n={n} t={threads}");
+                    if n == 0 {
+                        assert_eq!(r.batches, 0);
+                    } else {
+                        assert_eq!(r.batches, n.div_ceil(r.grain));
+                        // Batches tile 0..n exactly: last batch nonempty.
+                        assert!((r.batches - 1).saturating_mul(r.grain) < n);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_threads_is_treated_as_one() {
+        let r = BatchingStrategy::new().resolve(100, 0);
+        assert_eq!(r.grain, 100);
+        assert_eq!(r.batches, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "bounds inverted")]
+    fn inverted_bounds_panic_at_resolve() {
+        let s = BatchingStrategy::new().with_min_batch(10).with_max_batch(10).with_min_batch(20);
+        // min 20 > max 10.
+        let _ = s.resolve(100, 4);
+    }
+}

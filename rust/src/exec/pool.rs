@@ -1,27 +1,39 @@
-//! A persistent worker-thread pool with dynamic chunk claiming.
+//! A persistent worker-thread pool with policy-driven dynamic batching.
 //!
 //! The pool plays the role of Kokkos' OpenMP backend. A dispatch
-//! (`run_chunked`) partitions `0..n` into `threads * OVERSUBSCRIBE`
-//! contiguous chunks; workers claim chunks through a shared atomic
-//! counter, which gives the same dynamic load balancing OpenMP's
-//! `schedule(dynamic)` provides — important for the paper's *hollow*
-//! workloads where per-query cost varies by two orders of magnitude
-//! (§3.1).
+//! partitions `0..n` into contiguous batches sized by a
+//! [`BatchingStrategy`] (the analogue of Kokkos' `ChunkSize` policy
+//! parameter and bevy's `par_iter` batching strategy); workers claim
+//! batches through a shared atomic counter, which gives the same dynamic
+//! load balancing OpenMP's `schedule(dynamic)` provides — important for
+//! the paper's *hollow* workloads where per-query cost varies by two
+//! orders of magnitude (§3.1). The strategy resolves the grain from the
+//! concrete work size and thread count at dispatch time
+//! ([`BatchingStrategy::resolve`]); the legacy entry points
+//! ([`ThreadPool::run_chunked`], [`ThreadPool::run_tasks`]) are thin
+//! wrappers binding the pre-policy defaults, so the single policy-driven
+//! core ([`ThreadPool::run_with`]) carries every dispatch.
 //!
-//! Safety: `run_chunked` erases the lifetime of the user closure so worker
-//! threads (which are `'static`) can call it. This is sound because
-//! `run_chunked` blocks until every worker has signalled completion of the
+//! Panic containment: a panic inside a dispatched closure does *not*
+//! kill the worker thread (which would poison the pool — the next
+//! dispatch's channel send would abort). The unwind is caught in
+//! [`Dispatch::work`], completion is still signalled so the barrier
+//! drains, and the payload is re-thrown on the *calling* thread once
+//! every participant has stopped touching the closure.
+//!
+//! Safety: dispatches erase the lifetime of the user closure so worker
+//! threads (which are `'static`) can call it. This is sound because the
+//! caller blocks until every worker has signalled completion of the
 //! dispatch, so the borrow strictly outlives every use.
 
+use std::any::Any;
+use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
-/// Chunks-per-thread oversubscription factor for dynamic load balancing.
-const OVERSUBSCRIBE: usize = 8;
-/// Never make chunks smaller than this many iterations.
-const MIN_GRAIN: usize = 64;
+use super::policy::BatchingStrategy;
 
 /// Type-erased view of the user closure for one dispatch.
 struct Dispatch {
@@ -38,22 +50,27 @@ struct Dispatch {
     grain: usize,
     /// Iteration-space size.
     n: usize,
+    /// First panic payload caught in any participant, re-thrown on the
+    /// caller after the completion barrier.
+    panic: Mutex<Option<Box<dyn Any + Send>>>,
     /// Completion signal (one message per participating worker).
     done: Sender<()>,
 }
 
-// The raw pointer is only dereferenced while `run_chunked` is blocked on
-// the completion channel, during which the closure is alive.
+// The raw pointer is only dereferenced while the dispatching caller is
+// blocked on the completion channel, during which the closure is alive.
 unsafe impl Send for Dispatch {}
 unsafe impl Sync for Dispatch {}
 
 impl Dispatch {
     /// Claims a worker slot, then claims and runs chunks until the
-    /// iteration space is exhausted.
+    /// iteration space is exhausted. A panicking chunk stops *this*
+    /// participant (remaining chunks go to the others), records the
+    /// payload, and still signals completion so the pool survives.
     fn work(&self) {
         let f = unsafe { &*self.func };
         let w = self.worker.fetch_add(1, Ordering::Relaxed);
-        loop {
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| loop {
             let c = self.next.fetch_add(1, Ordering::Relaxed);
             if c >= self.chunks {
                 break;
@@ -62,6 +79,12 @@ impl Dispatch {
             let end = ((c + 1) * self.grain).min(self.n);
             if begin < end {
                 f(w, begin, end);
+            }
+        }));
+        if let Err(payload) = result {
+            let mut slot = self.panic.lock().unwrap_or_else(|p| p.into_inner());
+            if slot.is_none() {
+                *slot = Some(payload);
             }
         }
         let _ = self.done.send(());
@@ -102,6 +125,8 @@ impl ThreadPool {
 
     /// Runs `f(begin, end)` over a chunked partition of `0..n`, blocking
     /// until all chunks are complete. The caller participates as a worker.
+    /// Schedules with the legacy default policy
+    /// ([`BatchingStrategy::legacy_chunked`]).
     pub fn run_chunked(&self, n: usize, f: &(dyn Fn(usize, usize) + Sync)) {
         self.run_chunked_worker(n, &|_w, b, e| f(b, e));
     }
@@ -112,42 +137,47 @@ impl ThreadPool {
     /// seam reductions use to accumulate per-worker partials without
     /// sharing (one slot per worker, joined once after the dispatch).
     pub fn run_chunked_worker(&self, n: usize, f: &(dyn Fn(usize, usize, usize) + Sync)) {
-        if n == 0 {
-            return;
-        }
-        let threads = self.threads();
-        let target_chunks = threads * OVERSUBSCRIBE;
-        let grain = (n.div_ceil(target_chunks)).max(MIN_GRAIN.min(n));
-        self.dispatch(n, grain, f);
+        self.run_with(n, &BatchingStrategy::default(), f);
     }
 
     /// Runs `f(i)` once per index in `0..n` with every index its own
-    /// claimable chunk (grain 1, no [`MIN_GRAIN`] floor) — the dispatch
+    /// claimable chunk ([`BatchingStrategy::tasks`]) — the dispatch
     /// behind [`crate::exec::ExecSpace::parallel_tasks`]. Each index is
     /// expected to be a *coarse* unit of work (a distributed rank's
     /// sub-batch, a shard rebuild), so tasks spread across workers even
-    /// when `n` is far below the chunked dispatch's grain floor, under
+    /// when `n` is far below the chunked default's batch floor, under
     /// which [`ThreadPool::run_chunked`] would run the whole range on the
     /// caller.
     pub fn run_tasks(&self, n: usize, f: &(dyn Fn(usize) + Sync)) {
-        self.dispatch(n, 1, &|_w, b, e| {
+        self.run_with(n, &BatchingStrategy::tasks(), &|_w, b, e| {
             for i in b..e {
                 f(i);
             }
         });
     }
 
-    /// Shared dispatch core of [`ThreadPool::run_chunked_worker`] and
-    /// [`ThreadPool::run_tasks`]: partitions `0..n` into `grain`-sized
-    /// chunks claimed dynamically by the workers (and the caller).
-    fn dispatch(&self, n: usize, grain: usize, f: &(dyn Fn(usize, usize, usize) + Sync)) {
+    /// The policy-driven dispatch core: resolves `strategy` against the
+    /// concrete work size and thread count, partitions `0..n` into
+    /// grain-sized chunks claimed dynamically by the workers (and the
+    /// caller), and blocks until the iteration space is exhausted. If
+    /// any chunk panicked, the first payload is re-thrown here — on the
+    /// calling thread — after every participant has quiesced; worker
+    /// threads themselves always survive.
+    pub fn run_with(
+        &self,
+        n: usize,
+        strategy: &BatchingStrategy,
+        f: &(dyn Fn(usize, usize, usize) + Sync),
+    ) {
         if n == 0 {
             return;
         }
         let threads = self.threads();
-        let chunks = n.div_ceil(grain);
+        let resolved = strategy.resolve(n, threads);
+        let (grain, chunks) = (resolved.grain, resolved.batches);
 
-        // Small dispatch: not worth waking workers.
+        // Small dispatch: not worth waking workers. A panic here unwinds
+        // the caller directly, which matches the barrier path's contract.
         if chunks == 1 {
             f(0, 0, n);
             return;
@@ -165,6 +195,7 @@ impl ThreadPool {
             chunks,
             grain,
             n,
+            panic: Mutex::new(None),
             done: done_tx,
         });
 
@@ -177,6 +208,12 @@ impl ThreadPool {
         // One signal per participant (including the caller's own).
         for _ in 0..participants {
             done_rx.recv().expect("worker thread died during dispatch");
+        }
+        // Every participant has quiesced; nothing touches `f` any more.
+        // Re-throw a caught panic on the dispatching thread.
+        let payload = dispatch.panic.lock().unwrap_or_else(|p| p.into_inner()).take();
+        if let Some(payload) = payload {
+            std::panic::resume_unwind(payload);
         }
     }
 }
@@ -195,9 +232,21 @@ mod tests {
     use super::*;
     use std::sync::atomic::AtomicU64;
 
+    /// Thread count for the pool under test. The CI `pool-stress` matrix
+    /// overrides this via `ARBOR_TEST_POOL_THREADS` to shake out dispatch
+    /// races at both extremes (2 = maximal caller participation, 8 =
+    /// maximal contention on the claim counter).
+    pub(crate) fn test_pool_threads(default: usize) -> usize {
+        std::env::var("ARBOR_TEST_POOL_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&t| t >= 2)
+            .unwrap_or(default)
+    }
+
     #[test]
     fn covers_iteration_space_exactly() {
-        let pool = ThreadPool::new(4);
+        let pool = ThreadPool::new(test_pool_threads(4));
         for n in [1usize, 63, 64, 65, 1000, 4096, 100_000] {
             let sum = AtomicU64::new(0);
             pool.run_chunked(n, &|b, e| {
@@ -209,24 +258,90 @@ mod tests {
     }
 
     #[test]
+    fn every_strategy_covers_the_range_exactly_once() {
+        // Property: whatever the policy resolves to — default, fixed,
+        // tasks, or degenerate bounds — each index in 0..n runs exactly
+        // once, with in-bounds dense worker ids.
+        let threads = test_pool_threads(4);
+        let pool = ThreadPool::new(threads);
+        let strategies = [
+            BatchingStrategy::default(),
+            BatchingStrategy::new(),
+            BatchingStrategy::new().with_batches_per_thread(4),
+            BatchingStrategy::fixed(1),
+            BatchingStrategy::fixed(7),
+            BatchingStrategy::fixed(usize::MAX),
+            BatchingStrategy::tasks(),
+            BatchingStrategy::new().with_min_batch(3).with_max_batch(5),
+        ];
+        for s in &strategies {
+            for n in [0usize, 1, 2, 63, 64, 65, 100, 1000, 4097] {
+                let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+                pool.run_with(n, s, &|w, b, e| {
+                    assert!(w < threads, "worker id {w} out of range");
+                    assert!(b < e && e <= n, "bad chunk [{b}, {e}) for n={n}");
+                    // The chunk respects the resolved grain bounds (the
+                    // final chunk may be short).
+                    let r = s.resolve(n, threads);
+                    assert!(e - b <= r.grain, "{s:?}: chunk larger than grain");
+                    for i in b..e {
+                        hits[i].fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+                assert!(
+                    hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                    "{s:?} n={n}: range not covered exactly once"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn heavy_tailed_batch_spreads_across_workers() {
+        // Regression for the old MIN_GRAIN=64 floor: 65 sleepy
+        // iterations used to split into one 64-iteration chunk plus a
+        // straggler, so one thread ran 64 of them back to back. Under a
+        // small-min-batch strategy the batch must spread: no thread may
+        // run a near-total share, and at least two distinct threads
+        // must participate.
+        let pool = ThreadPool::new(test_pool_threads(4));
+        let per_thread = Mutex::new(std::collections::HashMap::new());
+        let strategy = BatchingStrategy::new().with_batches_per_thread(4).with_max_batch(16);
+        pool.run_with(65, &strategy, &|_w, b, e| {
+            for _ in b..e {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            *per_thread.lock().unwrap().entry(std::thread::current().id()).or_insert(0usize) +=
+                e - b;
+        });
+        let per_thread = per_thread.lock().unwrap();
+        let total: usize = per_thread.values().sum();
+        assert_eq!(total, 65);
+        assert!(per_thread.len() >= 2, "heavy-tailed batch did not spread");
+        let max = per_thread.values().copied().max().unwrap();
+        assert!(max < 64, "one thread ran {max}/65 iterations — the old grain-floor pathology");
+    }
+
+    #[test]
     fn worker_ids_are_dense_and_exclusive() {
-        let pool = ThreadPool::new(4);
+        let threads = test_pool_threads(4);
+        let pool = ThreadPool::new(threads);
         let n = 100_000;
         // Every chunk records its worker id; ids must stay below the
         // thread count and jointly cover the whole iteration space.
         let owner: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(usize::MAX)).collect();
         pool.run_chunked_worker(n, &|w, b, e| {
-            assert!(w < 4, "worker id {w} out of range");
+            assert!(w < threads, "worker id {w} out of range");
             for i in b..e {
                 owner[i].store(w, Ordering::Relaxed);
             }
         });
-        assert!(owner.iter().all(|o| o.load(Ordering::Relaxed) < 4));
+        assert!(owner.iter().all(|o| o.load(Ordering::Relaxed) < threads));
     }
 
     #[test]
     fn coarse_tasks_cover_the_range_and_spread_across_workers() {
-        let pool = ThreadPool::new(4);
+        let pool = ThreadPool::new(test_pool_threads(4));
         // Coverage: every index runs exactly once.
         let n = 37;
         let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
@@ -253,8 +368,44 @@ mod tests {
     }
 
     #[test]
+    fn pool_survives_a_panicking_dispatch() {
+        let pool = ThreadPool::new(test_pool_threads(4));
+        // A panic in a dispatched closure must re-throw on the caller —
+        // not kill a worker thread (which would poison the pool: the
+        // next dispatch's channel send would abort).
+        for round in 0..3 {
+            let err = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                pool.run_tasks(32, &|i| {
+                    if i == 13 {
+                        panic!("boom {round}");
+                    }
+                });
+            }));
+            let payload = err.expect_err("dispatch panic must propagate to the caller");
+            let msg = payload.downcast_ref::<String>().expect("payload must round-trip");
+            assert_eq!(msg, &format!("boom {round}"));
+            // The pool still works at full strength afterwards.
+            let sum = AtomicU64::new(0);
+            pool.run_chunked(10_000, &|b, e| {
+                sum.fetch_add((b..e).map(|i| i as u64).sum::<u64>(), Ordering::Relaxed);
+            });
+            assert_eq!(sum.load(Ordering::Relaxed), 9_999 * 10_000 / 2);
+        }
+        // The single-chunk inline path panics straight through too.
+        let err = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run_chunked(10, &|_b, _e| panic!("inline"));
+        }));
+        assert!(err.is_err());
+        let count = AtomicUsize::new(0);
+        pool.run_tasks(5, &|_| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 5);
+    }
+
+    #[test]
     fn nested_sequential_dispatches_do_not_deadlock() {
-        let pool = ThreadPool::new(3);
+        let pool = ThreadPool::new(test_pool_threads(3));
         for _ in 0..50 {
             pool.run_chunked(10_000, &|_b, _e| {});
         }
@@ -262,7 +413,7 @@ mod tests {
 
     #[test]
     fn drop_joins_workers() {
-        let pool = ThreadPool::new(2);
+        let pool = ThreadPool::new(test_pool_threads(2));
         pool.run_chunked(100, &|_b, _e| {});
         drop(pool); // must not hang
     }

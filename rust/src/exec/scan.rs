@@ -3,7 +3,13 @@
 //! Used to turn per-query result counts into CSR offsets in the 2P batched
 //! query engine (paper §2.2.1) and inside the radix sort.
 
-use super::ExecSpace;
+use super::{BatchingStrategy, ExecSpace};
+
+/// Strategy for both scan passes: like the radix sort, the scan pre-sizes
+/// its own chunks (`threads * 4` contiguous slices), so each dispatched
+/// index is a coarse batch claimed as its own task. The legacy chunked
+/// default's 64-index floor would run the whole pass on the caller.
+const SCAN_PASS: BatchingStrategy = BatchingStrategy::tasks();
 
 /// Exclusive scan of `counts`, returning an offsets array of length
 /// `counts.len() + 1` whose last element is the total.
@@ -35,7 +41,7 @@ pub fn exclusive_scan(space: &ExecSpace, counts: &[u32]) -> Vec<u64> {
     let mut sums = vec![0u64; chunks];
     {
         let sums_ptr = SendPtr(sums.as_mut_ptr());
-        space.parallel_for(chunks, |c| {
+        space.parallel_for_with(chunks, &SCAN_PASS, |c| {
             let b = c * grain;
             let e = ((c + 1) * grain).min(n);
             let s: u64 = counts[b..e].iter().map(|&v| v as u64).sum();
@@ -55,7 +61,7 @@ pub fn exclusive_scan(space: &ExecSpace, counts: &[u32]) -> Vec<u64> {
     {
         let off_ptr = SendPtr(offsets.as_mut_ptr());
         let chunk_prefix = &chunk_prefix;
-        space.parallel_for(chunks, |c| {
+        space.parallel_for_with(chunks, &SCAN_PASS, |c| {
             let b = c * grain;
             let e = ((c + 1) * grain).min(n);
             let mut acc = chunk_prefix[c];

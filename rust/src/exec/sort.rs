@@ -9,7 +9,15 @@
 //! inherits.
 
 use super::scan::SendPtr;
-use super::ExecSpace;
+use super::{BatchingStrategy, ExecSpace};
+
+/// Strategy for the histogram/scatter passes: the sort pre-sizes its own
+/// power-of-two-friendly chunks (`threads * 4` of them, each a contiguous
+/// `grain`-sized slice), so each dispatched index is already a coarse
+/// batch — task semantics, one claimable unit per chunk. Under the legacy
+/// chunked default the whole pass would fall below the 64-index batch
+/// floor and run serially on the caller.
+const SORT_PASS: BatchingStrategy = BatchingStrategy::tasks();
 
 /// Keys sortable by the radix sort: fixed-width unsigned integers.
 pub trait RadixKey: Copy + Send + Sync + Default + Ord {
@@ -72,7 +80,7 @@ pub fn sort_pairs<K: RadixKey>(space: &ExecSpace, keys: &mut Vec<K>, values: &mu
             // Pass A: per-chunk histograms.
             hist.iter_mut().for_each(|h| *h = 0);
             let hist_ptr = SendPtr(hist.as_mut_ptr());
-            space.parallel_for(chunks, |c| {
+            space.parallel_for_with(chunks, &SORT_PASS, |c| {
                 let b = c * grain;
                 let e = ((c + 1) * grain).min(n);
                 let mut local = [0u64; RADIX];
@@ -106,7 +114,7 @@ pub fn sort_pairs<K: RadixKey>(space: &ExecSpace, keys: &mut Vec<K>, values: &mu
                     (&keys_alt, &vals_alt, SendPtr(keys.as_mut_ptr()), SendPtr(values.as_mut_ptr()))
                 };
             let hist_ref = &hist;
-            space.parallel_for(chunks, |c| {
+            space.parallel_for_with(chunks, &SORT_PASS, |c| {
                 let b = c * grain;
                 let e = ((c + 1) * grain).min(n);
                 let mut offsets = [0u64; RADIX];

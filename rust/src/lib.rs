@@ -117,7 +117,7 @@ pub mod prelude {
         UpdateReport, Versioned, WaitError,
     };
     pub use crate::data::shapes::{PointCloud, Shape};
-    pub use crate::exec::ExecSpace;
+    pub use crate::exec::{BatchingStrategy, ExecSpace};
     pub use crate::geometry::predicates::{
         attach, DistanceTo, FirstHit, FirstHitQuery, IntersectsBox, IntersectsRay,
         IntersectsSphere, Nearest, NearestQuery, Spatial, SpatialPredicate, WithData,
