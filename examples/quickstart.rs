@@ -249,4 +249,39 @@ fn main() {
         found.fetch_add(count_spatial(&bvh, &pred, &mut stack) as u64, Ordering::Relaxed);
     });
     println!("adaptive dispatch counted {} matches", found.load(Ordering::Relaxed));
+
+    // 12. Out-of-process serving: `NetServer` puts the whole wire
+    //     protocol on a TCP (or Unix) socket — length-prefixed frames
+    //     of encoded predicates in, binary response frames out, many
+    //     pipelined connections multiplexed onto one service with
+    //     per-connection backpressure. `NetClient` is the blocking
+    //     counterpart; a round trip answers exactly what a direct
+    //     `Bvh::query` on the same tree answers.
+    let net_svc = Arc::new(SearchService::start(
+        Arc::new(bvh.clone()),
+        ServiceConfig::default(),
+    ));
+    let mut net = NetServer::bind_tcp(Arc::clone(&net_svc), "127.0.0.1:0", NetConfig::default())
+        .expect("bind a loopback port");
+    let addr = net.local_addr().expect("tcp address");
+    let mut client = NetClient::connect_tcp(addr).expect("connect");
+    let over_wire = vec![
+        QueryPredicate::intersects_sphere(probes.points[0], 2.7),
+        QueryPredicate::nearest(probes.points[1], 4),
+    ];
+    let response = client.roundtrip(&over_wire).expect("framed round trip");
+    let direct = bvh.query(&space, &over_wire, &QueryOptions::default());
+    let (mut served, mut local) =
+        (response.results[0].indices.clone(), direct.results_for(0).to_vec());
+    served.sort();
+    local.sort();
+    assert_eq!(served, local, "the socket serves the same tree");
+    assert_eq!(response.results[1].indices, direct.results_for(1), "k-NN over the wire");
+    println!(
+        "tcp round trip on {addr}: {} + {} rows, identical to a direct query",
+        response.results[0].indices.len(),
+        response.results[1].indices.len()
+    );
+    net.shutdown();
+    net_svc.shutdown();
 }

@@ -1,0 +1,163 @@
+//! TCP serving driver — the wire protocol end to end over real sockets.
+//!
+//! 1. Build a BVH over the paper's filled-cube scene and start the
+//!    batched [`SearchService`].
+//! 2. Bind a [`NetServer`] on a loopback TCP port: every connection
+//!    speaks length-prefixed, pipelined frames of the tagged predicate
+//!    family and gets binary response frames back.
+//! 3. Drive it with 4 concurrent [`NetClient`]s, each pipelining framed
+//!    batches that rotate through all ten wire kinds; every response row
+//!    is cross-checked against a direct [`Bvh::query`] on the same tree.
+//! 4. Shut the service down under a live connection to show the
+//!    graceful-drain contract: in-flight frames answer, the next frame
+//!    gets a clean `STATUS_STOPPED` error frame, then EOF.
+//!
+//! Run with: `cargo run --release --example serve_tcp`
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use arbor::coordinator::wire::{wire_tag, STATUS_OK, STATUS_STOPPED};
+use arbor::prelude::*;
+
+/// One predicate per target point, rotating through all ten wire kinds.
+fn mixed_batch(points: &[Point], radius: f32, k: usize) -> Vec<QueryPredicate> {
+    let up = Point::new(0.0, 0.0, 1.0);
+    points
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let below = Point::new(p[0], p[1], p[2] - 5.0);
+            let half = Point::splat(radius);
+            match i % 10 {
+                0 => QueryPredicate::intersects_sphere(*p, radius),
+                1 => QueryPredicate::intersects_box(Aabb::new(*p - half, *p + half)),
+                2 => QueryPredicate::intersects_ray(Ray::new(below, up)),
+                3 => QueryPredicate::attach(
+                    Spatial::IntersectsSphere(Sphere::new(*p, radius)),
+                    i as u64,
+                ),
+                4 => QueryPredicate::attach(
+                    Spatial::IntersectsBox(Aabb::new(*p - half, *p + half)),
+                    i as u64,
+                ),
+                5 => QueryPredicate::attach(Spatial::IntersectsRay(Ray::new(below, up)), i as u64),
+                6 => QueryPredicate::nearest(*p, k),
+                7 => QueryPredicate::nearest_sphere(Sphere::new(*p, radius), k),
+                8 => QueryPredicate::nearest_box(Aabb::new(*p - half, *p + half), k),
+                _ => QueryPredicate::first_hit(Ray::new(below, up)),
+            }
+        })
+        .collect()
+}
+
+fn is_spatial(pred: &QueryPredicate) -> bool {
+    matches!(pred, QueryPredicate::Spatial(_) | QueryPredicate::Attach(..))
+}
+
+fn main() {
+    let threads = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(2);
+    let space = ExecSpace::with_threads(threads);
+    println!("== arbor-rs TCP serving driver (threads = {threads}) ==");
+
+    // ---- Scene + service ---------------------------------------------
+    let n = 50_000;
+    let cloud = PointCloud::generate(Shape::FilledCube, n, 42);
+    let half = 0.5f32;
+    let boxes: Vec<Aabb> = cloud
+        .points
+        .iter()
+        .map(|p| Aabb::new(*p - Point::splat(half), *p + Point::splat(half)))
+        .collect();
+    let t0 = Instant::now();
+    let bvh = Arc::new(Bvh::build(&space, &boxes));
+    println!("BVH build: {n} boxes in {:.1} ms", t0.elapsed().as_secs_f64() * 1e3);
+
+    let svc = Arc::new(SearchService::start(
+        Arc::clone(&bvh),
+        ServiceConfig { threads, ..Default::default() },
+    ));
+    let mut server = NetServer::bind_tcp(Arc::clone(&svc), "127.0.0.1:0", NetConfig::default())
+        .expect("bind loopback");
+    let addr = server.local_addr().expect("tcp address");
+    println!("serving on {addr}");
+
+    // ---- Concurrent framed clients -----------------------------------
+    let clients = 4;
+    let per_client = 400; // x10 kinds, 25 frames of 16
+    let frame = 16;
+    let radius = 1.0f32;
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let targets = &cloud.points[c * per_client..(c + 1) * per_client];
+        let preds = mixed_batch(targets, radius, 8);
+        // The oracle: the same predicates answered directly on the tree.
+        let direct = bvh.query(&space, &preds, &QueryOptions::default());
+        let expected: Vec<(Vec<u32>, Vec<f32>)> = preds
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                let mut idx = direct.results_for(i).to_vec();
+                let dist = if is_spatial(p) {
+                    idx.sort();
+                    Vec::new()
+                } else {
+                    direct.distances_for(i).to_vec()
+                };
+                (idx, dist)
+            })
+            .collect();
+        handles.push(std::thread::spawn(move || {
+            let mut client = NetClient::connect_tcp(addr).expect("connect");
+            let mut results = 0usize;
+            // Pipeline the whole session: submit every frame before
+            // reading the first response.
+            let ids: Vec<u64> =
+                preds.chunks(frame).map(|b| client.submit(b).expect("submit")).collect();
+            for (fi, id) in ids.iter().enumerate() {
+                let response = client.receive().expect("response");
+                assert_eq!(response.request_id, *id, "responses arrive in request order");
+                assert_eq!(response.status, STATUS_OK);
+                for (qi, result) in response.results.iter().enumerate() {
+                    let q = fi * frame + qi;
+                    assert_eq!(result.tag, wire_tag(&preds[q]), "tag echo");
+                    let mut got = result.indices.clone();
+                    if is_spatial(&preds[q]) {
+                        got.sort();
+                    }
+                    assert_eq!(got, expected[q].0, "client {c} query {q}: indices");
+                    assert_eq!(result.distances, expected[q].1, "client {c} query {q}");
+                    results += result.indices.len();
+                }
+            }
+            results
+        }));
+    }
+    let total: usize = handles.into_iter().map(|h| h.join().expect("client")).sum();
+    let wall = t0.elapsed().as_secs_f64();
+    let n_requests = clients * per_client;
+    println!(
+        "tcp: {n_requests} queries from {clients} pipelined connections in {:.1} ms \
+         -> {:.0} queries/s, {total} results, all rows == direct Bvh::query",
+        wall * 1e3,
+        n_requests as f64 / wall
+    );
+
+    // ---- Graceful drain under a live connection ----------------------
+    let mut survivor = NetClient::connect_tcp(addr).expect("connect");
+    let preds = mixed_batch(&cloud.points[..20], radius, 8);
+    let response = survivor.roundtrip(&preds).expect("pre-shutdown frame");
+    assert_eq!(response.status, STATUS_OK);
+    svc.shutdown();
+    let id = survivor.submit(&preds).expect("the socket is still open");
+    let stopped = survivor.receive().expect("error frame, not a hang");
+    assert_eq!((stopped.request_id, stopped.status), (id, STATUS_STOPPED));
+    let eof = survivor.receive().expect_err("server half-closes after the error");
+    assert_eq!(eof.kind(), std::io::ErrorKind::UnexpectedEof);
+    println!("shutdown: post-stop frame answered STATUS_STOPPED, then clean EOF");
+
+    println!("service metrics: {}", svc.metrics().summary());
+    server.shutdown();
+    println!("== TCP serving driver complete ==");
+}

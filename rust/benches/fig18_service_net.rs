@@ -1,0 +1,215 @@
+//! Figure 18 (ours): the TCP front end under pipelined client load.
+//!
+//! A `NetServer` on a loopback port serves a filled-cube BVH through the
+//! batched `SearchService`; a sweep of concurrent connections each
+//! pipelines framed batches (8 predicates per frame, a 4-frame window,
+//! all ten wire kinds round-robin) and measures per-frame
+//! submit-to-response latency through the full stack — framing, the
+//! bounded per-connection in-flight queue, the dynamic batcher, the
+//! monomorphized engines, and the binary response path back. Reported
+//! per client count: wall time, end-to-end queries/s, and p50/p95/p99
+//! frame latency. A subsampled oracle pass first checks the served rows
+//! against direct `Bvh::query` answers on the same tree. Results go to
+//! `bench_out/fig18_service_net.csv` and `BENCH_service_net.json`.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use arbor::bench_util::{f, quick, reps, size, write_json_snapshot, JsonValue, Table};
+use arbor::bvh::{Bvh, QueryOptions, QueryPredicate};
+use arbor::coordinator::net::{NetClient, NetConfig, NetServer};
+use arbor::coordinator::service::{SearchService, ServiceConfig};
+use arbor::coordinator::wire::STATUS_OK;
+use arbor::data::shapes::{PointCloud, Shape};
+use arbor::exec::ExecSpace;
+use arbor::geometry::predicates::Spatial;
+use arbor::geometry::{Aabb, Point, Ray, Sphere};
+
+const FRAME: usize = 8;
+const WINDOW: usize = 4;
+
+/// One predicate per point, rotating through all ten wire kinds.
+fn mixed_batch(points: &[Point], radius: f32, k: usize) -> Vec<QueryPredicate> {
+    let up = Point::new(0.0, 0.0, 1.0);
+    points
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let below = Point::new(p[0], p[1], p[2] - 5.0);
+            let half = Point::splat(radius);
+            match i % 10 {
+                0 => QueryPredicate::intersects_sphere(*p, radius),
+                1 => QueryPredicate::intersects_box(Aabb::new(*p - half, *p + half)),
+                2 => QueryPredicate::intersects_ray(Ray::new(below, up)),
+                3 => QueryPredicate::attach(
+                    Spatial::IntersectsSphere(Sphere::new(*p, radius)),
+                    i as u64,
+                ),
+                4 => QueryPredicate::attach(
+                    Spatial::IntersectsBox(Aabb::new(*p - half, *p + half)),
+                    i as u64,
+                ),
+                5 => QueryPredicate::attach(Spatial::IntersectsRay(Ray::new(below, up)), i as u64),
+                6 => QueryPredicate::nearest(*p, k),
+                7 => QueryPredicate::nearest_sphere(Sphere::new(*p, radius), k),
+                8 => QueryPredicate::nearest_box(Aabb::new(*p - half, *p + half), k),
+                _ => QueryPredicate::first_hit(Ray::new(below, up)),
+            }
+        })
+        .collect()
+}
+
+/// Drives one connection: pipelines `preds` in FRAME-sized chunks with a
+/// WINDOW-frame in-flight cap, returning per-frame latencies (seconds).
+fn drive_client(
+    addr: std::net::SocketAddr,
+    preds: &[QueryPredicate],
+) -> Vec<f64> {
+    let mut client = NetClient::connect_tcp(addr).expect("connect");
+    let mut latencies = Vec::with_capacity(preds.len() / FRAME + 1);
+    let mut inflight: VecDeque<(u64, Instant)> = VecDeque::new();
+    let mut settle = |client: &mut NetClient, inflight: &mut VecDeque<(u64, Instant)>| {
+        let (id, submitted) = inflight.pop_front().expect("inflight frame");
+        let response = client.receive().expect("response");
+        assert_eq!(response.request_id, id, "responses arrive in request order");
+        assert_eq!(response.status, STATUS_OK);
+        latencies.push(submitted.elapsed().as_secs_f64());
+    };
+    for chunk in preds.chunks(FRAME) {
+        if inflight.len() == WINDOW {
+            settle(&mut client, &mut inflight);
+        }
+        let id = client.submit(chunk).expect("submit");
+        inflight.push_back((id, Instant::now()));
+    }
+    while !inflight.is_empty() {
+        settle(&mut client, &mut inflight);
+    }
+    latencies
+}
+
+/// The q-th percentile of an (unsorted) latency sample, in milliseconds.
+fn pct_ms(latencies: &mut [f64], q: f64) -> f64 {
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let i = ((latencies.len() - 1) as f64 * q).round() as usize;
+    latencies[i] * 1e3
+}
+
+fn main() {
+    let threads = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(2);
+    let n = size(100_000, 2_000);
+    let frames_per_client = size(200, 30);
+    let client_counts: Vec<usize> = if quick() { vec![1, 4] } else { vec![1, 4, 16] };
+    let radius = 1.0f32;
+    let space = ExecSpace::with_threads(threads);
+
+    let cloud = PointCloud::generate(Shape::FilledCube, n, 42);
+    let half = 0.5f32;
+    let boxes: Vec<Aabb> = cloud
+        .points
+        .iter()
+        .map(|p| Aabb::new(*p - Point::splat(half), *p + Point::splat(half)))
+        .collect();
+    let bvh = Arc::new(Bvh::build(&space, &boxes));
+    let svc = Arc::new(SearchService::start(
+        Arc::clone(&bvh),
+        ServiceConfig { threads, batch_timeout: Duration::from_millis(1), ..Default::default() },
+    ));
+    let mut server = NetServer::bind_tcp(
+        Arc::clone(&svc),
+        "127.0.0.1:0",
+        NetConfig { max_in_flight: 2 * WINDOW, ..Default::default() },
+    )
+    .expect("bind loopback");
+    let addr = server.local_addr().expect("tcp address");
+
+    // Oracle pass: a served subsample must match direct queries row for
+    // row before any throughput is reported.
+    let probe = mixed_batch(&cloud.points[..40.min(n)], radius, 8);
+    let direct = bvh.query(&space, &probe, &QueryOptions::default());
+    let mut client = NetClient::connect_tcp(addr).expect("connect");
+    let response = client.roundtrip(&probe).expect("oracle roundtrip");
+    assert_eq!(response.status, STATUS_OK);
+    for (qi, result) in response.results.iter().enumerate() {
+        let mut got = result.indices.clone();
+        let mut want = direct.results_for(qi).to_vec();
+        got.sort();
+        want.sort();
+        assert_eq!(got, want, "oracle query {qi}: served != direct");
+    }
+    drop(client);
+
+    let r = reps();
+    let mut tab = Table::new(
+        "fig18_service_net",
+        &["clients", "frames", "queries", "wall_s", "queries_per_s", "p50_ms", "p95_ms", "p99_ms"],
+    );
+    let fixed: Vec<(&str, JsonValue)> = vec![
+        ("n_boxes", JsonValue::Int(n as u64)),
+        ("frame_len", JsonValue::Int(FRAME as u64)),
+        ("window", JsonValue::Int(WINDOW as u64)),
+        ("frames_per_client", JsonValue::Int(frames_per_client as u64)),
+        ("threads", JsonValue::Int(threads as u64)),
+    ];
+    let mut measured: Vec<(String, f64)> = Vec::new();
+
+    for &clients in &client_counts {
+        let per_client = frames_per_client * FRAME;
+        let n_queries = clients * per_client;
+        let mut walls = Vec::with_capacity(r.max(1));
+        let mut latencies: Vec<f64> = Vec::new();
+        for _ in 0..r.max(1) {
+            let t0 = Instant::now();
+            let handles: Vec<_> = (0..clients)
+                .map(|c| {
+                    // Stride the scene so concurrent clients don't share
+                    // anchor points (wrap if the sweep outruns it).
+                    let preds: Vec<QueryPredicate> = mixed_batch(
+                        &(0..per_client)
+                            .map(|i| cloud.points[(c * per_client + i) % n])
+                            .collect::<Vec<_>>(),
+                        radius,
+                        8,
+                    );
+                    std::thread::spawn(move || drive_client(addr, &preds))
+                })
+                .collect();
+            for h in handles {
+                latencies.extend(h.join().expect("client thread"));
+            }
+            walls.push(t0.elapsed().as_secs_f64());
+        }
+        walls.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let wall = walls[walls.len() / 2];
+        let qps = n_queries as f64 / wall;
+        let (p50, p95, p99) = (
+            pct_ms(&mut latencies, 0.50),
+            pct_ms(&mut latencies, 0.95),
+            pct_ms(&mut latencies, 0.99),
+        );
+        tab.row(&[
+            clients.to_string(),
+            (clients * frames_per_client).to_string(),
+            n_queries.to_string(),
+            f(wall),
+            f(qps),
+            f(p50),
+            f(p95),
+            f(p99),
+        ]);
+        measured.push((format!("c{clients}_queries_per_s"), qps));
+        measured.push((format!("c{clients}_p50_ms"), p50));
+        measured.push((format!("c{clients}_p95_ms"), p95));
+        measured.push((format!("c{clients}_p99_ms"), p99));
+    }
+
+    println!("net metrics: {}", svc.metrics().summary());
+    server.shutdown();
+    svc.shutdown();
+
+    tab.write_csv();
+    let mut fields = fixed;
+    fields.extend(measured.iter().map(|(k, v)| (k.as_str(), JsonValue::Num(*v))));
+    write_json_snapshot("BENCH_service_net.json", &fields);
+}

@@ -242,6 +242,18 @@ pub struct Metrics {
     /// Matches streamed through the distributed spatial callback path
     /// (straight into per-query accumulators, no per-rank vectors).
     streamed_results: AtomicU64,
+    /// Connections accepted by the network front end.
+    net_connections: AtomicU64,
+    /// Request frames parsed off client connections (well-framed, before
+    /// the body decode).
+    net_frames: AtomicU64,
+    /// Frames rejected as malformed: framing violations (oversized /
+    /// zero-length / truncated declarations) and bodies `decode_batch`
+    /// refused.
+    net_malformed_frames: AtomicU64,
+    /// Reader-side stalls: a connection hit its bounded in-flight frame
+    /// window and had to block until the writer drained a response.
+    net_backpressure_stalls: AtomicU64,
     /// Scene updates published (each one epoch advance).
     updates: AtomicU64,
     /// Ranks bulk-refit by updates (the single backend counts as one
@@ -274,6 +286,10 @@ impl Default for Metrics {
             distributed_batches: AtomicU64::new(0),
             forwarded_queries: AtomicU64::new(0),
             streamed_results: AtomicU64::new(0),
+            net_connections: AtomicU64::new(0),
+            net_frames: AtomicU64::new(0),
+            net_malformed_frames: AtomicU64::new(0),
+            net_backpressure_stalls: AtomicU64::new(0),
             updates: AtomicU64::new(0),
             update_refit_ranks: AtomicU64::new(0),
             update_rebuilt_ranks: AtomicU64::new(0),
@@ -493,6 +509,48 @@ impl Metrics {
         self.streamed_results.load(Ordering::Relaxed)
     }
 
+    /// Records one accepted client connection on the network front end.
+    pub fn record_net_connection(&self) {
+        self.net_connections.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Records one well-framed request frame parsed off a connection.
+    pub fn record_net_frame(&self) {
+        self.net_frames.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Records one frame rejected as malformed (framing violation or a
+    /// body `decode_batch` refused).
+    pub fn record_net_malformed(&self) {
+        self.net_malformed_frames.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Records one backpressure stall: a connection reader found its
+    /// in-flight frame window full and blocked.
+    pub fn record_net_stall(&self) {
+        self.net_backpressure_stalls.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Connections accepted by the network front end.
+    pub fn net_connections(&self) -> u64 {
+        self.net_connections.load(Ordering::Relaxed)
+    }
+
+    /// Request frames parsed off client connections.
+    pub fn net_frames(&self) -> u64 {
+        self.net_frames.load(Ordering::Relaxed)
+    }
+
+    /// Frames rejected as malformed by the network front end.
+    pub fn net_malformed_frames(&self) -> u64 {
+        self.net_malformed_frames.load(Ordering::Relaxed)
+    }
+
+    /// Backpressure stalls recorded by connection readers.
+    pub fn net_backpressure_stalls(&self) -> u64 {
+        self.net_backpressure_stalls.load(Ordering::Relaxed)
+    }
+
     /// Records one published scene update: `refit_ranks` ranks were
     /// bulk-refit, `rebuilt_ranks` crossed the quality threshold and
     /// were rebuilt (the single backend reports 1/0 or 0/1).
@@ -545,6 +603,7 @@ impl Metrics {
             "requests={} batches={} results={} throughput={:.0}/s \
              p50={}us p95={}us p99={}us passes(1p/fallback/2p)={}/{}/{} \
              first_hit={}/{} dist(batches/forwarded/streamed)={}/{}/{} \
+             net(conns/frames/malformed/stalls)={}/{}/{}/{} \
              updates={}(refit/rebuilt={}/{})",
             self.requests(),
             self.batches(),
@@ -561,6 +620,10 @@ impl Metrics {
             self.distributed_batches(),
             self.forwarded_queries(),
             self.streamed_results(),
+            self.net_connections(),
+            self.net_frames(),
+            self.net_malformed_frames(),
+            self.net_backpressure_stalls(),
             self.updates(),
             self.update_refit_ranks(),
             self.update_rebuilt_ranks(),
@@ -619,6 +682,26 @@ mod tests {
         assert_eq!(m.forwarded_queries(), 15);
         assert_eq!(m.streamed_results(), 340);
         assert!(m.summary().contains("dist(batches/forwarded/streamed)=2/15/340"));
+    }
+
+    #[test]
+    fn net_counters_accumulate() {
+        let m = Metrics::default();
+        assert_eq!(m.net_connections(), 0);
+        m.record_net_connection();
+        m.record_net_connection();
+        for _ in 0..5 {
+            m.record_net_frame();
+        }
+        m.record_net_malformed();
+        m.record_net_stall();
+        m.record_net_stall();
+        m.record_net_stall();
+        assert_eq!(m.net_connections(), 2);
+        assert_eq!(m.net_frames(), 5);
+        assert_eq!(m.net_malformed_frames(), 1);
+        assert_eq!(m.net_backpressure_stalls(), 3);
+        assert!(m.summary().contains("net(conns/frames/malformed/stalls)=2/5/1/3"));
     }
 
     #[test]

@@ -14,7 +14,13 @@
 //!   [`crate::bvh::batched`], and returns per-query results with latency
 //!   accounting.
 //! * [`wire`] — the byte-level tag + payload encoding of the predicate
-//!   family (the out-of-process transport of the same protocol).
+//!   family (the out-of-process transport of the same protocol), plus
+//!   the length-prefixed frame layer and binary response encoding it
+//!   travels in on a stream transport.
+//! * [`net`] — the TCP / Unix-socket front end: a server multiplexing
+//!   many concurrent framed, pipelined client connections onto one
+//!   [`service::SearchService`] with per-connection backpressure and
+//!   graceful drain, and a blocking [`net::NetClient`].
 //! * [`metrics`] — latency/throughput counters (p50/p95/p99), per-kind
 //!   result-count histograms, and the adaptive 1P buffer policy fed by
 //!   them.
@@ -31,5 +37,6 @@
 
 pub mod distributed;
 pub mod metrics;
+pub mod net;
 pub mod service;
 pub mod wire;

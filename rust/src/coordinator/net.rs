@@ -1,0 +1,575 @@
+//! TCP / Unix-socket front end for the wire protocol.
+//!
+//! [`NetServer`] multiplexes many concurrent client connections onto one
+//! [`SearchService`]: each connection carries length-prefixed frames
+//! (`u32` LE length, `u64` LE request id, body decoded with
+//! [`decode_batch`](super::wire::decode_batch) — see the framing table
+//! in [`super::wire`]), clients may pipeline any number of requests, and
+//! responses echo the request id and mirror the request predicates' tags
+//! in order.
+//!
+//! # Connection anatomy
+//!
+//! Every accepted connection gets a **reader** thread and a **writer**
+//! thread joined by a bounded job queue:
+//!
+//! - the reader buffers bytes, carves frames with the non-allocating
+//!   [`parse_frame`](super::wire::parse_frame) (the declared length is
+//!   gated against [`MAX_FRAME_LEN`](super::wire::MAX_FRAME_LEN)
+//!   *before* anything is buffered), and submits each body through
+//!   [`SearchService::submit_encoded_batch`] — one decode pass, one
+//!   `tx` lock acquisition per frame;
+//! - the writer drains the queue in order, waits each query with
+//!   [`Pending::wait_timeout`] (a stuck backend degrades to a
+//!   [`STATUS_TIMEOUT`](super::wire::STATUS_TIMEOUT) error frame, never
+//!   a pinned thread), and writes the response frame.
+//!
+//! The queue bound ([`NetConfig::max_in_flight`]) is the per-connection
+//! backpressure: a chatty client that outruns its own reads fills the
+//! queue, its reader blocks (recorded as a backpressure stall in
+//! [`Metrics`](super::metrics::Metrics)), and — via TCP flow control —
+//! the client's own sends eventually block, so one connection cannot
+//! flood the batcher while others starve.
+//!
+//! # Failure semantics
+//!
+//! A body that fails `decode_batch` rejects the *whole frame* with
+//! [`STATUS_MALFORMED`](super::wire::STATUS_MALFORMED) and submits
+//! nothing, but the connection's framing is intact so it keeps serving.
+//! A framing violation (oversized / zero-length declaration, or bytes
+//! left over at EOF) also answers `STATUS_MALFORMED` where a request id
+//! is known, then closes — the byte stream cannot be resynchronized.
+//! Other connections are unaffected either way. On
+//! [`SearchService::shutdown`] the service refuses new frames with
+//! [`SubmitError::Stopped`]; the connection answers
+//! [`STATUS_STOPPED`](super::wire::STATUS_STOPPED), drains the responses
+//! already in flight (shutdown is drain-then-exit, so accepted queries
+//! still answer `STATUS_OK`), and closes cleanly — a half-finished
+//! connection gets clean error frames and EOF, not a hang or a panic.
+
+use std::io::{self, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+#[cfg(unix)]
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::service::{Pending, SearchService, SubmitError, WaitError};
+use super::wire::{
+    batch_tags, decode_response_body, encode_batch, encode_frame, encode_result, parse_frame,
+    parse_frame_with, FrameParse, WireResult, MAX_FRAME_LEN, MAX_RESPONSE_LEN, STATUS_DROPPED,
+    STATUS_MALFORMED, STATUS_OK, STATUS_OVERSIZED, STATUS_STOPPED, STATUS_TIMEOUT,
+};
+use crate::bvh::QueryPredicate;
+
+/// Per-connection tuning for [`NetServer`].
+#[derive(Clone, Debug)]
+pub struct NetConfig {
+    /// Bound on frames submitted but not yet answered per connection —
+    /// the backpressure window. A full window blocks the connection's
+    /// reader (recorded as a stall) instead of the batcher.
+    pub max_in_flight: usize,
+    /// How long the writer waits any single query before giving up on
+    /// the frame with a `STATUS_TIMEOUT` error response.
+    pub response_timeout: Duration,
+    /// Accept-loop poll period and reader read-timeout tick — the
+    /// latency bound on noticing [`NetServer::shutdown`] from an idle
+    /// wait.
+    pub poll_interval: Duration,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            max_in_flight: 64,
+            response_timeout: Duration::from_secs(30),
+            poll_interval: Duration::from_millis(25),
+        }
+    }
+}
+
+/// A stream a connection can be served on: TCP and Unix sockets share
+/// the reader/writer machinery through this seam.
+pub trait Conn: Read + Write + Send + Sized + 'static {
+    /// A second handle on the same stream (reader and writer threads).
+    fn try_clone_conn(&self) -> io::Result<Self>;
+    /// Bounds blocking reads so an idle connection notices shutdown.
+    fn set_read_timeout_conn(&self, timeout: Option<Duration>) -> io::Result<()>;
+    /// Half-closes the write side (the client's clean EOF).
+    fn shutdown_write(&self) -> io::Result<()>;
+}
+
+impl Conn for TcpStream {
+    fn try_clone_conn(&self) -> io::Result<Self> {
+        self.try_clone()
+    }
+
+    fn set_read_timeout_conn(&self, timeout: Option<Duration>) -> io::Result<()> {
+        self.set_read_timeout(timeout)
+    }
+
+    fn shutdown_write(&self) -> io::Result<()> {
+        self.shutdown(Shutdown::Write)
+    }
+}
+
+#[cfg(unix)]
+impl Conn for UnixStream {
+    fn try_clone_conn(&self) -> io::Result<Self> {
+        self.try_clone()
+    }
+
+    fn set_read_timeout_conn(&self, timeout: Option<Duration>) -> io::Result<()> {
+        self.set_read_timeout(timeout)
+    }
+
+    fn shutdown_write(&self) -> io::Result<()> {
+        self.shutdown(Shutdown::Write)
+    }
+}
+
+/// A listener the accept loop can poll: the non-blocking accept seam
+/// shared by [`TcpListener`] and [`UnixListener`].
+trait Listener: Send + 'static {
+    type Stream: Conn;
+    /// One non-blocking accept attempt (`WouldBlock` when idle).
+    fn accept_stream(&self) -> io::Result<Self::Stream>;
+}
+
+impl Listener for TcpListener {
+    type Stream = TcpStream;
+
+    fn accept_stream(&self) -> io::Result<TcpStream> {
+        let (stream, _) = self.accept()?;
+        // The listener polls non-blocking; the connection itself must
+        // block (with a read timeout) — don't let the flag leak through.
+        stream.set_nonblocking(false)?;
+        Ok(stream)
+    }
+}
+
+#[cfg(unix)]
+impl Listener for UnixListener {
+    type Stream = UnixStream;
+
+    fn accept_stream(&self) -> io::Result<UnixStream> {
+        let (stream, _) = self.accept()?;
+        stream.set_nonblocking(false)?;
+        Ok(stream)
+    }
+}
+
+/// The network front end: owns the accept loop and every connection
+/// thread it spawned. Dropping the server shuts it down
+/// ([`NetServer::shutdown`] is idempotent); the [`SearchService`] it
+/// serves is shared, not owned, so shutting the server down does not
+/// stop the service.
+pub struct NetServer {
+    local_addr: Option<SocketAddr>,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    #[cfg(unix)]
+    unix_path: Option<PathBuf>,
+}
+
+impl NetServer {
+    /// Binds a TCP listener (use port 0 for an ephemeral port, then
+    /// [`NetServer::local_addr`]) and starts accepting connections onto
+    /// `service`.
+    pub fn bind_tcp(
+        service: Arc<SearchService>,
+        addr: impl ToSocketAddrs,
+        config: NetConfig,
+    ) -> io::Result<NetServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local_addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept = spawn_accept(listener, service, config, Arc::clone(&stop));
+        Ok(NetServer {
+            local_addr: Some(local_addr),
+            stop,
+            accept: Some(accept),
+            #[cfg(unix)]
+            unix_path: None,
+        })
+    }
+
+    /// Binds a Unix socket at `path` (removed again on shutdown) and
+    /// starts accepting connections onto `service`.
+    #[cfg(unix)]
+    pub fn bind_unix(
+        service: Arc<SearchService>,
+        path: impl AsRef<Path>,
+        config: NetConfig,
+    ) -> io::Result<NetServer> {
+        let path = path.as_ref().to_path_buf();
+        let listener = UnixListener::bind(&path)?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept = spawn_accept(listener, service, config, Arc::clone(&stop));
+        Ok(NetServer { local_addr: None, stop, accept: Some(accept), unix_path: Some(path) })
+    }
+
+    /// The bound TCP address (`None` for a Unix-socket server).
+    pub fn local_addr(&self) -> Option<SocketAddr> {
+        self.local_addr
+    }
+
+    /// Stops accepting, lets every connection drain (readers notice the
+    /// stop flag within one poll tick; writers finish their queued
+    /// responses), and joins all the threads. Idempotent.
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(accept) = self.accept.take() {
+            let _ = accept.join();
+        }
+        #[cfg(unix)]
+        if let Some(path) = self.unix_path.take() {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn spawn_accept<L: Listener>(
+    listener: L,
+    service: Arc<SearchService>,
+    config: NetConfig,
+    stop: Arc<AtomicBool>,
+) -> JoinHandle<()> {
+    std::thread::spawn(move || {
+        let mut conns: Vec<JoinHandle<()>> = Vec::new();
+        while !stop.load(Ordering::Acquire) {
+            match listener.accept_stream() {
+                Ok(stream) => {
+                    service.metrics().record_net_connection();
+                    let service = Arc::clone(&service);
+                    let config = config.clone();
+                    let stop = Arc::clone(&stop);
+                    conns.push(std::thread::spawn(move || {
+                        handle_connection(stream, service, config, stop);
+                    }));
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    // Reap finished connections so a long-lived server
+                    // doesn't accumulate dead handles.
+                    conns = std::mem::take(&mut conns)
+                        .into_iter()
+                        .filter_map(|h| {
+                            if h.is_finished() {
+                                let _ = h.join();
+                                None
+                            } else {
+                                Some(h)
+                            }
+                        })
+                        .collect();
+                    std::thread::sleep(config.poll_interval);
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(_) => break,
+            }
+        }
+        for conn in conns {
+            let _ = conn.join();
+        }
+    })
+}
+
+/// One queued unit of writer work: a submitted frame's pendings (with
+/// the request tags its response must mirror) or an immediate error
+/// response.
+enum Job {
+    Batch { request_id: u64, tags: Vec<u8>, pendings: Vec<Pending> },
+    Error { request_id: u64, status: u8 },
+}
+
+/// Queues a job, counting a backpressure stall when the bounded window
+/// is full and the reader has to block. `Err` means the writer is gone.
+fn send_job(tx: &SyncSender<Job>, job: Job, service: &SearchService) -> Result<(), ()> {
+    match tx.try_send(job) {
+        Ok(()) => Ok(()),
+        Err(TrySendError::Full(job)) => {
+            service.metrics().record_net_stall();
+            tx.send(job).map_err(|_| ())
+        }
+        Err(TrySendError::Disconnected(_)) => Err(()),
+    }
+}
+
+fn handle_connection<S: Conn>(
+    stream: S,
+    service: Arc<SearchService>,
+    config: NetConfig,
+    stop: Arc<AtomicBool>,
+) {
+    let Ok(writer_stream) = stream.try_clone_conn() else { return };
+    if stream.set_read_timeout_conn(Some(config.poll_interval)).is_err() {
+        return;
+    }
+    let (job_tx, job_rx) = sync_channel(config.max_in_flight.max(1));
+    let response_timeout = config.response_timeout;
+    let writer = std::thread::spawn(move || writer_loop(writer_stream, job_rx, response_timeout));
+
+    let mut stream = stream;
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 16 * 1024];
+    let mut open = true;
+    while open {
+        // Carve every complete frame currently buffered.
+        let mut consumed = 0;
+        loop {
+            match parse_frame(&buf[consumed..]) {
+                FrameParse::Incomplete => break,
+                FrameParse::Malformed { request_id } => {
+                    // The length prefix itself is hostile; after it the
+                    // stream cannot be resynchronized, so answer what we
+                    // can and close this connection (others keep going).
+                    service.metrics().record_net_malformed();
+                    if let Some(request_id) = request_id {
+                        let job = Job::Error { request_id, status: STATUS_MALFORMED };
+                        let _ = send_job(&job_tx, job, &service);
+                    }
+                    open = false;
+                    break;
+                }
+                FrameParse::Frame { request_id, body_start, body_end, used } => {
+                    service.metrics().record_net_frame();
+                    let body = &buf[consumed + body_start..consumed + body_end];
+                    let job = match service.submit_encoded_batch(body) {
+                        Ok(pendings) => {
+                            // decode_batch accepted the body, so the
+                            // size-table walk cannot fail.
+                            let tags = batch_tags(body).unwrap_or_default();
+                            Job::Batch { request_id, tags, pendings }
+                        }
+                        Err(SubmitError::Malformed) => {
+                            service.metrics().record_net_malformed();
+                            Job::Error { request_id, status: STATUS_MALFORMED }
+                        }
+                        Err(SubmitError::Stopped) => {
+                            // Graceful drain: everything already queued
+                            // still answers; this frame and the
+                            // connection are done.
+                            open = false;
+                            Job::Error { request_id, status: STATUS_STOPPED }
+                        }
+                    };
+                    consumed += used;
+                    if send_job(&job_tx, job, &service).is_err() {
+                        open = false;
+                    }
+                    if !open {
+                        break;
+                    }
+                }
+            }
+        }
+        buf.drain(..consumed);
+        if !open {
+            break;
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => {
+                // EOF with a partial frame still buffered = a truncated
+                // frame on the wire.
+                if !buf.is_empty() {
+                    service.metrics().record_net_malformed();
+                }
+                break;
+            }
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e)
+                if e.kind() == io::ErrorKind::WouldBlock
+                    || e.kind() == io::ErrorKind::TimedOut =>
+            {
+                if stop.load(Ordering::Acquire) {
+                    break;
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(_) => break,
+        }
+    }
+    // Closing the queue lets the writer drain what was accepted, flush,
+    // and half-close — the client's clean EOF.
+    drop(job_tx);
+    let _ = writer.join();
+}
+
+fn writer_loop<S: Conn>(mut stream: S, jobs: Receiver<Job>, response_timeout: Duration) {
+    let mut frame = Vec::new();
+    for job in jobs {
+        frame.clear();
+        match job {
+            Job::Error { request_id, status } => encode_frame(request_id, &[status], &mut frame),
+            Job::Batch { request_id, tags, pendings } => {
+                let mut body = Vec::with_capacity(16 * pendings.len() + 5);
+                body.push(STATUS_OK);
+                body.extend_from_slice(&(pendings.len() as u32).to_le_bytes());
+                let mut failed = None;
+                for (tag, pending) in tags.iter().zip(&pendings) {
+                    match pending.wait_timeout(response_timeout) {
+                        Ok(r) => encode_result(*tag, &r.indices, &r.distances, r.data, &mut body),
+                        Err(WaitError::TimedOut) => {
+                            failed = Some(STATUS_TIMEOUT);
+                            break;
+                        }
+                        Err(WaitError::ServiceDropped) => {
+                            failed = Some(STATUS_DROPPED);
+                            break;
+                        }
+                    }
+                }
+                if failed.is_none() && body.len() > MAX_RESPONSE_LEN {
+                    failed = Some(STATUS_OVERSIZED);
+                }
+                match failed {
+                    Some(status) => encode_frame(request_id, &[status], &mut frame),
+                    None => encode_frame(request_id, &body, &mut frame),
+                }
+            }
+        }
+        if stream.write_all(&frame).is_err() {
+            // The peer is gone; unanswered pendings are dropped (the
+            // coordinator still drains them, nobody is listening).
+            return;
+        }
+    }
+    let _ = stream.flush();
+    let _ = stream.shutdown_write();
+}
+
+/// One decoded response frame, as seen by [`NetClient`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct NetResponse {
+    /// The request id this frame answers (request ids are echoed, so
+    /// pipelined responses can be matched up).
+    pub request_id: u64,
+    /// [`STATUS_OK`](super::wire::STATUS_OK) or an error status.
+    pub status: u8,
+    /// Per-query results in request order (empty on error statuses).
+    pub results: Vec<WireResult>,
+}
+
+/// A blocking client for the framed wire protocol — the loopback half of
+/// the differential tests, the bench harness's simulated client, and a
+/// reference for out-of-process implementations. Supports pipelining:
+/// any number of [`NetClient::submit`]s may be in flight before the
+/// matching [`NetClient::receive`]s.
+pub struct NetClient<S: Conn = TcpStream> {
+    stream: S,
+    next_id: u64,
+    buf: Vec<u8>,
+}
+
+impl NetClient<TcpStream> {
+    /// Connects over TCP.
+    pub fn connect_tcp(addr: impl ToSocketAddrs) -> io::Result<Self> {
+        Ok(NetClient::over(TcpStream::connect(addr)?))
+    }
+}
+
+#[cfg(unix)]
+impl NetClient<UnixStream> {
+    /// Connects over a Unix socket.
+    pub fn connect_unix(path: impl AsRef<Path>) -> io::Result<Self> {
+        Ok(NetClient::over(UnixStream::connect(path)?))
+    }
+}
+
+impl<S: Conn> NetClient<S> {
+    /// Wraps an already-connected stream.
+    pub fn over(stream: S) -> Self {
+        NetClient { stream, next_id: 0, buf: Vec::new() }
+    }
+
+    /// Frames and sends one batch; returns the request id to match the
+    /// eventual response against. Does not wait.
+    pub fn submit(&mut self, preds: &[QueryPredicate]) -> io::Result<u64> {
+        let mut body = Vec::new();
+        encode_batch(preds, &mut body);
+        if body.is_empty() || body.len() > MAX_FRAME_LEN {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                "batch is empty or exceeds MAX_FRAME_LEN",
+            ));
+        }
+        let request_id = self.next_id;
+        self.next_id += 1;
+        let mut frame = Vec::with_capacity(body.len() + 12);
+        encode_frame(request_id, &body, &mut frame);
+        self.stream.write_all(&frame)?;
+        self.stream.flush()?;
+        Ok(request_id)
+    }
+
+    /// Sends raw pre-framed bytes — the hostile-client seam for tests.
+    pub fn send_raw(&mut self, bytes: &[u8]) -> io::Result<()> {
+        self.stream.write_all(bytes)?;
+        self.stream.flush()
+    }
+
+    /// Blocks for the next response frame. `UnexpectedEof` when the
+    /// server half-closed (its clean shutdown signal), `InvalidData` on
+    /// a malformed response frame.
+    pub fn receive(&mut self) -> io::Result<NetResponse> {
+        loop {
+            match parse_frame_with(&self.buf, MAX_RESPONSE_LEN) {
+                FrameParse::Frame { request_id, body_start, body_end, used } => {
+                    let parsed = decode_response_body(&self.buf[body_start..body_end])
+                        .ok_or_else(|| {
+                            io::Error::new(io::ErrorKind::InvalidData, "bad response body")
+                        })?;
+                    self.buf.drain(..used);
+                    let (status, results) = parsed;
+                    return Ok(NetResponse { request_id, status, results });
+                }
+                FrameParse::Malformed { .. } => {
+                    return Err(io::Error::new(
+                        io::ErrorKind::InvalidData,
+                        "malformed response frame",
+                    ));
+                }
+                FrameParse::Incomplete => {
+                    let mut chunk = [0u8; 16 * 1024];
+                    match self.stream.read(&mut chunk) {
+                        Ok(0) => {
+                            return Err(io::Error::new(
+                                io::ErrorKind::UnexpectedEof,
+                                "server closed the connection",
+                            ));
+                        }
+                        Ok(n) => self.buf.extend_from_slice(&chunk[..n]),
+                        Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                        Err(e) => return Err(e),
+                    }
+                }
+            }
+        }
+    }
+
+    /// Convenience: submit one batch and block for its response.
+    pub fn roundtrip(&mut self, preds: &[QueryPredicate]) -> io::Result<NetResponse> {
+        let request_id = self.submit(preds)?;
+        let response = self.receive()?;
+        if response.request_id != request_id {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                "response id does not match the request (pipelined reads out of order?)",
+            ));
+        }
+        Ok(response)
+    }
+}

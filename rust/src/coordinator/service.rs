@@ -184,7 +184,9 @@ pub enum SubmitError {
     Stopped,
     /// The request payload is invalid: [`SearchService::submit_encoded`]
     /// could not decode the bytes as exactly one well-formed wire
-    /// predicate, or [`SearchService::update`] was given a box count
+    /// predicate, [`SearchService::submit_encoded_batch`] found a
+    /// malformed predicate anywhere in the frame (nothing was
+    /// submitted), or [`SearchService::update`] was given a box count
     /// that does not match the indexed object count.
     Malformed,
 }
@@ -200,19 +202,25 @@ impl std::fmt::Display for SubmitError {
 
 impl std::error::Error for SubmitError {}
 
-/// Why a pending result will never arrive.
+/// Why a pending result has not arrived (and, for
+/// [`WaitError::ServiceDropped`], never will).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum WaitError {
     /// The service dropped the response channel without answering —
     /// only possible when the coordinator thread died abnormally (a
     /// clean shutdown drains every accepted request first).
     ServiceDropped,
+    /// [`Pending::wait_timeout`] elapsed before the result arrived. The
+    /// handle is *not* consumed: the result may still be delivered and a
+    /// later wait can pick it up.
+    TimedOut,
 }
 
 impl std::fmt::Display for WaitError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             WaitError::ServiceDropped => write!(f, "service dropped the response channel"),
+            WaitError::TimedOut => write!(f, "timed out waiting for the result"),
         }
     }
 }
@@ -250,6 +258,20 @@ impl Pending {
     /// handles obtained before the stop still resolve `Ok`.
     pub fn wait(self) -> Result<QueryResult, WaitError> {
         self.0.recv().map_err(|_| WaitError::ServiceDropped)
+    }
+
+    /// Blocks until the result arrives or `timeout` elapses. Unlike
+    /// [`Pending::wait`] this takes `&self`: on
+    /// [`WaitError::TimedOut`] the handle survives, so a connection
+    /// writer can give up on a stuck backend without losing the ability
+    /// to drain the result later. Results delivered before the deadline
+    /// behave exactly like `wait`.
+    pub fn wait_timeout(&self, timeout: Duration) -> Result<QueryResult, WaitError> {
+        match self.0.recv_timeout(timeout) {
+            Ok(result) => Ok(result),
+            Err(RecvTimeoutError::Timeout) => Err(WaitError::TimedOut),
+            Err(RecvTimeoutError::Disconnected) => Err(WaitError::ServiceDropped),
+        }
     }
 }
 
@@ -411,6 +433,44 @@ impl SearchService {
             return Err(SubmitError::Malformed);
         }
         self.submit(pred)
+    }
+
+    /// Submits a whole batch under **one** `tx` lock acquisition,
+    /// returning per-query [`Pending`]s in submission order. This is the
+    /// framed-transport fast path: the per-call lock/unlock of
+    /// [`SearchService::submit`] in a loop would serialize every
+    /// connection thread through the mutex once per query instead of
+    /// once per frame. All-or-nothing on [`SubmitError::Stopped`]: the
+    /// coordinator's drain-then-exit shutdown still answers any request
+    /// the channel accepted before the send that failed.
+    pub fn submit_batch(&self, preds: Vec<QueryPredicate>) -> Result<Vec<Pending>, SubmitError> {
+        let guard = self.tx.lock().unwrap();
+        let tx = guard.as_ref().ok_or(SubmitError::Stopped)?;
+        let enqueued = Instant::now();
+        let mut pendings = Vec::with_capacity(preds.len());
+        for pred in preds {
+            let (resp_tx, resp_rx) = channel();
+            tx.send(Request { pred, resp: resp_tx, enqueued })
+                .map_err(|_| SubmitError::Stopped)?;
+            pendings.push(Pending(resp_rx));
+        }
+        Ok(pendings)
+    }
+
+    /// Decodes a byte-encoded back-to-back batch
+    /// ([`decode_batch`](super::wire::decode_batch)) and submits it via
+    /// [`SearchService::submit_batch`]
+    /// — one decode pass, one lock acquisition, one `Pending` per query
+    /// in request order. All-or-nothing: a malformed predicate
+    /// *anywhere* in the frame (or an empty frame, or trailing bytes)
+    /// returns [`SubmitError::Malformed`] and submits **nothing** — a
+    /// client never gets partial answers to a frame it cannot match up.
+    pub fn submit_encoded_batch(&self, bytes: &[u8]) -> Result<Vec<Pending>, SubmitError> {
+        let preds = super::wire::decode_batch(bytes).ok_or(SubmitError::Malformed)?;
+        if preds.is_empty() {
+            return Err(SubmitError::Malformed);
+        }
+        self.submit_batch(preds)
     }
 
     /// Convenience: submit and wait.
@@ -1189,6 +1249,108 @@ mod tests {
         let (_tx, rx) = channel::<QueryResult>();
         drop(_tx);
         assert_eq!(Pending(rx).wait().err(), Some(WaitError::ServiceDropped));
+    }
+
+    #[test]
+    fn batch_submission_answers_in_request_order() {
+        let (svc, _) = service(100, 8);
+        let preds: Vec<QueryPredicate> =
+            (0..20).map(|i| QueryPredicate::nearest(Point::new(i as f32, 0.0, 0.0), 1)).collect();
+        let pendings = svc.submit_batch(preds).expect("service running");
+        assert_eq!(pendings.len(), 20);
+        for (i, p) in pendings.into_iter().enumerate() {
+            assert_eq!(p.wait().expect("answered").indices, vec![i as u32], "order preserved");
+        }
+    }
+
+    #[test]
+    fn encoded_batch_with_a_malformed_predicate_submits_nothing() {
+        // The framed front door is all-or-nothing: a malformed predicate
+        // anywhere in the frame rejects the whole frame with Malformed,
+        // and none of the well-formed predicates before (or after) it
+        // reach the coordinator.
+        let (svc, _) = service(100, 8);
+        let good: Vec<QueryPredicate> =
+            (0..4).map(|i| QueryPredicate::nearest(Point::new(i as f32, 0.0, 0.0), 1)).collect();
+        let mut bytes = Vec::new();
+        super::super::wire::encode_batch(&good, &mut bytes);
+        let cut = bytes.len();
+        // Append a predicate that is byte-well-formed but fails the
+        // geometry gate (NaN center), then two more good ones.
+        super::super::wire::encode(
+            &QueryPredicate::nearest(Point::new(f32::NAN, 0.0, 0.0), 1),
+            &mut bytes,
+        );
+        super::super::wire::encode_batch(&good[..2], &mut bytes);
+        assert_eq!(svc.submit_encoded_batch(&bytes).err(), Some(SubmitError::Malformed));
+        // Trailing garbage after a good run is rejected the same way.
+        let mut truncated = bytes[..cut].to_vec();
+        truncated.push(0x7F);
+        assert_eq!(svc.submit_encoded_batch(&truncated).err(), Some(SubmitError::Malformed));
+        // An empty frame body is malformed, not an empty success.
+        assert_eq!(svc.submit_encoded_batch(&[]).err(), Some(SubmitError::Malformed));
+        // Nothing was submitted by any of the rejected frames.
+        assert_eq!(svc.metrics().requests(), 0, "rejected frames submit nothing");
+        // The same bytes without the poison round-trip fine.
+        let pendings = svc.submit_encoded_batch(&bytes[..cut]).expect("well-formed frame");
+        for (i, p) in pendings.into_iter().enumerate() {
+            assert_eq!(p.wait().expect("answered").indices, vec![i as u32]);
+        }
+        // shutdown() joins the coordinator, so the batch's metrics are
+        // flushed before the count is read.
+        svc.shutdown();
+        assert_eq!(svc.metrics().requests(), good.len() as u64);
+    }
+
+    #[test]
+    fn wait_timeout_leaves_the_handle_alive() {
+        // An empty channel times out without consuming the handle; a
+        // late delivery is then picked up by the same handle.
+        let (tx, rx) = channel::<QueryResult>();
+        let pending = Pending(rx);
+        assert_eq!(
+            pending.wait_timeout(Duration::from_millis(5)).err(),
+            Some(WaitError::TimedOut)
+        );
+        tx.send(QueryResult {
+            indices: vec![7],
+            distances: vec![],
+            data: None,
+            latency: Duration::ZERO,
+        })
+        .unwrap();
+        let r = pending.wait_timeout(Duration::from_millis(100)).expect("late result");
+        assert_eq!(r.indices, vec![7]);
+        // A dropped sender is ServiceDropped, not TimedOut.
+        drop(tx);
+        assert_eq!(
+            pending.wait_timeout(Duration::from_millis(5)).err(),
+            Some(WaitError::ServiceDropped)
+        );
+    }
+
+    #[test]
+    fn pending_accepted_before_shutdown_drains_ok_under_wait_timeout() {
+        // The shutdown race, pinned: a batch accepted before shutdown()
+        // still drains Ok, and wait_timeout (the connection writer's
+        // wait) sees the results, not a timeout or a drop.
+        let (svc, _) = service(500, 8);
+        let preds: Vec<QueryPredicate> = (0..48)
+            .map(|i| QueryPredicate::nearest(Point::new((i % 500) as f32, 0.0, 0.0), 1))
+            .collect();
+        let pendings = svc.submit_batch(preds).expect("service running");
+        svc.shutdown();
+        for (i, p) in pendings.iter().enumerate() {
+            let r = p
+                .wait_timeout(Duration::from_secs(10))
+                .expect("accepted before shutdown must drain Ok");
+            assert_eq!(r.indices, vec![(i % 500) as u32]);
+        }
+        // After the drain the service refuses new batches.
+        assert_eq!(
+            svc.submit_batch(vec![QueryPredicate::nearest(Point::origin(), 1)]).err(),
+            Some(SubmitError::Stopped)
+        );
     }
 
     #[test]

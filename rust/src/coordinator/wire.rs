@@ -27,6 +27,42 @@
 //! of an unbounded ray), and `k == 0` or oversized nearest queries (the
 //! nearest-to-sphere and nearest-to-box payloads run both their
 //! geometry's gate and the `k` gate).
+//!
+//! # Framing
+//!
+//! On a stream transport (TCP / Unix socket) predicates travel inside
+//! length-prefixed frames so a connection can pipeline many independent
+//! requests:
+//!
+//! | field | size | meaning |
+//! |-------|------|---------|
+//! | `len`        | `u32` LE | bytes that follow (request id + body) |
+//! | `request id` | `u64` LE | client-chosen, echoed in the response |
+//! | `body`       | `len - 8` | request: back-to-back predicates ([`decode_batch`]); response: status + results |
+//!
+//! `len` is gated *before* any allocation ([`parse_frame`] is
+//! non-allocating): `len <= 8` (an empty body) is malformed, and so is
+//! a body larger than the direction's cap — [`MAX_FRAME_LEN`] for
+//! requests, [`MAX_RESPONSE_LEN`] for responses. Mirroring the
+//! [`MAX_NEAREST_K`] rationale, an untrusted 4-byte header must not be
+//! able to demand a multi-gigabyte buffer.
+//!
+//! A response body is one status byte ([`STATUS_OK`], …); on success it
+//! continues with a `u32` LE query count and one result record per
+//! query, mirroring the request predicate's tag in order:
+//!
+//! | field | size | meaning |
+//! |-------|------|---------|
+//! | `tag`        | `u8` | the request predicate's wire tag, echoed |
+//! | `n_idx`      | `u32` LE | object-index count |
+//! | `n_dist`     | `u32` LE | distance count (nearest kinds; else 0) |
+//! | `indices`    | `n_idx × u32` LE | matched object indices |
+//! | `distances`  | `n_dist × f32` LE | squared distances, row-aligned |
+//! | `data`       | `u64` LE | only when `tag` carries [`TAG_ATTACH`] |
+//!
+//! [`decode_result`] gates both counts against the bytes actually
+//! present before reserving anything, for the same reason as the frame
+//! gate.
 
 use crate::bvh::QueryPredicate;
 use crate::geometry::predicates::{Nearest, Spatial};
@@ -54,6 +90,35 @@ pub const TAG_ATTACH: u8 = 0x80;
 /// untrusted client would be a multi-gigabyte allocation; messages
 /// beyond the cap are rejected as malformed.
 pub const MAX_NEAREST_K: u32 = 1 << 16;
+
+/// Largest *request* frame body a server will buffer, in bytes. Same
+/// rationale as [`MAX_NEAREST_K`]: the length prefix is untrusted, so it
+/// is gated before any allocation happens. The largest predicate
+/// encoding is 37 bytes (attached ray), so the cap still admits ~28k
+/// predicates per frame — far beyond any sane batch.
+pub const MAX_FRAME_LEN: usize = 1 << 20;
+
+/// Largest *response* frame body a client will buffer. Responses carry
+/// result rows (server-generated, but the client still gates the header
+/// before allocating), so the cap is wider than the request cap.
+pub const MAX_RESPONSE_LEN: usize = 1 << 26;
+
+/// Response status: every query in the frame executed; results follow.
+pub const STATUS_OK: u8 = 0;
+/// Response status: the frame body failed `decode_batch` (or the framing
+/// itself was violated); nothing was submitted.
+pub const STATUS_MALFORMED: u8 = 1;
+/// Response status: the service is shutting down; the frame was not
+/// accepted ([`SubmitError::Stopped`](crate::coordinator::service::SubmitError)).
+pub const STATUS_STOPPED: u8 = 2;
+/// Response status: a query in the frame did not answer within the
+/// connection's response timeout.
+pub const STATUS_TIMEOUT: u8 = 3;
+/// Response status: the coordinator dropped a query's response channel.
+pub const STATUS_DROPPED: u8 = 4;
+/// Response status: the results were too large to frame
+/// ([`MAX_RESPONSE_LEN`]).
+pub const STATUS_OVERSIZED: u8 = 5;
 
 /// Appends the encoding of one predicate to `out`.
 pub fn encode(pred: &QueryPredicate, out: &mut Vec<u8>) {
@@ -93,12 +158,29 @@ pub fn encode_batch(preds: &[QueryPredicate], out: &mut Vec<u8>) {
     }
 }
 
-fn encode_spatial(s: &Spatial, data: Option<u64>, out: &mut Vec<u8>) {
-    let tag = match s {
+fn spatial_tag(s: &Spatial) -> u8 {
+    match s {
         Spatial::IntersectsSphere(_) => TAG_SPHERE,
         Spatial::IntersectsBox(_) => TAG_BOX,
         Spatial::IntersectsRay(_) => TAG_RAY,
-    };
+    }
+}
+
+/// The wire tag a predicate encodes under (attach bit included) — the
+/// byte a response result record echoes back.
+pub fn wire_tag(pred: &QueryPredicate) -> u8 {
+    match pred {
+        QueryPredicate::Spatial(s) => spatial_tag(s),
+        QueryPredicate::Attach(s, _) => spatial_tag(s) | TAG_ATTACH,
+        QueryPredicate::Nearest(_) => TAG_NEAREST,
+        QueryPredicate::NearestSphere(_) => TAG_NEAREST_SPHERE,
+        QueryPredicate::NearestBox(_) => TAG_NEAREST_BOX,
+        QueryPredicate::FirstHit(_) => TAG_FIRST_HIT,
+    }
+}
+
+fn encode_spatial(s: &Spatial, data: Option<u64>, out: &mut Vec<u8>) {
+    let tag = spatial_tag(s);
     out.push(if data.is_some() { tag | TAG_ATTACH } else { tag });
     match s {
         Spatial::IntersectsSphere(sp) => {
@@ -236,6 +318,191 @@ pub fn decode_batch(mut bytes: &[u8]) -> Option<Vec<QueryPredicate>> {
         bytes = &bytes[used..];
     }
     Some(out)
+}
+
+/// The fixed payload length (bytes after the tag) of a wire tag, or
+/// `None` for tags that never appear on the wire. This is the size
+/// table [`batch_tags`] walks to recover per-predicate tags without
+/// re-decoding geometry.
+pub fn payload_len(tag: u8) -> Option<usize> {
+    let attached = tag & TAG_ATTACH != 0;
+    let base = match tag & !TAG_ATTACH {
+        TAG_SPHERE => 16,
+        TAG_BOX => 24,
+        TAG_RAY => 28,
+        TAG_NEAREST if !attached => 16,
+        TAG_FIRST_HIT if !attached => 28,
+        TAG_NEAREST_SPHERE if !attached => 20,
+        TAG_NEAREST_BOX if !attached => 28,
+        _ => return None,
+    };
+    Some(if attached { base + 8 } else { base })
+}
+
+/// The wire tags of a back-to-back batch, in order, recovered from the
+/// size table alone — no float parsing, no geometry gate. `None` on an
+/// unknown tag or a truncated payload; on bytes [`decode_batch`]
+/// accepted this never fails and agrees with [`wire_tag`] per predicate.
+pub fn batch_tags(mut bytes: &[u8]) -> Option<Vec<u8>> {
+    let mut tags = Vec::new();
+    while let [tag, rest @ ..] = bytes {
+        let len = payload_len(*tag)?;
+        bytes = rest.get(len..)?;
+        tags.push(*tag);
+    }
+    Some(tags)
+}
+
+/// Appends a length-prefixed frame (`len u32 | request id u64 | body`)
+/// to `out`. The body must be non-empty and fit the absolute frame
+/// ceiling ([`MAX_RESPONSE_LEN`]); request senders must additionally
+/// stay within [`MAX_FRAME_LEN`] or the server's parser will reject the
+/// frame.
+pub fn encode_frame(request_id: u64, body: &[u8], out: &mut Vec<u8>) {
+    assert!(!body.is_empty(), "frame body must be non-empty");
+    assert!(body.len() <= MAX_RESPONSE_LEN, "frame body exceeds the frame ceiling");
+    out.extend_from_slice(&((body.len() + 8) as u32).to_le_bytes());
+    out.extend_from_slice(&request_id.to_le_bytes());
+    out.extend_from_slice(body);
+}
+
+/// Outcome of [`parse_frame`] over a prefix of a connection's buffer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameParse {
+    /// Not enough bytes buffered yet for a verdict — read more.
+    Incomplete,
+    /// One complete frame: body at `bytes[body_start..body_end]`,
+    /// `used` total bytes consumed from the front of the buffer.
+    Frame { request_id: u64, body_start: usize, body_end: usize, used: usize },
+    /// The declared length violates the frame gate (zero-length or
+    /// oversized body). The request id is reported when its 8 bytes are
+    /// buffered so the peer can be told which request died; the
+    /// connection's framing is unrecoverable either way.
+    Malformed { request_id: Option<u64> },
+}
+
+/// Parses one frame from the front of `bytes` against the *request* body
+/// cap [`MAX_FRAME_LEN`]. Never allocates and never reads past the
+/// buffered bytes: the declared length is gated before the caller is
+/// told to buffer anything, so an untrusted header cannot demand a
+/// multi-gigabyte read.
+pub fn parse_frame(bytes: &[u8]) -> FrameParse {
+    parse_frame_with(bytes, MAX_FRAME_LEN)
+}
+
+/// [`parse_frame`] with an explicit body cap — clients parse response
+/// frames with [`MAX_RESPONSE_LEN`].
+pub fn parse_frame_with(bytes: &[u8], max_body: usize) -> FrameParse {
+    let Some(len_bytes) = bytes.get(..4) else {
+        return FrameParse::Incomplete;
+    };
+    let len = u32::from_le_bytes(len_bytes.try_into().unwrap()) as usize;
+    let request_id = bytes
+        .get(4..12)
+        .map(|id| u64::from_le_bytes(id.try_into().unwrap()));
+    if len <= 8 || len > max_body.saturating_add(8) {
+        return FrameParse::Malformed { request_id };
+    }
+    let used = 4 + len;
+    if bytes.len() < used {
+        return FrameParse::Incomplete;
+    }
+    FrameParse::Frame {
+        request_id: request_id.expect("len > 8 implies the id bytes are buffered"),
+        body_start: 12,
+        body_end: used,
+        used,
+    }
+}
+
+/// One query's answer as it travels in a response frame: the request
+/// predicate's tag echoed back, the matched indices, the row-aligned
+/// squared distances (nearest kinds), and the attachment payload when
+/// the tag carries [`TAG_ATTACH`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireResult {
+    pub tag: u8,
+    pub indices: Vec<u32>,
+    pub distances: Vec<f32>,
+    pub data: Option<u64>,
+}
+
+/// Appends one result record to a response body.
+pub fn encode_result(
+    tag: u8,
+    indices: &[u32],
+    distances: &[f32],
+    data: Option<u64>,
+    out: &mut Vec<u8>,
+) {
+    debug_assert_eq!(data.is_some(), tag & TAG_ATTACH != 0, "data iff attach tag");
+    out.push(tag);
+    out.extend_from_slice(&(indices.len() as u32).to_le_bytes());
+    out.extend_from_slice(&(distances.len() as u32).to_le_bytes());
+    for i in indices {
+        out.extend_from_slice(&i.to_le_bytes());
+    }
+    for d in distances {
+        put_f32(out, *d);
+    }
+    if let Some(d) = data {
+        out.extend_from_slice(&d.to_le_bytes());
+    }
+}
+
+/// Decodes one result record from the front of `bytes`; returns it and
+/// the bytes consumed. The declared counts are checked against the
+/// bytes actually present *before* any vector is reserved — a response
+/// is less hostile than a request, but the same no-over-allocation rule
+/// applies.
+pub fn decode_result(bytes: &[u8]) -> Option<(WireResult, usize)> {
+    let mut cur = Cursor { bytes, pos: 0 };
+    let tag = cur.u8()?;
+    payload_len(tag)?;
+    let n_idx = cur.u32()? as usize;
+    let n_dist = cur.u32()? as usize;
+    let attached = tag & TAG_ATTACH != 0;
+    let need = n_idx
+        .checked_mul(4)?
+        .checked_add(n_dist.checked_mul(4)?)?
+        .checked_add(if attached { 8 } else { 0 })?;
+    if bytes.len().checked_sub(cur.pos)? < need {
+        return None;
+    }
+    let mut indices = Vec::with_capacity(n_idx);
+    for _ in 0..n_idx {
+        indices.push(cur.u32()?);
+    }
+    let mut distances = Vec::with_capacity(n_dist);
+    for _ in 0..n_dist {
+        distances.push(cur.f32()?);
+    }
+    let data = if attached { Some(cur.u64()?) } else { None };
+    Some((WireResult { tag, indices, distances, data }, cur.pos))
+}
+
+/// Decodes a full response body: the status byte, then (for
+/// [`STATUS_OK`]) the query count and that many result records with no
+/// trailing bytes. `None` on any violation.
+pub fn decode_response_body(bytes: &[u8]) -> Option<(u8, Vec<WireResult>)> {
+    let (&status, rest) = bytes.split_first()?;
+    if status != STATUS_OK {
+        return rest.is_empty().then(|| (status, Vec::new()));
+    }
+    let count = u32::from_le_bytes(rest.get(..4)?.try_into().ok()?) as usize;
+    let mut rest = rest.get(4..)?;
+    // Each record is at least 9 bytes, so `count` is gated by the bytes
+    // actually present before anything is reserved.
+    if count > rest.len() / 9 {
+        return None;
+    }
+    let mut results = Vec::with_capacity(count);
+    for _ in 0..count {
+        let (result, used) = decode_result(rest)?;
+        results.push(result);
+        rest = &rest[used..];
+    }
+    rest.is_empty().then_some((status, results))
 }
 
 fn put_f32(out: &mut Vec<u8>, v: f32) {
@@ -517,6 +784,140 @@ mod tests {
         ] {
             assert!(decode(&encoded(&pred)).is_none(), "{pred:?} beyond the cap");
         }
+    }
+
+    #[test]
+    fn batch_tags_agrees_with_decode() {
+        let preds = family();
+        let mut bytes = Vec::new();
+        encode_batch(&preds, &mut bytes);
+        let tags = batch_tags(&bytes).expect("well-formed batch");
+        assert_eq!(tags.len(), preds.len());
+        for (tag, pred) in tags.iter().zip(&preds) {
+            assert_eq!(*tag, wire_tag(pred), "{pred:?}");
+        }
+        // Unknown tags and truncated payloads fail the size-table walk
+        // exactly where decode_batch fails the full decode.
+        bytes.push(0x7F);
+        assert!(batch_tags(&bytes).is_none(), "trailing garbage tag");
+        let solo = encoded(&preds[0]);
+        for cut in 1..solo.len() {
+            assert!(batch_tags(&solo[..cut]).is_none(), "truncated at {cut}");
+        }
+    }
+
+    #[test]
+    fn frames_round_trip() {
+        let mut body = Vec::new();
+        encode_batch(&family(), &mut body);
+        let mut frame = Vec::new();
+        encode_frame(0xDEAD_BEEF_CAFE_F00D, &body, &mut frame);
+        // Two pipelined frames back to back: the parser consumes exactly
+        // one and reports its extent.
+        let mut two = frame.clone();
+        encode_frame(7, &[0x55], &mut two);
+        match parse_frame(&two) {
+            FrameParse::Frame { request_id, body_start, body_end, used } => {
+                assert_eq!(request_id, 0xDEAD_BEEF_CAFE_F00D);
+                assert_eq!(&two[body_start..body_end], &body[..]);
+                assert_eq!(used, frame.len());
+                match parse_frame(&two[used..]) {
+                    FrameParse::Frame { request_id, body_start, body_end, used } => {
+                        assert_eq!(request_id, 7);
+                        assert_eq!(&two[frame.len()..][body_start..body_end], &[0x55]);
+                        assert_eq!(used, two.len() - frame.len());
+                    }
+                    other => panic!("second frame: {other:?}"),
+                }
+            }
+            other => panic!("first frame: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn frame_gate_rejects_before_buffering() {
+        // Truncation at every cut point of a valid frame is Incomplete,
+        // never Malformed and never a bogus Frame.
+        let mut frame = Vec::new();
+        encode_frame(42, &[1, 2, 3], &mut frame);
+        for cut in 0..frame.len() {
+            assert_eq!(parse_frame(&frame[..cut]), FrameParse::Incomplete, "cut {cut}");
+        }
+        // Zero-length body: len == 8 covers only the request id.
+        let mut zero = Vec::new();
+        zero.extend_from_slice(&8u32.to_le_bytes());
+        zero.extend_from_slice(&99u64.to_le_bytes());
+        assert_eq!(parse_frame(&zero), FrameParse::Malformed { request_id: Some(99) });
+        // len < 8 can't even carry the id.
+        let mut tiny = Vec::new();
+        tiny.extend_from_slice(&3u32.to_le_bytes());
+        assert_eq!(parse_frame(&tiny), FrameParse::Malformed { request_id: None });
+        // An oversized declaration is rejected from the 4-byte header
+        // alone — before the id, before any buffering.
+        let huge = (u32::MAX).to_le_bytes();
+        assert_eq!(parse_frame(&huge), FrameParse::Malformed { request_id: None });
+        let mut capped = Vec::new();
+        capped.extend_from_slice(&((8 + MAX_FRAME_LEN + 1) as u32).to_le_bytes());
+        capped.extend_from_slice(&5u64.to_le_bytes());
+        assert_eq!(parse_frame(&capped), FrameParse::Malformed { request_id: Some(5) });
+        // The same declaration is legal under the response cap.
+        assert_eq!(
+            parse_frame_with(&capped, MAX_RESPONSE_LEN),
+            FrameParse::Incomplete,
+            "response cap admits larger bodies"
+        );
+    }
+
+    #[test]
+    fn results_round_trip() {
+        let records = [
+            (TAG_SPHERE, vec![3u32, 1, 4], vec![], None),
+            (TAG_NEAREST, vec![10, 20], vec![0.5f32, 2.25], None),
+            (TAG_RAY | TAG_ATTACH, vec![7], vec![], Some(u64::MAX)),
+            (TAG_FIRST_HIT, vec![], vec![], None),
+        ];
+        let mut body = vec![STATUS_OK];
+        body.extend_from_slice(&(records.len() as u32).to_le_bytes());
+        for (tag, idx, dist, data) in &records {
+            encode_result(*tag, idx, dist, *data, &mut body);
+        }
+        let (status, results) = decode_response_body(&body).expect("decodes");
+        assert_eq!(status, STATUS_OK);
+        assert_eq!(results.len(), records.len());
+        for (r, (tag, idx, dist, data)) in results.iter().zip(&records) {
+            assert_eq!(r.tag, *tag);
+            assert_eq!(&r.indices, idx);
+            assert_eq!(&r.distances, dist);
+            assert_eq!(r.data, *data);
+        }
+        // Error bodies are exactly one status byte.
+        assert_eq!(decode_response_body(&[STATUS_STOPPED]), Some((STATUS_STOPPED, vec![])));
+        assert!(decode_response_body(&[STATUS_STOPPED, 0]).is_none(), "trailing bytes");
+        assert!(decode_response_body(&[]).is_none(), "empty body");
+        // Trailing bytes after the declared records poison the body.
+        body.push(0);
+        assert!(decode_response_body(&body).is_none());
+    }
+
+    #[test]
+    fn result_counts_are_gated_before_allocation() {
+        // A record declaring u32::MAX indices inside a 20-byte buffer
+        // must be rejected by arithmetic alone.
+        let mut bytes = vec![TAG_SPHERE];
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+        bytes.extend_from_slice(&0u32.to_le_bytes());
+        bytes.extend_from_slice(&[0; 8]);
+        assert!(decode_result(&bytes).is_none());
+        // Same for a response body declaring an absurd query count.
+        let mut body = vec![STATUS_OK];
+        body.extend_from_slice(&u32::MAX.to_le_bytes());
+        body.extend_from_slice(&[0; 16]);
+        assert!(decode_response_body(&body).is_none());
+        // An unknown tag in a record is rejected.
+        let mut bad_tag = vec![0x7F];
+        bad_tag.extend_from_slice(&0u32.to_le_bytes());
+        bad_tag.extend_from_slice(&0u32.to_le_bytes());
+        assert!(decode_result(&bad_tag).is_none());
     }
 
     #[test]

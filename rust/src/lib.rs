@@ -63,7 +63,10 @@
 //!   epoch-counted snapshot so `SearchService::update` can publish
 //!   moved scenes under live queries (refit within the quality
 //!   threshold, rebuild past it; the distributed backend refits only
-//!   the ranks whose boxes changed).
+//!   the ranks whose boxes changed). A TCP / Unix-socket front end
+//!   ([`coordinator::net`]) serves the wire protocol to out-of-process
+//!   clients: length-prefixed pipelined frames, per-connection
+//!   backpressure, graceful drain on shutdown.
 //!
 //! ## Quick start
 //!
@@ -112,6 +115,7 @@ pub mod prelude {
         Bvh, PredicateKind, QueryOptions, QueryOutput, QueryPredicate, RayHit, TraversalMode,
     };
     pub use crate::coordinator::distributed::{DistributedTree, Partition};
+    pub use crate::coordinator::net::{NetClient, NetConfig, NetResponse, NetServer};
     pub use crate::coordinator::service::{
         Backend, BufferPolicy, QueryError, SearchService, ServiceConfig, SubmitError,
         UpdateReport, Versioned, WaitError,

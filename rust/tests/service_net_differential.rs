@@ -1,0 +1,345 @@
+//! Loopback differential suite for the TCP / Unix-socket front end.
+//!
+//! N concurrent clients drive all 10 wire kinds through a real
+//! `NetServer` on 127.0.0.1 (and a Unix socket) and every response row
+//! must equal the direct `Bvh` answer on the same tree — sorted
+//! canonicalization for the unordered spatial kinds, exact row equality
+//! for the deterministic nearest / first-hit kinds, attachment payloads
+//! echoed. The suite also pins the failure semantics end to end: a
+//! malformed body rejects its whole frame but the connection survives;
+//! a framing violation closes the offending connection without
+//! disturbing others; a truncated frame at EOF counts as malformed;
+//! mid-connection service shutdown answers clean `STATUS_STOPPED`
+//! error frames and EOF, never a hang; and a pipelining client that
+//! outruns its reads trips the bounded in-flight window (a recorded
+//! backpressure stall), not the batcher.
+
+mod common;
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use arbor::bvh::QueryPredicate;
+use arbor::coordinator::wire::{
+    self, wire_tag, MAX_FRAME_LEN, STATUS_MALFORMED, STATUS_OK, STATUS_STOPPED,
+};
+use arbor::prelude::*;
+
+use common::{scene, wire_batch};
+
+/// A service over an inflated scene (finite extents so rays and boxes
+/// genuinely overlap), plus the tree for direct-answer oracles.
+fn net_fixture(
+    n: usize,
+    max_batch: usize,
+    batch_timeout: Duration,
+) -> (Arc<SearchService>, Arc<Bvh>, ExecSpace, PointCloud) {
+    let space = ExecSpace::with_threads(2);
+    let (cloud, _, _) = scene(Shape::FilledCube, n, 1109);
+    let boxes = common::inflate(&cloud, 0.4);
+    let bvh = Arc::new(Bvh::build(&space, &boxes));
+    let config = ServiceConfig { max_batch, batch_timeout, threads: 2, ..Default::default() };
+    let svc = Arc::new(SearchService::start(Arc::clone(&bvh), config));
+    (svc, bvh, space, cloud)
+}
+
+/// Is this an unordered (spatial) row — compared as a sorted set?
+fn is_spatial(pred: &QueryPredicate) -> bool {
+    matches!(pred, QueryPredicate::Spatial(_) | QueryPredicate::Attach(..))
+}
+
+/// The attachment payload a response must echo for this predicate.
+fn attach_data(pred: &QueryPredicate) -> Option<u64> {
+    match pred {
+        QueryPredicate::Attach(_, d) => Some(*d),
+        _ => None,
+    }
+}
+
+/// Direct per-query answers on the same tree, canonicalized for
+/// comparison: (indices, distances, data) per row, spatial rows sorted.
+fn expected_rows(
+    bvh: &Bvh,
+    space: &ExecSpace,
+    preds: &[QueryPredicate],
+) -> Vec<(Vec<u32>, Vec<f32>, Option<u64>)> {
+    let out = bvh.query(space, preds, &QueryOptions::default());
+    preds
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let mut indices = out.results_for(i).to_vec();
+            // The service ships distances only for the ordered kinds
+            // (nearest / first-hit); spatial rows travel without them.
+            let distances =
+                if is_spatial(p) { Vec::new() } else { out.distances_for(i).to_vec() };
+            if is_spatial(p) {
+                indices.sort();
+            }
+            (indices, distances, attach_data(p))
+        })
+        .collect()
+}
+
+/// Asserts one response against the expectations for its frame.
+fn check_response(
+    label: &str,
+    response: &NetResponse,
+    preds: &[QueryPredicate],
+    expected: &[(Vec<u32>, Vec<f32>, Option<u64>)],
+) {
+    assert_eq!(response.status, STATUS_OK, "{label}: status");
+    assert_eq!(response.results.len(), preds.len(), "{label}: result count");
+    for (qi, (result, pred)) in response.results.iter().zip(preds).enumerate() {
+        assert_eq!(result.tag, wire_tag(pred), "{label} q{qi}: tag echo");
+        let (want_idx, want_dist, want_data) = &expected[qi];
+        let mut got_idx = result.indices.clone();
+        if is_spatial(pred) {
+            got_idx.sort();
+        }
+        assert_eq!(&got_idx, want_idx, "{label} q{qi}: indices ({pred:?})");
+        assert_eq!(&result.distances, want_dist, "{label} q{qi}: distances");
+        assert_eq!(&result.data, want_data, "{label} q{qi}: attach payload");
+    }
+}
+
+#[test]
+fn concurrent_tcp_clients_match_direct_queries_across_all_kinds() {
+    let (svc, bvh, space, cloud) = net_fixture(4000, 64, Duration::from_millis(1));
+    let mut server = NetServer::bind_tcp(
+        Arc::clone(&svc),
+        "127.0.0.1:0",
+        NetConfig { max_in_flight: 8, ..Default::default() },
+    )
+    .expect("bind");
+    let addr = server.local_addr().expect("tcp addr");
+
+    const CLIENTS: usize = 4;
+    const PER_CLIENT: usize = 40; // 4 frames x 10 predicates, all 10 kinds
+    const FRAME: usize = 10;
+    let mut handles = Vec::new();
+    for c in 0..CLIENTS {
+        let anchors = &cloud.points[c * PER_CLIENT..(c + 1) * PER_CLIENT];
+        let preds = wire_batch(anchors, 1.1, 5);
+        let expected = expected_rows(&bvh, &space, &preds);
+        handles.push(std::thread::spawn(move || {
+            let mut client = NetClient::connect_tcp(addr).expect("connect");
+            // Pipeline all frames before reading any response.
+            let ids: Vec<u64> =
+                preds.chunks(FRAME).map(|chunk| client.submit(chunk).expect("submit")).collect();
+            for (f, id) in ids.iter().enumerate() {
+                let response = client.receive().expect("response");
+                assert_eq!(response.request_id, *id, "client {c}: pipelined order");
+                check_response(
+                    &format!("client {c} frame {f}"),
+                    &response,
+                    &preds[f * FRAME..(f + 1) * FRAME],
+                    &expected[f * FRAME..(f + 1) * FRAME],
+                );
+            }
+        }));
+    }
+    for h in handles {
+        h.join().expect("client thread");
+    }
+
+    let metrics = svc.metrics();
+    assert_eq!(metrics.net_connections(), CLIENTS as u64);
+    assert_eq!(metrics.net_frames(), (CLIENTS * PER_CLIENT / FRAME) as u64);
+    assert_eq!(metrics.net_malformed_frames(), 0);
+    server.shutdown();
+    svc.shutdown();
+}
+
+#[test]
+fn malformed_body_rejects_the_frame_but_the_connection_survives() {
+    let (svc, bvh, space, cloud) = net_fixture(500, 16, Duration::from_millis(1));
+    let mut server =
+        NetServer::bind_tcp(Arc::clone(&svc), "127.0.0.1:0", NetConfig::default()).expect("bind");
+    let addr = server.local_addr().expect("tcp addr");
+    let mut client = NetClient::connect_tcp(addr).expect("connect");
+
+    // A frame whose body is two good predicates followed by garbage:
+    // decode_batch refuses it, the whole frame answers STATUS_MALFORMED,
+    // and nothing reaches the coordinator.
+    let good = wire_batch(&cloud.points[..10], 1.1, 5);
+    let mut body = Vec::new();
+    wire::encode_batch(&good[..2], &mut body);
+    body.push(0x7F);
+    let mut frame = Vec::new();
+    wire::encode_frame(77, &body, &mut frame);
+    client.send_raw(&frame).expect("send");
+    let response = client.receive().expect("error frame");
+    assert_eq!((response.request_id, response.status), (77, STATUS_MALFORMED));
+    assert!(response.results.is_empty());
+    assert_eq!(svc.metrics().net_malformed_frames(), 1);
+    assert_eq!(svc.metrics().requests(), 0, "rejected frame submits nothing");
+
+    // The framing was never violated, so the same connection keeps
+    // serving — and the answers still match direct queries.
+    let expected = expected_rows(&bvh, &space, &good);
+    let response = client.roundtrip(&good).expect("connection survives");
+    check_response("post-reject", &response, &good, &expected);
+    server.shutdown();
+    svc.shutdown();
+}
+
+#[test]
+fn framing_violations_close_one_connection_without_touching_others() {
+    let (svc, bvh, space, cloud) = net_fixture(500, 16, Duration::from_millis(1));
+    let mut server =
+        NetServer::bind_tcp(Arc::clone(&svc), "127.0.0.1:0", NetConfig::default()).expect("bind");
+    let addr = server.local_addr().expect("tcp addr");
+    let mut bystander = NetClient::connect_tcp(addr).expect("connect bystander");
+
+    // Oversized declaration: the header alone is rejected — the server
+    // must answer STATUS_MALFORMED (it has the request id) and close,
+    // without ever buffering the declared gigabytes.
+    let mut hostile = NetClient::connect_tcp(addr).expect("connect hostile");
+    let mut raw = Vec::new();
+    raw.extend_from_slice(&((8 + MAX_FRAME_LEN + 1) as u32).to_le_bytes());
+    raw.extend_from_slice(&123u64.to_le_bytes());
+    hostile.send_raw(&raw).expect("send oversized header");
+    let response = hostile.receive().expect("error frame");
+    assert_eq!((response.request_id, response.status), (123, STATUS_MALFORMED));
+    let eof = hostile.receive().expect_err("connection must close");
+    assert_eq!(eof.kind(), std::io::ErrorKind::UnexpectedEof);
+
+    // Zero-length body: same verdict.
+    let mut hostile = NetClient::connect_tcp(addr).expect("connect hostile");
+    let mut raw = Vec::new();
+    raw.extend_from_slice(&8u32.to_le_bytes());
+    raw.extend_from_slice(&55u64.to_le_bytes());
+    hostile.send_raw(&raw).expect("send zero-length frame");
+    let response = hostile.receive().expect("error frame");
+    assert_eq!((response.request_id, response.status), (55, STATUS_MALFORMED));
+    assert!(matches!(
+        hostile.receive().expect_err("connection must close").kind(),
+        std::io::ErrorKind::UnexpectedEof
+    ));
+
+    // The bystander connection never noticed.
+    let preds = wire_batch(&cloud.points[..10], 1.1, 5);
+    let expected = expected_rows(&bvh, &space, &preds);
+    let response = bystander.roundtrip(&preds).expect("bystander unaffected");
+    check_response("bystander", &response, &preds, &expected);
+    assert!(svc.metrics().net_malformed_frames() >= 2);
+    server.shutdown();
+    svc.shutdown();
+}
+
+#[test]
+fn truncated_frame_at_eof_counts_as_malformed() {
+    let (svc, _, _, _) = net_fixture(100, 16, Duration::from_millis(1));
+    let mut server =
+        NetServer::bind_tcp(Arc::clone(&svc), "127.0.0.1:0", NetConfig::default()).expect("bind");
+    let addr = server.local_addr().expect("tcp addr");
+    {
+        let mut client = NetClient::connect_tcp(addr).expect("connect");
+        // A valid header and id, but the declared body never arrives:
+        // dropping the connection leaves a truncated frame.
+        let mut raw = Vec::new();
+        raw.extend_from_slice(&100u32.to_le_bytes());
+        raw.extend_from_slice(&9u64.to_le_bytes());
+        raw.extend_from_slice(&[0u8; 16]);
+        client.send_raw(&raw).expect("send partial frame");
+    } // client dropped -> EOF with buffered partial frame
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while svc.metrics().net_malformed_frames() == 0 {
+        assert!(Instant::now() < deadline, "truncated frame never counted");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    server.shutdown();
+    svc.shutdown();
+}
+
+#[test]
+fn mid_connection_shutdown_answers_stopped_then_eof() {
+    let (svc, bvh, space, cloud) = net_fixture(500, 16, Duration::from_millis(1));
+    let mut server =
+        NetServer::bind_tcp(Arc::clone(&svc), "127.0.0.1:0", NetConfig::default()).expect("bind");
+    let addr = server.local_addr().expect("tcp addr");
+    let mut client = NetClient::connect_tcp(addr).expect("connect");
+
+    // Normal traffic first: the connection is live mid-protocol.
+    let preds = wire_batch(&cloud.points[..10], 1.1, 5);
+    let expected = expected_rows(&bvh, &space, &preds);
+    let response = client.roundtrip(&preds).expect("pre-shutdown roundtrip");
+    check_response("pre-shutdown", &response, &preds, &expected);
+
+    // Stop the service under the open connection. A frame submitted
+    // after the stop rides SubmitError::Stopped into a clean
+    // STATUS_STOPPED error frame, then the connection half-closes: the
+    // client sees an orderly error + EOF, not a hang or a reset.
+    svc.shutdown();
+    let id = client.submit(&preds).expect("submit after shutdown");
+    let response = client.receive().expect("stopped frame");
+    assert_eq!((response.request_id, response.status), (id, STATUS_STOPPED));
+    assert!(response.results.is_empty());
+    let eof = client.receive().expect_err("clean EOF after drain");
+    assert_eq!(eof.kind(), std::io::ErrorKind::UnexpectedEof);
+    server.shutdown();
+}
+
+#[test]
+fn pipelining_past_the_window_stalls_the_reader_not_the_batcher() {
+    // max_batch is huge and the batch timeout long, so responses are
+    // held back while the client pipelines frames: with a 1-frame
+    // in-flight window the reader must block at least once (a recorded
+    // backpressure stall), and every frame still answers correctly once
+    // the batch flushes.
+    let (svc, bvh, space, cloud) = net_fixture(500, 10_000, Duration::from_millis(60));
+    let mut server = NetServer::bind_tcp(
+        Arc::clone(&svc),
+        "127.0.0.1:0",
+        NetConfig { max_in_flight: 1, ..Default::default() },
+    )
+    .expect("bind");
+    let addr = server.local_addr().expect("tcp addr");
+    let mut client = NetClient::connect_tcp(addr).expect("connect");
+
+    const FRAMES: usize = 8;
+    let preds = wire_batch(&cloud.points[..FRAMES * 2], 1.1, 5);
+    let expected = expected_rows(&bvh, &space, &preds);
+    let ids: Vec<u64> =
+        preds.chunks(2).map(|chunk| client.submit(chunk).expect("submit")).collect();
+    for (f, id) in ids.iter().enumerate() {
+        let response = client.receive().expect("response");
+        assert_eq!(response.request_id, *id);
+        check_response(
+            &format!("frame {f}"),
+            &response,
+            &preds[f * 2..(f + 1) * 2],
+            &expected[f * 2..(f + 1) * 2],
+        );
+    }
+    assert!(
+        svc.metrics().net_backpressure_stalls() >= 1,
+        "an 8-frame pipeline through a 1-frame window must stall \
+         (stalls={})",
+        svc.metrics().net_backpressure_stalls()
+    );
+    server.shutdown();
+    svc.shutdown();
+}
+
+#[cfg(unix)]
+#[test]
+fn unix_socket_round_trips_all_kinds() {
+    let (svc, bvh, space, cloud) = net_fixture(1000, 32, Duration::from_millis(1));
+    let path = std::env::temp_dir().join(format!("arbor_net_{}.sock", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    let mut server =
+        NetServer::bind_unix(Arc::clone(&svc), &path, NetConfig::default()).expect("bind unix");
+    assert!(server.local_addr().is_none(), "unix server has no TCP addr");
+
+    let mut client = NetClient::connect_unix(&path).expect("connect unix");
+    let preds = wire_batch(&cloud.points[..20], 1.1, 5);
+    let expected = expected_rows(&bvh, &space, &preds);
+    let response = client.roundtrip(&preds).expect("unix roundtrip");
+    check_response("unix", &response, &preds, &expected);
+
+    server.shutdown();
+    assert!(!path.exists(), "socket file removed on shutdown");
+    svc.shutdown();
+}

@@ -8,11 +8,24 @@
 //! bytes — on which `decode`/`decode_batch` must return `None` or a
 //! well-formed predicate, never panic, and never report consuming more
 //! bytes than exist (no over-read).
+//!
+//! The framing layer runs the same gauntlet: random length prefixes
+//! (including multi-gigabyte declarations), truncation at every cut
+//! point, bit flips, and garbage must never panic, never claim bytes
+//! beyond the buffer, and never demand an allocation — `parse_frame`
+//! is non-allocating by construction and the declared length is gated
+//! against `MAX_FRAME_LEN` before the caller buffers anything. The
+//! response records (`decode_result` / `decode_response_body`) gate
+//! their declared counts against the bytes present the same way.
 
 mod common;
 
 use arbor::bvh::QueryPredicate;
-use arbor::coordinator::wire::{decode, decode_batch, encode, encode_batch, TAG_ATTACH};
+use arbor::coordinator::wire::{
+    batch_tags, decode, decode_batch, decode_response_body, decode_result, encode, encode_batch,
+    encode_frame, encode_result, parse_frame, parse_frame_with, wire_tag, FrameParse,
+    MAX_FRAME_LEN, MAX_RESPONSE_LEN, STATUS_OK, TAG_ATTACH,
+};
 use arbor::data::rng::Rng;
 
 use common::random_predicate;
@@ -133,5 +146,181 @@ fn bad_tags_are_rejected_with_any_payload() {
         let mut bytes = vec![tag | TAG_ATTACH];
         bytes.extend_from_slice(&payload);
         assert!(decode(&bytes).is_none(), "attached tag {tag} must be rejected");
+    }
+}
+
+/// Encodes a random batch into a random-id frame; returns (id, body,
+/// frame).
+fn random_frame(rng: &mut Rng) -> (u64, Vec<u8>, Vec<u8>) {
+    let preds: Vec<QueryPredicate> =
+        (0..1 + rng.below(12)).map(|_| random_predicate(rng, 25.0)).collect();
+    let mut body = Vec::new();
+    encode_batch(&preds, &mut body);
+    let request_id = rng.next_u64();
+    let mut frame = Vec::new();
+    encode_frame(request_id, &body, &mut frame);
+    (request_id, body, frame)
+}
+
+#[test]
+fn framed_random_batches_round_trip_pipelined() {
+    let mut rng = Rng::new(0xF4A3);
+    for _ in 0..40 {
+        // A pipeline of several frames back to back parses in order,
+        // each body bit-identical and batch_tags agreeing with decode.
+        let frames: Vec<(u64, Vec<u8>, Vec<u8>)> =
+            (0..1 + rng.below(5)).map(|_| random_frame(&mut rng)).collect();
+        let pipe: Vec<u8> = frames.iter().flat_map(|(_, _, f)| f.iter().copied()).collect();
+        let mut offset = 0;
+        for (request_id, body, _) in &frames {
+            match parse_frame(&pipe[offset..]) {
+                FrameParse::Frame { request_id: id, body_start, body_end, used } => {
+                    assert_eq!(id, *request_id);
+                    let got = &pipe[offset + body_start..offset + body_end];
+                    assert_eq!(got, &body[..], "body survives framing");
+                    let preds = decode_batch(got).expect("body decodes");
+                    let tags = batch_tags(got).expect("size-table walk");
+                    assert_eq!(tags.len(), preds.len());
+                    for (tag, pred) in tags.iter().zip(&preds) {
+                        assert_eq!(*tag, wire_tag(pred));
+                    }
+                    offset += used;
+                }
+                other => panic!("pipelined frame: {other:?}"),
+            }
+        }
+        assert_eq!(offset, pipe.len(), "pipeline fully consumed");
+    }
+}
+
+#[test]
+fn frame_truncation_at_every_cut_point_is_incomplete() {
+    let mut rng = Rng::new(0x7C07);
+    for _ in 0..30 {
+        let (_, _, frame) = random_frame(&mut rng);
+        for cut in 0..frame.len() {
+            // A prefix of a valid frame is always Incomplete — never
+            // Malformed (the connection would die) and never a Frame
+            // (that would over-read).
+            assert_eq!(
+                parse_frame(&frame[..cut]),
+                FrameParse::Incomplete,
+                "cut {cut} of {}",
+                frame.len()
+            );
+        }
+    }
+}
+
+#[test]
+fn random_length_prefixes_are_gated_not_trusted() {
+    // The 4-byte header is hostile: whatever it declares, the parser
+    // must verdict from the gate alone — `Malformed` outside
+    // (8, 8 + MAX_FRAME_LEN], `Incomplete` inside (the body bytes are
+    // not there) — and must do so without allocating or reading beyond
+    // the 12 buffered bytes.
+    let mut rng = Rng::new(0x1E46);
+    for _ in 0..2000 {
+        let declared = rng.next_u64() as u32;
+        let mut bytes = declared.to_le_bytes().to_vec();
+        let id = rng.next_u64();
+        bytes.extend_from_slice(&id.to_le_bytes());
+        let len = declared as usize;
+        let expect = if len <= 8 || len > 8 + MAX_FRAME_LEN {
+            FrameParse::Malformed { request_id: Some(id) }
+        } else {
+            FrameParse::Incomplete
+        };
+        assert_eq!(parse_frame(&bytes), expect, "declared {declared}");
+        // With only the 4 header bytes the verdict can at most lose the
+        // id — it must never upgrade to Frame.
+        match parse_frame(&bytes[..4]) {
+            FrameParse::Frame { .. } => panic!("Frame from a bare header"),
+            FrameParse::Incomplete | FrameParse::Malformed { .. } => {}
+        }
+    }
+    // Multi-gigabyte declarations specifically.
+    for declared in [u32::MAX, u32::MAX - 1, (1 << 31) as u32, (8 + MAX_FRAME_LEN + 1) as u32] {
+        let mut bytes = declared.to_le_bytes().to_vec();
+        bytes.extend_from_slice(&[0u8; 8]);
+        assert!(
+            matches!(parse_frame(&bytes), FrameParse::Malformed { .. }),
+            "{declared} must be rejected before any buffering"
+        );
+    }
+}
+
+#[test]
+fn frame_bit_flips_and_garbage_never_panic_or_over_read() {
+    let mut rng = Rng::new(0xFB17);
+    for _ in 0..300 {
+        let (_, _, mut frame) = random_frame(&mut rng);
+        let byte = rng.below(frame.len());
+        frame[byte] ^= 1 << rng.below(8);
+        match parse_frame(&frame) {
+            FrameParse::Frame { body_start, body_end, used, .. } => {
+                assert!(used <= frame.len(), "over-read after bit flip");
+                assert!(body_start <= body_end && body_end <= used);
+                // The body may no longer decode — but it must not panic.
+                let _ = decode_batch(&frame[body_start..body_end]);
+                let _ = batch_tags(&frame[body_start..body_end]);
+            }
+            FrameParse::Incomplete | FrameParse::Malformed { .. } => {}
+        }
+    }
+    for _ in 0..500 {
+        let len = rng.below(96);
+        let bytes: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+        for parsed in [parse_frame(&bytes), parse_frame_with(&bytes, MAX_RESPONSE_LEN)] {
+            if let FrameParse::Frame { body_start, body_end, used, .. } = parsed {
+                assert!(used <= bytes.len(), "over-read on garbage");
+                assert!(body_start <= body_end && body_end <= used);
+            }
+        }
+    }
+}
+
+#[test]
+fn response_records_round_trip_and_garbage_is_gated() {
+    let mut rng = Rng::new(0x4E52);
+    for _ in 0..200 {
+        // Random well-formed response: random tags with plausible rows.
+        let n = 1 + rng.below(10);
+        let mut body = vec![STATUS_OK];
+        body.extend_from_slice(&(n as u32).to_le_bytes());
+        let mut expected = Vec::new();
+        for _ in 0..n {
+            let pred = random_predicate(&mut rng, 25.0);
+            let tag = wire_tag(&pred);
+            let indices: Vec<u32> = (0..rng.below(6)).map(|_| rng.next_u64() as u32).collect();
+            let distances: Vec<f32> =
+                (0..rng.below(6)).map(|_| rng.uniform(0.0, 100.0) as f32).collect();
+            let data = (tag & TAG_ATTACH != 0).then(|| rng.next_u64());
+            encode_result(tag, &indices, &distances, data, &mut body);
+            expected.push((tag, indices, distances, data));
+        }
+        let (status, results) = decode_response_body(&body).expect("round trip");
+        assert_eq!(status, STATUS_OK);
+        assert_eq!(results.len(), expected.len());
+        for (r, (tag, indices, distances, data)) in results.iter().zip(&expected) {
+            assert_eq!(r.tag, *tag);
+            assert_eq!(&r.indices, indices);
+            assert_eq!(&r.distances, distances);
+            assert_eq!(r.data, *data);
+        }
+        // Truncation anywhere kills the body cleanly.
+        for cut in 0..body.len() {
+            assert!(decode_response_body(&body[..cut]).is_none(), "cut {cut}");
+        }
+    }
+    // Hostile counts: a short buffer declaring u32::MAX rows must be
+    // rejected by arithmetic before anything is reserved.
+    for _ in 0..500 {
+        let len = rng.below(64);
+        let bytes: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+        if let Some((_, used)) = decode_result(&bytes) {
+            assert!(used <= bytes.len(), "over-read on garbage record");
+        }
+        let _ = decode_response_body(&bytes);
     }
 }
