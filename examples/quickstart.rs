@@ -284,4 +284,22 @@ fn main() {
     );
     net.shutdown();
     net_svc.shutdown();
+
+    // 13. Static audit: the in-tree analyzer (`arbor::audit`) proves the
+    //     invariants rustc can't see — SAFETY-justified unsafe, NaN-total
+    //     float ordering, panic-free hot/service paths, wire-kind
+    //     exhaustiveness across every dispatch layer, protocol doc-table
+    //     drift, and bench/example registration. The same pass gates
+    //     tier-1 (rust/tests/static_audit.rs) and a blocking CI job; the
+    //     standalone reporter is `cargo run --bin arbor-audit`.
+    let repo_root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("the rust/ package lives inside the repo root");
+    let findings = arbor::audit::audit_repo(repo_root).expect("audit walk over the source tree");
+    for d in &findings {
+        println!("audit: {d}");
+    }
+    assert!(findings.is_empty(), "the static audit must stay clean");
+    let n_rules = arbor::audit::rules::RULES.len();
+    println!("static audit: {n_rules} rules over rust/src -> 0 findings");
 }

@@ -1,0 +1,442 @@
+//! A comment- and string-aware line lexer for the static audit.
+//!
+//! The rules in [`super::rules`] are token-level, so they need a view of
+//! each source line where (a) comments are separated from code and (b)
+//! string/char literal *contents* are blanked out — otherwise a doc
+//! comment mentioning `unsafe`, a fixture snippet inside a raw string, or
+//! commented-out code would trip the same substring checks as real code.
+//!
+//! [`Lexed::lex`] walks the source once with a small state machine that
+//! understands:
+//!
+//! * line comments (`//`, `///`, `//!`) — the text moves to the line's
+//!   `comment` field;
+//! * block comments (`/* */`, nested, possibly spanning lines) — ditto;
+//! * string literals (`"…"`, `b"…"`) with escape sequences — the quotes
+//!   stay in `code`, the contents are replaced by spaces;
+//! * raw strings (`r"…"`, `r#"…"#`, `br##"…"##` with any hash depth) —
+//!   same blanking, closed only by the matching `"#…#` run;
+//! * char and byte-char literals (`'x'`, `'\n'`, `b'\''`) vs lifetimes
+//!   (`'a`) — a quote that does not close is a lifetime and stays code.
+//!
+//! Line numbers are 1-based and preserved exactly: the lexer emits one
+//! [`Line`] per source line regardless of what state a construct spans,
+//! which the round-trip self-test pins.
+
+/// One source line split into its code part and its comment part.
+#[derive(Clone, Debug, Default)]
+pub struct Line {
+    /// The line's code with comments removed and all string / char
+    /// literal contents blanked to spaces (delimiters are kept so token
+    /// boundaries survive).
+    pub code: String,
+    /// The concatenated comment text of the line (line- and block-comment
+    /// bodies, without the `//` / `/*` markers).
+    pub comment: String,
+}
+
+/// A lexed source file: one [`Line`] per physical source line.
+#[derive(Clone, Debug, Default)]
+pub struct Lexed {
+    /// The lines, in order; `lines[0]` is source line 1.
+    pub lines: Vec<Line>,
+}
+
+/// Lexer state carried across characters (and across lines, for
+/// multi-line constructs).
+enum State {
+    /// Plain code.
+    Code,
+    /// Inside `// …` (ends at newline).
+    LineComment,
+    /// Inside `/* … */`, with the current nesting depth.
+    BlockComment(u32),
+    /// Inside a `"…"` or `b"…"` string literal.
+    Str,
+    /// Inside a raw string, closed by `"` followed by this many `#`s.
+    RawStr(u32),
+}
+
+impl Lexed {
+    /// Lexes `src` into per-line code/comment parts.
+    pub fn lex(src: &str) -> Lexed {
+        let chars: Vec<char> = src.chars().collect();
+        let n = chars.len();
+        let mut lines = vec![Line::default()];
+        let mut state = State::Code;
+        // Last non-blank char emitted to code, used to tell a raw-string
+        // prefix (`r"`) from the tail of an identifier (`for"` cannot
+        // occur; `attr"` etc. must not start a raw string).
+        let mut last_code: char = '\n';
+        let mut i = 0;
+
+        macro_rules! cur {
+            () => {
+                lines.last_mut().expect("lines is never empty")
+            };
+        }
+
+        while i < n {
+            let c = chars[i];
+            if c == '\n' {
+                lines.push(Line::default());
+                if let State::LineComment = state {
+                    state = State::Code;
+                }
+                i += 1;
+                continue;
+            }
+            match state {
+                State::Code => {
+                    let next = chars.get(i + 1).copied();
+                    if c == '/' && next == Some('/') {
+                        state = State::LineComment;
+                        cur!().code.push(' ');
+                        i += 2;
+                    } else if c == '/' && next == Some('*') {
+                        state = State::BlockComment(1);
+                        cur!().code.push(' ');
+                        i += 2;
+                    } else if c == '"' {
+                        state = State::Str;
+                        cur!().code.push('"');
+                        last_code = '"';
+                        i += 1;
+                    } else if (c == 'r' || c == 'b') && !is_ident(last_code) {
+                        // Candidate raw string (`r"`, `r#"`, `br"`),
+                        // byte string (`b"`), or byte char (`b'x'`).
+                        let mut j = i;
+                        if chars[j] == 'b' {
+                            j += 1;
+                        }
+                        let mut hashes = 0u32;
+                        let mut k = j;
+                        if chars.get(k).copied() == Some('r') {
+                            k += 1;
+                            while chars.get(k).copied() == Some('#') {
+                                hashes += 1;
+                                k += 1;
+                            }
+                        } else {
+                            k = j; // allow plain b"…" (no `r`)
+                        }
+                        if k > i && chars.get(k).copied() == Some('"') {
+                            // Raw or byte string opener spans i..=k.
+                            for &p in &chars[i..=k] {
+                                cur!().code.push(p);
+                            }
+                            state = if k > j || chars[j] == 'r' {
+                                State::RawStr(hashes)
+                            } else {
+                                State::Str
+                            };
+                            last_code = '"';
+                            i = k + 1;
+                        } else if c == 'b' && next == Some('\'') {
+                            cur!().code.push('b');
+                            last_code = 'b';
+                            i += 1; // the quote is handled on the next pass
+                        } else {
+                            cur!().code.push(c);
+                            last_code = c;
+                            i += 1;
+                        }
+                    } else if c == '\'' {
+                        // Char literal or lifetime. A literal closes with
+                        // a quote on the same line; a lifetime does not.
+                        if let Some(close) = char_literal_end(&chars, i) {
+                            cur!().code.push('\'');
+                            for _ in i + 1..close {
+                                cur!().code.push(' ');
+                            }
+                            cur!().code.push('\'');
+                            last_code = '\'';
+                            i = close + 1;
+                        } else {
+                            cur!().code.push('\'');
+                            last_code = '\'';
+                            i += 1;
+                        }
+                    } else {
+                        cur!().code.push(c);
+                        if !c.is_whitespace() {
+                            last_code = c;
+                        }
+                        i += 1;
+                    }
+                }
+                State::LineComment => {
+                    cur!().comment.push(c);
+                    i += 1;
+                }
+                State::BlockComment(depth) => {
+                    let next = chars.get(i + 1).copied();
+                    if c == '/' && next == Some('*') {
+                        state = State::BlockComment(depth + 1);
+                        cur!().comment.push_str("/*");
+                        i += 2;
+                    } else if c == '*' && next == Some('/') {
+                        if depth == 1 {
+                            state = State::Code;
+                            // Keep tokens on either side separated.
+                            cur!().code.push(' ');
+                        } else {
+                            state = State::BlockComment(depth - 1);
+                            cur!().comment.push_str("*/");
+                        }
+                        i += 2;
+                    } else {
+                        cur!().comment.push(c);
+                        i += 1;
+                    }
+                }
+                State::Str => {
+                    if c == '\\' {
+                        cur!().code.push(' ');
+                        // Skip the escaped char unless it is the newline
+                        // of a line continuation (handled at loop top).
+                        if chars.get(i + 1).copied() != Some('\n') && i + 1 < n {
+                            cur!().code.push(' ');
+                            i += 2;
+                        } else {
+                            i += 1;
+                        }
+                    } else if c == '"' {
+                        state = State::Code;
+                        cur!().code.push('"');
+                        last_code = '"';
+                        i += 1;
+                    } else {
+                        cur!().code.push(' ');
+                        i += 1;
+                    }
+                }
+                State::RawStr(hashes) => {
+                    if c == '"' {
+                        let h = hashes as usize;
+                        let closes = (0..h).all(|d| chars.get(i + 1 + d).copied() == Some('#'));
+                        if closes {
+                            cur!().code.push('"');
+                            for _ in 0..h {
+                                cur!().code.push('#');
+                            }
+                            state = State::Code;
+                            last_code = '"';
+                            i += 1 + h;
+                        } else {
+                            cur!().code.push(' ');
+                            i += 1;
+                        }
+                    } else {
+                        cur!().code.push(' ');
+                        i += 1;
+                    }
+                }
+            }
+        }
+        Lexed { lines }
+    }
+
+    /// Number of physical lines.
+    pub fn len(&self) -> usize {
+        self.lines.len()
+    }
+
+    /// True when the file is empty.
+    pub fn is_empty(&self) -> bool {
+        self.lines.is_empty()
+    }
+
+    /// The code part of 1-based `line` (empty outside the file).
+    pub fn code(&self, line: usize) -> &str {
+        self.lines.get(line.wrapping_sub(1)).map_or("", |l| l.code.as_str())
+    }
+
+    /// The comment part of 1-based `line` (empty outside the file).
+    pub fn comment(&self, line: usize) -> &str {
+        self.lines.get(line.wrapping_sub(1)).map_or("", |l| l.comment.as_str())
+    }
+
+    /// The per-line escape contract: a violation on `line` is waived when
+    /// that line — or the line directly above it — carries a comment
+    /// containing `audit: allow(<rule>)`.
+    pub fn is_allowed(&self, line: usize, rule: &str) -> bool {
+        let needle = format!("audit: allow({rule})");
+        self.comment(line).contains(&needle)
+            || (line > 1 && self.comment(line - 1).contains(&needle))
+    }
+
+    /// A 1-based-indexable mask of lines inside `#[cfg(test)]` items
+    /// (`mask[line]`), computed by brace-matching the item that follows
+    /// each attribute. Index 0 is unused.
+    pub fn cfg_test_mask(&self) -> Vec<bool> {
+        let len = self.len();
+        let mut mask = vec![false; len + 1];
+        let mut i = 1;
+        while i <= len {
+            if !self.code(i).contains("#[cfg(test)]") {
+                i += 1;
+                continue;
+            }
+            let mut depth: i64 = 0;
+            let mut started = false;
+            let mut j = i;
+            while j <= len {
+                for ch in self.code(j).chars() {
+                    match ch {
+                        '{' => {
+                            depth += 1;
+                            started = true;
+                        }
+                        '}' => depth -= 1,
+                        _ => {}
+                    }
+                }
+                mask[j] = true;
+                if started && depth <= 0 {
+                    break;
+                }
+                j += 1;
+            }
+            i = j + 1;
+        }
+        mask
+    }
+}
+
+/// True for identifier characters (used to reject `r"` detection inside
+/// identifiers like `attr`).
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// If the quote at `chars[open]` starts a char (or byte-char) literal,
+/// returns the index of its closing quote; `None` means it is a lifetime.
+fn char_literal_end(chars: &[char], open: usize) -> Option<usize> {
+    let second = chars.get(open + 1).copied()?;
+    if second == '\\' {
+        // Escaped literal: scan to the closing quote on this line.
+        let mut j = open + 2;
+        while let Some(&c) = chars.get(j) {
+            if c == '\'' {
+                return Some(j);
+            }
+            if c == '\n' || j - open > 12 {
+                return None;
+            }
+            j += 1;
+        }
+        None
+    } else if second != '\'' && chars.get(open + 2).copied() == Some('\'') {
+        Some(open + 2)
+    } else {
+        // `''` is invalid Rust, and anything longer unquoted is a
+        // lifetime (`'a`, `'static`).
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_numbers_round_trip() {
+        // The lexer must emit exactly one Line per physical source line,
+        // whatever constructs span them — this is what makes every
+        // diagnostic's line number trustworthy.
+        let src = "fn a() {}\n/* one\n   two */ fn b() {}\nlet s = \"x\ny\";\nlet r = r#\"p\nq\"#;\n// tail\n";
+        let lx = Lexed::lex(src);
+        assert_eq!(lx.len(), src.lines().count() + 1); // + trailing newline
+        assert_eq!(lx.code(1), "fn a() {}");
+        assert!(lx.code(3).contains("fn b() {}"));
+        assert!(lx.code(4).starts_with("let s = \""));
+        assert!(lx.code(6).contains("let r = r#\""));
+    }
+
+    #[test]
+    fn comments_are_separated_from_code() {
+        let lx = Lexed::lex("let x = 1; // SAFETY: not really code\n");
+        assert_eq!(lx.code(1).trim_end(), "let x = 1;");
+        assert!(lx.comment(1).contains("SAFETY"));
+        assert!(!lx.code(1).contains("SAFETY"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let lx = Lexed::lex("a /* x /* y */ z */ b\n");
+        assert_eq!(lx.code(1).split_whitespace().collect::<Vec<_>>(), ["a", "b"]);
+        assert!(lx.comment(1).contains('y'));
+    }
+
+    #[test]
+    fn string_contents_are_blanked() {
+        let lx = Lexed::lex("let s = \"unsafe { panic!() }\";\n");
+        assert!(!lx.code(1).contains("unsafe"));
+        assert!(!lx.code(1).contains("panic"));
+        assert!(lx.code(1).contains('"')); // delimiters survive
+    }
+
+    #[test]
+    fn raw_strings_with_hashes_are_blanked() {
+        let src = "let r = r##\"unsafe \"# still inside\"##; unsafe_token\n";
+        let lx = Lexed::lex(src);
+        let code = lx.code(1);
+        assert!(!code.contains("unsafe \""));
+        assert!(!code.contains("still"));
+        assert!(code.contains("unsafe_token")); // code after the close
+    }
+
+    #[test]
+    fn byte_strings_and_byte_chars() {
+        let lx = Lexed::lex("let b = b\"unsafe\"; let c = b'x'; let q = b'\\'';\n");
+        assert!(!lx.code(1).contains("unsafe"));
+        assert!(!lx.code(1).contains('x'));
+    }
+
+    #[test]
+    fn char_literal_with_quote_vs_lifetime() {
+        let lx = Lexed::lex("let q = '\\''; fn f<'a>(x: &'a str) {}\n");
+        let code = lx.code(1);
+        assert!(code.contains("fn f<'a>"), "lifetime must stay code: {code}");
+        // The escaped quote char literal must not unbalance the lexer.
+        assert!(code.contains("str"));
+    }
+
+    #[test]
+    fn identifier_tail_r_does_not_start_raw_string() {
+        let lx = Lexed::lex("for x in 0..n { attr\"lit\"; }\n");
+        // `attr` ends in `r` but `attr\"` is ident + string, not r-string;
+        // either way the *contents* are blanked and the brace survives.
+        assert!(lx.code(1).contains('}'));
+        assert!(!lx.code(1).contains("lit"));
+    }
+
+    #[test]
+    fn allow_escape_matches_same_and_previous_line() {
+        let src = "// audit: allow(some-rule)\nbad();\nbad(); // audit: allow(some-rule)\nbad();\n";
+        let lx = Lexed::lex(src);
+        assert!(lx.is_allowed(2, "some-rule"));
+        assert!(lx.is_allowed(3, "some-rule"));
+        assert!(!lx.is_allowed(4, "some-rule"));
+        assert!(!lx.is_allowed(2, "other-rule"));
+    }
+
+    #[test]
+    fn cfg_test_mask_covers_the_braced_item() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); }\n}\nfn after() {}\n";
+        let lx = Lexed::lex(src);
+        let mask = lx.cfg_test_mask();
+        assert!(!mask[1]);
+        assert!(mask[2] && mask[3] && mask[4] && mask[5]);
+        assert!(!mask[6]);
+    }
+
+    #[test]
+    fn cfg_test_in_a_string_does_not_open_a_region() {
+        let src = "let s = \"#[cfg(test)]\";\nlive();\n";
+        let lx = Lexed::lex(src);
+        let mask = lx.cfg_test_mask();
+        assert!(!mask[1] && !mask[2]);
+    }
+}

@@ -1,0 +1,196 @@
+//! `arbor-audit`: a repo-wide static analysis pass that proves
+//! cross-layer invariants inside tier-1.
+//!
+//! The codebase threads every query kind by hand through five layers
+//! (predicates → batched engines → wire tags → service sub-batch lanes →
+//! distributed forwarding), and its worst historical bugs were exactly
+//! the kind rustc cannot catch: the NaN-panicking
+//! `partial_cmp().unwrap()` rank sorts fixed in PR 5, and the panics the
+//! PR 9 framing hardening had to chase out of the `Result`-based service
+//! path before untrusted bytes could reach them. This module is the
+//! equivalent of ArborX's exhaustive consistency infrastructure: a
+//! dependency-free analyzer ([`lexer`] + [`rules`]) that runs inside
+//! `cargo test` (`rust/tests/static_audit.rs`) and as a standalone
+//! reporter (`cargo run --bin arbor-audit`), so the invariants are
+//! machine-checked on every build.
+//!
+//! ## Rules
+//!
+//! | rule | what it pins |
+//! |------|--------------|
+//! | `unsafe-needs-safety` | every `unsafe` block/fn/impl carries an adjacent `// SAFETY:` (or `# Safety` doc) justification |
+//! | `float-total-ord` | no `.partial_cmp(` calls — the PR 5 NaN bug class; `total_cmp` is the sanctioned total order |
+//! | `no-panic-hot-path` | no `.unwrap()` / `.expect(` / `panic!` / `unreachable!` outside `#[cfg(test)]` in the traversal/service modules ([`rules::HOT_PATH_MODULES`]); lock-poisoning recovery (`.unwrap_or_else(\|p\| p.into_inner())`) is the sanctioned form |
+//! | `wire-kind-exhaustive` | every wire kind appears in the codec, a service sub-batch lane, the distributed forward path, and the stats/facade dispatchers — adding an 11th kind without touching all layers fails the build |
+//! | `wire-doc-table` | the protocol doc table at the top of `coordinator/wire.rs` lists exactly the declared `TAG_*` constants |
+//! | `target-registration` | every bench/example file is registered in `rust/Cargo.toml` (benches with `harness = false`), and every `BENCH_*.json` the CI bench-smoke job asserts has a writer |
+//!
+//! ## The escape contract
+//!
+//! A finding is waived by a comment containing `audit: allow(rule-name)`
+//! on the offending line or the line directly above it. The escape is
+//! deliberately per-line and greppable; every use is expected to carry a
+//! rationale after the closing parenthesis, e.g.:
+//!
+//! ```text
+//! // audit: allow(no-panic-hot-path): sub-batches are grouped by kind
+//! // upstream; a mixed lane is a logic bug worth crashing on.
+//! _ => unreachable!("grouped by kind"),
+//! ```
+//!
+//! The analyzer is comment- and string-aware (see [`lexer`]): doc
+//! comments mentioning `unsafe`, fixture snippets inside raw strings,
+//! and commented-out code do not trigger findings.
+
+pub mod lexer;
+pub mod rules;
+
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use lexer::Lexed;
+
+/// One finding: which rule fired, where, and why.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Diagnostic {
+    /// Repo-relative `/`-separated path of the offending file.
+    pub file: String,
+    /// 1-based line number the finding anchors to.
+    pub line: usize,
+    /// The rule that fired (one of the `rules::RULE_*` names).
+    pub rule: &'static str,
+    /// Human-readable explanation.
+    pub message: String,
+}
+
+impl Diagnostic {
+    /// Builds a diagnostic; `file` is stored as given.
+    pub fn new(rule: &'static str, file: &str, line: usize, message: impl Into<String>) -> Self {
+        Diagnostic { file: file.to_string(), line, rule, message: message.into() }
+    }
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// Recursively collects `.rs` files under `dir`, sorted for
+/// deterministic diagnostics.
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let entries = fs::read_dir(dir).map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+    let mut paths: Vec<PathBuf> = Vec::new();
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+        paths.push(entry.path());
+    }
+    paths.sort();
+    for p in paths {
+        if p.is_dir() {
+            collect_rs_files(&p, out)?;
+        } else if p.extension().and_then(|e| e.to_str()) == Some("rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Reads a file, mapping errors to a message naming the path.
+fn read(path: &Path) -> Result<String, String> {
+    fs::read_to_string(path).map_err(|e| format!("read {}: {e}", path.display()))
+}
+
+/// A repo-relative `/`-separated display path.
+fn rel_path(repo_root: &Path, p: &Path) -> String {
+    p.strip_prefix(repo_root)
+        .unwrap_or(p)
+        .components()
+        .map(|c| c.as_os_str().to_string_lossy())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+/// Runs every audit rule over the repository rooted at `repo_root`
+/// (the directory containing `rust/`, `examples/`, and
+/// `.github/workflows/ci.yml`). Returns the sorted findings; an empty
+/// vector is a clean pass. `Err` means the walk itself failed (missing
+/// layer file, unreadable source) — callers must treat that as a
+/// failure, not a pass.
+pub fn audit_repo(repo_root: &Path) -> Result<Vec<Diagnostic>, String> {
+    let src_root = repo_root.join("rust").join("src");
+    let mut files = Vec::new();
+    collect_rs_files(&src_root, &mut files)?;
+
+    let mut sources: Vec<(String, Lexed)> = Vec::new();
+    for p in &files {
+        let text = read(p)?;
+        sources.push((rel_path(repo_root, p), Lexed::lex(&text)));
+    }
+
+    let mut diags: Vec<Diagnostic> = Vec::new();
+    for (rel, lx) in &sources {
+        diags.extend(rules::check_unsafe_needs_safety(rel, lx));
+        diags.extend(rules::check_float_total_ord(rel, lx));
+        if rules::is_hot_path(rel) {
+            diags.extend(rules::check_no_panic_hot_path(rel, lx));
+        }
+    }
+
+    // The cross-layer wire-kind rules need the five dispatch layers plus
+    // the predicate definitions; a missing layer is a hard error.
+    let find = |suffix: &str| -> Result<&(String, Lexed), String> {
+        sources
+            .iter()
+            .find(|(rel, _)| rel.ends_with(suffix))
+            .ok_or_else(|| format!("audit layer file missing: {suffix}"))
+    };
+    let wire = find("coordinator/wire.rs")?;
+    let batched = find("bvh/batched.rs")?;
+    let service = find("coordinator/service.rs")?;
+    let distributed = find("coordinator/distributed.rs")?;
+    let stats = find("bvh/stats.rs")?;
+    let predicates = find("geometry/predicates.rs")?;
+    let layers = rules::WireLayers {
+        wire: (wire.0.as_str(), &wire.1),
+        batched: (batched.0.as_str(), &batched.1),
+        service: (service.0.as_str(), &service.1),
+        distributed: (distributed.0.as_str(), &distributed.1),
+        stats: (stats.0.as_str(), &stats.1),
+        predicates: (predicates.0.as_str(), &predicates.1),
+    };
+    diags.extend(rules::check_wire_kind_exhaustive(&layers));
+    diags.extend(rules::check_wire_doc_table(&wire.0, &wire.1));
+
+    // Target registration: manifest + bench sources + examples + CI.
+    let cargo_toml = read(&repo_root.join("rust").join("Cargo.toml"))?;
+    let bench_dir = repo_root.join("rust").join("benches");
+    let mut bench_paths = Vec::new();
+    collect_rs_files(&bench_dir, &mut bench_paths)?;
+    let mut bench_files: Vec<(String, String)> = Vec::new();
+    for p in &bench_paths {
+        let name = p
+            .file_name()
+            .map(|n| n.to_string_lossy().into_owned())
+            .ok_or_else(|| format!("bench path has no file name: {}", p.display()))?;
+        bench_files.push((name, read(p)?));
+    }
+    let example_dir = repo_root.join("examples");
+    let mut example_paths = Vec::new();
+    collect_rs_files(&example_dir, &mut example_paths)?;
+    let example_files: Vec<String> = example_paths
+        .iter()
+        .filter_map(|p| p.file_name().map(|n| n.to_string_lossy().into_owned()))
+        .collect();
+    let ci_yaml = read(&repo_root.join(".github").join("workflows").join("ci.yml"))?;
+    diags.extend(rules::check_target_registration(&rules::TargetInputs {
+        cargo_toml: &cargo_toml,
+        bench_files: &bench_files,
+        example_files: &example_files,
+        ci_yaml: &ci_yaml,
+    }));
+
+    diags.sort();
+    Ok(diags)
+}

@@ -1,0 +1,1009 @@
+//! The audit rules: each is a pure function over [`Lexed`] sources (or
+//! raw target/CI text for [`check_target_registration`]) returning
+//! [`Diagnostic`]s, so the fixture tests can drive every rule on inline
+//! snippets without touching the filesystem.
+//!
+//! See [`super`] (the module docs) for the rule table, the bug class each
+//! rule pins, and the `// audit: allow(rule)` escape contract.
+
+use super::lexer::Lexed;
+use super::Diagnostic;
+
+/// Rule name: every `unsafe` block / fn / impl carries a `SAFETY:`
+/// justification next to it.
+pub const RULE_UNSAFE: &str = "unsafe-needs-safety";
+/// Rule name: no NaN-panicking float comparisons (`partial_cmp`).
+pub const RULE_FLOAT_ORD: &str = "float-total-ord";
+/// Rule name: no panic paths in the designated hot / service modules.
+pub const RULE_NO_PANIC: &str = "no-panic-hot-path";
+/// Rule name: every wire kind is threaded through all dispatch layers.
+pub const RULE_WIRE_KIND: &str = "wire-kind-exhaustive";
+/// Rule name: the wire module's doc table matches the declared tags.
+pub const RULE_WIRE_DOC: &str = "wire-doc-table";
+/// Rule name: every bench / example / CI-asserted snapshot is registered.
+pub const RULE_TARGETS: &str = "target-registration";
+
+/// Every rule name, in reporting order.
+pub const RULES: &[&str] =
+    &[RULE_UNSAFE, RULE_FLOAT_ORD, RULE_NO_PANIC, RULE_WIRE_KIND, RULE_WIRE_DOC, RULE_TARGETS];
+
+/// The modules rule [`RULE_NO_PANIC`] applies to: traversal hot loops and
+/// the Result-based service path, where a panic either poisons a worker
+/// or turns a malformed client frame into a process abort.
+pub const HOT_PATH_MODULES: &[&str] = &[
+    "bvh/traversal.rs",
+    "bvh/wide.rs",
+    "bvh/nearest.rs",
+    "bvh/first_hit.rs",
+    "bvh/batched.rs",
+    "coordinator/service.rs",
+    "coordinator/net.rs",
+    "coordinator/wire.rs",
+];
+
+/// True when `file` (a `/`-separated repo-relative path) is one of the
+/// designated hot / service modules.
+pub fn is_hot_path(file: &str) -> bool {
+    HOT_PATH_MODULES.iter().any(|m| file.ends_with(m))
+}
+
+/// Whole-word containment: `word` occurs in `code` with no identifier
+/// character on either side (so `TAG_NEAREST` does not match inside
+/// `TAG_NEAREST_SPHERE`, and `PredicateKind::Nearest` does not match
+/// inside `PredicateKind::NearestBox`).
+fn contains_word(code: &str, word: &str) -> bool {
+    let mut start = 0;
+    while let Some(pos) = code[start..].find(word) {
+        let at = start + pos;
+        let before_ok = at == 0
+            || !code[..at].chars().next_back().map(is_ident_char).unwrap_or(false);
+        let after = code[at + word.len()..].chars().next();
+        let after_ok = !after.map(is_ident_char).unwrap_or(false);
+        if before_ok && after_ok {
+            return true;
+        }
+        start = at + word.len();
+    }
+    false
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// A comment satisfies the SAFETY requirement when it carries the
+/// `SAFETY:` marker or a `# Safety` doc section.
+fn has_safety_marker(comment: &str) -> bool {
+    comment.contains("SAFETY") || comment.contains("# Safety")
+}
+
+/// **unsafe-needs-safety.** Every line whose code contains the `unsafe`
+/// keyword must have a `SAFETY:` comment on the line itself, in the
+/// contiguous comment/attribute block directly above it, or on the line
+/// directly below (the `|i| unsafe {` closure idiom puts the comment as
+/// the first line *inside* the block).
+pub fn check_unsafe_needs_safety(file: &str, lx: &Lexed) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for ln in 1..=lx.len() {
+        if !contains_word(lx.code(ln), "unsafe") {
+            continue;
+        }
+        if lx.is_allowed(ln, RULE_UNSAFE) {
+            continue;
+        }
+        let mut satisfied =
+            has_safety_marker(lx.comment(ln)) || has_safety_marker(lx.comment(ln + 1));
+        if !satisfied {
+            // Walk the contiguous comment / attribute / blank block above.
+            let mut j = ln.saturating_sub(1);
+            let mut steps = 0;
+            while j >= 1 && steps < 8 {
+                let code = lx.code(j).trim();
+                if !code.is_empty() && !code.starts_with("#[") {
+                    break;
+                }
+                if has_safety_marker(lx.comment(j)) {
+                    satisfied = true;
+                    break;
+                }
+                j -= 1;
+                steps += 1;
+            }
+        }
+        if !satisfied {
+            out.push(Diagnostic::new(
+                RULE_UNSAFE,
+                file,
+                ln,
+                "`unsafe` without an adjacent `// SAFETY:` justification",
+            ));
+        }
+    }
+    out
+}
+
+/// **float-total-ord.** Forbids `.partial_cmp(` everywhere (the PR 5 NaN
+/// bug class: `partial_cmp().unwrap()` panics on NaN, and silently
+/// drops elements under `max_by`-style folds). `f32::total_cmp` /
+/// `f64::total_cmp` are the sanctioned total orders. Definitions of
+/// `fn partial_cmp` (PartialOrd impls) do not match — only call sites.
+pub fn check_float_total_ord(file: &str, lx: &Lexed) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for ln in 1..=lx.len() {
+        if !lx.code(ln).contains(".partial_cmp(") {
+            continue;
+        }
+        if lx.is_allowed(ln, RULE_FLOAT_ORD) {
+            continue;
+        }
+        out.push(Diagnostic::new(
+            RULE_FLOAT_ORD,
+            file,
+            ln,
+            "`.partial_cmp(` call — use `total_cmp` (NaN-total) instead",
+        ));
+    }
+    out
+}
+
+/// The panic-path tokens [`RULE_NO_PANIC`] rejects. `.unwrap_or*` /
+/// `.expect_err` do not match; lock-poisoning recovery
+/// (`.lock().unwrap_or_else(|p| p.into_inner())`) is the sanctioned
+/// panic-free form for mutexes.
+const PANIC_TOKENS: &[&str] =
+    &[".unwrap()", ".expect(", "panic!", "unreachable!", "todo!", "unimplemented!"];
+
+/// **no-panic-hot-path.** Forbids the [`PANIC_TOKENS`] outside
+/// `#[cfg(test)]` items in the [`HOT_PATH_MODULES`]. The caller decides
+/// module membership via [`is_hot_path`]; the check itself is
+/// path-agnostic so fixtures can exercise it directly.
+pub fn check_no_panic_hot_path(file: &str, lx: &Lexed) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let test_mask = lx.cfg_test_mask();
+    for ln in 1..=lx.len() {
+        if test_mask[ln] {
+            continue;
+        }
+        let code = lx.code(ln);
+        let Some(tok) = PANIC_TOKENS.iter().find(|t| code.contains(*t)) else {
+            continue;
+        };
+        if lx.is_allowed(ln, RULE_NO_PANIC) {
+            continue;
+        }
+        out.push(Diagnostic::new(
+            RULE_NO_PANIC,
+            file,
+            ln,
+            format!("`{tok}` in a hot/service module — return an error, restructure, or `// audit: allow({RULE_NO_PANIC})` with a rationale"),
+        ));
+    }
+    out
+}
+
+/// The five dispatch layers (plus the predicate definitions) that every
+/// wire kind must be threaded through, pre-lexed. Paths are only used in
+/// diagnostics.
+pub struct WireLayers<'a> {
+    /// `coordinator/wire.rs`: tag constants + codec.
+    pub wire: (&'a str, &'a Lexed),
+    /// `bvh/batched.rs`: `QueryPredicate` / `PredicateKind` + facade.
+    pub batched: (&'a str, &'a Lexed),
+    /// `coordinator/service.rs`: per-kind sub-batch lanes.
+    pub service: (&'a str, &'a Lexed),
+    /// `coordinator/distributed.rs`: the forward / merge paths.
+    pub distributed: (&'a str, &'a Lexed),
+    /// `bvh/stats.rs`: the per-kind access-matrix dispatcher.
+    pub stats: (&'a str, &'a Lexed),
+    /// `geometry/predicates.rs`: the `Spatial` kind family.
+    pub predicates: (&'a str, &'a Lexed),
+}
+
+/// Extracts `pub const TAG_<NAME>: u8` declarations as
+/// `(NAME, line)` — `NAME` without the `TAG_` prefix.
+fn tag_constants(lx: &Lexed) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    for ln in 1..=lx.len() {
+        let code = lx.code(ln);
+        if let Some(pos) = code.find("pub const TAG_") {
+            let rest = &code[pos + "pub const TAG_".len()..];
+            let name: String = rest.chars().take_while(|&c| is_ident_char(c)).collect();
+            if !name.is_empty() {
+                out.push((name, ln));
+            }
+        }
+    }
+    out
+}
+
+/// Extracts the variants of `pub enum <name>` as `(Variant, line)`,
+/// considering only idents at brace depth 1 (single-line variants, which
+/// is all this codebase uses).
+fn enum_variants(lx: &Lexed, name: &str) -> Vec<(String, usize)> {
+    let header = format!("pub enum {name}");
+    let mut out = Vec::new();
+    let mut start = 0;
+    for ln in 1..=lx.len() {
+        if contains_word(lx.code(ln), &header) || lx.code(ln).contains(&header) {
+            start = ln;
+            break;
+        }
+    }
+    if start == 0 {
+        return out;
+    }
+    let mut depth: i64 = 0;
+    let mut started = false;
+    for ln in start..=lx.len() {
+        let code = lx.code(ln);
+        let trimmed = code.trim();
+        if started && depth == 1 && trimmed.chars().next().map_or(false, |c| c.is_ascii_uppercase())
+        {
+            let ident: String = trimmed.chars().take_while(|&c| is_ident_char(c)).collect();
+            if !ident.is_empty() {
+                out.push((ident, ln));
+            }
+        }
+        for c in code.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    started = true;
+                }
+                '}' => depth -= 1,
+                _ => {}
+            }
+        }
+        if started && depth <= 0 {
+            break;
+        }
+    }
+    out
+}
+
+/// `TAG_FIRST_HIT` → `FirstHit`: the naming convention linking wire tags
+/// to `PredicateKind` variants.
+fn camel(tag: &str) -> String {
+    tag.split('_')
+        .map(|w| {
+            let mut cs = w.chars();
+            match cs.next() {
+                Some(f) => f.to_ascii_uppercase().to_string() + &cs.as_str().to_ascii_lowercase(),
+                None => String::new(),
+            }
+        })
+        .collect()
+}
+
+/// Counts the lines of `lx` whose code contains `word` (whole-word),
+/// excluding line `except`.
+fn lines_with_word(lx: &Lexed, word: &str, except: usize) -> usize {
+    (1..=lx.len()).filter(|&ln| ln != except && contains_word(lx.code(ln), word)).count()
+}
+
+/// **wire-kind-exhaustive.** Cross-checks the kind family across every
+/// layer. Adding an 11th kind without touching all of them fails:
+///
+/// 1. `PredicateKind::COUNT` must equal the number of variants.
+/// 2. The `PredicateKind` variant set must equal the set derived from
+///    `QueryPredicate` × `Spatial` (each spatial kind, its `Attach`
+///    twin, and each non-spatial query variant).
+/// 3. Every non-`ATTACH` wire tag must map to a `PredicateKind` variant
+///    by naming convention ([`camel`]), and vice versa; attach variants
+///    require the `TAG_ATTACH` flag to exist.
+/// 4. Every tag constant must be referenced by the codec beyond its
+///    declaration (encode + decode ⇒ at least 2 more lines).
+/// 5. `service.rs` must dispatch a sub-batch lane per `PredicateKind`
+///    variant; `distributed.rs` / `stats.rs` / the `batched.rs` facade
+///    must each dispatch per `QueryPredicate` variant; the codec,
+///    facade, and distributed forward path must each discriminate every
+///    `Spatial` kind.
+pub fn check_wire_kind_exhaustive(layers: &WireLayers) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let (wire_path, wire) = layers.wire;
+    let (batched_path, batched) = layers.batched;
+    let (service_path, service) = layers.service;
+    let (dist_path, dist) = layers.distributed;
+    let (stats_path, stats) = layers.stats;
+    let (pred_path, preds) = layers.predicates;
+
+    let tags = tag_constants(wire);
+    let kinds = enum_variants(batched, "PredicateKind");
+    let queries = enum_variants(batched, "QueryPredicate");
+    let spatials = enum_variants(preds, "Spatial");
+
+    if tags.is_empty() {
+        out.push(Diagnostic::new(RULE_WIRE_KIND, wire_path, 1, "no `pub const TAG_*` found"));
+    }
+    if kinds.is_empty() {
+        out.push(Diagnostic::new(
+            RULE_WIRE_KIND,
+            batched_path,
+            1,
+            "no `pub enum PredicateKind` found",
+        ));
+    }
+    if queries.is_empty() {
+        out.push(Diagnostic::new(
+            RULE_WIRE_KIND,
+            batched_path,
+            1,
+            "no `pub enum QueryPredicate` found",
+        ));
+    }
+    if spatials.is_empty() {
+        out.push(Diagnostic::new(RULE_WIRE_KIND, pred_path, 1, "no `pub enum Spatial` found"));
+    }
+    if !out.is_empty() {
+        return out; // the structural checks below need all four parsed
+    }
+
+    // (1) COUNT consistency.
+    for ln in 1..=batched.len() {
+        let code = batched.code(ln);
+        if let Some(pos) = code.find("pub const COUNT: usize =") {
+            let rest = code[pos + "pub const COUNT: usize =".len()..].trim();
+            let digits: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+            if digits.parse::<usize>() != Ok(kinds.len()) {
+                out.push(Diagnostic::new(
+                    RULE_WIRE_KIND,
+                    batched_path,
+                    ln,
+                    format!(
+                        "PredicateKind::COUNT = {digits} but the enum has {} variants",
+                        kinds.len()
+                    ),
+                ));
+            }
+        }
+    }
+
+    // (2) PredicateKind == derived(QueryPredicate × Spatial).
+    let spatial_kinds: Vec<String> = spatials
+        .iter()
+        .map(|(v, _)| v.strip_prefix("Intersects").unwrap_or(v).to_string())
+        .collect();
+    let mut derived: Vec<String> = Vec::new();
+    derived.extend(spatial_kinds.iter().cloned());
+    derived.extend(spatial_kinds.iter().map(|s| format!("Attach{s}")));
+    for (v, _) in &queries {
+        if v != "Spatial" && v != "Attach" {
+            derived.push(v.clone());
+        }
+    }
+    for d in &derived {
+        if !kinds.iter().any(|(k, _)| k == d) {
+            out.push(Diagnostic::new(
+                RULE_WIRE_KIND,
+                batched_path,
+                kinds[0].1,
+                format!("derived kind `{d}` has no PredicateKind variant"),
+            ));
+        }
+    }
+    for (k, ln) in &kinds {
+        if !derived.contains(k) {
+            out.push(Diagnostic::new(
+                RULE_WIRE_KIND,
+                batched_path,
+                *ln,
+                format!("PredicateKind::{k} has no QueryPredicate/Spatial counterpart"),
+            ));
+        }
+    }
+
+    // (3) Tag ↔ kind naming convention.
+    let base_tags: Vec<&(String, usize)> = tags.iter().filter(|(t, _)| t != "ATTACH").collect();
+    let has_attach_flag = tags.iter().any(|(t, _)| t == "ATTACH");
+    for (t, ln) in &base_tags {
+        let expect = camel(t);
+        if !kinds.iter().any(|(k, _)| *k == expect) {
+            out.push(Diagnostic::new(
+                RULE_WIRE_KIND,
+                wire_path,
+                *ln,
+                format!("TAG_{t} has no PredicateKind::{expect} counterpart"),
+            ));
+        }
+    }
+    for (k, ln) in &kinds {
+        if let Some(base) = k.strip_prefix("Attach") {
+            let covered = has_attach_flag && base_tags.iter().any(|(t, _)| camel(t) == base);
+            if !covered {
+                out.push(Diagnostic::new(
+                    RULE_WIRE_KIND,
+                    batched_path,
+                    *ln,
+                    format!("PredicateKind::{k} needs TAG_ATTACH plus a base tag for `{base}`"),
+                ));
+            }
+        } else if !base_tags.iter().any(|(t, _)| camel(t) == *k) {
+            out.push(Diagnostic::new(
+                RULE_WIRE_KIND,
+                batched_path,
+                *ln,
+                format!("PredicateKind::{k} has no wire tag (TAG_*) counterpart"),
+            ));
+        }
+    }
+
+    // (4) Codec coverage: each tag used beyond its declaration.
+    for (t, ln) in &tags {
+        let word = format!("TAG_{t}");
+        if lines_with_word(wire, &word, *ln) < 2 {
+            out.push(Diagnostic::new(
+                RULE_WIRE_KIND,
+                wire_path,
+                *ln,
+                format!("{word} is declared but not used by both encode and decode"),
+            ));
+        }
+    }
+
+    // (5) Per-layer dispatch markers.
+    for (k, _) in &kinds {
+        let marker = format!("PredicateKind::{k}");
+        if lines_with_word(service, &marker, 0) == 0 {
+            out.push(Diagnostic::new(
+                RULE_WIRE_KIND,
+                service_path,
+                1,
+                format!("no sub-batch lane dispatches `{marker}`"),
+            ));
+        }
+    }
+    for (layer_path, layer) in [(dist_path, dist), (stats_path, stats), (batched_path, batched)] {
+        for (v, _) in &queries {
+            let marker = format!("QueryPredicate::{v}");
+            if lines_with_word(layer, &marker, 0) == 0 {
+                out.push(Diagnostic::new(
+                    RULE_WIRE_KIND,
+                    layer_path,
+                    1,
+                    format!("layer never dispatches `{marker}`"),
+                ));
+            }
+        }
+    }
+    for (layer_path, layer) in [(wire_path, wire), (dist_path, dist), (batched_path, batched)] {
+        for (s, _) in &spatials {
+            let marker = format!("Spatial::{s}");
+            if lines_with_word(layer, &marker, 0) == 0 {
+                out.push(Diagnostic::new(
+                    RULE_WIRE_KIND,
+                    layer_path,
+                    1,
+                    format!("layer never discriminates `{marker}`"),
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// **wire-doc-table.** The markdown table at the top of
+/// `coordinator/wire.rs` documents the protocol; its `` `TAG_*` `` rows
+/// must list exactly the declared tag constants — both directions — so
+/// the protocol docs cannot silently drift from the codec.
+pub fn check_wire_doc_table(file: &str, lx: &Lexed) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let tags = tag_constants(lx);
+    let mut table: Vec<(String, usize)> = Vec::new();
+    for ln in 1..=lx.len() {
+        let comment = lx.comment(ln).trim_start_matches(['/', '!', ' ']).trim();
+        if !comment.starts_with('|') {
+            continue;
+        }
+        let mut rest = comment;
+        while let Some(pos) = rest.find("`TAG_") {
+            let after = &rest[pos + "`TAG_".len()..];
+            let name: String = after.chars().take_while(|&c| is_ident_char(c)).collect();
+            if !name.is_empty() && !table.iter().any(|(n, _)| *n == name) {
+                table.push((name, ln));
+            }
+            rest = &after[..];
+        }
+    }
+    if table.is_empty() {
+        out.push(Diagnostic::new(RULE_WIRE_DOC, file, 1, "no `TAG_*` doc table found"));
+        return out;
+    }
+    for (t, ln) in &tags {
+        if !table.iter().any(|(n, _)| n == t) {
+            out.push(Diagnostic::new(
+                RULE_WIRE_DOC,
+                file,
+                *ln,
+                format!("TAG_{t} is declared but missing from the module-doc table"),
+            ));
+        }
+    }
+    for (t, ln) in &table {
+        if !tags.iter().any(|(n, _)| n == t) {
+            out.push(Diagnostic::new(
+                RULE_WIRE_DOC,
+                file,
+                *ln,
+                format!("doc table lists TAG_{t}, which is not a declared constant"),
+            ));
+        }
+    }
+    out
+}
+
+/// Raw inputs for [`check_target_registration`]: manifest, bench
+/// sources, example file names, and the CI workflow.
+pub struct TargetInputs<'a> {
+    /// `rust/Cargo.toml` contents.
+    pub cargo_toml: &'a str,
+    /// `(file name, raw contents)` for every `rust/benches/*.rs`.
+    pub bench_files: &'a [(String, String)],
+    /// File names under `examples/`.
+    pub example_files: &'a [String],
+    /// `.github/workflows/ci.yml` contents.
+    pub ci_yaml: &'a str,
+}
+
+/// One explicit `[[bench]]` / `[[example]]` entry from the manifest.
+struct TargetEntry {
+    kind: String,
+    path: String,
+    harness: Option<bool>,
+    line: usize,
+}
+
+/// Minimal line-based parse of the manifest's target sections (the
+/// manifest is ours and rustfmt-regular; no TOML crate needed).
+fn parse_targets(cargo_toml: &str) -> Vec<TargetEntry> {
+    let mut out: Vec<TargetEntry> = Vec::new();
+    let mut current: Option<TargetEntry> = None;
+    for (i, raw) in cargo_toml.lines().enumerate() {
+        let line = raw.trim();
+        if line.starts_with("[[") {
+            if let Some(e) = current.take() {
+                out.push(e);
+            }
+            let kind = line.trim_matches(['[', ']']).to_string();
+            if kind == "bench" || kind == "example" || kind == "bin" {
+                current =
+                    Some(TargetEntry { kind, path: String::new(), harness: None, line: i + 1 });
+            }
+        } else if line.starts_with('[') {
+            if let Some(e) = current.take() {
+                out.push(e);
+            }
+        } else if let Some(e) = current.as_mut() {
+            if let Some(v) = line.strip_prefix("path") {
+                if let Some(p) = v.trim().strip_prefix('=') {
+                    e.path = p.trim().trim_matches('"').to_string();
+                }
+            } else if let Some(v) = line.strip_prefix("harness") {
+                if let Some(h) = v.trim().strip_prefix('=') {
+                    e.harness = Some(h.trim() == "true");
+                }
+            }
+        }
+    }
+    if let Some(e) = current.take() {
+        out.push(e);
+    }
+    out
+}
+
+/// **target-registration.** With `autobenches`/`autoexamples` off, a
+/// bench or example file that never gets a manifest entry silently
+/// stops building and testing. Checks: every `benches/*.rs` is either a
+/// registered `[[bench]]` (with `harness = false` — our benches are
+/// hand-rolled mains) or a `#[path]`-included helper module of one;
+/// every `examples/*.rs` has an `[[example]]` entry; and every
+/// `BENCH_<name>.json` snapshot the CI `bench-smoke` job asserts has a
+/// literal writer in some bench source.
+pub fn check_target_registration(inp: &TargetInputs) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let entries = parse_targets(inp.cargo_toml);
+
+    for (name, _) in inp.bench_files {
+        let registered = entries
+            .iter()
+            .any(|e| e.kind == "bench" && e.path == format!("benches/{name}"));
+        let included = inp.bench_files.iter().any(|(other, contents)| {
+            other != name && contents.contains(&format!("#[path = \"{name}\"]"))
+        });
+        if !registered && !included {
+            out.push(Diagnostic::new(
+                RULE_TARGETS,
+                &format!("rust/benches/{name}"),
+                1,
+                "bench file has no [[bench]] entry and is not #[path]-included by one",
+            ));
+        }
+    }
+    for e in entries.iter().filter(|e| e.kind == "bench") {
+        if e.harness != Some(false) {
+            out.push(Diagnostic::new(
+                RULE_TARGETS,
+                "rust/Cargo.toml",
+                e.line,
+                format!("[[bench]] `{}` must set `harness = false`", e.path),
+            ));
+        }
+    }
+    for name in inp.example_files {
+        let registered = entries
+            .iter()
+            .any(|e| e.kind == "example" && e.path == format!("../examples/{name}"));
+        if !registered {
+            out.push(Diagnostic::new(
+                RULE_TARGETS,
+                &format!("examples/{name}"),
+                1,
+                "example file has no [[example]] entry in rust/Cargo.toml",
+            ));
+        }
+    }
+
+    // CI-asserted snapshots need writers.
+    let mut ci_names: Vec<String> = Vec::new();
+    let mut rest = inp.ci_yaml;
+    while let Some(pos) = rest.find("BENCH_") {
+        let after = &rest[pos + "BENCH_".len()..];
+        let name: String = after.chars().take_while(|&c| is_ident_char(c)).collect();
+        if !name.is_empty()
+            && after[name.len()..].starts_with(".json")
+            && !ci_names.contains(&name)
+        {
+            ci_names.push(name);
+        }
+        rest = after;
+    }
+    for name in &ci_names {
+        let literal = format!("BENCH_{name}.json");
+        let has_writer = inp.bench_files.iter().any(|(_, c)| c.contains(&literal));
+        if !has_writer {
+            out.push(Diagnostic::new(
+                RULE_TARGETS,
+                ".github/workflows/ci.yml",
+                1,
+                format!("CI asserts `{literal}` but no bench source writes it"),
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lex(s: &str) -> Lexed {
+        Lexed::lex(s)
+    }
+
+    // ---- unsafe-needs-safety ------------------------------------------
+
+    #[test]
+    fn unsafe_without_safety_fires() {
+        let lx = lex("fn f(p: *mut u8) {\n    unsafe { *p = 1 };\n}\n");
+        let d = check_unsafe_needs_safety("x.rs", &lx);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].line, 2);
+    }
+
+    #[test]
+    fn unsafe_with_preceding_safety_comment_passes() {
+        let lx =
+            lex("fn f(p: *mut u8) {\n    // SAFETY: exclusive owner.\n    unsafe { *p = 1 };\n}\n");
+        assert!(check_unsafe_needs_safety("x.rs", &lx).is_empty());
+    }
+
+    #[test]
+    fn safety_comment_above_attributes_passes() {
+        let lx = lex("// SAFETY: never aliased.\n#[inline]\nunsafe fn g() { h(); }\n");
+        assert!(check_unsafe_needs_safety("x.rs", &lx).is_empty());
+    }
+
+    #[test]
+    fn safety_comment_inside_closure_block_passes() {
+        // The `|i| unsafe {` idiom: the comment is the first line inside.
+        let lx =
+            lex("run(|i| unsafe {\n    // SAFETY: one writer per index.\n    p.write(i, 0)\n});\n");
+        assert!(check_unsafe_needs_safety("x.rs", &lx).is_empty());
+    }
+
+    #[test]
+    fn safety_doc_section_passes() {
+        let lx = lex("/// Does things.\n///\n/// # Safety\n/// Caller must own `p`.\npub unsafe fn w(p: *mut u8) {}\n");
+        assert!(check_unsafe_needs_safety("x.rs", &lx).is_empty());
+    }
+
+    #[test]
+    fn unsafe_in_raw_string_or_comment_does_not_fire() {
+        let lx = lex("let s = r#\"unsafe { boom }\"#;\n// unsafe { commented_out() };\nlet t = \"unsafe\";\n");
+        assert!(check_unsafe_needs_safety("x.rs", &lx).is_empty());
+    }
+
+    #[test]
+    fn unsafe_allow_escape() {
+        let lx = lex("// audit: allow(unsafe-needs-safety)\nunsafe { q() };\n");
+        assert!(check_unsafe_needs_safety("x.rs", &lx).is_empty());
+    }
+
+    #[test]
+    fn unsafe_as_identifier_fragment_does_not_fire() {
+        let lx = lex("let unsafe_count = 3; check_unsafe_needs_safety();\n");
+        assert!(check_unsafe_needs_safety("x.rs", &lx).is_empty());
+    }
+
+    // ---- float-total-ord ----------------------------------------------
+
+    #[test]
+    fn partial_cmp_call_fires() {
+        let lx = lex("v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n");
+        let d = check_float_total_ord("x.rs", &lx);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].line, 1);
+    }
+
+    #[test]
+    fn total_cmp_and_partial_cmp_definition_pass() {
+        let lx = lex(
+            "v.sort_by(|a, b| a.total_cmp(b));\nimpl PartialOrd for D {\n    fn partial_cmp(&self, o: &D) -> Option<Ordering> {\n        Some(self.cmp(o))\n    }\n}\n",
+        );
+        assert!(check_float_total_ord("x.rs", &lx).is_empty());
+    }
+
+    #[test]
+    fn partial_cmp_in_comment_or_string_passes() {
+        let lx = lex("// old code: a.partial_cmp(b).unwrap()\nlet s = \".partial_cmp(\";\n");
+        assert!(check_float_total_ord("x.rs", &lx).is_empty());
+    }
+
+    #[test]
+    fn partial_cmp_allow_escape() {
+        let lx = lex("a.partial_cmp(b) // audit: allow(float-total-ord)\n");
+        assert!(check_float_total_ord("x.rs", &lx).is_empty());
+    }
+
+    // ---- no-panic-hot-path --------------------------------------------
+
+    #[test]
+    fn panic_tokens_fire_outside_tests() {
+        let lx = lex("fn f() {\n    x.unwrap();\n    y.expect(\"no\");\n    panic!(\"boom\");\n    unreachable!();\n}\n");
+        let d = check_no_panic_hot_path("bvh/wide.rs", &lx);
+        assert_eq!(d.len(), 4);
+        assert_eq!(d.iter().map(|d| d.line).collect::<Vec<_>>(), [2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn panic_inside_cfg_test_passes() {
+        let lx = lex("fn live() {}\n#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() { x.unwrap(); panic!(\"ok in tests\"); }\n}\n");
+        assert!(check_no_panic_hot_path("bvh/wide.rs", &lx).is_empty());
+    }
+
+    #[test]
+    fn poison_recovery_and_unwrap_or_pass() {
+        let lx = lex("let g = m.lock().unwrap_or_else(|p| p.into_inner());\nlet v = o.unwrap_or(0);\nlet e = r.expect_err(\"inverted\");\n");
+        assert!(check_no_panic_hot_path("coordinator/service.rs", &lx).is_empty());
+    }
+
+    #[test]
+    fn panic_allow_escape_with_rationale() {
+        let lx = lex("// audit: allow(no-panic-hot-path): lanes are grouped by kind upstream.\n_ => unreachable!(\"grouped by kind\"),\n");
+        assert!(check_no_panic_hot_path("coordinator/service.rs", &lx).is_empty());
+    }
+
+    #[test]
+    fn hot_path_module_list() {
+        assert!(is_hot_path("rust/src/bvh/wide.rs"));
+        assert!(is_hot_path("rust/src/coordinator/net.rs"));
+        assert!(!is_hot_path("rust/src/exec/pool.rs"));
+        assert!(!is_hot_path("rust/src/audit/rules.rs"));
+    }
+
+    // ---- wire-kind-exhaustive -----------------------------------------
+
+    /// A miniature five-layer universe with two spatial kinds + nearest,
+    /// all consistent.
+    fn mini_layers() -> [(&'static str, &'static str); 6] {
+        [
+            (
+                "wire.rs",
+                "//! | `TAG_SPHERE` | x |\n//! | `TAG_BOX` | x |\n//! | `TAG_NEAREST` | x |\n//! | s \\| `TAG_ATTACH` | x |\npub const TAG_SPHERE: u8 = 1;\npub const TAG_BOX: u8 = 2;\npub const TAG_NEAREST: u8 = 3;\npub const TAG_ATTACH: u8 = 0x80;\nfn encode(p: &QueryPredicate) { match p { QueryPredicate::Spatial(s) => match s { Spatial::IntersectsSphere(_) => TAG_SPHERE, Spatial::IntersectsBox(_) => TAG_BOX }, QueryPredicate::Attach(..) => TAG_ATTACH, QueryPredicate::Nearest(_) => TAG_NEAREST } }\nfn decode(t: u8) { if t == TAG_SPHERE || t == TAG_BOX || t == TAG_NEAREST || t & TAG_ATTACH != 0 {} }\n",
+            ),
+            (
+                "batched.rs",
+                "pub enum QueryPredicate {\n    Spatial(Spatial),\n    Attach(Spatial, u64),\n    Nearest(Nearest),\n}\npub enum PredicateKind {\n    Sphere,\n    Box,\n    AttachSphere,\n    AttachBox,\n    Nearest,\n}\nimpl PredicateKind { pub const COUNT: usize = 5; }\nfn run(q: &QueryPredicate) { match q { QueryPredicate::Spatial(s) => match s { Spatial::IntersectsSphere(_) => 1, Spatial::IntersectsBox(_) => 2 }, QueryPredicate::Attach(..) => 3, QueryPredicate::Nearest(_) => 4 } }\n",
+            ),
+            (
+                "service.rs",
+                "fn lane(k: PredicateKind) { match k { PredicateKind::Sphere => a(), PredicateKind::Box => b(), PredicateKind::AttachSphere => c(), PredicateKind::AttachBox => d(), PredicateKind::Nearest => e() } }\n",
+            ),
+            (
+                "distributed.rs",
+                "fn fwd(q: &QueryPredicate) { match q { QueryPredicate::Spatial(s) => match s { Spatial::IntersectsSphere(_) => 1, Spatial::IntersectsBox(_) => 2 }, QueryPredicate::Attach(..) => 3, QueryPredicate::Nearest(_) => 4 } }\n",
+            ),
+            (
+                "stats.rs",
+                "fn row(q: &QueryPredicate) { match q { QueryPredicate::Spatial(_) => 1, QueryPredicate::Attach(..) => 2, QueryPredicate::Nearest(_) => 3 } }\n",
+            ),
+            (
+                "predicates.rs",
+                "pub enum Spatial {\n    IntersectsSphere(Sphere),\n    IntersectsBox(Aabb),\n}\n",
+            ),
+        ]
+    }
+
+    fn run_wire_check(sources: &[(&str, &str)]) -> Vec<Diagnostic> {
+        let lexed: Vec<Lexed> = sources.iter().map(|(_, s)| lex(s)).collect();
+        let layers = WireLayers {
+            wire: (sources[0].0, &lexed[0]),
+            batched: (sources[1].0, &lexed[1]),
+            service: (sources[2].0, &lexed[2]),
+            distributed: (sources[3].0, &lexed[3]),
+            stats: (sources[4].0, &lexed[4]),
+            predicates: (sources[5].0, &lexed[5]),
+        };
+        check_wire_kind_exhaustive(&layers)
+    }
+
+    #[test]
+    fn consistent_mini_universe_passes() {
+        let d = run_wire_check(&mini_layers());
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn new_kind_missing_a_service_lane_fires() {
+        let mut m = mini_layers();
+        // Drop the Nearest lane from the service dispatcher.
+        m[2].1 = "fn lane(k: PredicateKind) { match k { PredicateKind::Sphere => a(), PredicateKind::Box => b(), PredicateKind::AttachSphere => c(), PredicateKind::AttachBox => d(), _ => z() } }\n";
+        let d = run_wire_check(&m);
+        assert!(
+            d.iter().any(|d| d.message.contains("PredicateKind::Nearest")),
+            "{d:?}"
+        );
+    }
+
+    #[test]
+    fn tag_without_kind_counterpart_fires() {
+        let mut m = mini_layers();
+        m[0] = (
+            "wire.rs",
+            "//! | `TAG_SPHERE` | x |\n//! | `TAG_BOX` | x |\n//! | `TAG_NEAREST` | x |\n//! | `TAG_CYLINDER` | x |\n//! | s \\| `TAG_ATTACH` | x |\npub const TAG_SPHERE: u8 = 1;\npub const TAG_BOX: u8 = 2;\npub const TAG_NEAREST: u8 = 3;\npub const TAG_CYLINDER: u8 = 4;\npub const TAG_ATTACH: u8 = 0x80;\nfn encode() { (TAG_SPHERE, TAG_BOX, TAG_NEAREST, TAG_CYLINDER, TAG_ATTACH) }\nfn decode() { (TAG_SPHERE, TAG_BOX, TAG_NEAREST, TAG_CYLINDER, TAG_ATTACH) }\n",
+        );
+        let d = run_wire_check(&m);
+        assert!(d.iter().any(|d| d.message.contains("TAG_CYLINDER")), "{d:?}");
+    }
+
+    #[test]
+    fn kind_enum_drift_from_query_predicate_fires() {
+        let mut m = mini_layers();
+        // PredicateKind grows a variant nothing else knows about.
+        m[1] = (
+            "batched.rs",
+            "pub enum QueryPredicate {\n    Spatial(Spatial),\n    Attach(Spatial, u64),\n    Nearest(Nearest),\n}\npub enum PredicateKind {\n    Sphere,\n    Box,\n    AttachSphere,\n    AttachBox,\n    Nearest,\n    Cylinder,\n}\nimpl PredicateKind { pub const COUNT: usize = 5; }\nfn run(q: &QueryPredicate) { match q { QueryPredicate::Spatial(s) => match s { Spatial::IntersectsSphere(_) => 1, Spatial::IntersectsBox(_) => 2 }, QueryPredicate::Attach(..) => 3, QueryPredicate::Nearest(_) => 4 } }\n",
+        );
+        let d = run_wire_check(&m);
+        assert!(d.iter().any(|d| d.message.contains("Cylinder")), "{d:?}");
+        assert!(d.iter().any(|d| d.message.contains("COUNT")), "{d:?}");
+    }
+
+    #[test]
+    fn unused_tag_constant_fires() {
+        let mut m = mini_layers();
+        m[0] = (
+            "wire.rs",
+            "//! | `TAG_SPHERE` | x |\n//! | `TAG_BOX` | x |\n//! | `TAG_NEAREST` | x |\n//! | s \\| `TAG_ATTACH` | x |\npub const TAG_SPHERE: u8 = 1;\npub const TAG_BOX: u8 = 2;\npub const TAG_NEAREST: u8 = 3;\npub const TAG_ATTACH: u8 = 0x80;\nfn encode() { (TAG_SPHERE, TAG_BOX, TAG_ATTACH) }\nfn decode() { (TAG_SPHERE, TAG_BOX, TAG_ATTACH, TAG_NEAREST) }\n",
+        );
+        let d = run_wire_check(&m);
+        assert!(
+            d.iter().any(|d| d.message.contains("TAG_NEAREST") && d.message.contains("encode")),
+            "{d:?}"
+        );
+    }
+
+    // ---- wire-doc-table -----------------------------------------------
+
+    #[test]
+    fn doc_table_in_sync_passes() {
+        let (_, wire) = mini_layers()[0];
+        assert!(check_wire_doc_table("wire.rs", &lex(wire)).is_empty());
+    }
+
+    #[test]
+    fn doc_table_missing_row_fires() {
+        let src =
+            "//! | `TAG_SPHERE` | x |\npub const TAG_SPHERE: u8 = 1;\npub const TAG_BOX: u8 = 2;\n";
+        let d = check_wire_doc_table("wire.rs", &lex(src));
+        assert!(d.iter().any(|d| d.message.contains("TAG_BOX")), "{d:?}");
+    }
+
+    #[test]
+    fn doc_table_stale_row_fires() {
+        let src =
+            "//! | `TAG_SPHERE` | x |\n//! | `TAG_GONE` | x |\npub const TAG_SPHERE: u8 = 1;\n";
+        let d = check_wire_doc_table("wire.rs", &lex(src));
+        assert!(d.iter().any(|d| d.message.contains("TAG_GONE")), "{d:?}");
+    }
+
+    // ---- target-registration ------------------------------------------
+
+    fn mini_targets() -> (String, Vec<(String, String)>, Vec<String>, String) {
+        let cargo = "[package]\nname = \"arbor\"\n\n[[bench]]\nname = \"fig01\"\npath = \"benches/fig01.rs\"\nharness = false\n\n[[example]]\nname = \"quickstart\"\npath = \"../examples/quickstart.rs\"\n".to_string();
+        let benches = vec![
+            (
+                "fig01.rs".to_string(),
+                "#[path = \"helper_common.rs\"]\nmod helper_common;\nfn main() { write(\"BENCH_fig01.json\") }\n".to_string(),
+            ),
+            ("helper_common.rs".to_string(), "pub fn shared() {}\n".to_string()),
+        ];
+        let examples = vec!["quickstart.rs".to_string()];
+        let ci = "      - run: test -f rust/BENCH_fig01.json\n".to_string();
+        (cargo, benches, examples, ci)
+    }
+
+    #[test]
+    fn registered_targets_pass() {
+        let (cargo, benches, examples, ci) = mini_targets();
+        let d = check_target_registration(&TargetInputs {
+            cargo_toml: &cargo,
+            bench_files: &benches,
+            example_files: &examples,
+            ci_yaml: &ci,
+        });
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn unregistered_bench_fires() {
+        let (cargo, mut benches, examples, ci) = mini_targets();
+        benches.push(("fig99_orphan.rs".to_string(), "fn main() {}\n".to_string()));
+        let d = check_target_registration(&TargetInputs {
+            cargo_toml: &cargo,
+            bench_files: &benches,
+            example_files: &examples,
+            ci_yaml: &ci,
+        });
+        assert!(d.iter().any(|d| d.file.contains("fig99_orphan")), "{d:?}");
+    }
+
+    #[test]
+    fn bench_with_default_harness_fires() {
+        let (mut cargo, mut benches, examples, ci) = mini_targets();
+        cargo.push_str("\n[[bench]]\nname = \"fig02\"\npath = \"benches/fig02.rs\"\n");
+        benches.push(("fig02.rs".to_string(), "fn main() {}\n".to_string()));
+        let d = check_target_registration(&TargetInputs {
+            cargo_toml: &cargo,
+            bench_files: &benches,
+            example_files: &examples,
+            ci_yaml: &ci,
+        });
+        assert!(d.iter().any(|d| d.message.contains("harness = false")), "{d:?}");
+    }
+
+    #[test]
+    fn unregistered_example_fires() {
+        let (cargo, benches, mut examples, ci) = mini_targets();
+        examples.push("orphan_example.rs".to_string());
+        let d = check_target_registration(&TargetInputs {
+            cargo_toml: &cargo,
+            bench_files: &benches,
+            example_files: &examples,
+            ci_yaml: &ci,
+        });
+        assert!(d.iter().any(|d| d.file.contains("orphan_example")), "{d:?}");
+    }
+
+    #[test]
+    fn ci_snapshot_without_writer_fires() {
+        let (cargo, benches, examples, mut ci) = mini_targets();
+        ci.push_str("      - run: test -f rust/BENCH_ghost.json\n");
+        let d = check_target_registration(&TargetInputs {
+            cargo_toml: &cargo,
+            bench_files: &benches,
+            example_files: &examples,
+            ci_yaml: &ci,
+        });
+        assert!(d.iter().any(|d| d.message.contains("BENCH_ghost.json")), "{d:?}");
+    }
+}

@@ -76,9 +76,7 @@ impl KdTree {
         let mid = begin + count / 2;
         let points = &self.points;
         indices[begin..end].select_nth_unstable_by(mid - begin, |&a, &b| {
-            points[a as usize][dim]
-                .partial_cmp(&points[b as usize][dim])
-                .unwrap()
+            points[a as usize][dim].total_cmp(&points[b as usize][dim])
         });
         let split_value = self.points[indices[mid] as usize][dim];
 

@@ -129,7 +129,7 @@ impl RTree {
                     .iter()
                     .map(|&c| (c, self.nodes[c as usize].bbox.distance_squared(q)))
                     .collect();
-                kids.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+                kids.sort_by(|a, b| b.1.total_cmp(&a.1));
                 for (c, cd) in kids {
                     if cd <= heap.bound() {
                         stack.push((c, cd));
@@ -151,18 +151,18 @@ fn str_pack(ids: &[u32], centers: &[Point], cap: usize) -> Vec<Vec<u32>> {
     // into ceil((slab_groups)^(1/2)) y-columns (Leutenegger §3 for 3D).
     let p = (n_groups as f64).powf(1.0 / 3.0).ceil() as usize;
     let mut order: Vec<usize> = (0..n).collect();
-    order.sort_by(|&a, &b| centers[a][0].partial_cmp(&centers[b][0]).unwrap());
+    order.sort_by(|&a, &b| centers[a][0].total_cmp(&centers[b][0]));
 
     let slab_size = n.div_ceil(p);
     let mut groups = Vec::with_capacity(n_groups);
     for slab in order.chunks(slab_size) {
         let mut slab: Vec<usize> = slab.to_vec();
-        slab.sort_by(|&a, &b| centers[a][1].partial_cmp(&centers[b][1]).unwrap());
+        slab.sort_by(|&a, &b| centers[a][1].total_cmp(&centers[b][1]));
         let q = ((slab.len().div_ceil(cap)) as f64).sqrt().ceil() as usize;
         let col_size = slab.len().div_ceil(q.max(1));
         for col in slab.chunks(col_size) {
             let mut col: Vec<usize> = col.to_vec();
-            col.sort_by(|&a, &b| centers[a][2].partial_cmp(&centers[b][2]).unwrap());
+            col.sort_by(|&a, &b| centers[a][2].total_cmp(&centers[b][2]));
             for run in col.chunks(cap) {
                 groups.push(run.iter().map(|&i| ids[i]).collect());
             }

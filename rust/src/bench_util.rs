@@ -50,7 +50,7 @@ pub fn time_once<F: FnOnce()>(f: F) -> f64 {
 pub fn time_median<F: FnMut()>(reps: usize, mut f: F) -> f64 {
     let reps = reps.max(1);
     let mut times: Vec<f64> = (0..reps).map(|_| time_once(&mut f)).collect();
-    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times.sort_by(|a, b| a.total_cmp(b));
     times[times.len() / 2]
 }
 

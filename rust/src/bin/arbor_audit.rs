@@ -1,0 +1,44 @@
+//! Standalone reporter for the static audit (`cargo run --bin
+//! arbor-audit [repo-root]`).
+//!
+//! The same pass as `rust/tests/static_audit.rs`, but printing every
+//! finding as `file:line: [rule] message` so the CI `audit` job shows
+//! violations directly in the Actions log instead of one opaque test
+//! failure. Exits non-zero when anything fires.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let repo_root = match std::env::args_os().nth(1) {
+        Some(p) => PathBuf::from(p),
+        None => match Path::new(env!("CARGO_MANIFEST_DIR")).parent() {
+            Some(p) => p.to_path_buf(),
+            None => {
+                eprintln!("arbor-audit: cannot locate the repo root; pass it as an argument");
+                return ExitCode::FAILURE;
+            }
+        },
+    };
+    match arbor::audit::audit_repo(&repo_root) {
+        Ok(diags) if diags.is_empty() => {
+            let n_rules = arbor::audit::rules::RULES.len();
+            println!("arbor-audit: clean ({n_rules} rules, no findings)");
+            ExitCode::SUCCESS
+        }
+        Ok(diags) => {
+            for d in &diags {
+                println!("{d}");
+            }
+            eprintln!(
+                "arbor-audit: {} violation(s); see rust/src/audit/mod.rs for the rule table and the `audit: allow(rule)` escape contract",
+                diags.len()
+            );
+            ExitCode::FAILURE
+        }
+        Err(e) => {
+            eprintln!("arbor-audit: walk failed: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}

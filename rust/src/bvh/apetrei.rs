@@ -60,6 +60,7 @@ pub fn build_apetrei(space: &ExecSpace, boxes: &[Aabb]) -> Bvh {
         let lb = SendPtr(leaf_boxes.as_mut_ptr());
         let perm_ref = &perm;
         space.parallel_for_with(n, &BUILD_SWEEP, |i| unsafe {
+            // SAFETY: one writer per index.
             lb.write(i, boxes[perm_ref[i] as usize])
         });
     }
@@ -131,7 +132,7 @@ pub fn build_apetrei(space: &ExecSpace, boxes: &[Aabb]) -> Bvh {
                     first = first.min(prev as usize);
                     last = last.max(prev as usize);
                 }
-                // The sibling's box: it was computed before its swap
+                // SAFETY: the sibling's box was computed before its swap
                 // (Release) and we read after ours (Acquire).
                 let sibling = unsafe {
                     if go_right {
@@ -142,6 +143,8 @@ pub fn build_apetrei(space: &ExecSpace, boxes: &[Aabb]) -> Bvh {
                 };
                 let sb = node_box_raw(sibling, leaf_ref_boxes, np);
                 bb = bb.union(&sb);
+                // SAFETY: only the second arriver reaches the parent, so
+                // this thread is its sole writer.
                 unsafe { (*np.0.add(parent)).bbox = bb };
                 node = internal_ref(parent as u32);
             }
@@ -162,6 +165,8 @@ fn node_box_raw(r: NodeRef, leaf_boxes: &[Aabb], np: SendPtr<InternalNode>) -> A
     if super::is_leaf(r) {
         leaf_boxes[super::ref_index(r)]
     } else {
+        // SAFETY: the sibling subtree is fully built before the second
+        // child proceeds (see the atomic-swap protocol above).
         unsafe { np.read(super::ref_index(r)).bbox }
     }
 }

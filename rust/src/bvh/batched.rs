@@ -615,6 +615,8 @@ fn spatial_1p<P: SpatialPredicate + Sync>(
                     // storage.
                     let mut cursor = base;
                     for_each_spatial(bvh, &preds[orig], &mut stack, |obj| {
+                        // SAFETY: [base, offsets[orig+1]) is owned by this
+                        // query.
                         unsafe { ip.write(cursor, obj) };
                         cursor += 1;
                     });
@@ -673,6 +675,8 @@ fn nearest_enum(
         QueryPredicate::Nearest(n) => nearest_stack(bvh, n, scratch, out),
         QueryPredicate::NearestSphere(n) => nearest_stack(bvh, n, scratch, out),
         QueryPredicate::NearestBox(n) => nearest_stack(bvh, n, scratch, out),
+        // Callers dispatch on kind first; a non-nearest predicate here is
+        // a facade bug, not input: audit: allow(no-panic-hot-path)
         _ => unreachable!("nearest_enum called on a non-nearest predicate"),
     }
 }
@@ -735,7 +739,7 @@ fn run_2p(bvh: &Bvh, space: &ExecSpace, queries: &[QueryPredicate], order: &[u32
                     QueryPredicate::Nearest(_)
                     | QueryPredicate::NearestSphere(_)
                     | QueryPredicate::NearestBox(_) => {
-                        queries[orig].nearest_k().unwrap().min(bvh.len()) as u32
+                        queries[orig].nearest_k().unwrap_or(0).min(bvh.len()) as u32
                     }
                     QueryPredicate::FirstHit(r) => {
                         let hit = first_hit(bvh, &FirstHit(*r), &mut fh_stack);
@@ -785,6 +789,8 @@ fn run_2p(bvh: &Bvh, space: &ExecSpace, queries: &[QueryPredicate], order: &[u32
                     | QueryPredicate::NearestBox(_) => {
                         nearest_enum(bvh, &queries[orig], &mut scratch, &mut knn);
                         for (j, nb) in knn.iter().enumerate() {
+                            // SAFETY: [base, offsets[orig+1]) is owned by
+                            // this query; knn holds its pass-1 count.
                             unsafe {
                                 ip.write(base + j, nb.index);
                                 if want_dist {
@@ -796,6 +802,8 @@ fn run_2p(bvh: &Bvh, space: &ExecSpace, queries: &[QueryPredicate], order: &[u32
                     QueryPredicate::FirstHit(_) => {
                         // Cast already done (and cached) by pass 1.
                         if let Some(hit) = fh_cache_ref[orig] {
+                            // SAFETY: this query owns its single slot at
+                            // base (count was 1 in pass 1).
                             unsafe {
                                 ip.write(base, hit.index);
                                 if want_dist {
@@ -860,6 +868,8 @@ fn run_1p(
                         nearest_enum(bvh, &queries[orig], &mut scratch, &mut knn);
                         for nb in &knn {
                             if count < buffer {
+                                // SAFETY: this query owns
+                                // [base, base+buffer).
                                 unsafe {
                                     bp.write(base + count, nb.index);
                                     if want_dist {
@@ -875,6 +885,8 @@ fn run_1p(
                         // holds (0 selects 2P), so first-hit can never
                         // overflow.
                         if let Some(hit) = first_hit(bvh, &FirstHit(*r), &mut fh_stack) {
+                            // SAFETY: this query owns [base, base+buffer)
+                            // and buffer >= 1.
                             unsafe {
                                 bp.write(base, hit.index);
                                 if want_dist {
@@ -885,6 +897,7 @@ fn run_1p(
                         }
                     }
                 }
+                // SAFETY: one writer per original query index.
                 unsafe { cp.write(orig, count as u32) };
             }
         });
@@ -915,6 +928,7 @@ fn run_1p(
                     // Fast path: copy the buffered results.
                     let src = orig * buffer;
                     for j in 0..count {
+                        // SAFETY: this query owns [base, base+count).
                         unsafe {
                             ip.write(base + j, buf_ref[src + j]);
                             if want_dist {
@@ -930,6 +944,8 @@ fn run_1p(
                         QueryPredicate::Spatial(s) | QueryPredicate::Attach(s, _) => {
                             let mut cursor = base;
                             for_each_enum(bvh, s, &mut stack, |obj| {
+                                // SAFETY: [base, offsets[orig+1]) is owned
+                                // by this query.
                                 unsafe { ip.write(cursor, obj) };
                                 cursor += 1;
                             });
@@ -937,11 +953,13 @@ fn run_1p(
                         QueryPredicate::Nearest(_)
                         | QueryPredicate::NearestSphere(_)
                         | QueryPredicate::NearestBox(_) => {
-                            let k = queries[orig].nearest_k().unwrap();
+                            let k = queries[orig].nearest_k().unwrap_or(0);
                             let mut scratch = NearestScratch::new(k);
                             let mut knn = Vec::new();
                             nearest_enum(bvh, &queries[orig], &mut scratch, &mut knn);
                             for (j, nb) in knn.iter().enumerate() {
+                                // SAFETY: [base, offsets[orig+1]) is owned
+                                // by this query; knn holds its count.
                                 unsafe {
                                     ip.write(base + j, nb.index);
                                     if want_dist {
@@ -955,6 +973,7 @@ fn run_1p(
                             // kept total by re-running the cast.
                             let mut fh_stack = Vec::new();
                             if let Some(hit) = first_hit(bvh, &FirstHit(*r), &mut fh_stack) {
+                                // SAFETY: this query owns its slot at base.
                                 unsafe {
                                     ip.write(base, hit.index);
                                     if want_dist {

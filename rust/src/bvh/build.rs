@@ -79,6 +79,7 @@ pub fn build_karras_profiled(space: &ExecSpace, boxes: &[Aabb]) -> (Bvh, BuildPr
         let dst = SendPtr(leaf_boxes.as_mut_ptr());
         let perm_ref = &perm;
         space.parallel_for_with(n, &BUILD_SWEEP, |i| unsafe {
+            // SAFETY: one writer per index.
             dst.write(i, boxes[perm_ref[i] as usize])
         });
     }
@@ -284,8 +285,13 @@ fn emit_hierarchy(
 }
 
 /// Helper keeping the unsafe parent write in one place.
+///
+/// # Safety
+/// Each child index has exactly one parent, so concurrent callers never
+/// write the same slot.
 #[inline]
 unsafe fn rpar_write(ipar: SendPtr<u32>, lpar: SendPtr<u32>, child: NodeRef, parent: u32) {
+    // SAFETY: disjoint slots per the caller's contract above.
     unsafe {
         if is_leaf(child) {
             lpar.write(ref_index(child), parent);
@@ -340,6 +346,7 @@ pub(crate) fn refit(
             let rb = if is_leaf(r) {
                 leaf_boxes[ref_index(r)]
             } else {
+                // SAFETY: fully refit by the thread that lost the race.
                 unsafe { np.read(ref_index(r)).bbox }
             };
             // SAFETY: exactly one thread (the second arriver) writes the

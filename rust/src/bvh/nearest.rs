@@ -177,8 +177,7 @@ impl KnnHeap {
         self.heap.clear();
         out.sort_by(|a, b| {
             a.distance_squared
-                .partial_cmp(&b.distance_squared)
-                .unwrap()
+                .total_cmp(&b.distance_squared)
                 .then(a.index.cmp(&b.index))
         });
     }
@@ -334,7 +333,7 @@ pub fn nearest_pq<Q: NearestQuery>(bvh: &Bvh, query: &Q, out: &mut Vec<Neighbor>
     let geometry = query.geometry();
     let k = query.k();
 
-    /// f32 ordered wrapper (distances are never NaN).
+    /// f32 ordered wrapper (NaN-total, though distances are never NaN).
     #[derive(PartialEq)]
     struct D(f32);
     impl Eq for D {}
@@ -345,7 +344,7 @@ pub fn nearest_pq<Q: NearestQuery>(bvh: &Bvh, query: &Q, out: &mut Vec<Neighbor>
     }
     impl Ord for D {
         fn cmp(&self, o: &D) -> std::cmp::Ordering {
-            self.0.partial_cmp(&o.0).unwrap()
+            self.0.total_cmp(&o.0)
         }
     }
 
@@ -407,8 +406,7 @@ mod tests {
             .collect();
         all.sort_by(|a, b| {
             a.distance_squared
-                .partial_cmp(&b.distance_squared)
-                .unwrap()
+                .total_cmp(&b.distance_squared)
                 .then(a.index.cmp(&b.index))
         });
         all.truncate(k);

@@ -410,7 +410,7 @@ pub fn nearest_wide_monitored<
         }
         // Push farther children first so the closest is popped first —
         // the binary swap generalized to a stable descending sort.
-        pending[..n_pending].sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        pending[..n_pending].sort_by(|a, b| b.1.total_cmp(&a.1));
         let bound = heap.bound();
         for &(c, d) in pending.iter().take(n_pending) {
             if d <= bound {
@@ -483,7 +483,7 @@ pub fn first_hit_wide_monitored<const SIMD: bool, Q: FirstHitQuery, M: FnMut(u32
         }
         // Later-entered children pushed first (stable descending sort),
         // so the earliest-entered tightens the bound first.
-        pending[..n_pending].sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        pending[..n_pending].sort_by(|a, b| b.1.total_cmp(&a.1));
         for &(c, t) in pending.iter().take(n_pending) {
             if best.as_ref().map_or(true, |b| t <= b.t) {
                 stack.push((c, t));

@@ -435,6 +435,8 @@ impl DistributedTree {
                         QuerySlot::Nearest(m) => {
                             m.lock().unwrap().drain_sorted_into(&mut knn);
                             for (j, nb) in knn.iter().enumerate() {
+                                // SAFETY: [base, base + counts[i]) is
+                                // owned by query i.
                                 unsafe {
                                     ip.write(base + j, nb.index);
                                     if want_dist {
@@ -445,6 +447,8 @@ impl DistributedTree {
                         }
                         QuerySlot::FirstHit(m) => {
                             if let Some(h) = *m.lock().unwrap() {
+                                // SAFETY: query i owns its single slot
+                                // at base.
                                 unsafe {
                                     ip.write(base, h.index);
                                     if want_dist {

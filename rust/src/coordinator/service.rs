@@ -301,8 +301,13 @@ impl<T> Versioned<T> {
 
     /// The current version, pinned: holders keep this exact tree alive
     /// (and consistent) across any number of concurrent publishes.
+    ///
+    /// Lock poisoning here (a panic on another thread mid-guard) cannot
+    /// leave the protected value torn — it is a plain `Arc` swap — so
+    /// every lock in this module recovers the guard instead of
+    /// propagating the panic to unrelated clients.
     pub fn snapshot(&self) -> Arc<T> {
-        Arc::clone(&self.current.read().unwrap())
+        Arc::clone(&self.current.read().unwrap_or_else(|p| p.into_inner()))
     }
 
     /// The current epoch (0 for the as-started tree, +1 per publish).
@@ -313,7 +318,7 @@ impl<T> Versioned<T> {
     /// Atomically replaces the current version, returning the new epoch.
     /// Existing snapshots are untouched.
     pub fn publish(&self, tree: Arc<T>) -> u64 {
-        let mut cur = self.current.write().unwrap();
+        let mut cur = self.current.write().unwrap_or_else(|p| p.into_inner());
         *cur = tree;
         self.epoch.fetch_add(1, Ordering::AcqRel) + 1
     }
@@ -415,7 +420,7 @@ impl SearchService {
     /// (it used to panic here).
     pub fn submit(&self, pred: QueryPredicate) -> Result<Pending, SubmitError> {
         let (resp_tx, resp_rx) = channel();
-        let guard = self.tx.lock().unwrap();
+        let guard = self.tx.lock().unwrap_or_else(|p| p.into_inner());
         let tx = guard.as_ref().ok_or(SubmitError::Stopped)?;
         tx.send(Request { pred, resp: resp_tx, enqueued: Instant::now() })
             .map_err(|_| SubmitError::Stopped)?;
@@ -444,7 +449,7 @@ impl SearchService {
     /// coordinator's drain-then-exit shutdown still answers any request
     /// the channel accepted before the send that failed.
     pub fn submit_batch(&self, preds: Vec<QueryPredicate>) -> Result<Vec<Pending>, SubmitError> {
-        let guard = self.tx.lock().unwrap();
+        let guard = self.tx.lock().unwrap_or_else(|p| p.into_inner());
         let tx = guard.as_ref().ok_or(SubmitError::Stopped)?;
         let enqueued = Instant::now();
         let mut pendings = Vec::with_capacity(preds.len());
@@ -515,8 +520,9 @@ impl SearchService {
     /// `boxes.len()` does not match the indexed object count (an update
     /// cannot add or remove objects).
     pub fn update(&self, space: &ExecSpace, boxes: &[Aabb]) -> Result<UpdateReport, SubmitError> {
-        let _writer = self.update_lock.lock().unwrap();
-        if self.stopping.load(Ordering::Acquire) || self.tx.lock().unwrap().is_none() {
+        let _writer = self.update_lock.lock().unwrap_or_else(|p| p.into_inner());
+        let accepting = self.tx.lock().unwrap_or_else(|p| p.into_inner()).is_some();
+        if self.stopping.load(Ordering::Acquire) || !accepting {
             return Err(SubmitError::Stopped);
         }
         match &self.backend {
@@ -568,8 +574,8 @@ impl SearchService {
     /// Stops the coordinator (drains pending requests first).
     pub fn shutdown(&self) {
         self.stopping.store(true, Ordering::Release);
-        *self.tx.lock().unwrap() = None; // close the channel
-        if let Some(h) = self.worker.lock().unwrap().take() {
+        *self.tx.lock().unwrap_or_else(|p| p.into_inner()) = None; // close the channel
+        if let Some(h) = self.worker.lock().unwrap_or_else(|p| p.into_inner()).take() {
             let _ = h.join();
         }
     }
@@ -753,6 +759,8 @@ pub fn execute_sub_batched(
                     .iter()
                     .map(|&i| match &preds[i as usize] {
                         $pat => $make,
+                        // A mixed lane is a grouping logic bug, never a
+                        // wire condition: audit: allow(no-panic-hot-path)
                         _ => unreachable!("grouped by kind"),
                     })
                     .collect::<Vec<_>>();
@@ -812,6 +820,8 @@ pub fn execute_sub_batched(
                     .iter()
                     .map(|&i| match &preds[i as usize] {
                         QueryPredicate::Nearest(n) => *n,
+                        // A mixed lane is a grouping logic bug, never a
+                        // wire condition: audit: allow(no-panic-hot-path)
                         _ => unreachable!("grouped by kind"),
                     })
                     .collect();
@@ -831,6 +841,8 @@ pub fn execute_sub_batched(
                     .iter()
                     .map(|&i| match &preds[i as usize] {
                         QueryPredicate::NearestSphere(n) => *n,
+                        // A mixed lane is a grouping logic bug, never a
+                        // wire condition: audit: allow(no-panic-hot-path)
                         _ => unreachable!("grouped by kind"),
                     })
                     .collect();
@@ -850,6 +862,8 @@ pub fn execute_sub_batched(
                     .iter()
                     .map(|&i| match &preds[i as usize] {
                         QueryPredicate::NearestBox(n) => *n,
+                        // A mixed lane is a grouping logic bug, never a
+                        // wire condition: audit: allow(no-panic-hot-path)
                         _ => unreachable!("grouped by kind"),
                     })
                     .collect();
@@ -872,6 +886,8 @@ pub fn execute_sub_batched(
                     .iter()
                     .map(|&i| match &preds[i as usize] {
                         QueryPredicate::FirstHit(r) => FirstHit(*r),
+                        // A mixed lane is a grouping logic bug, never a
+                        // wire condition: audit: allow(no-panic-hot-path)
                         _ => unreachable!("grouped by kind"),
                     })
                     .collect();

@@ -393,13 +393,14 @@ pub fn parse_frame(bytes: &[u8]) -> FrameParse {
 /// [`parse_frame`] with an explicit body cap — clients parse response
 /// frames with [`MAX_RESPONSE_LEN`].
 pub fn parse_frame_with(bytes: &[u8], max_body: usize) -> FrameParse {
-    let Some(len_bytes) = bytes.get(..4) else {
+    let Some(&[l0, l1, l2, l3]) = bytes.get(..4) else {
         return FrameParse::Incomplete;
     };
-    let len = u32::from_le_bytes(len_bytes.try_into().unwrap()) as usize;
+    let len = u32::from_le_bytes([l0, l1, l2, l3]) as usize;
     let request_id = bytes
         .get(4..12)
-        .map(|id| u64::from_le_bytes(id.try_into().unwrap()));
+        .and_then(|id| <[u8; 8]>::try_from(id).ok())
+        .map(u64::from_le_bytes);
     if len <= 8 || len > max_body.saturating_add(8) {
         return FrameParse::Malformed { request_id };
     }
@@ -407,12 +408,13 @@ pub fn parse_frame_with(bytes: &[u8], max_body: usize) -> FrameParse {
     if bytes.len() < used {
         return FrameParse::Incomplete;
     }
-    FrameParse::Frame {
-        request_id: request_id.expect("len > 8 implies the id bytes are buffered"),
-        body_start: 12,
-        body_end: used,
-        used,
-    }
+    // len > 8 was gated above, so the id bytes are buffered whenever the
+    // whole frame is; a missing id here can only mean a short buffer,
+    // which the `used` check already returned Incomplete for.
+    let Some(request_id) = request_id else {
+        return FrameParse::Incomplete;
+    };
+    FrameParse::Frame { request_id, body_start: 12, body_end: used, used }
 }
 
 /// One query's answer as it travels in a response frame: the request
@@ -421,9 +423,15 @@ pub fn parse_frame_with(bytes: &[u8], max_body: usize) -> FrameParse {
 /// the tag carries [`TAG_ATTACH`].
 #[derive(Clone, Debug, PartialEq)]
 pub struct WireResult {
+    /// The request predicate's tag, echoed back.
     pub tag: u8,
+    /// Matched object indices (CSR row for spatial, k-NN row for
+    /// nearest, at most one entry for first-hit).
     pub indices: Vec<u32>,
+    /// Row-aligned squared distances (nearest kinds) or the ray entry
+    /// parameter (first-hit); empty for spatial kinds.
     pub distances: Vec<f32>,
+    /// The attachment payload when the tag carries [`TAG_ATTACH`].
     pub data: Option<u64>,
 }
 

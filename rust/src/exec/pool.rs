@@ -57,9 +57,12 @@ struct Dispatch {
     done: Sender<()>,
 }
 
-// The raw pointer is only dereferenced while the dispatching caller is
-// blocked on the completion channel, during which the closure is alive.
+// SAFETY: the raw pointer is only dereferenced while the dispatching
+// caller is blocked on the completion channel, during which the closure
+// is alive.
 unsafe impl Send for Dispatch {}
+// SAFETY: workers share Dispatch read-only; chunk claims go through
+// atomics and the pointer contract is the same as for Send above.
 unsafe impl Sync for Dispatch {}
 
 impl Dispatch {
@@ -68,6 +71,8 @@ impl Dispatch {
     /// participant (remaining chunks go to the others), records the
     /// payload, and still signals completion so the pool survives.
     fn work(&self) {
+        // SAFETY: the dispatching caller keeps the closure alive until
+        // every participant has signalled `done` (see the Send impl).
         let f = unsafe { &*self.func };
         let w = self.worker.fetch_add(1, Ordering::Relaxed);
         let result = std::panic::catch_unwind(AssertUnwindSafe(|| loop {
@@ -184,9 +189,9 @@ impl ThreadPool {
         }
 
         let (done_tx, done_rx) = channel();
-        // SAFETY: see module docs — we block on `done_rx` below until every
-        // participant is finished, so `f` outlives all dereferences.
         let func: *const (dyn Fn(usize, usize, usize) + Sync) =
+            // SAFETY: we block on `done_rx` below until every participant
+            // is finished, so `f` outlives all dereferences.
             unsafe { std::mem::transmute::<_, &'static (dyn Fn(usize, usize, usize) + Sync)>(f) };
         let dispatch = Arc::new(Dispatch {
             func,

@@ -79,7 +79,10 @@ pub fn exclusive_scan(space: &ExecSpace, counts: &[u32]) -> Vec<u64> {
 /// indices. Used throughout the crate for scatter-style parallel writes
 /// (the idiom Kokkos expresses with plain `View` writes).
 pub struct SendPtr<T>(pub *mut T);
+// SAFETY: SendPtr carries a plain pointer; the disjoint-index contract
+// on `write`/`read` is what makes cross-thread use sound.
 unsafe impl<T> Send for SendPtr<T> {}
+// SAFETY: same contract as Send — concurrent users never alias an index.
 unsafe impl<T> Sync for SendPtr<T> {}
 
 impl<T> Clone for SendPtr<T> {
@@ -90,20 +93,28 @@ impl<T> Clone for SendPtr<T> {
 impl<T> Copy for SendPtr<T> {}
 
 impl<T> SendPtr<T> {
-    /// Writes `value` at `index`. Caller must guarantee exclusive access
-    /// to that index for the duration of the dispatch.
+    /// Writes `value` at `index`.
+    ///
+    /// # Safety
+    /// The caller must have exclusive access to `index` for the duration
+    /// of the dispatch.
     #[inline]
     pub unsafe fn write(&self, index: usize, value: T) {
+        // SAFETY: in-bounds and unaliased per the caller's contract.
         unsafe { *self.0.add(index) = value };
     }
 
-    /// Reads the value at `index`. Caller must guarantee no concurrent
-    /// writer to that index (or a happens-before edge to the writer).
+    /// Reads the value at `index`.
+    ///
+    /// # Safety
+    /// The caller must guarantee no concurrent writer to `index` (or a
+    /// happens-before edge to the writer).
     #[inline]
     pub unsafe fn read(&self, index: usize) -> T
     where
         T: Copy,
     {
+        // SAFETY: in-bounds and race-free per the caller's contract.
         unsafe { *self.0.add(index) }
     }
 }

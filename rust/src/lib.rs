@@ -97,7 +97,22 @@
 //! });
 //! assert_eq!(hits.load(Ordering::Relaxed), 2);
 //! ```
+//!
+//! ## Static audit
+//!
+//! The crate ships its own dependency-free static analyzer ([`audit`]):
+//! a comment- and string-aware lexer plus rules that prove cross-layer
+//! invariants rustc cannot see — SAFETY-annotated `unsafe`, NaN-total
+//! float ordering, panic-free hot/service modules, every wire kind
+//! threaded through codec + service + distributed + stats, and every
+//! bench/example registered. `cargo test` enforces it
+//! (`rust/tests/static_audit.rs`); `cargo run --bin arbor-audit` prints
+//! file:line findings.
 
+#![deny(unsafe_op_in_unsafe_fn)]
+#![warn(missing_docs)]
+
+pub mod audit;
 pub mod baselines;
 pub mod bench_util;
 pub mod bvh;

@@ -1,0 +1,27 @@
+//! Tier-1 entry point for the repo-wide static audit.
+//!
+//! `cargo test` runs this along with everything else, so the invariants
+//! in [`arbor::audit`] — SAFETY-annotated `unsafe`, NaN-total float
+//! ordering, panic-free hot/service modules, exhaustively-threaded wire
+//! kinds, and registered bench/example targets — gate the build with
+//! zero extra tooling. For human-readable file:line reports (the CI
+//! `audit` job), run the standalone reporter:
+//! `cargo run --bin arbor-audit`.
+
+use std::path::Path;
+
+#[test]
+fn repository_passes_static_audit() {
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let repo_root = manifest.parent().expect("rust/ lives under the repo root");
+    let diags = arbor::audit::audit_repo(repo_root)
+        .expect("audit walk failed (missing layer file or unreadable source)");
+    if !diags.is_empty() {
+        let report: Vec<String> = diags.iter().map(|d| format!("  {d}")).collect();
+        panic!(
+            "static audit found {} violation(s):\n{}\n(see src/audit/mod.rs for the rule table and the `audit: allow` escape contract)",
+            diags.len(),
+            report.join("\n")
+        );
+    }
+}
